@@ -1,0 +1,95 @@
+"""Benchmark: HPO service (paper Fig. 6).
+
+(1) optimizer quality: best objective found per budget, random vs halton
+    vs evolution on two synthetic objectives;
+(2) async speedup: wall time with 1 vs 8 remote 'GPU sites' for the same
+    trial budget (the service's whole point: asynchronous evaluation on
+    distributed resources).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List
+
+from repro.core import payloads as reg
+from repro.core.hpo import HPOService, OPTIMIZERS, loguniform, uniform
+from repro.core.idds import IDDS
+
+
+def _branin(params, inputs):
+    x = params["x"] * 15 - 5
+    y = params["y"] * 15
+    a, b, c = 1.0, 5.1 / (4 * math.pi ** 2), 5 / math.pi
+    r, s, t = 6.0, 10.0, 1 / (8 * math.pi)
+    val = a * (y - b * x * x + c * x - r) ** 2 + s * (1 - t) * math.cos(x) + s
+    return {"objective": val}
+
+
+def _rosenbrock(params, inputs):
+    x, y = params["x"] * 4 - 2, params["y"] * 4 - 2
+    return {"objective": (1 - x) ** 2 + 100 * (y - x * x) ** 2}
+
+
+reg.register_payload("bench_branin", _branin)
+reg.register_payload("bench_rosen", _rosenbrock)
+
+
+def quality(budget: int = 64) -> List[Dict]:
+    rows = []
+    for obj_name, payload in (("branin", "bench_branin"),
+                              ("rosenbrock", "bench_rosen")):
+        for opt in OPTIMIZERS:
+            bests = []
+            for seed in range(3):
+                idds = IDDS()
+                svc = HPOService(
+                    idds, {"x": uniform(0, 1), "y": uniform(0, 1)},
+                    eval_payload=payload, optimizer=opt,
+                    points_per_round=8, max_points=budget, seed=seed)
+                bests.append(svc.run().best_objective)
+            rows.append({"objective": obj_name, "optimizer": opt,
+                         "budget": budget,
+                         "best_mean": sum(bests) / len(bests),
+                         "best_min": min(bests)})
+    return rows
+
+
+def async_speedup(budget: int = 32, trial_s: float = 0.02) -> List[Dict]:
+    reg.register_payload(
+        "bench_slow",
+        lambda p, i: (time.sleep(trial_s), _branin(p, i))[1])
+    rows = []
+    for workers in (1, 8):
+        idds = IDDS(sync=False, max_workers=workers)
+        idds.start()
+        try:
+            svc = HPOService(idds, {"x": uniform(0, 1), "y": uniform(0, 1)},
+                             eval_payload="bench_slow", optimizer="halton",
+                             points_per_round=8, max_points=budget, seed=0)
+            t0 = time.time()
+            svc.run(timeout=120)
+            wall = time.time() - t0
+        finally:
+            idds.stop()
+        rows.append({"workers": workers, "budget": budget,
+                     "wall_s": round(wall, 3),
+                     "trials_per_s": round(budget / wall, 1)})
+    rows.append({"workers": "speedup",
+                 "wall_s": round(rows[0]["wall_s"] / rows[1]["wall_s"], 2)})
+    return rows
+
+
+def main():
+    print("objective,optimizer,budget,best_mean,best_min")
+    for r in quality():
+        print(f"{r['objective']},{r['optimizer']},{r['budget']},"
+              f"{r['best_mean']:.4f},{r['best_min']:.4f}")
+    print("workers,budget,wall_s,trials_per_s")
+    for r in async_speedup():
+        print(",".join(str(r.get(k, "")) for k in
+                       ("workers", "budget", "wall_s", "trials_per_s")))
+
+
+if __name__ == "__main__":
+    main()

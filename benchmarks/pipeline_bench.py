@@ -1,0 +1,75 @@
+"""Benchmark: delivery pipeline (granularity + straggler hedging).
+
+(1) granularity sweep: time-to-first-batch and total delivery time as a
+    function of shard count for a fixed corpus (finer shards -> earlier
+    first batch; the paper's 'optimal granularity' trade-off);
+(2) hedging: delivery tail with and without duplicate requests for
+    straggling tape reads.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.carousel.delivery import DeliveryIterator
+from repro.carousel.stager import Stager
+from repro.carousel.storage import DiskCache
+from repro.carousel.transform import make_packing_transform
+from repro.data.synthetic import build_cold_store
+
+SEQ = 64
+TOTAL_DOCS = 256
+
+
+def _deliver(n_shards: int, *, latency: float = 0.01, hedge: bool = True,
+             straggler: float = 0.0) -> Dict:
+    cold = build_cold_store(
+        n_shards=n_shards, docs_per_shard=TOTAL_DOCS // n_shards,
+        vocab_size=512, mean_doc_len=SEQ, drives=4, mount_latency=latency)
+    if straggler:
+        cold.straggler_frac = straggler    # per-read tail latency
+        cold.straggler_mult = 25.0
+    cache = DiskCache(1 << 30)
+    names = [f.name for f in cold.files()]
+    st = Stager(cold, cache, workers=4, hedge_factor=2.5,
+                hedge_min_samples=6, transform=make_packing_transform(SEQ))
+    t0 = time.time()
+    st.submit_all(names)
+    it = DeliveryIterator(st, cache, names, batch_rows=4)
+    n_batches = 0
+    first = None
+    if not hedge:
+        st.hedge_factor = float("inf")
+    for b in it:
+        if first is None:
+            first = time.time() - t0
+        n_batches += 1
+    total = time.time() - t0
+    st.shutdown()
+    return {"n_shards": n_shards, "ttfb_ms": round(1e3 * (first or 0), 1),
+            "total_ms": round(1e3 * total, 1), "batches": n_batches,
+            "hedges": st.hedges_issued}
+
+
+def run() -> List[Dict]:
+    rows = []
+    for n in (2, 8, 32):
+        r = _deliver(n)
+        r["sweep"] = "granularity"
+        rows.append(r)
+    for hedge in (False, True):
+        r = _deliver(16, straggler=0.25, hedge=hedge)
+        r["sweep"] = f"straggler hedge={hedge}"
+        rows.append(r)
+    return rows
+
+
+def main():
+    keys = ["sweep", "n_shards", "ttfb_ms", "total_ms", "batches", "hedges"]
+    print(",".join(keys))
+    for r in run():
+        print(",".join(str(r.get(k, "")) for k in keys))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Roofline table from the dry-run sweep (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_results.json (produced by ``python -m repro.launch.dryrun
+--all --both-meshes --out dryrun_results.json``) and prints the per-cell
+three-term roofline for the single-pod mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.json")
+
+
+def load(path: str = DEFAULT_PATH) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(results: List[Dict], mesh_chips: int = 256) -> List[Dict]:
+    rows = []
+    for r in results:
+        if r.get("status") != "ok" or r.get("chips") != mesh_chips:
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_ms": round(rf["compute_s"] * 1e3, 2),
+            "memory_ms": round(rf["memory_s"] * 1e3, 2),
+            "collective_ms": round(rf["collective_s"] * 1e3, 2),
+            "dominant": rf["dominant"].replace("_s", ""),
+            "bound_ms": round(rf["bound_s"] * 1e3, 2),
+            "compute_fraction": round(rf["compute_fraction"], 3),
+            "useful_flops_ratio": round(rf["useful_flops_ratio"], 3),
+        })
+    return rows
+
+
+def main(path: str = None):
+    path = path or DEFAULT_PATH
+    if not os.path.exists(path):
+        print(f"no dry-run results at {path}; run the dryrun sweep first",
+              file=sys.stderr)
+        return
+    rows = table(load(path))
+    keys = ["arch", "shape", "compute_ms", "memory_ms", "collective_ms",
+            "dominant", "bound_ms", "compute_fraction",
+            "useful_flops_ratio"]
+    print(",".join(keys))
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        print(",".join(str(r[k]) for k in keys))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

@@ -1,0 +1,80 @@
+"""Run every benchmark; one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections:
+  carousel   Fig. 4/5  fine vs coarse granularity (attempts/disk/makespan)
+  hpo        Fig. 6    optimizer quality + async evaluation speedup
+  dag        §3.3.1    Rubin-scale DAG scheduling throughput
+  pipeline   §1        delivery granularity + straggler hedging
+  train      §3.1      carousel-fed training micro-run (loss goes down)
+  roofline   —         per-cell roofline terms from the dry-run sweep
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(name):
+    print(f"\n===== {name} =====", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps (CI)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+
+    _section("carousel (paper Figs. 4-5)")
+    from benchmarks import carousel_sim
+    if args.quick:
+        carousel_sim.CAMPAIGNS = {
+            "small-500f": dict(n_files=500, disk_capacity=1.2e12)}
+    carousel_sim.main()
+
+    _section("hpo (paper Fig. 6)")
+    from benchmarks import hpo_bench
+    if args.quick:
+        print("objective,optimizer,budget,best_mean,best_min")
+        for r in hpo_bench.quality(budget=24):
+            print(f"{r['objective']},{r['optimizer']},{r['budget']},"
+                  f"{r['best_mean']:.4f},{r['best_min']:.4f}")
+    else:
+        hpo_bench.main()
+
+    _section("dag (paper §3.3.1, Rubin)")
+    from benchmarks import dag_bench
+    sizes = (1_000, 10_000) if args.quick else (1_000, 10_000, 100_000)
+    keys = ["jobs", "wall_s", "jobs_per_s", "released", "pump_rounds",
+            "us_per_job"]
+    print(",".join(keys))
+    for r in dag_bench.run(sizes):
+        print(",".join(str(r[k]) for k in keys))
+
+    _section("pipeline (delivery granularity + hedging)")
+    from benchmarks import pipeline_bench
+    pipeline_bench.main()
+
+    _section("train (carousel-fed smoke training)")
+    from repro.launch.train import run_training
+    res = run_training("yi-6b", smoke=True, steps=20, seq_len=32,
+                       global_batch=4, carousel=True)
+    print("arch,steps,first_loss,last_loss,ttfb_s,wall_s")
+    print(f"yi-6b,{res['steps']},{res['first_loss']:.3f},"
+          f"{res['last_loss']:.3f},{res['time_to_first_batch_s']:.2f},"
+          f"{res['wall_s']:.1f}")
+
+    _section("roofline (dry-run sweep)")
+    from benchmarks import roofline
+    roofline.main()
+
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Active Learning DG workflow (paper §3.3.2, Fig. 7): processing Works
+and decision-making Works alternate in a condition-guarded cycle.  The
+decision Work reads the upstream processing output and *re-binds the next
+processing's parameters* (a learning-rate search here).
+
+    PYTHONPATH=src python examples/active_learning.py
+"""
+from repro.configs.base import RunConfig
+from repro.core import payloads as reg
+from repro.core.active_learning import build_active_learning_workflow
+from repro.core.idds import IDDS
+from repro.launch.train import run_training
+
+
+def process(params, inputs):
+    """One (tiny) training run at the currently-hinted learning rate."""
+    lr = float(params.get("lr", 1e-4))
+    run = RunConfig(learning_rate=lr, warmup_steps=1, total_steps=8,
+                    ce_block_v=64)
+    res = run_training("qwen1.5-4b", smoke=True, steps=8, seq_len=16,
+                       global_batch=2, carousel=False, run=run)
+    return {"loss": res["last_loss"], "lr": lr}
+
+
+def decide(params, inputs):
+    """Keep doubling the LR while the loss keeps improving."""
+    hist = params.get("history", [])
+    cur = params["processing_result"]
+    hist = hist + [[cur["lr"], cur["loss"]]]
+    improving = len(hist) < 2 or hist[-1][1] < hist[-2][1] - 1e-4
+    return {
+        "decision": bool(improving and len(hist) < 6),
+        "hint": {"lr": cur["lr"] * 2.0, "history": hist},
+        "history": hist,
+    }
+
+
+reg.register_payload("al_process_train", process)
+reg.register_payload("al_decide_lr", decide)
+
+
+def main():
+    wf = build_active_learning_workflow(
+        process_payload="al_process_train",
+        decide_payload="al_decide_lr",
+        init_params={"lr": 1e-4},
+        max_iterations=8)
+    idds = IDDS()
+    rid = idds.submit_workflow(wf)
+    idds.pump()
+    server_wf = idds.get_workflow(rid)
+    rounds = [w for w in server_wf.works.values() if w.template == "decide"]
+    last = max(rounds, key=lambda w: w.iteration)
+    print(f"{len(rounds)} process->decide cycles")
+    for lr, loss in last.result["history"]:
+        print(f"  lr={lr:.2e}  loss={loss:.4f}")
+    print("workflow:", server_wf.counts())
+
+
+if __name__ == "__main__":
+    main()

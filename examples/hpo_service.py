@@ -1,0 +1,47 @@
+"""HPO service (paper §3.2): central search-space scanning, asynchronous
+evaluation of hyperparameter points on 'remote' workers — here the points
+are REAL (tiny) training runs of the yi-6b smoke model.
+
+    PYTHONPATH=src python examples/hpo_service.py
+"""
+from repro.configs.base import RunConfig
+from repro.core import payloads as reg
+from repro.core.hpo import HPOService, loguniform, uniform
+from repro.core.idds import IDDS
+from repro.launch.train import run_training
+
+
+def train_trial(params, inputs):
+    run = RunConfig(learning_rate=float(params["lr"]),
+                    weight_decay=float(params["wd"]),
+                    warmup_steps=2, total_steps=12, ce_block_v=64)
+    res = run_training("yi-6b", smoke=True, steps=12, seq_len=32,
+                       global_batch=2, carousel=False, run=run)
+    return {"objective": res["last_loss"]}
+
+
+reg.register_payload("hpo_train_trial", train_trial)
+
+
+def main():
+    idds = IDDS(sync=False, max_workers=4)   # 4 'grid GPU sites'
+    idds.start()
+    try:
+        svc = HPOService(
+            idds,
+            {"lr": loguniform(1e-5, 3e-2), "wd": uniform(0.0, 0.3)},
+            eval_payload="hpo_train_trial",
+            optimizer="evolution",
+            points_per_round=4, max_points=12, seed=0)
+        res = svc.run(timeout=600)
+    finally:
+        idds.stop()
+    print(f"{len(res.trials)} trials over {res.rounds} rounds "
+          f"({res.failed_trials} failed)")
+    for p, o in sorted(res.trials, key=lambda t: t[1])[:3]:
+        print(f"  loss={o:.4f}  lr={p['lr']:.2e} wd={p['wd']:.3f}")
+    print(f"best: {res.best_objective:.4f} at {res.best_point}")
+
+
+if __name__ == "__main__":
+    main()

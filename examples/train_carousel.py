@@ -1,0 +1,46 @@
+"""End-to-end driver: train a ~130M-param model for a few hundred steps,
+fed by the Data Carousel (ColdStore -> Stager -> on-demand packing ->
+incremental delivery), with async checkpoints and resume.
+
+    PYTHONPATH=src python examples/train_carousel.py             # smoke
+    PYTHONPATH=src python examples/train_carousel.py --full      # mamba2-130m, 300 steps
+
+The --full run is the deliverable-(b) e2e driver: mamba2-130m (130M
+params) on a synthetic corpus; expect several minutes on CPU.
+"""
+import argparse
+import sys
+import tempfile
+
+from repro.launch.train import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out = args.out or tempfile.mkdtemp(prefix="idds_train_")
+    if args.full:
+        steps = args.steps or 300
+        res = run_training(
+            "mamba2-130m", smoke=False, steps=steps, seq_len=256,
+            global_batch=8, out_dir=out, carousel=True, ckpt_every=50)
+    else:
+        steps = args.steps or 60
+        res = run_training(
+            "mamba2-130m", smoke=True, steps=steps, seq_len=64,
+            global_batch=8, out_dir=out, carousel=True, ckpt_every=20)
+
+    print(f"arch=mamba2-130m steps={res['steps']}")
+    print(f"loss: {res['first_loss']:.4f} -> {res['last_loss']:.4f}")
+    print(f"time-to-first-batch: {res['time_to_first_batch_s']:.2f}s "
+          f"(training started while later shards were still on 'tape')")
+    print(f"wall: {res['wall_s']:.1f}s   checkpoints in {out}")
+    assert res["last_loss"] < res["first_loss"], "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

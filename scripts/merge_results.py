@@ -1,0 +1,73 @@
+"""Assemble dryrun_results_optimized.json from the crashed sweep's log
+(single-pod cells) + per-arch part files (multi-pod + the one recovered
+single-pod cell), and refresh dryrun_results.json (the file benchmarks
+read) to the optimized table."""
+import glob
+import json
+import re
+import sys
+
+LOG_RE = re.compile(
+    r"^\[ok\] (\S+) x (\S+) mesh=(\S+) flops/dev=(\S+) bytes/dev=(\S+) "
+    r"coll/dev=(\S+) dom=(\S+) bound=(\S+)ms useful=(\S+) compile=(\S+)s")
+SKIP_RE = re.compile(r"^\[skipped\] (\S+) x (\S+) mesh=(\S+) \((.*)\)")
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def cell_from_log(m):
+    arch, shape, mesh, flops, byts, coll, dom, bound, useful, comp = m.groups()
+    flops, byts, coll = float(flops), float(byts), float(coll)
+    chips = 256 if mesh == "16x16" else 512
+    t_c, t_m, t_n = flops / PEAK, byts / HBM, coll / ICI
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n}
+    d = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape, "status": "ok",
+        "mesh": mesh, "chips": chips,
+        "hlo_flops": flops, "hlo_bytes": byts, "collective_total": coll,
+        "compile_s": float(comp), "recovered_from_log": True,
+        "roofline": {**terms, "dominant": d,
+                     "bound_s": max(t_c, t_m, t_n),
+                     "compute_fraction": t_c / max(t_c, t_m, t_n, 1e-30),
+                     "useful_flops_ratio": float(useful)},
+    }
+
+
+def main():
+    cells = []
+    with open("dryrun_sweep2.log") as f:
+        for line in f:
+            m = LOG_RE.match(line.strip())
+            if m:
+                cells.append(cell_from_log(m))
+                continue
+            s = SKIP_RE.match(line.strip())
+            if s and s.group(3) == "16x16":
+                cells.append({"arch": s.group(1), "shape": s.group(2),
+                              "status": "skipped", "reason": s.group(4)})
+    for path in sorted(glob.glob("dr_parts/*.json")):
+        try:
+            cells.extend(json.load(open(path)))
+        except Exception as e:
+            print("bad part", path, e, file=sys.stderr)
+    # dedupe on (arch, shape, chips/mesh)
+    seen = {}
+    for c in cells:
+        key = (c["arch"], c["shape"], c.get("chips", c.get("mesh", "skip")),
+               c["status"])
+        seen[key] = c
+    out = list(seen.values())
+    ok = sum(1 for c in out if c["status"] == "ok")
+    sk = sum(1 for c in out if c["status"] == "skipped")
+    er = sum(1 for c in out if c["status"] == "error")
+    json.dump(out, open("dryrun_results_optimized.json", "w"), indent=1)
+    json.dump(out, open("dryrun_results.json", "w"), indent=1)
+    print(f"optimized table: {ok} ok / {sk} skipped / {er} error")
+    for c in out:
+        if c["status"] == "error":
+            print("ERROR:", c["arch"], c["shape"], c.get("error", "")[:120])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Data Carousel: fine-grained, incremental data delivery (paper §3.1).
+
+ColdStore (tape) -> Stager (async, hedged, retried) -> DiskCache (bounded,
+prompt release) -> on-demand transform -> DeliveryIterator (training
+batches as shards land).  ``simulator.py`` is the discrete-event model
+that reproduces the paper's Fig. 4/5 comparison (coarse vs fine).
+"""
+from repro.carousel.storage import ColdStore, DiskCache, TapeFile  # noqa: F401
+from repro.carousel.stager import Stager  # noqa: F401
+from repro.carousel.ddm import CarouselDDM  # noqa: F401
+from repro.carousel.delivery import DeliveryIterator  # noqa: F401

@@ -1,0 +1,70 @@
+"""Production DDM implementation: collections backed by ColdStore +
+DiskCache + Stager.  The iDDS Transformer daemon talks to this object;
+``mark_processed`` implements the carousel's *prompt release* — the
+moment every consumer of a file is done, its cache bytes are freed.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Optional
+
+from repro.carousel.stager import Stager
+from repro.carousel.storage import ColdStore, DiskCache
+from repro.core.workflow import Collection, FileRef
+
+
+class CarouselDDM:
+    def __init__(self, cold: ColdStore, cache: DiskCache,
+                 *, prompt_release: bool = True):
+        self.cold = cold
+        self.cache = cache
+        self.prompt_release = prompt_release
+        self._lock = threading.RLock()
+        self._collections: Dict[str, Collection] = {}
+        self._stagers: Dict[str, Stager] = {}
+
+    def attach_stager(self, collection: str, stager: Stager) -> None:
+        with self._lock:
+            self._stagers[collection] = stager
+        stager.on_available = lambda name: self.set_available(collection, name)
+
+    def register_collection(self, name: str,
+                            files: Iterable[FileRef]) -> Collection:
+        with self._lock:
+            c = Collection(name, files=list(files))
+            self._collections[name] = c
+            return c
+
+    def register_from_cold(self, name: str) -> Collection:
+        return self.register_collection(
+            name, [FileRef(f.name, size=f.size, available=f.name in self.cache)
+                   for f in self.cold.files()])
+
+    def get_collection(self, name: str) -> Collection:
+        with self._lock:
+            if name not in self._collections:
+                # output collections materialize lazily, initially empty
+                self._collections[name] = Collection(name)
+            return self._collections[name]
+
+    def set_available(self, name: str, file_name: str,
+                      available: bool = True) -> None:
+        with self._lock:
+            coll = self._collections[name]
+            for f in coll.files:
+                if f.name == file_name:
+                    f.available = available
+                    return
+            # late-registered output content
+            coll.files.append(FileRef(file_name, available=available))
+
+    def mark_processed(self, name: str, file_name: str) -> None:
+        with self._lock:
+            for f in self._collections[name].files:
+                if f.name == file_name:
+                    f.processed = True
+                    break
+            else:
+                raise KeyError(file_name)
+        # the carousel's prompt release: free cache bytes immediately
+        self.cache.release(file_name, drop=self.prompt_release)

@@ -1,0 +1,161 @@
+"""Asynchronous staging engine (the DDM transfer machinery).
+
+Moves files ColdStore -> DiskCache on a worker pool, applying the
+*on-demand transformation* at stage time (paper: "transform source data on
+the storage side to the format optimal for delivery"), then announces
+per-file availability on the bus (T_COLLECTION_UPDATED) — the signal that
+drives the Transformer daemon's incremental dispatch.
+
+Fault tolerance:
+  * retries with exponential backoff on tape read errors;
+  * hedged (duplicate) requests for stragglers: if a file's stage time
+    exceeds ``hedge_factor`` x the observed median, a second request is
+    issued and the first to land wins — classic tail-latency mitigation.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.carousel.storage import ColdStore, DiskCache
+from repro.core import messaging as M
+
+
+@dataclass
+class StageRecord:
+    name: str
+    submitted: float
+    finished: Optional[float] = None
+    attempts: int = 0
+    hedged: bool = False
+    ok: bool = False
+
+
+class Stager:
+    def __init__(self, cold: ColdStore, cache: DiskCache,
+                 bus: Optional[M.MessageBus] = None, *,
+                 collection: str = "carousel",
+                 workers: int = 4, max_attempts: int = 4,
+                 backoff: float = 0.02, hedge_factor: float = 3.0,
+                 hedge_min_samples: int = 8,
+                 transform: Optional[Callable[[str, Any], Any]] = None,
+                 on_available: Optional[Callable[[str], None]] = None):
+        self.cold = cold
+        self.cache = cache
+        self.bus = bus
+        self.collection = collection
+        self.transform = transform
+        self.on_available = on_available
+        self.max_attempts = max_attempts
+        self.backoff = backoff
+        self.hedge_factor = hedge_factor
+        self.hedge_min_samples = hedge_min_samples
+        self._pool = ThreadPoolExecutor(max_workers=workers,
+                                        thread_name_prefix="stager")
+        self._lock = threading.RLock()
+        self.records: Dict[str, StageRecord] = {}
+        self._landed: Dict[str, bool] = {}
+        self._latencies: List[float] = []
+        self._futures: List[Future] = []
+        self.hedges_issued = 0
+
+    # ------------------------------------------------------------------
+    def _median_latency(self) -> Optional[float]:
+        with self._lock:
+            if len(self._latencies) < self.hedge_min_samples:
+                return None
+            s = sorted(self._latencies)
+            return s[len(s) // 2]
+
+    def _land(self, name: str, data: Any, size: int) -> bool:
+        """First landing wins (hedges make this racy by design)."""
+        with self._lock:
+            if self._landed.get(name):
+                return False
+            self._landed[name] = True
+            rec = self.records[name]
+            rec.finished = time.time()
+            rec.ok = True
+            self._latencies.append(rec.finished - rec.submitted)
+        self.cache.put(name, data, size, pin=False)
+        if self.bus is not None:
+            self.bus.publish(M.T_COLLECTION_UPDATED,
+                             {"collection": self.collection, "file": name})
+        if self.on_available is not None:
+            self.on_available(name)
+        return True
+
+    def _stage_once(self, name: str) -> None:
+        rec = self.records[name]
+        for attempt in range(1, self.max_attempts + 1):
+            with self._lock:
+                if self._landed.get(name):
+                    return
+                rec.attempts += 1
+            try:
+                raw = self.cold.read(name)
+                data = (self.transform(name, raw)
+                        if self.transform is not None else raw)
+                size = self.cold.get(name).size
+                self._land(name, data, size)
+                return
+            except IOError:
+                time.sleep(self.backoff * (2 ** (attempt - 1)))
+        # exhausted: only mark failed if nobody else landed it
+        with self._lock:
+            if not self._landed.get(name):
+                rec.finished = time.time()
+                rec.ok = False
+
+    def submit(self, name: str) -> None:
+        with self._lock:
+            if name in self.records:
+                return
+            self.records[name] = StageRecord(name, time.time())
+        self._futures.append(self._pool.submit(self._stage_once, name))
+
+    def submit_all(self, names: List[str]) -> None:
+        for n in names:
+            self.submit(n)
+
+    # -- straggler hedging (call periodically or via watch()) ---------------
+    def hedge_check(self) -> int:
+        med = self._median_latency()
+        if med is None:
+            return 0
+        issued = 0
+        now = time.time()
+        with self._lock:
+            cands = [r for r in self.records.values()
+                     if not r.finished and not r.hedged
+                     and now - r.submitted > self.hedge_factor * med]
+            for r in cands:
+                r.hedged = True
+        for r in cands:
+            self.hedges_issued += 1
+            issued += 1
+            self._futures.append(self._pool.submit(self._stage_once, r.name))
+        return issued
+
+    def wait(self, timeout: float = 60.0, hedge_interval: float = 0.05) -> bool:
+        """Block until every submitted file landed or terminally failed."""
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            self.hedge_check()
+            with self._lock:
+                pend = [r for r in self.records.values() if r.finished is None]
+            if not pend:
+                return True
+            time.sleep(hedge_interval)
+        return False
+
+    def failed(self) -> List[str]:
+        with self._lock:
+            return [r.name for r in self.records.values()
+                    if r.finished is not None and not r.ok]
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)

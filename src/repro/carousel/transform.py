@@ -1,0 +1,62 @@
+"""On-demand data transformation (paper function #1).
+
+Raw corpus shards (variable-length tokenized documents) are transformed at
+*stage time* into the consumer-optimal format: fixed-length packed
+training sequences with next-token labels and a loss mask that zeroes
+cross-document positions.  Delivering packed sequences instead of raw
+documents minimizes bytes on the wire and removes all consumer-side CPU
+work — the iDDS rationale, one level down.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def pack_documents(docs: Sequence[np.ndarray], seq_len: int, *,
+                   pad_id: int = 0, eod_id: int = 1) -> Dict[str, np.ndarray]:
+    """Greedy sequential packing of documents into (N, seq_len) rows.
+
+    Returns tokens (N, S) int32, labels (N, S) int32 (next token), and
+    loss_mask (N, S) float32 — 0 on pad positions and on the position that
+    would predict across a document boundary.
+    """
+    stream: List[int] = []
+    bounds: List[int] = []  # indices in `stream` where a doc ends (eod pos)
+    for d in docs:
+        stream.extend(int(t) for t in d)
+        stream.append(eod_id)
+        bounds.append(len(stream) - 1)
+
+    total = len(stream)
+    n_rows = max(1, (total + seq_len) // (seq_len + 1))
+    need = n_rows * (seq_len + 1)
+    arr = np.full((need,), pad_id, np.int32)
+    arr[:total] = np.asarray(stream[:need], np.int32)[:min(total, need)]
+    rows = arr.reshape(n_rows, seq_len + 1)
+
+    tokens = rows[:, :-1].copy()
+    labels = rows[:, 1:].copy()
+    valid = np.zeros((need,), np.float32)
+    valid[:min(total, need)] = 1.0
+    # a position t is maskable if token t+1 starts a new doc (t is an eod)
+    eod = np.zeros((need,), bool)
+    idx = [b for b in bounds if b < need]
+    eod[idx] = True
+    vm = valid.reshape(n_rows, seq_len + 1)
+    em = eod.reshape(n_rows, seq_len + 1)
+    loss_mask = vm[:, 1:] * (1.0 - em[:, :-1].astype(np.float32))
+    return {"tokens": tokens, "labels": labels, "loss_mask": loss_mask}
+
+
+def make_packing_transform(seq_len: int, *, pad_id: int = 0, eod_id: int = 1):
+    """Stager ``transform`` hook: raw shard (list/obj array of docs) ->
+    packed batch dict."""
+    def _tf(name: str, raw) -> Dict[str, np.ndarray]:
+        if isinstance(raw, dict):   # already packed
+            return raw
+        docs = list(raw) if not isinstance(raw, np.ndarray) else (
+            [raw] if raw.ndim == 1 else list(raw))
+        return pack_documents(docs, seq_len, pad_id=pad_id, eod_id=eod_id)
+    return _tf

@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    all_cells,
+    cell_is_runnable,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)

@@ -1,0 +1,43 @@
+"""llava-next-mistral-7b — VLM, mistral-7b text backbone:
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, anyres tiling.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+The vision tower + anyres tiling is a STUB per the assignment:
+``input_specs()`` provides precomputed, already-projected patch
+embeddings (B, num_img_patches, d_model) which are prepended to the text
+embedding sequence.  2880 patches ~= anyres 2x2+base grid of 576-patch
+CLIP tiles.  long_500k skipped (full attention).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    num_img_patches=2880,
+    gated_mlp=True,
+    act="silu",
+    rope_theta=1_000_000.0,
+    norm_eps=1e-5,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+)
+
+SMOKE = CONFIG.replace(
+    name="llava-next-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    num_img_patches=16,
+)
+
+register(CONFIG, SMOKE)

@@ -1,0 +1,42 @@
+"""qwen1.5-32b — dense, 64L d_model=5120 40H (GQA kv=40) d_ff=27392
+vocab=152064, QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]
+
+40 heads is NOT divisible by the 16-way model axis: the sharding rules
+fall back to flattened-QKV-dim sharding for the projections (5120 % 16 == 0)
+and KV-sequence sharding inside attention (see sharding/rules.py).
+decode_32k uses the int8 KV cache (MHA kv=40 => 5.5 TB bf16 > pod HBM).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=128,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    gated_mlp=True,
+    act="silu",
+    rope_theta=1_000_000.0,
+    norm_eps=1e-6,
+    kv_cache_dtype="int8",
+    source="hf:Qwen/Qwen1.5-0.5B; hf",
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen1.5-32b-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    kv_cache_dtype="bfloat16",
+)
+
+register(CONFIG, SMOKE)

@@ -1,0 +1,20 @@
+"""iDDS core: the paper's primary contribution.
+
+Workflow DG engine, the five daemons, the message bus, the JSON request
+boundary, and the services built on top (HPO, Active Learning, Rubin-style
+job DAGs).
+"""
+from repro.core.idds import IDDS, AuthError  # noqa: F401
+from repro.core.requests import Request  # noqa: F401
+from repro.core.workflow import (  # noqa: F401
+    Branch,
+    Collection,
+    Condition,
+    FileRef,
+    Processing,
+    ProcessingStatus,
+    Work,
+    WorkStatus,
+    Workflow,
+    WorkTemplate,
+)

@@ -1,0 +1,65 @@
+"""Active-Learning workflow (paper §3.3.2, Fig. 7).
+
+Two Work template kinds: *processing* and *decision making*.  The decision
+Work takes output data from the upstream processing Work and provides
+hints to the downstream processing Work.  When a Work completes, its
+Condition branches are evaluated to decide whether to trigger the next
+processing, and with what new parameter values — a DG **cycle** bounded by
+``max_iterations``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.core import payloads as reg
+from repro.core.workflow import Branch, Condition, Workflow, WorkTemplate
+
+
+@reg.register_binder("al_pass_result")
+def _al_pass_result(params: Dict[str, Any], result) -> Dict[str, Any]:
+    """decision -> next processing: apply the decision's hints."""
+    out = dict(params)
+    out.update((result or {}).get("hint", {}))
+    out["round"] = int(out.get("round", 0)) + 1
+    return out
+
+
+@reg.register_binder("al_to_decision")
+def _al_to_decision(params: Dict[str, Any], result) -> Dict[str, Any]:
+    """processing -> decision: forward params + processing outputs."""
+    out = dict(params)
+    out["processing_result"] = dict(result or {})
+    return out
+
+
+@reg.register_predicate("al_continue")
+def _al_continue(work, result) -> bool:
+    return bool((result or {}).get("decision", False))
+
+
+def build_active_learning_workflow(
+    *,
+    process_payload: str,
+    decide_payload: str,
+    init_params: Optional[Dict[str, Any]] = None,
+    max_iterations: int = 10,
+    name: str = "active-learning",
+    input_collection: Optional[str] = None,
+) -> Workflow:
+    """process --always--> decide --(decision==True)--> process (cycle)."""
+    wf = Workflow(name=name)
+    wf.add_template(WorkTemplate(
+        name="process", payload=process_payload,
+        input_collection=input_collection, granularity="fine"))
+    wf.add_template(WorkTemplate(name="decide", payload=decide_payload))
+    wf.add_condition(Condition(
+        trigger="process", predicate="always",
+        true_next=[Branch("decide", binder="al_to_decision")],
+        max_iterations=2 * max_iterations + 1))
+    wf.add_condition(Condition(
+        trigger="decide", predicate="al_continue",
+        true_next=[Branch("process", binder="al_pass_result")],
+        false_next=[],  # stop: no further works
+        max_iterations=2 * max_iterations))
+    wf.add_initial("process", {"round": 0, **(init_params or {})})
+    return wf

@@ -1,0 +1,402 @@
+"""The five iDDS daemons (paper Fig. 1) + the WFM-system boundary.
+
+  Clerk       requests -> Workflow objects
+  Marshaller  DG management: Workflow -> Works; condition evaluation
+  Transformer input/output association; Work -> Processing(s); DDM calls
+  Carrier     Processing -> WFM submit / poll / retry (job attempts)
+  Conductor   output availability -> consumer notifications (messaging)
+
+Every daemon exposes ``process_once() -> int`` (number of messages
+handled) so the head service can pump deterministically (tests) or spin
+daemon threads (production mode).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import messaging as M
+from repro.core import payloads as reg
+from repro.core.ddm import DDM, InMemoryDDM
+from repro.core.workflow import (Collection, FileRef, Processing,
+                                 ProcessingStatus, Work, WorkStatus, Workflow,
+                                 _new_id)
+
+
+# ---------------------------------------------------------------------------
+# WFM system boundary (the paper's PanDA)
+# ---------------------------------------------------------------------------
+
+
+class WFMExecutor:
+    """Executes Processing payloads. sync=True runs inline at submit
+    (deterministic pump); sync=False uses a worker pool ('grid sites').
+
+    ``fault_hook(processing) -> Optional[str]`` injects failures (tests /
+    the carousel simulator's 'input not staged yet' failure mode).
+    """
+
+    def __init__(self, *, sync: bool = True, max_workers: int = 8,
+                 fault_hook: Optional[Callable[[Processing],
+                                               Optional[str]]] = None):
+        self.sync = sync
+        self.fault_hook = fault_hook
+        self._pool = (None if sync else
+                      ThreadPoolExecutor(max_workers=max_workers,
+                                         thread_name_prefix="wfm"))
+        self._futures: Dict[str, Future] = {}
+        self._lock = threading.RLock()
+        self.submitted = 0
+
+    def _execute(self, proc: Processing) -> Processing:
+        try:
+            if self.fault_hook is not None:
+                err = self.fault_hook(proc)
+                if err:
+                    raise RuntimeError(err)
+            fn = reg.get_payload(proc.payload)
+            proc.result = fn(dict(proc.params), list(proc.input_files))
+            proc.status = ProcessingStatus.FINISHED
+        except Exception as e:  # noqa: BLE001 — payload errors become retries
+            proc.status = ProcessingStatus.FAILED
+            proc.error = f"{type(e).__name__}: {e}"
+        return proc
+
+    def submit(self, proc: Processing) -> None:
+        with self._lock:
+            self.submitted += 1
+            proc.status = ProcessingStatus.RUNNING
+            if self.sync:
+                self._execute(proc)
+            else:
+                self._futures[proc.proc_id] = self._pool.submit(
+                    self._execute, proc)
+
+    def poll(self, proc: Processing) -> Processing:
+        if self.sync:
+            return proc
+        with self._lock:
+            fut = self._futures.get(proc.proc_id)
+        if fut is not None and fut.done():
+            with self._lock:
+                self._futures.pop(proc.proc_id, None)
+            return fut.result()
+        return proc
+
+    def shutdown(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# Shared daemon context
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Context:
+    bus: M.MessageBus
+    ddm: DDM
+    wfm: WFMExecutor
+    workflows: Dict[str, Workflow] = field(default_factory=dict)
+    works: Dict[str, Tuple[str, Work]] = field(default_factory=dict)
+    processings: Dict[str, Processing] = field(default_factory=dict)
+    stats: Dict[str, int] = field(default_factory=dict)
+    lock: threading.RLock = field(default_factory=threading.RLock)
+
+    def bump(self, key: str, n: int = 1) -> None:
+        with self.lock:
+            self.stats[key] = self.stats.get(key, 0) + n
+
+
+class Daemon:
+    name = "daemon"
+
+    def __init__(self, ctx: Context):
+        self.ctx = ctx
+
+    def process_once(self) -> int:
+        raise NotImplementedError
+
+    def run_forever(self, stop: threading.Event, interval: float = 0.01):
+        while not stop.is_set():
+            try:
+                n = self.process_once()
+            except Exception:  # pragma: no cover - daemon resilience
+                traceback.print_exc()
+                n = 0
+            if n == 0:
+                time.sleep(interval)
+
+
+# ---------------------------------------------------------------------------
+# Clerk: requests -> Workflow objects
+# ---------------------------------------------------------------------------
+
+
+class Clerk(Daemon):
+    name = "clerk"
+
+    def process_once(self) -> int:
+        msgs = self.ctx.bus.poll(M.T_NEW_REQUESTS)
+        for m in msgs:
+            wf = Workflow.from_json(m.body["workflow"])
+            with self.ctx.lock:
+                self.ctx.workflows[wf.workflow_id] = wf
+            self.ctx.bump("requests")
+            self.ctx.bus.publish(M.T_NEW_WORKFLOWS, {
+                "workflow_id": wf.workflow_id,
+                "request_id": m.body.get("request_id"),
+            })
+        return len(msgs)
+
+
+# ---------------------------------------------------------------------------
+# Marshaller: DG management (Workflow -> Works, condition evaluation)
+# ---------------------------------------------------------------------------
+
+
+class Marshaller(Daemon):
+    name = "marshaller"
+
+    def _emit(self, wf: Workflow, works: List[Work]) -> None:
+        for w in works:
+            with self.ctx.lock:
+                self.ctx.works[w.work_id] = (wf.workflow_id, w)
+            self.ctx.bump("works_created")
+            self.ctx.bus.publish(M.T_NEW_WORKS, {
+                "workflow_id": wf.workflow_id, "work_id": w.work_id})
+
+    def process_once(self) -> int:
+        n = 0
+        for m in self.ctx.bus.poll(M.T_NEW_WORKFLOWS):
+            n += 1
+            wf = self.ctx.workflows[m.body["workflow_id"]]
+            self._emit(wf, wf.start())
+        for m in self.ctx.bus.poll(M.T_WORK_DONE):
+            n += 1
+            wf_id, work = self.ctx.works[m.body["work_id"]]
+            wf = self.ctx.workflows[wf_id]
+            self._emit(wf, wf.on_terminated(work))
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Transformer: Work -> Processing(s), input/output association
+# ---------------------------------------------------------------------------
+
+
+class Transformer(Daemon):
+    """Creates Processings at the Work's granularity.
+
+    fine   — one Processing per available input file, created incrementally
+             as DDM announces availability (paper §3.1: 'input data is
+             incrementally processed based on detailed knowledge of the
+             status of input data').
+    coarse — one Processing once the ENTIRE input collection is available
+             (the pre-iDDS baseline the paper improves on).
+    """
+    name = "transformer"
+
+    def __init__(self, ctx: Context):
+        super().__init__(ctx)
+        self._pending: Dict[str, Work] = {}          # works awaiting inputs
+        self._dispatched: Dict[str, set] = {}        # work_id -> file names
+        self._open_procs: Dict[str, int] = {}        # work_id -> #unfinished
+        self._work_procs: Dict[str, List[Processing]] = {}  # work -> procs
+
+    # -- helpers ----------------------------------------------------------
+    def _make_processing(self, work: Work, files: List[str]) -> Processing:
+        proc = Processing(
+            proc_id=_new_id("proc"),
+            work_id=work.work_id,
+            payload=work.payload,
+            params=dict(work.params),
+            input_files=list(files),
+            output_files=[f"{work.output_collection or work.work_id}/out-"
+                          f"{len(self._dispatched.get(work.work_id, ()))}"],
+            max_attempts=work.max_attempts,
+        )
+        with self.ctx.lock:
+            self.ctx.processings[proc.proc_id] = proc
+        self._work_procs.setdefault(work.work_id, []).append(proc)
+        self._open_procs[work.work_id] = (
+            self._open_procs.get(work.work_id, 0) + 1)
+        self.ctx.bump("processings_created")
+        self.ctx.bus.publish(M.T_NEW_PROCESSINGS, {"proc_id": proc.proc_id})
+        return proc
+
+    def _try_dispatch(self, work: Work) -> None:
+        """Create whatever Processings the current input state allows."""
+        if work.input_collection is None:
+            if work.work_id not in self._dispatched:
+                self._dispatched[work.work_id] = {"__virtual__"}
+                work.status = WorkStatus.TRANSFORMING
+                self._make_processing(work, [])
+            return
+
+        coll = self.ctx.ddm.get_collection(work.input_collection)
+        done = self._dispatched.setdefault(work.work_id, set())
+        if work.granularity == "coarse":
+            if done:
+                return
+            if all(f.available for f in coll.files):
+                done.add("__all__")
+                work.status = WorkStatus.TRANSFORMING
+                self._make_processing(work, [f.name for f in coll.files])
+            return
+        # fine granularity: one Processing per newly-available file
+        for f in coll.files:
+            if f.available and f.name not in done:
+                done.add(f.name)
+                work.status = WorkStatus.TRANSFORMING
+                self._make_processing(work, [f.name])
+
+    def _work_complete(self, work: Work) -> bool:
+        if self._open_procs.get(work.work_id, 0) > 0:
+            return False
+        if work.input_collection is None:
+            return bool(self._dispatched.get(work.work_id))
+        coll = self.ctx.ddm.get_collection(work.input_collection)
+        done = self._dispatched.get(work.work_id, set())
+        if work.granularity == "coarse":
+            return bool(done)
+        return len(done) == len(coll.files)
+
+    def _finalize(self, work: Work) -> None:
+        procs = self._work_procs.pop(work.work_id, [])
+        fails = sum(1 for p in procs
+                    if p.status == ProcessingStatus.FAILED)
+        work.status = (WorkStatus.FINISHED if fails == 0 else
+                       WorkStatus.SUBFINISHED)
+        work.terminated_at = time.time()
+        # merge processing results: last one wins per key; keep the list too
+        merged: Dict[str, Any] = {}
+        for p in sorted((p for p in procs if p.result),
+                        key=lambda p: p.proc_id):
+            merged.update(p.result)
+            work.results.append(p.result)
+        work.result = merged or work.result
+        self._pending.pop(work.work_id, None)
+        self.ctx.bump("works_finished")
+        self.ctx.bus.publish(M.T_WORK_DONE, {"work_id": work.work_id})
+
+    # -- main loop ---------------------------------------------------------
+    def process_once(self) -> int:
+        n = 0
+        for m in self.ctx.bus.poll(M.T_NEW_WORKS):
+            n += 1
+            _, work = self.ctx.works[m.body["work_id"]]
+            work.status = WorkStatus.ACTIVATED
+            self._pending[work.work_id] = work
+            self._try_dispatch(work)
+
+        # DDM announced new file availability -> incremental dispatch
+        updated = {m.body.get("collection")
+                   for m in self.ctx.bus.poll(M.T_COLLECTION_UPDATED)}
+        if updated:
+            n += len(updated)
+        for work in list(self._pending.values()):
+            if work.input_collection in updated or updated == {None}:
+                self._try_dispatch(work)
+
+        for m in self.ctx.bus.poll(M.T_PROCESSING_DONE):
+            n += 1
+            proc = self.ctx.processings[m.body["proc_id"]]
+            _, work = self.ctx.works[proc.work_id]
+            self._open_procs[work.work_id] = max(
+                0, self._open_procs.get(work.work_id, 1) - 1)
+            if proc.status == ProcessingStatus.FINISHED:
+                if work.input_collection is not None:
+                    for fname in proc.input_files:
+                        try:
+                            self.ctx.ddm.mark_processed(
+                                work.input_collection, fname)
+                        except KeyError:
+                            pass
+                for out in proc.output_files:
+                    self.ctx.bus.publish(M.T_OUTPUT_AVAILABLE, {
+                        "work_id": work.work_id,
+                        "collection": work.output_collection,
+                        "file": out,
+                        "result": proc.result,
+                    })
+            if self._work_complete(work):
+                self._finalize(work)
+
+        # periodic re-scan for coarse works whose inputs completed silently
+        for work in list(self._pending.values()):
+            if work.status == WorkStatus.ACTIVATED:
+                self._try_dispatch(work)
+                if self._work_complete(work):
+                    self._finalize(work)
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Carrier: submit to WFM, poll, retry (the paper's job attempts)
+# ---------------------------------------------------------------------------
+
+
+class Carrier(Daemon):
+    name = "carrier"
+
+    def __init__(self, ctx: Context):
+        super().__init__(ctx)
+        self._running: Dict[str, Processing] = {}
+
+    def _submit(self, proc: Processing) -> None:
+        self.ctx.bump("job_attempts")
+        self.ctx.wfm.submit(proc)
+        self._running[proc.proc_id] = proc
+
+    def process_once(self) -> int:
+        n = 0
+        for m in self.ctx.bus.poll(M.T_NEW_PROCESSINGS):
+            n += 1
+            self._submit(self.ctx.processings[m.body["proc_id"]])
+
+        for proc in list(self._running.values()):
+            proc = self.ctx.wfm.poll(proc)
+            if proc.status == ProcessingStatus.FINISHED:
+                n += 1
+                del self._running[proc.proc_id]
+                self.ctx.bump("processings_finished")
+                self.ctx.bus.publish(M.T_PROCESSING_DONE,
+                                     {"proc_id": proc.proc_id})
+            elif proc.status == ProcessingStatus.FAILED:
+                n += 1
+                if proc.attempt < proc.max_attempts:
+                    proc.attempt += 1
+                    proc.error = None
+                    self.ctx.bump("job_retries")
+                    self._submit(proc)  # re-submission = another attempt
+                else:
+                    del self._running[proc.proc_id]
+                    self.ctx.bump("processings_failed")
+                    self.ctx.bus.publish(M.T_PROCESSING_DONE,
+                                         {"proc_id": proc.proc_id})
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Conductor: output availability -> consumer notifications
+# ---------------------------------------------------------------------------
+
+
+class Conductor(Daemon):
+    name = "conductor"
+
+    def process_once(self) -> int:
+        msgs = self.ctx.bus.poll(M.T_OUTPUT_AVAILABLE)
+        for m in msgs:
+            self.ctx.bump("notifications")
+            self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, dict(m.body))
+        return len(msgs)
+
+
+ALL_DAEMONS = (Clerk, Marshaller, Transformer, Carrier, Conductor)

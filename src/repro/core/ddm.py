@@ -1,0 +1,60 @@
+"""DDM-system boundary (the paper's Rucio side).
+
+iDDS daemons talk to a DDM through this narrow interface; the carousel
+package provides the production implementation (ColdStore + DiskCache +
+Stager).  ``InMemoryDDM`` backs unit tests and the pure-orchestration use
+cases (HPO, Rubin DAGs) whose collections are virtual.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Optional, Protocol
+
+from repro.core.workflow import Collection, FileRef
+
+
+class DDM(Protocol):
+    def get_collection(self, name: str) -> Collection: ...
+    def register_collection(self, name: str,
+                            files: Iterable[FileRef]) -> Collection: ...
+    def set_available(self, name: str, file_name: str,
+                      available: bool = True) -> None: ...
+    def mark_processed(self, name: str, file_name: str) -> None: ...
+
+
+class InMemoryDDM:
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._collections: Dict[str, Collection] = {}
+
+    def get_collection(self, name: str) -> Collection:
+        with self._lock:
+            if name not in self._collections:
+                # virtual collection: a single, immediately-available token
+                self._collections[name] = Collection(
+                    name, files=[FileRef(f"{name}#0", size=0, available=True)])
+            return self._collections[name]
+
+    def register_collection(self, name: str,
+                            files: Iterable[FileRef]) -> Collection:
+        with self._lock:
+            c = Collection(name, files=list(files))
+            self._collections[name] = c
+            return c
+
+    def set_available(self, name: str, file_name: str,
+                      available: bool = True) -> None:
+        with self._lock:
+            for f in self._collections[name].files:
+                if f.name == file_name:
+                    f.available = available
+                    return
+            raise KeyError(file_name)
+
+    def mark_processed(self, name: str, file_name: str) -> None:
+        with self._lock:
+            for f in self._collections[name].files:
+                if f.name == file_name:
+                    f.processed = True
+                    return
+            raise KeyError(file_name)

@@ -1,0 +1,147 @@
+"""iDDS head service: the RESTful facade + daemon runner.
+
+Authenticates users, registers and queries requests, and provides an
+interface to look up data collections/contents (paper §2).  Two execution
+modes:
+
+  * ``pump()``      — deterministic: cycle the daemons until the system is
+                      quiescent (unit tests, simulators);
+  * ``start()/stop()`` — production: one thread per daemon + threaded WFM
+                      pool, requests served concurrently.
+
+The HTTP layer is intentionally thin (a real deployment puts Flask/nginx
+in front); every entry point already speaks JSON strings, so the daemons
+never see Python objects from the client.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Set
+
+from repro.core import messaging as M
+from repro.core.daemons import (ALL_DAEMONS, Carrier, Clerk, Conductor,
+                                Context, Marshaller, Transformer, WFMExecutor)
+from repro.core.ddm import DDM, InMemoryDDM
+from repro.core.requests import Request
+from repro.core.workflow import Workflow
+
+
+class AuthError(Exception):
+    pass
+
+
+class IDDS:
+    def __init__(self, *, ddm: Optional[DDM] = None, sync: bool = True,
+                 max_workers: int = 8,
+                 fault_hook: Optional[Callable] = None,
+                 tokens: Optional[Set[str]] = None):
+        bus = M.MessageBus()
+        self.ctx = Context(
+            bus=bus,
+            ddm=ddm if ddm is not None else InMemoryDDM(),
+            wfm=WFMExecutor(sync=sync, max_workers=max_workers,
+                            fault_hook=fault_hook),
+        )
+        self.daemons = [cls(self.ctx) for cls in ALL_DAEMONS]
+        self._tokens = tokens  # None -> auth disabled (dev mode)
+        self._requests: Dict[str, Dict[str, Any]] = {}
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------------ auth
+    def _auth(self, token: str) -> None:
+        if self._tokens is not None and token not in self._tokens:
+            raise AuthError("invalid token")
+
+    # --------------------------------------------------------------- client API
+    def submit(self, request_json: str) -> str:
+        """Accept a serialized Request; returns the request_id."""
+        req = Request.from_json(request_json)
+        self._auth(req.token)
+        self._requests[req.request_id] = {
+            "request_id": req.request_id,
+            "workflow_id": req.workflow.workflow_id,
+            "requester": req.requester,
+            "status": "accepted",
+            "submitted_at": time.time(),
+        }
+        self.ctx.bus.publish(M.T_NEW_REQUESTS, {
+            "request_id": req.request_id,
+            "workflow": req.workflow.to_json(),
+        })
+        return req.request_id
+
+    def submit_workflow(self, wf: Workflow, requester: str = "anonymous",
+                        token: str = "") -> str:
+        return self.submit(Request(workflow=wf, requester=requester,
+                                   token=token).to_json())
+
+    def request_status(self, request_id: str) -> Dict[str, Any]:
+        info = dict(self._requests[request_id])
+        wf = self.ctx.workflows.get(info["workflow_id"])
+        if wf is not None:
+            info["works"] = wf.counts()
+            info["status"] = "finished" if wf.finished else "running"
+        return info
+
+    def get_workflow(self, request_id: str) -> Workflow:
+        return self.ctx.workflows[self._requests[request_id]["workflow_id"]]
+
+    def lookup_collection(self, name: str) -> Dict[str, Any]:
+        return self.ctx.ddm.get_collection(name).to_dict()
+
+    def lookup_contents(self, name: str) -> List[Dict[str, Any]]:
+        return [f.to_dict() for f in self.ctx.ddm.get_collection(name).files]
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return dict(self.ctx.stats)
+
+    # --------------------------------------------------------------- execution
+    def pump(self, max_rounds: int = 100_000) -> int:
+        """Cycle daemons until quiescent. Returns #rounds executed."""
+        for i in range(max_rounds):
+            moved = sum(d.process_once() for d in self.daemons)
+            if moved == 0:
+                return i + 1
+        raise RuntimeError(f"pump did not quiesce in {max_rounds} rounds")
+
+    def pump_until(self, cond: Callable[[], bool], *,
+                   timeout: float = 60.0, interval: float = 0.0) -> None:
+        """Pump until ``cond()`` — for incremental-availability scenarios
+        where external events (staging) interleave with daemon cycles."""
+        deadline = time.time() + timeout
+        while not cond():
+            moved = sum(d.process_once() for d in self.daemons)
+            if moved == 0:
+                if time.time() > deadline:
+                    raise TimeoutError("pump_until timed out")
+                if interval:
+                    time.sleep(interval)
+
+    def start(self) -> None:
+        """Production mode: one thread per daemon."""
+        self._stop.clear()
+        for d in self.daemons:
+            t = threading.Thread(target=d.run_forever, args=(self._stop,),
+                                 name=f"idds-{d.name}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5)
+        self._threads.clear()
+        self.ctx.wfm.shutdown()
+
+    def wait_request(self, request_id: str, timeout: float = 60.0) -> Dict:
+        """Block until a request's workflow finishes (threaded mode)."""
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            info = self.request_status(request_id)
+            if info.get("status") == "finished":
+                return info
+            time.sleep(0.01)
+        raise TimeoutError(f"request {request_id} not finished in {timeout}s")

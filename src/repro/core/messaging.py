@@ -1,0 +1,85 @@
+"""In-process message bus (the paper's ActiveMQ boundary).
+
+Daemons never call each other directly — everything crosses the bus, so a
+real deployment swaps this class for an AMQP/STOMP client without touching
+daemon logic.  Thread-safe; supports both queue semantics (each message
+consumed once, round-robin across consumers of a topic) and broadcast
+subscriptions (Conductor -> consumer notifications).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class Message:
+    topic: str
+    body: Dict[str, Any]
+    msg_id: int
+    ts: float
+
+
+class MessageBus:
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._queues: Dict[str, Deque[Message]] = collections.defaultdict(
+            collections.deque)
+        self._subs: Dict[str, List[Callable[[Message], None]]] = (
+            collections.defaultdict(list))
+        self._ids = itertools.count()
+        self._cv = threading.Condition(self._lock)
+        self.published = 0
+
+    # -- queue semantics ----------------------------------------------------
+    def publish(self, topic: str, body: Dict[str, Any]) -> Message:
+        with self._cv:
+            msg = Message(topic, dict(body), next(self._ids), time.time())
+            self._queues[topic].append(msg)
+            self.published += 1
+            for cb in self._subs.get(topic, ()):  # broadcast listeners
+                cb(msg)
+            self._cv.notify_all()
+            return msg
+
+    def poll(self, topic: str, max_n: int = 0) -> List[Message]:
+        """Consume up to max_n messages (0 = drain)."""
+        with self._lock:
+            q = self._queues[topic]
+            n = len(q) if max_n <= 0 else min(max_n, len(q))
+            return [q.popleft() for _ in range(n)]
+
+    def wait(self, topic: str, timeout: float = 1.0) -> Optional[Message]:
+        deadline = time.time() + timeout
+        with self._cv:
+            while not self._queues[topic]:
+                rem = deadline - time.time()
+                if rem <= 0:
+                    return None
+                self._cv.wait(rem)
+            return self._queues[topic].popleft()
+
+    def depth(self, topic: str) -> int:
+        with self._lock:
+            return len(self._queues[topic])
+
+    # -- broadcast semantics --------------------------------------------------
+    def subscribe(self, topic: str, callback: Callable[[Message], None]) -> None:
+        with self._lock:
+            self._subs[topic].append(callback)
+
+
+# Canonical topic names (Fig. 1 arrows)
+T_NEW_REQUESTS = "idds.requests.new"          # client -> Clerk
+T_NEW_WORKFLOWS = "idds.workflows.new"        # Clerk -> Marshaller
+T_NEW_WORKS = "idds.works.new"                # Marshaller -> Transformer
+T_NEW_PROCESSINGS = "idds.processings.new"    # Transformer -> Carrier
+T_PROCESSING_DONE = "idds.processings.done"   # Carrier -> Transformer/Marshaller
+T_WORK_DONE = "idds.works.done"               # Transformer -> Marshaller
+T_OUTPUT_AVAILABLE = "idds.outputs.available"  # Transformer -> Conductor
+T_CONSUMER_NOTIFY = "idds.consumers.notify"   # Conductor -> data consumers
+T_COLLECTION_UPDATED = "ddm.collections.updated"  # DDM -> Transformer (incremental)

@@ -1,0 +1,84 @@
+"""Payload / predicate / binder registries.
+
+Workflows round-trip through JSON (Fig. 2), so they cannot carry Python
+callables — they carry *names* resolved against these registries at
+execution time, exactly as PanDA tasks carry transformation names.
+
+  payload   (params, inputs) -> result dict           (the Work's compute)
+  predicate (work, result) -> bool                    (Condition branches)
+  binder    (params, result) -> new params            (template re-binding)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+_PAYLOADS: Dict[str, Callable[..., Any]] = {}
+_PREDICATES: Dict[str, Callable[..., bool]] = {}
+_BINDERS: Dict[str, Callable[..., Dict[str, Any]]] = {}
+
+
+def _register(table: Dict[str, Any], kind: str, name: str, fn=None):
+    def deco(f):
+        table[name] = f  # last registration wins (supports re-loading)
+        return f
+    return deco(fn) if fn is not None else deco
+
+
+def register_payload(name: str, fn=None):
+    return _register(_PAYLOADS, "payload", name, fn)
+
+
+def register_predicate(name: str, fn=None):
+    return _register(_PREDICATES, "predicate", name, fn)
+
+
+def register_binder(name: str, fn=None):
+    return _register(_BINDERS, "binder", name, fn)
+
+
+def get_payload(name: str) -> Callable[..., Any]:
+    if name not in _PAYLOADS:
+        raise KeyError(f"unknown payload {name!r}; known: {sorted(_PAYLOADS)}")
+    return _PAYLOADS[name]
+
+
+def get_predicate(name: str) -> Callable[..., bool]:
+    if name not in _PREDICATES:
+        raise KeyError(f"unknown predicate {name!r}")
+    return _PREDICATES[name]
+
+
+def get_binder(name: str) -> Callable[..., Dict[str, Any]]:
+    if name not in _BINDERS:
+        raise KeyError(f"unknown binder {name!r}")
+    return _BINDERS[name]
+
+
+# ---------------------------------------------------------------------------
+# Built-ins used by tests/examples
+# ---------------------------------------------------------------------------
+
+
+register_payload("noop", lambda params, inputs: {"ok": True, **params})
+
+
+@register_predicate("always")
+def _always(work, result) -> bool:
+    return True
+
+
+@register_predicate("result_true")
+def _result_true(work, result) -> bool:
+    return bool(result and result.get("decision", False))
+
+
+@register_binder("identity")
+def _identity(params, result):
+    return dict(params)
+
+
+@register_binder("increment_round")
+def _increment_round(params, result):
+    out = dict(params)
+    out["round"] = int(out.get("round", 0)) + 1
+    return out

@@ -1,0 +1,49 @@
+"""Client-side request objects + the JSON boundary of paper Fig. 2.
+
+Clients define Workflows, serialize them into json-based requests, and
+submit them to the RESTful head service; the server deserializes and
+passes them to the daemons.  ``Request.to_json`` / ``from_json`` IS that
+boundary — tests assert the round trip is lossless.
+"""
+from __future__ import annotations
+
+import json
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.core.workflow import Workflow
+
+
+@dataclass
+class Request:
+    workflow: Workflow
+    requester: str = "anonymous"
+    token: str = ""
+    request_id: str = field(
+        default_factory=lambda: f"req-{uuid.uuid4().hex[:12]}")
+    created_at: float = field(default_factory=time.time)
+    status: str = "new"  # new | accepted | running | finished | failed
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "request_id": self.request_id,
+            "requester": self.requester,
+            "token": self.token,
+            "created_at": self.created_at,
+            "status": self.status,
+            "workflow": self.workflow.to_dict(),
+        }, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Request":
+        d = json.loads(s)
+        return cls(
+            workflow=Workflow.from_dict(d["workflow"]),
+            requester=d.get("requester", "anonymous"),
+            token=d.get("token", ""),
+            request_id=d["request_id"],
+            created_at=d.get("created_at", time.time()),
+            status=d.get("status", "new"),
+        )

@@ -1,0 +1,342 @@
+"""Directed-Graph workflow management (paper Fig. 3).
+
+A ``Workflow`` is a set of ``WorkTemplate`` objects plus ``Condition``
+branches.  Templates are *placeholders*: a concrete ``Work`` is generated
+from a template by binding values to its pre-defined parameters.  When a
+Work terminates, every Condition triggered by its template is evaluated;
+each satisfied branch instantiates new Works from the follow-up templates
+with freshly bound parameters (via a registered *binder*).  Because a
+template may (transitively) re-trigger itself, the graph may contain
+cycles — DG, not just DAG — bounded by ``max_iterations`` per condition.
+
+One ``Work`` corresponds to one data transformation; it owns an input and
+an output ``Collection`` whose contents the Transformer/Conductor daemons
+track at *file* granularity (the carousel's incremental delivery).
+
+Everything serializes to JSON (paper Fig. 2): callables are carried as
+registry names (see payloads.py).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import json
+import time
+import uuid
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import payloads as reg
+
+
+class WorkStatus(str, enum.Enum):
+    NEW = "new"
+    ACTIVATED = "activated"        # inputs being resolved (Transformer)
+    TRANSFORMING = "transforming"  # processings created, not all done
+    RUNNING = "running"
+    FINISHED = "finished"
+    SUBFINISHED = "subfinished"    # some processings failed terminally
+    FAILED = "failed"
+
+    @property
+    def terminated(self) -> bool:
+        return self in (WorkStatus.FINISHED, WorkStatus.SUBFINISHED,
+                        WorkStatus.FAILED)
+
+
+class ProcessingStatus(str, enum.Enum):
+    NEW = "new"
+    SUBMITTED = "submitted"
+    RUNNING = "running"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+# ---------------------------------------------------------------------------
+# Collections (DDM-facing data units)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FileRef:
+    """One file ('content') of a collection."""
+    name: str
+    size: int = 0
+    available: bool = False
+    processed: bool = False
+
+    def to_dict(self):
+        return asdict(self)
+
+
+@dataclass
+class Collection:
+    name: str
+    scope: str = "idds"
+    files: List[FileRef] = field(default_factory=list)
+
+    @property
+    def n_available(self) -> int:
+        return sum(f.available for f in self.files)
+
+    @property
+    def n_processed(self) -> int:
+        return sum(f.processed for f in self.files)
+
+    def to_dict(self):
+        return {"name": self.name, "scope": self.scope,
+                "files": [f.to_dict() for f in self.files]}
+
+    @classmethod
+    def from_dict(cls, d):
+        c = cls(d["name"], d.get("scope", "idds"))
+        c.files = [FileRef(**f) for f in d.get("files", [])]
+        return c
+
+
+# ---------------------------------------------------------------------------
+# Work template / Work / Processing
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class WorkTemplate:
+    name: str
+    payload: str                       # registry name
+    defaults: Dict[str, Any] = field(default_factory=dict)
+    input_collection: Optional[str] = None   # collection name pattern
+    output_collection: Optional[str] = None
+    # 'fine' -> one Processing per available file (incremental, the paper's
+    # carousel mode); 'coarse' -> a single Processing once ALL files are
+    # available (the pre-iDDS baseline).
+    granularity: str = "fine"
+    max_attempts: int = 3
+
+    def to_dict(self):
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+@dataclass
+class Work:
+    work_id: str
+    template: str
+    payload: str
+    params: Dict[str, Any]
+    status: WorkStatus = WorkStatus.NEW
+    input_collection: Optional[str] = None
+    output_collection: Optional[str] = None
+    granularity: str = "fine"
+    max_attempts: int = 3
+    result: Optional[Dict[str, Any]] = None
+    results: List[Dict[str, Any]] = field(default_factory=list)
+    created_at: float = field(default_factory=time.time)
+    terminated_at: Optional[float] = None
+    iteration: int = 0          # DG cycle count at instantiation
+
+    def to_dict(self):
+        d = asdict(self)
+        d["status"] = self.status.value
+        return d
+
+    @classmethod
+    def from_dict(cls, d):
+        d = dict(d)
+        d["status"] = WorkStatus(d["status"])
+        return cls(**d)
+
+
+@dataclass
+class Processing:
+    proc_id: str
+    work_id: str
+    payload: str
+    params: Dict[str, Any]
+    input_files: List[str] = field(default_factory=list)
+    output_files: List[str] = field(default_factory=list)
+    status: ProcessingStatus = ProcessingStatus.NEW
+    attempt: int = 1
+    max_attempts: int = 3
+    result: Optional[Dict[str, Any]] = None
+    error: Optional[str] = None
+
+    def to_dict(self):
+        d = asdict(self)
+        d["status"] = self.status.value
+        return d
+
+    @classmethod
+    def from_dict(cls, d):
+        d = dict(d)
+        d["status"] = ProcessingStatus(d["status"])
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Conditions (DG edges)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Branch:
+    """One outgoing branch of a condition: instantiate ``template`` with
+    params produced by ``binder(trigger_params, trigger_result)``."""
+    template: str
+    binder: str = "identity"
+
+    def to_dict(self):
+        return asdict(self)
+
+
+@dataclass
+class Condition:
+    trigger: str                      # template name whose Works trigger this
+    predicate: str = "always"
+    true_next: List[Branch] = field(default_factory=list)
+    false_next: List[Branch] = field(default_factory=list)
+    max_iterations: int = 100         # cycle guard
+
+    def to_dict(self):
+        return {"trigger": self.trigger, "predicate": self.predicate,
+                "true_next": [b.to_dict() for b in self.true_next],
+                "false_next": [b.to_dict() for b in self.false_next],
+                "max_iterations": self.max_iterations}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(
+            trigger=d["trigger"], predicate=d.get("predicate", "always"),
+            true_next=[Branch(**b) for b in d.get("true_next", [])],
+            false_next=[Branch(**b) for b in d.get("false_next", [])],
+            max_iterations=d.get("max_iterations", 100))
+
+
+# ---------------------------------------------------------------------------
+# Workflow (the DG)
+# ---------------------------------------------------------------------------
+
+
+def _new_id(prefix: str) -> str:
+    return f"{prefix}-{uuid.uuid4().hex[:12]}"
+
+
+@dataclass
+class Workflow:
+    name: str
+    templates: Dict[str, WorkTemplate] = field(default_factory=dict)
+    conditions: List[Condition] = field(default_factory=list)
+    initial: List[Tuple[str, Dict[str, Any]]] = field(default_factory=list)
+    # --- runtime state (serialized too: a workflow is resumable) ---
+    works: Dict[str, Work] = field(default_factory=dict)
+    workflow_id: str = field(default_factory=lambda: _new_id("wf"))
+
+    # -- construction helpers -------------------------------------------------
+    def add_template(self, t: WorkTemplate) -> WorkTemplate:
+        self.templates[t.name] = t
+        return t
+
+    def add_condition(self, c: Condition) -> Condition:
+        if c.trigger not in self.templates:
+            raise KeyError(f"condition trigger {c.trigger!r} not a template")
+        for b in c.true_next + c.false_next:
+            if b.template not in self.templates:
+                raise KeyError(f"branch target {b.template!r} not a template")
+        self.conditions.append(c)
+        return c
+
+    def add_initial(self, template: str, params: Optional[Dict] = None):
+        if template not in self.templates:
+            raise KeyError(f"initial template {template!r} unknown")
+        self.initial.append((template, dict(params or {})))
+
+    # -- instantiation ---------------------------------------------------------
+    def instantiate(self, template: str, params: Dict[str, Any],
+                    iteration: int = 0) -> Work:
+        t = self.templates[template]
+        merged = {**t.defaults, **params}
+        fmt = {**merged, "workflow": self.workflow_id}
+        w = Work(
+            work_id=_new_id("work"),
+            template=t.name,
+            payload=t.payload,
+            params=merged,
+            input_collection=(t.input_collection.format(**fmt)
+                              if t.input_collection else None),
+            output_collection=(t.output_collection.format(**fmt)
+                               if t.output_collection else None),
+            granularity=t.granularity,
+            max_attempts=t.max_attempts,
+            iteration=iteration,
+        )
+        self.works[w.work_id] = w
+        return w
+
+    def start(self) -> List[Work]:
+        """Instantiate the initial Works (Clerk calls this)."""
+        return [self.instantiate(t, p) for t, p in self.initial]
+
+    # -- DG evaluation ---------------------------------------------------------
+    def on_terminated(self, work: Work) -> List[Work]:
+        """Evaluate all conditions triggered by ``work``; instantiate and
+        return the next generation of Works (paper Fig. 3 semantics)."""
+        new_works: List[Work] = []
+        for cond in self.conditions:
+            if cond.trigger != work.template:
+                continue
+            if work.iteration + 1 > cond.max_iterations:
+                continue  # cycle guard
+            ok = reg.get_predicate(cond.predicate)(work, work.result)
+            branches = cond.true_next if ok else cond.false_next
+            for b in branches:
+                bound = reg.get_binder(b.binder)(work.params, work.result)
+                # a binder may fan out: list of param dicts -> one Work each
+                for params in (bound if isinstance(bound, list) else [bound]):
+                    new_works.append(
+                        self.instantiate(b.template, params,
+                                         iteration=work.iteration + 1))
+        return new_works
+
+    @property
+    def finished(self) -> bool:
+        return (len(self.works) > 0 and
+                all(w.status.terminated for w in self.works.values()))
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for w in self.works.values():
+            out[w.status.value] = out.get(w.status.value, 0) + 1
+        return out
+
+    # -- JSON round trip (paper Fig. 2) ---------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "workflow_id": self.workflow_id,
+            "templates": {k: t.to_dict() for k, t in self.templates.items()},
+            "conditions": [c.to_dict() for c in self.conditions],
+            "initial": [[t, p] for t, p in self.initial],
+            "works": {k: w.to_dict() for k, w in self.works.items()},
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Workflow":
+        wf = cls(name=d["name"], workflow_id=d.get("workflow_id",
+                                                   _new_id("wf")))
+        wf.templates = {k: WorkTemplate.from_dict(t)
+                        for k, t in d.get("templates", {}).items()}
+        wf.conditions = [Condition.from_dict(c)
+                         for c in d.get("conditions", [])]
+        wf.initial = [(t, dict(p)) for t, p in d.get("initial", [])]
+        wf.works = {k: Work.from_dict(w)
+                    for k, w in d.get("works", {}).items()}
+        return wf
+
+    @classmethod
+    def from_json(cls, s: str) -> "Workflow":
+        return cls.from_dict(json.loads(s))

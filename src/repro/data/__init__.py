@@ -1,0 +1,4 @@
+from repro.data.synthetic import (  # noqa: F401
+    build_cold_store,
+    synth_docs,
+)

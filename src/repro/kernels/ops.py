@@ -1,0 +1,68 @@
+"""jit-able dispatch wrappers: Pallas TPU kernels vs pure-jnp XLA refs.
+
+The model zoo calls these entry points exclusively.  ``use_pallas=False``
+(CPU smoke tests, the 512-device dry-run) routes to ``ref.py``;
+``use_pallas=True`` routes to the Pallas kernels (TPU target; validated on
+CPU via interpret=True in tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, use_pallas: bool = False,
+            interpret: bool = True):
+    if use_pallas:
+        from repro.kernels.rmsnorm import rmsnorm_pallas
+        return rmsnorm_pallas(x, w, eps=eps, interpret=interpret)
+    return _ref.rmsnorm_ref(x, w, eps)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset=0, kv_len=None,
+                    sliding_window: int = 0, block_k: int = 512,
+                    use_pallas: bool = False, interpret: bool = True,
+                    carry_constrain=None, custom_vjp: bool = True):
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+            sliding_window=sliding_window, interpret=interpret)
+    return _ref.flash_attention_ref(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+        sliding_window=sliding_window, block_k=block_k,
+        carry_constrain=carry_constrain, custom_vjp=custom_vjp)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, init_state=None,
+        return_state: bool = False, use_pallas: bool = False,
+        interpret: bool = True):
+    if use_pallas:
+        from repro.kernels.ssd_scan import ssd_pallas
+        return ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                          init_state=init_state, return_state=return_state,
+                          interpret=interpret)
+    return _ref.ssd_ref(x, dt, A, Bm, Cm, chunk=chunk,
+                        init_state=init_state, return_state=return_state)
+
+
+def ssd_decode(x, dt, A, Bm, Cm, h):
+    """Single-token SSD recurrence (decode fast path)."""
+    return _ref.ssd_decode_ref(x, dt, A, Bm, Cm, h)
+
+
+def cross_entropy(hidden, w_vocab, targets, valid=None, *,
+                  mode: str = "direct", block_v: int = 4096,
+                  use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        from repro.kernels.cross_entropy import cross_entropy_pallas
+        return cross_entropy_pallas(hidden, w_vocab, targets, valid,
+                                    block_v=block_v, interpret=interpret)
+    if mode == "blockwise":
+        return _ref.cross_entropy_blockwise_ref(hidden, w_vocab, targets,
+                                                valid, block_v=block_v)
+    return _ref.cross_entropy_direct_ref(hidden, w_vocab, targets, valid)

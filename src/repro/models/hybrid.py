@@ -1,0 +1,142 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a SHARED attention block
+applied every ``attn_every`` SSM layers (arXiv:2411.15242; see DESIGN.md
+adaptation note — per-application LoRA adapters are omitted, the shared
+attention+MLP block and its placement period are kept).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def n_attn_applications(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def param_defs(cfg: ModelConfig) -> Params:
+    return {
+        "embed": L.embed_defs(cfg),
+        "blocks": M.block_defs(cfg, cfg.num_layers),
+        "shared_attn": {
+            "ln1": L.norm_defs(0, cfg.d_model),
+            "attn": L.attention_defs(cfg, 0),
+            "ln2": L.norm_defs(0, cfg.d_model),
+            "mlp": L.mlp_defs(cfg, 0),
+        },
+        "ln_f": L.norm_defs(0, cfg.d_model),
+    }
+
+
+def _shared_attn(p: Params, cfg: ModelConfig, run: RunConfig, x: jax.Array,
+                 positions, cache_l, cache_pos, kv_len):
+    h = L.rmsnorm(p["ln1"], x, cfg, run)
+    h, new_cache = L.attention(p["attn"], cfg, run, h, positions=positions,
+                               cache=cache_l, cache_pos=cache_pos,
+                               kv_len=kv_len)
+    x = x + h
+    h = L.rmsnorm(p["ln2"], x, cfg, run)
+    return x + L.mlp(p["mlp"], cfg, run, h), new_cache
+
+
+def _run(params, cfg, run, x, positions, mamba_state=None, kv_cache=None,
+         cache_pos=None, kv_len=None):
+    """Groups of `attn_every` scanned mamba layers + one shared-attn hit."""
+    k = cfg.attn_every
+    n_app = n_attn_applications(cfg)
+    rem = cfg.num_layers - n_app * k
+    blocks = params["blocks"]
+
+    def mamba_body(carry, xs_):
+        h, p_l, s_l = carry, xs_[0], xs_[1]
+        fn = lambda p, hh, ss: M.block_fwd(p, cfg, run, hh, ss)
+        if run.remat != "none":
+            fn = jax.checkpoint(fn)
+        h, ns = fn(p_l, h, s_l)
+        return h, ns
+
+    def run_group(x, blk, st):
+        if run.scan_layers:
+            return lax.scan(mamba_body, x, (blk, st))
+        outs = []
+        nlayers = jax.tree.leaves(blk)[0].shape[0]
+        for i in range(nlayers):
+            p_l = jax.tree.map(lambda a: a[i], blk)
+            s_l = None if st is None else jax.tree.map(lambda a: a[i], st)
+            x, ns = mamba_body(x, (p_l, s_l))
+            outs.append(ns)
+        ns_all = (None if st is None
+                  else jax.tree.map(lambda *s: jnp.stack(s), *outs))
+        return x, ns_all
+
+    def group_slice(tree, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], tree)
+
+    new_states, new_kv = [], []
+    for g in range(n_app):
+        blk = group_slice(blocks, g * k, (g + 1) * k)
+        st = (None if mamba_state is None
+              else group_slice(mamba_state, g * k, (g + 1) * k))
+        x, ns = run_group(x, blk, st)
+        new_states.append(ns)
+        c_l = (None if kv_cache is None
+               else jax.tree.map(lambda a: a[g], kv_cache))
+        x, nc = _shared_attn(params["shared_attn"], cfg, run, x, positions,
+                             c_l, cache_pos, kv_len)
+        new_kv.append(nc)
+    if rem:
+        blk = group_slice(blocks, n_app * k, cfg.num_layers)
+        st = (None if mamba_state is None
+              else group_slice(mamba_state, n_app * k, cfg.num_layers))
+        x, ns = run_group(x, blk, st)
+        new_states.append(ns)
+
+    out_state = (None if mamba_state is None else
+                 jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_states))
+    out_kv = (None if kv_cache is None else
+              jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv))
+    return L.rmsnorm(params["ln_f"], x, cfg, run), out_state, out_kv
+
+
+def forward(params, cfg, run, batch):
+    x = L.embed(params["embed"], batch["tokens"])
+    positions = jnp.arange(x.shape[1])
+    x, _, _ = _run(params, cfg, run, x, positions)
+    return x
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return {
+        "mamba": M.state_defs(cfg, cfg.num_layers, batch),
+        "kv": L.kv_cache_defs(cfg, n_attn_applications(cfg), batch, max_len),
+    }
+
+
+def prefill(params, cfg, run, batch, cache):
+    x = L.embed(params["embed"], batch["tokens"])
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, ms, kv = _run(params, cfg, run, x, positions,
+                     mamba_state=cache["mamba"], kv_cache=cache["kv"],
+                     cache_pos=0, kv_len=S)
+    logits = L.logits_out(params["embed"], cfg, run, x[:, -1:])
+    return logits, {"mamba": ms, "kv": kv}
+
+
+def decode(params, cfg, run, tokens, cache, pos):
+    x = L.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(1)
+    x, ms, kv = _run(params, cfg, run, x, positions,
+                     mamba_state=cache["mamba"], kv_cache=cache["kv"],
+                     cache_pos=pos, kv_len=pos + 1)
+    logits = L.logits_out(params["embed"], cfg, run, x)
+    return logits, {"mamba": ms, "kv": kv}

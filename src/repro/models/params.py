@@ -1,0 +1,108 @@
+"""Lightweight functional parameter system (no flax).
+
+A model definition is a function ``param_defs(cfg) -> pytree of ParamDef``.
+From that single tree we derive:
+
+* ``abstract(defs)``      -> ShapeDtypeStruct tree (dry-run, no allocation)
+* ``materialize(rng, defs)`` -> concrete jnp arrays (smoke tests, examples)
+* ``logical_specs(defs)`` -> tree of logical-axis tuples, resolved to
+  PartitionSpecs by ``sharding/rules.py`` against a concrete mesh.
+
+Logical axis names used throughout the model zoo:
+
+  "embed"   d_model dim            -> FSDP-sharded on the data axis
+  "heads"   attention head dim     -> model axis (iff divisible)
+  "qkv"     flattened q/k/v dim    -> model axis (iff divisible)
+  "ffn"     MLP hidden dim         -> model axis
+  "vocab"   vocabulary dim         -> model axis
+  "expert"  MoE expert dim         -> model axis (expert parallelism)
+  "layers"  stacked-layer dim      -> never sharded
+  None      replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Logical = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Logical  # one logical axis name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones | scaled | ssm_a | ssm_dt
+    scale: float = 0.02
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def pdef(shape, logical, init="normal", scale=0.02, dtype=jnp.bfloat16) -> ParamDef:
+    return ParamDef(tuple(shape), tuple(logical), init, scale, dtype)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map(f: Callable[[ParamDef], Any], defs: Any) -> Any:
+    return jax.tree.map(f, defs, is_leaf=is_def)
+
+
+def abstract(defs: Any) -> Any:
+    """ShapeDtypeStruct tree — what the dry-run feeds to .lower()."""
+    return tree_map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def logical_specs(defs: Any) -> Any:
+    return tree_map(lambda d: d.logical, defs)
+
+
+def param_count(defs: Any) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+def param_bytes(defs: Any) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves)
+
+
+def _init_leaf(key: jax.Array, d: ParamDef) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(d.dtype)
+    if d.init == "scaled":  # fan-in scaled
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        s = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, d.shape, jnp.float32) * s).astype(d.dtype)
+    if d.init == "ssm_a":  # Mamba2 A_log init: log of Uniform[1, 16]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(d.dtype)
+    if d.init == "ssm_dt":  # dt bias: inverse-softplus of Uniform[1e-3, 1e-1]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 0.001, 0.1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def materialize(rng: jax.Array, defs: Any) -> Any:
+    """Instantiate real parameters (smoke tests / examples / training)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    arrs = [_init_leaf(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def cast_tree(tree: Any, dtype: Any) -> Any:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

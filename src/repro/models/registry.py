@@ -1,0 +1,158 @@
+"""Model-zoo registry: family -> module dispatch + abstract input specs.
+
+Every model module exposes the same functional surface:
+
+    param_defs(cfg)                      -> ParamDef tree
+    forward(params, cfg, run, batch)     -> final hidden states (B, S, d)
+    cache_defs(cfg, batch, max_len)      -> decode-state ParamDef tree
+    prefill(params, cfg, run, batch, cache) -> (logits, cache)
+    decode(params, cfg, run, tokens, cache, pos) -> (logits, cache)
+
+``input_specs`` builds ShapeDtypeStruct stand-ins for every model input of
+an (arch x shape) cell — the dry-run feeds these to ``jit(...).lower()``
+without allocating anything.  Modality frontends (whisper mel conv, llava
+vision tower) are STUBS per the assignment: the specs carry precomputed
+frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from types import ModuleType
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import hybrid, mamba2, transformer, whisper
+
+Params = Dict[str, Any]
+
+_FAMILY_MODULES: Dict[str, ModuleType] = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": whisper,
+}
+
+
+def module_for(cfg: ModelConfig) -> ModuleType:
+    try:
+        return _FAMILY_MODULES[cfg.family]
+    except KeyError:
+        raise KeyError(f"unknown model family {cfg.family!r}") from None
+
+
+def param_defs(cfg: ModelConfig) -> Params:
+    return module_for(cfg).param_defs(cfg)
+
+
+def forward(params: Params, cfg: ModelConfig, run: RunConfig,
+            batch: Dict[str, Any]) -> jax.Array:
+    return module_for(cfg).forward(params, cfg, run, batch)
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return module_for(cfg).cache_defs(cfg, batch, max_len)
+
+
+def prefill(params: Params, cfg: ModelConfig, run: RunConfig,
+            batch: Dict[str, Any], cache: Params):
+    return module_for(cfg).prefill(params, cfg, run, batch, cache)
+
+
+def decode(params: Params, cfg: ModelConfig, run: RunConfig,
+           tokens: jax.Array, cache: Params, pos):
+    return module_for(cfg).decode(params, cfg, run, tokens, cache, pos)
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract batch for one train step: tokens + labels (+ stub modality)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+        # 0/1 mask: padded or cross-document-boundary positions drop out of
+        # the loss (the carousel packer emits this alongside the tokens).
+        "loss_mask": _sds((B, S), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.family == "vlm":
+        specs["img_embeds"] = _sds((B, cfg.num_img_patches, cfg.d_model),
+                                   jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.family == "vlm":
+        specs["img_embeds"] = _sds((B, cfg.num_img_patches, cfg.d_model),
+                                   jnp.bfloat16)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """One decode step: new token (B, 1) + current position scalar."""
+    B = shape.global_batch
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Concrete input synthesis (smoke tests / examples) — mirrors input_specs.
+# ---------------------------------------------------------------------------
+
+
+def synth_inputs(rng: jax.Array, cfg: ModelConfig, shape: ShapeConfig,
+                 kind: Optional[str] = None) -> Dict[str, Any]:
+    kind = kind or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if kind == "decode":
+        return {
+            "tokens": jax.random.randint(k1, (B, 1), 0, cfg.vocab_size,
+                                         jnp.int32),
+            "pos": jnp.asarray(S // 2, jnp.int32),
+        }
+    out: Dict[str, Any] = {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size, jnp.int32),
+    }
+    if kind == "train":
+        out["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab_size,
+                                           jnp.int32)
+        out["loss_mask"] = jnp.ones((B, S), jnp.float32)
+    if cfg.family == "encdec":
+        out["frames"] = (jax.random.normal(
+            k3, (B, cfg.encoder_frames, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.bfloat16)
+    if cfg.family == "vlm":
+        out["img_embeds"] = (jax.random.normal(
+            k3, (B, cfg.num_img_patches, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.bfloat16)
+    return out

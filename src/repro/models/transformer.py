@@ -1,0 +1,148 @@
+"""Decoder-only transformer backbone: dense (llama/qwen/yi/starcoder style),
+MoE (mixtral/qwen3-moe), and VLM (llava = backbone + stub patch embeddings).
+
+Layers are stacked along a leading L dim and executed with lax.scan
+(+ configurable remat) so the 94-layer MoE lowers to a compact HLO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.models.params import pdef
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def param_defs(cfg: ModelConfig) -> Params:
+    n = cfg.num_layers
+    block: Params = {
+        "ln1": L.norm_defs(n, cfg.d_model),
+        "attn": L.attention_defs(cfg, n),
+        "ln2": L.norm_defs(n, cfg.d_model),
+    }
+    if cfg.family == "moe":
+        block["moe"] = L.moe_defs(cfg, n)
+    else:
+        block["mlp"] = L.mlp_defs(cfg, n)
+    return {
+        "embed": L.embed_defs(cfg),
+        "blocks": block,
+        "ln_f": L.norm_defs(0, cfg.d_model),
+    }
+
+
+def _remat(fn, run: RunConfig):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _block(p_l: Params, cfg: ModelConfig, run: RunConfig, x: jax.Array,
+           positions: jax.Array, cache_l: Optional[Params], cache_pos,
+           kv_len) -> Tuple[jax.Array, Optional[Params]]:
+    h = L.rmsnorm(p_l["ln1"], x, cfg, run)
+    h, new_cache = L.attention(
+        p_l["attn"], cfg, run, h, positions=positions,
+        cache=cache_l, cache_pos=cache_pos, kv_len=kv_len)
+    x = x + h
+    h = L.rmsnorm(p_l["ln2"], x, cfg, run)
+    if cfg.family == "moe":
+        h = L.moe_block(p_l["moe"], cfg, run, h)
+    else:
+        h = L.mlp(p_l["mlp"], cfg, run, h)
+    return x + h, new_cache
+
+
+def _run_blocks(params: Params, cfg: ModelConfig, run: RunConfig,
+                x: jax.Array, positions: jax.Array,
+                cache: Optional[Params] = None, cache_pos=None,
+                kv_len=None) -> Tuple[jax.Array, Optional[Params]]:
+    blocks = params["blocks"]
+
+    if run.scan_layers:
+        def body(carry, xs):
+            h = carry
+            p_l, c_l = xs
+            h, new_c = _remat(
+                lambda p, hh, cc: _block(p, cfg, run, hh, positions, cc,
+                                         cache_pos, kv_len), run)(p_l, h, c_l)
+            return h, new_c
+
+        x, new_cache = lax.scan(body, x, (blocks, cache))
+    else:
+        n = cfg.num_layers
+        new_layers = []
+        blk_fn = _remat(
+            lambda p, hh, cc: _block(p, cfg, run, hh, positions,
+                                     cc, cache_pos, kv_len), run)
+        for i in range(n):
+            p_l = jax.tree.map(lambda a: a[i], blocks)
+            c_l = None if cache is None else jax.tree.map(lambda a: a[i], cache)
+            x, nc = blk_fn(p_l, x, c_l)
+            new_layers.append(nc)
+        new_cache = (None if cache is None else
+                     jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers))
+    x = L.rmsnorm(params["ln_f"], x, cfg, run)
+    return x, new_cache
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    x = L.embed(params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        img = batch["img_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    return constrain(x, "batch", None, None)
+
+
+def forward(params: Params, cfg: ModelConfig, run: RunConfig,
+            batch: Dict[str, Any]) -> jax.Array:
+    """Training forward -> final hidden states (B, S_total, d)."""
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+    x, _ = _run_blocks(params, cfg, run, x, positions)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return L.kv_cache_defs(cfg, cfg.num_layers, batch, max_len)
+
+
+def prefill(params: Params, cfg: ModelConfig, run: RunConfig,
+            batch: Dict[str, Any], cache: Params
+            ) -> Tuple[jax.Array, Params]:
+    """Fill the cache from a (B, S) prompt; return last-position logits."""
+    x = _embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, cache = _run_blocks(params, cfg, run, x, positions,
+                           cache=cache, cache_pos=0, kv_len=S)
+    logits = L.logits_out(params["embed"], cfg, run, x[:, -1:])
+    return logits, cache
+
+
+def decode(params: Params, cfg: ModelConfig, run: RunConfig,
+           tokens: jax.Array, cache: Params, pos: jax.Array
+           ) -> Tuple[jax.Array, Params]:
+    """One decode step. tokens: (B, 1); pos: scalar current length."""
+    x = L.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(1)
+    x, cache = _run_blocks(params, cfg, run, x, positions,
+                           cache=cache, cache_pos=pos, kv_len=pos + 1)
+    logits = L.logits_out(params["embed"], cfg, run, x)
+    return logits, cache

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedule import cosine_schedule  # noqa: F401

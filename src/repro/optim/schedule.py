@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, warmup_steps: int,
+                    total_steps: int, min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to ``min_ratio * base_lr``."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = min_ratio + (1.0 - min_ratio) * cos
+    return base_lr * warm * decay

@@ -1,0 +1,8 @@
+from repro.serve.engine import (  # noqa: F401
+    abstract_cache,
+    decode_step,
+    init_cache,
+    make_decode_step,
+    make_prefill_step,
+    prefill_step,
+)

@@ -1,0 +1,60 @@
+"""Serving steps: prefill (fill cache from a prompt) and decode (one token).
+
+``decode_*`` shapes in the assignment lower ``decode_step`` — one new token
+against a KV cache of seq_len — NOT a train step.  Caches are dict pytrees
+built from ParamDefs, so the dry-run gets abstract caches and the sharding
+rules shard them (batch on data axis, heads/kv_seq on model axis) exactly
+like params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import params as P
+from repro.models import registry
+
+Cache = Dict[str, Any]
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    return registry.cache_defs(cfg, batch, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    defs = cache_defs(cfg, batch, max_len)
+    return P.tree_map(lambda d: jnp.zeros(d.shape, d.dtype), defs)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    return P.abstract(cache_defs(cfg, batch, max_len))
+
+
+def prefill_step(params, batch: Dict[str, Any], cache: Cache, *,
+                 cfg: ModelConfig, run: RunConfig
+                 ) -> Tuple[jax.Array, Cache]:
+    """Prompt (B, S) -> (next-token ids (B, 1), filled cache)."""
+    logits, cache = registry.prefill(params, cfg, run, batch, cache)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return next_tok, cache
+
+
+def decode_step(params, tokens: jax.Array, cache: Cache, pos, *,
+                cfg: ModelConfig, run: RunConfig
+                ) -> Tuple[jax.Array, Cache]:
+    """One greedy decode step. tokens: (B, 1) ids; pos: scalar length."""
+    logits, cache = registry.decode(params, cfg, run, tokens, cache, pos)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return next_tok, cache
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig):
+    return functools.partial(prefill_step, cfg=cfg, run=run)
+
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig):
+    return functools.partial(decode_step, cfg=cfg, run=run)

@@ -1,0 +1,7 @@
+from repro.train.loss import lm_loss  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    TrainState,
+    init_state,
+    make_train_step,
+    train_step,
+)

@@ -1,0 +1,205 @@
+"""Carousel: storage tiers, stager (retries/hedging), delivery iterator,
+on-demand transform, and the Fig. 4/5 discrete-event comparison."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.carousel.ddm import CarouselDDM
+from repro.carousel.delivery import DeliveryIterator
+from repro.carousel.simulator import SimParams, compare, simulate
+from repro.carousel.stager import Stager
+from repro.carousel.storage import (CacheFullError, ColdStore, DiskCache,
+                                    TapeFile)
+from repro.carousel.transform import make_packing_transform, pack_documents
+from repro.data.synthetic import build_cold_store, synth_docs
+
+
+# ---------------------------------------------------------------- DiskCache
+
+def test_cache_pin_release_evict():
+    c = DiskCache(100)
+    c.put("a", b"x", 40, pin=True)
+    c.put("b", b"y", 40, pin=True)
+    with pytest.raises(CacheFullError):
+        c.put("c", b"z", 40, pin=True)  # nothing evictable
+    c.release("a")                       # now LRU-evictable
+    c.put("c", b"z", 40, pin=True)
+    assert "a" not in c and "b" in c and "c" in c
+    assert c.evictions == 1
+    assert c.peak_bytes == 80
+
+
+def test_cache_prompt_release_frees_immediately():
+    c = DiskCache(100)
+    c.put("a", b"x", 60, pin=True)
+    c.release("a", drop=True)
+    assert c.used == 0 and "a" not in c
+
+
+# ---------------------------------------------------------------- Stager
+
+def test_stager_stages_all_and_announces():
+    cold = ColdStore(drives=4)
+    for i in range(10):
+        cold.add(TapeFile(f"f{i}", size=10, payload=np.arange(i + 1)))
+    cache = DiskCache(10_000)
+    seen = []
+    st = Stager(cold, cache, workers=4,
+                on_available=lambda n: seen.append(n))
+    st.submit_all([f"f{i}" for i in range(10)])
+    assert st.wait(timeout=10)
+    assert sorted(seen) == [f"f{i}" for i in range(10)]
+    assert all(f"f{i}" in cache for i in range(10))
+    st.shutdown()
+
+
+def test_stager_retries_tape_faults():
+    cold = ColdStore(drives=2, fault_rate=0.5, seed=42)
+    for i in range(8):
+        cold.add(TapeFile(f"f{i}", size=1, payload=i))
+    cache = DiskCache(10_000)
+    st = Stager(cold, cache, workers=2, max_attempts=20, backoff=0.001)
+    st.submit_all([f"f{i}" for i in range(8)])
+    assert st.wait(timeout=30)
+    assert st.failed() == []
+    assert cold.failed_reads > 0  # faults actually happened and were retried
+    st.shutdown()
+
+
+def test_stager_transform_applied():
+    cold = ColdStore(drives=2)
+    docs = synth_docs(0, 8, vocab_size=64, mean_len=20)
+    cold.add(TapeFile("s0", size=100, payload=docs))
+    cache = DiskCache(10_000)
+    st = Stager(cold, cache, transform=make_packing_transform(16))
+    st.submit("s0")
+    assert st.wait(timeout=10)
+    packed = cache.get("s0")
+    assert packed["tokens"].shape[1] == 16
+    assert packed["tokens"].dtype == np.int32
+    st.shutdown()
+
+
+# ---------------------------------------------------------------- transform
+
+def test_packing_shapes_and_labels():
+    docs = [np.arange(2, 12, dtype=np.int32), np.arange(2, 7, dtype=np.int32)]
+    out = pack_documents(docs, seq_len=8, pad_id=0, eod_id=1)
+    T, L, M = out["tokens"], out["labels"], out["loss_mask"]
+    assert T.shape == L.shape == M.shape and T.shape[1] == 8
+    # labels are next-token shifted
+    flat = np.concatenate([T[0], [L[0, -1]]])
+    assert (L[0][:-1] == T[0][1:]).all()
+    # mask is 0 where the target crosses an eod boundary or padding
+    assert set(np.unique(M)) <= {0.0, 1.0}
+    eod_positions = np.where(T == 1)
+    for r, c in zip(*eod_positions):
+        assert M[r, c] == 0.0  # predicting across the boundary is masked
+
+
+def test_packing_mask_matches_stream_validity():
+    docs = [np.arange(2, 30, dtype=np.int32)]
+    out = pack_documents(docs, seq_len=16)
+    assert out["loss_mask"].sum() > 0
+
+
+# ---------------------------------------------------------------- delivery
+
+def _mk_pipeline(n_shards=6, coarse=False, capacity=1 << 30):
+    cold = build_cold_store(n_shards=n_shards, docs_per_shard=8,
+                            vocab_size=64, mean_doc_len=32, drives=2,
+                            mount_latency=0.002)
+    cache = DiskCache(capacity)
+    names = [f.name for f in cold.files()]
+    st = Stager(cold, cache, transform=make_packing_transform(16), workers=2)
+    st.submit_all(names)
+    return st, cache, names
+
+
+def test_delivery_fine_yields_batches():
+    st, cache, names = _mk_pipeline()
+    it = DeliveryIterator(st, cache, names, batch_rows=4)
+    batches = list(it)
+    assert batches, "no batches delivered"
+    for b in batches:
+        assert b["tokens"].shape == (4, 16)
+        assert set(b) == {"tokens", "labels", "loss_mask"}
+    # prompt release: nothing left pinned in the cache
+    assert cache.stats()["entries"] == 0
+    st.shutdown()
+
+
+def test_delivery_coarse_waits_then_yields():
+    st, cache, names = _mk_pipeline(coarse=True)
+    it = DeliveryIterator(st, cache, names, batch_rows=4, coarse=True)
+    batches = list(it)
+    assert batches
+    assert it.first_batch_at is not None
+    st.shutdown()
+
+
+def test_delivery_fine_starts_before_all_staged():
+    """Fine mode must deliver its first batch while later shards are still
+    on 'tape' — the carousel's whole point."""
+    cold = build_cold_store(n_shards=8, docs_per_shard=8, vocab_size=64,
+                            mean_doc_len=32, drives=1, mount_latency=0.03)
+    cache = DiskCache(1 << 30)
+    names = [f.name for f in cold.files()]
+    st = Stager(cold, cache, transform=make_packing_transform(16), workers=1)
+    st.submit_all(names)
+    it = DeliveryIterator(st, cache, names, batch_rows=2, prefetch=1)
+    first = next(iter(it))
+    assert first["tokens"].shape == (2, 16)
+    pending = [r for r in st.records.values() if r.finished is None]
+    assert pending, "first batch should arrive before staging completes"
+    st.shutdown()
+
+
+# ---------------------------------------------------------------- simulator
+
+def test_sim_fine_vs_coarse_reproduces_paper():
+    out = compare(n_files=300, disk_capacity=1.0e12, hedge=True, seed=1)
+    fine, coarse = out["fine"], out["coarse"]
+    # Fig. 4: iDDS reduces job attempts a lot
+    assert fine["attempts_per_job"] == 1.0
+    assert coarse["attempts_per_job"] > 1.5
+    # Fig. 5: smaller disk footprint, earlier first processing
+    assert fine["peak_disk_TB"] < 0.5 * coarse["peak_disk_TB"]
+    assert fine["ttfp_h"] < 0.1 * coarse["ttfp_h"]
+    # and no worse end-to-end
+    assert fine["makespan_h"] <= coarse["makespan_h"] * 1.05
+
+
+def test_sim_disk_backpressure_respected():
+    p = SimParams(n_files=100, disk_capacity=3.2e10, file_size=8e9,
+                  granularity="fine", n_drives=4, seed=3)
+    rep = simulate(p)
+    assert rep.peak_disk <= p.disk_capacity + 1e-6
+
+
+def test_sim_hedging_reduces_tail():
+    base = dict(n_files=200, straggler_frac=0.15, straggler_mult=20.0,
+                fault_rate=0.0, granularity="fine", seed=7,
+                disk_capacity=4e12)
+    slow = simulate(SimParams(**base, hedge=False))
+    fast = simulate(SimParams(**base, hedge=True))
+    assert fast.hedges > 0
+    assert fast.makespan < slow.makespan
+
+
+# ---------------------------------------------------------------- DDM glue
+
+def test_carousel_ddm_prompt_release():
+    cold = ColdStore(drives=2)
+    cold.add(TapeFile("f0", size=50, payload=b"d"))
+    cache = DiskCache(1000)
+    ddm = CarouselDDM(cold, cache, prompt_release=True)
+    ddm.register_from_cold("c0")
+    cache.put("f0", b"d", 50, pin=False)
+    ddm.set_available("c0", "f0")
+    assert cache.used == 50
+    ddm.mark_processed("c0", "f0")
+    assert cache.used == 0  # released the moment processing finished
+    assert ddm.get_collection("c0").n_processed == 1

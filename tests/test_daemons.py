@@ -1,0 +1,168 @@
+"""Daemon pipeline end-to-end (paper Fig. 1) + retries + incremental
+fine-grained dispatch (the carousel mechanism at the Work level)."""
+import pytest
+
+from repro.core import messaging as M
+from repro.core import payloads as reg
+from repro.core.ddm import InMemoryDDM
+from repro.core.idds import IDDS, AuthError
+from repro.core.requests import Request
+from repro.core.workflow import (Branch, Condition, FileRef, WorkStatus,
+                                 Workflow, WorkTemplate)
+
+
+@pytest.fixture(autouse=True)
+def _payloads():
+    reg.register_payload("d_echo", lambda params, inputs: {
+        "params": dict(params), "inputs": list(inputs)})
+    yield
+
+
+def test_end_to_end_chain():
+    wf = Workflow(name="chain")
+    wf.add_template(WorkTemplate(name="a", payload="d_echo"))
+    wf.add_template(WorkTemplate(name="b", payload="d_echo"))
+    wf.add_condition(Condition(trigger="a", true_next=[Branch("b")]))
+    wf.add_initial("a", {"k": 1})
+    idds = IDDS()
+    rid = idds.submit(Request(workflow=wf).to_json())
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["status"] == "finished"
+    assert info["works"] == {"finished": 2}
+    assert idds.stats["notifications"] == 2  # Conductor notified per output
+
+
+def test_auth():
+    wf = Workflow(name="auth")
+    wf.add_template(WorkTemplate(name="a", payload="d_echo"))
+    wf.add_initial("a", {})
+    idds = IDDS(tokens={"sekrit"})
+    with pytest.raises(AuthError):
+        idds.submit(Request(workflow=wf, token="wrong").to_json())
+    rid = idds.submit(Request(workflow=wf, token="sekrit").to_json())
+    idds.pump()
+    assert idds.request_status(rid)["status"] == "finished"
+
+
+def test_carrier_retries_to_success():
+    calls = {"n": 0}
+
+    def flaky(params, inputs):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return {"ok": True}
+
+    reg.register_payload("d_flaky", flaky)
+    wf = Workflow(name="flaky")
+    wf.add_template(WorkTemplate(name="f", payload="d_flaky",
+                                 max_attempts=5))
+    wf.add_initial("f", {})
+    idds = IDDS()
+    rid = idds.submit_workflow(wf)
+    idds.pump()
+    assert idds.stats["job_attempts"] == 3
+    assert idds.stats["job_retries"] == 2
+    assert idds.request_status(rid)["works"] == {"finished": 1}
+
+
+def test_carrier_exhausts_attempts_subfinished():
+    reg.register_payload("d_alwaysfail",
+                         lambda p, i: (_ for _ in ()).throw(
+                             RuntimeError("nope")))
+    wf = Workflow(name="fail")
+    wf.add_template(WorkTemplate(name="f", payload="d_alwaysfail",
+                                 max_attempts=2))
+    wf.add_initial("f", {})
+    idds = IDDS()
+    rid = idds.submit_workflow(wf)
+    idds.pump()
+    assert idds.stats["job_attempts"] == 2
+    assert idds.stats["processings_failed"] == 1
+    assert idds.request_status(rid)["works"] == {"subfinished": 1}
+
+
+def test_fine_granularity_incremental_dispatch():
+    """Files become available one at a time; fine-granularity Works get one
+    Processing per file, created as availability messages land."""
+    ddm = InMemoryDDM()
+    files = [FileRef(f"f{i}", size=10, available=False) for i in range(4)]
+    ddm.register_collection("coll-in", files)
+    idds = IDDS(ddm=ddm)
+
+    wf = Workflow(name="fine")
+    wf.add_template(WorkTemplate(name="w", payload="d_echo",
+                                 input_collection="coll-in",
+                                 granularity="fine"))
+    wf.add_initial("w", {})
+    rid = idds.submit_workflow(wf)
+    idds.pump()
+    # nothing available yet: work activated, no processings
+    assert idds.stats.get("processings_created", 0) == 0
+
+    for i in range(4):
+        ddm.set_available("coll-in", f"f{i}")
+        idds.ctx.bus.publish(M.T_COLLECTION_UPDATED,
+                             {"collection": "coll-in", "file": f"f{i}"})
+        idds.pump()
+        assert idds.stats["processings_created"] == i + 1
+
+    info = idds.request_status(rid)
+    assert info["works"] == {"finished": 1}
+    # each file processed exactly once, input marked processed in DDM
+    coll = ddm.get_collection("coll-in")
+    assert coll.n_processed == 4
+
+
+def test_coarse_granularity_waits_for_all():
+    ddm = InMemoryDDM()
+    files = [FileRef(f"g{i}", size=1, available=i == 0) for i in range(3)]
+    ddm.register_collection("coll-c", files)
+    idds = IDDS(ddm=ddm)
+    wf = Workflow(name="coarse")
+    wf.add_template(WorkTemplate(name="w", payload="d_echo",
+                                 input_collection="coll-c",
+                                 granularity="coarse"))
+    wf.add_initial("w", {})
+    rid = idds.submit_workflow(wf)
+    idds.pump()
+    assert idds.stats.get("processings_created", 0) == 0  # still waiting
+    for i in (1, 2):
+        ddm.set_available("coll-c", f"g{i}")
+    idds.ctx.bus.publish(M.T_COLLECTION_UPDATED, {"collection": "coll-c"})
+    idds.pump()
+    assert idds.stats["processings_created"] == 1  # one big Processing
+    procs = list(idds.ctx.processings.values())
+    assert sorted(procs[0].input_files) == ["g0", "g1", "g2"]
+    assert idds.request_status(rid)["works"] == {"finished": 1}
+
+
+def test_threaded_mode():
+    import time
+    reg.register_payload("d_sleep",
+                         lambda p, i: (time.sleep(0.005), {"i": p["i"]})[1])
+    wf = Workflow(name="thr")
+    wf.add_template(WorkTemplate(name="t", payload="d_sleep"))
+    for i in range(12):
+        wf.add_initial("t", {"i": i})
+    idds = IDDS(sync=False, max_workers=6)
+    idds.start()
+    try:
+        rid = idds.submit_workflow(wf)
+        info = idds.wait_request(rid, timeout=30)
+        assert info["works"] == {"finished": 12}
+    finally:
+        idds.stop()
+
+
+def test_request_json_round_trip():
+    wf = Workflow(name="rt")
+    wf.add_template(WorkTemplate(name="a", payload="d_echo"))
+    wf.add_initial("a", {"p": 3})
+    req = Request(workflow=wf, requester="alice", token="tok")
+    j = req.to_json()
+    req2 = Request.from_json(j)
+    assert req2.request_id == req.request_id
+    assert req2.requester == "alice"
+    assert req2.workflow.to_json() == wf.to_json()

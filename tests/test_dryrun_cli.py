@@ -1,0 +1,50 @@
+"""Dry-run CLI smoke: run ONE cheap cell in a subprocess (the 512-device
+XLA override must live in its own process) and validate the output
+contract: lower+compile OK, roofline terms present and positive."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    out = tmp_path / "cell.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "train_4k",
+         "--out", str(out)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    cells = json.loads(out.read_text())
+    assert len(cells) == 1
+    c = cells[0]
+    assert c["status"] == "ok"
+    assert c["chips"] == 256
+    assert c["hlo_flops"] > 0 and c["hlo_bytes"] > 0
+    assert c["collective_total"] > 0  # sharded train step must communicate
+    rf = c["roofline"]
+    assert rf["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert 0 < rf["useful_flops_ratio"] < 1.5
+
+
+@pytest.mark.slow
+def test_dryrun_skip_cell(tmp_path):
+    """long_500k on a pure-attention arch is a DOCUMENTED skip."""
+    out = tmp_path / "skip.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "yi-6b", "--shape", "long_500k", "--out", str(out)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=240)
+    assert r.returncode == 0
+    cells = json.loads(out.read_text())
+    assert cells[0]["status"] == "skipped"
+    assert "sub-quadratic" in cells[0]["reason"]

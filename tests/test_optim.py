@@ -1,0 +1,67 @@
+"""Optimizer + schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule, global_norm)
+
+
+def test_global_norm_and_clip():
+    tree = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), 3.0)}
+    n = float(global_norm(tree))
+    np.testing.assert_allclose(n, np.sqrt(3 * 16 + 4 * 9), rtol=1e-6)
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    # under the limit: unchanged
+    same, _ = clip_by_global_norm(tree, 100.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 4.0)
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, lr=0.05,
+                                        weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_weight_decay_skips_1d():
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = adamw_init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = adamw_update(params, zeros, state, lr=0.1, weight_decay=0.5)
+    assert float(p2["w"][0, 0]) < 1.0   # decayed
+    np.testing.assert_allclose(np.asarray(p2["b"]), 1.0)  # not decayed
+
+
+def test_bf16_moment_compression():
+    params = {"w": jnp.ones((4, 4))}
+    state = adamw_init(params, dtype=jnp.bfloat16)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((4, 4), 0.1)}
+    p2, s2, _ = adamw_update(params, g, state, lr=0.01)
+    assert s2["m"]["w"].dtype == jnp.bfloat16
+    assert not np.array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(0, base_lr=1.0, warmup_steps=10,
+                                total_steps=100))
+    lr_w = float(cosine_schedule(10, base_lr=1.0, warmup_steps=10,
+                                 total_steps=100))
+    lr_end = float(cosine_schedule(100, base_lr=1.0, warmup_steps=10,
+                                   total_steps=100))
+    assert lr0 == 0.0
+    np.testing.assert_allclose(lr_w, 1.0, rtol=1e-6)
+    np.testing.assert_allclose(lr_end, 0.1, rtol=1e-5)  # min_ratio
+    # monotone warmup
+    ws = [float(cosine_schedule(s, base_lr=1.0, warmup_steps=10,
+                                total_steps=100)) for s in range(11)]
+    assert ws == sorted(ws)

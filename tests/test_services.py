@@ -1,0 +1,185 @@
+"""HPO service (Fig. 6), Active Learning (Fig. 7), Rubin DAG (§3.3.1)."""
+import math
+
+import pytest
+
+from repro.core import payloads as reg
+from repro.core.active_learning import build_active_learning_workflow
+from repro.core.dag import DAGScheduler, JobSpec, layered_dag
+from repro.core.hpo import (GaussianEvolution, HaltonSearch, HPOService,
+                            RandomSearch, choice, integer, loguniform,
+                            uniform)
+from repro.core.idds import IDDS
+
+
+# ------------------------------------------------------------------- HPO
+
+def _quad(params, inputs):
+    return {"objective": (params["lr"] - 0.2) ** 2
+            + (params["wd"] - 0.7) ** 2}
+
+
+def test_hpo_random_search_runs_budget():
+    reg.register_payload("h_quad", _quad)
+    idds = IDDS()
+    svc = HPOService(idds, {"lr": uniform(0, 1), "wd": uniform(0, 1)},
+                     eval_payload="h_quad", optimizer="random",
+                     points_per_round=5, max_points=20, seed=1)
+    res = svc.run()
+    assert len(res.trials) == 20
+    assert res.rounds == 4
+    assert res.best_objective < 0.5
+
+
+def test_hpo_evolution_beats_random():
+    reg.register_payload("h_quad2", _quad)
+    results = {}
+    for opt in ("random", "evolution"):
+        idds = IDDS()
+        svc = HPOService(idds, {"lr": uniform(0, 1), "wd": uniform(0, 1)},
+                         eval_payload="h_quad2", optimizer=opt,
+                         points_per_round=8, max_points=64, seed=3)
+        results[opt] = svc.run().best_objective
+    assert results["evolution"] <= results["random"]
+
+
+def test_hpo_async_evaluation():
+    import time
+    reg.register_payload(
+        "h_slow", lambda p, i: (time.sleep(0.01), _quad(p, i))[1])
+    idds = IDDS(sync=False, max_workers=8)
+    idds.start()
+    try:
+        svc = HPOService(idds, {"lr": uniform(0, 1), "wd": uniform(0, 1)},
+                         eval_payload="h_slow", optimizer="halton",
+                         points_per_round=8, max_points=16, seed=0)
+        t0 = time.time()
+        res = svc.run(timeout=60)
+        wall = time.time() - t0
+    finally:
+        idds.stop()
+    assert len(res.trials) == 16
+    # 16 evals x 10ms on 8 workers: async must beat serial time
+    assert wall < 16 * 0.01 * 0.9 + 1.0
+
+
+def test_hpo_failed_trials_counted():
+    calls = {"n": 0}
+
+    def sometimes(params, inputs):
+        calls["n"] += 1
+        if calls["n"] % 4 == 0:
+            raise RuntimeError("trial crashed")
+        return _quad(params, inputs)
+
+    reg.register_payload("h_crashy", sometimes)
+    idds = IDDS()
+    svc = HPOService(idds, {"lr": uniform(0, 1), "wd": uniform(0, 1)},
+                     eval_payload="h_crashy", optimizer="random",
+                     points_per_round=4, max_points=12, seed=0)
+    res = svc.run()
+    assert len(res.trials) + res.failed_trials == 12
+
+
+def test_search_space_dims():
+    rnd = RandomSearch({"a": uniform(2, 3), "b": loguniform(1e-4, 1e-1),
+                        "c": integer(1, 5), "d": choice("x", "y")}, seed=0)
+    pts = rnd.ask(50)
+    for p in pts:
+        assert 2 <= p["a"] <= 3
+        assert 1e-4 <= p["b"] <= 1e-1
+        assert p["c"] in (1, 2, 3, 4, 5)
+        assert p["d"] in ("x", "y")
+
+
+def test_halton_low_discrepancy():
+    h = HaltonSearch({"a": uniform(0, 1)}, seed=0)
+    pts = [p["a"] for p in h.ask(64)]
+    # quasi-random: every 1/8 bucket hit
+    buckets = {int(p * 8) for p in pts}
+    assert len(buckets) == 8
+
+
+# ------------------------------------------------------- Active Learning
+
+def test_active_learning_cycles_until_stop():
+    hist = []
+
+    def process(params, inputs):
+        hist.append(params.get("lr", 0.1))
+        return {"metric": abs(params.get("lr", 0.1) - 0.4)}
+
+    def decide(params, inputs):
+        m = params["processing_result"]["metric"]
+        return {"decision": m > 0.05,
+                "hint": {"lr": params.get("lr", 0.1) + 0.1}}
+
+    reg.register_payload("al_p", process)
+    reg.register_payload("al_d", decide)
+    wf = build_active_learning_workflow(
+        process_payload="al_p", decide_payload="al_d",
+        init_params={"lr": 0.1}, max_iterations=20)
+    idds = IDDS()
+    rid = idds.submit_workflow(wf)
+    idds.pump()
+    # lr walks 0.1 -> 0.2 -> 0.3 -> 0.4 then stops (metric 0.0 <= 0.05)
+    assert hist == pytest.approx([0.1, 0.2, 0.3, 0.4])
+    server_wf = idds.get_workflow(rid)
+    assert server_wf.finished
+
+
+def test_active_learning_max_iterations_bound():
+    reg.register_payload("al_p2", lambda p, i: {"metric": 1.0})
+    reg.register_payload("al_d2", lambda p, i: {"decision": True,
+                                                "hint": {}})
+    wf = build_active_learning_workflow(
+        process_payload="al_p2", decide_payload="al_d2", max_iterations=3)
+    idds = IDDS()
+    rid = idds.submit_workflow(wf)
+    idds.pump()  # must terminate despite decision always True
+    assert idds.get_workflow(rid).finished
+
+
+# ------------------------------------------------------------- Rubin DAG
+
+def test_dag_dependency_order():
+    order = []
+    reg.register_payload("dag_rec", lambda p, i: (order.append(p["job_id"]),
+                                                  {})[1])
+    jobs = [
+        JobSpec("a", payload="dag_rec"),
+        JobSpec("b", payload="dag_rec", deps=("a",)),
+        JobSpec("c", payload="dag_rec", deps=("a",)),
+        JobSpec("d", payload="dag_rec", deps=("b", "c")),
+    ]
+    idds = IDDS()
+    sched = DAGScheduler(idds, jobs)
+    out = sched.run_sync()
+    assert out["jobs"] == 4
+    assert order.index("a") < order.index("b")
+    assert order.index("a") < order.index("c")
+    assert order.index("d") == 3
+
+
+def test_dag_incremental_release():
+    """Jobs are only released when deps complete (never all upfront)."""
+    jobs = layered_dag(300, width=30, fan_in=2, seed=5)
+    idds = IDDS()
+    sched = DAGScheduler(idds, jobs)
+    sched.submit()
+    assert sched.released == 30  # only the first layer
+    while not sched.finished:
+        moved = sum(d.process_once() for d in idds.daemons)
+        assert moved > 0
+    assert sched.released == 300
+
+
+def test_dag_rejects_unknown_dep():
+    with pytest.raises(KeyError):
+        DAGScheduler(IDDS(), [JobSpec("a", deps=("ghost",))])
+
+
+def test_dag_rejects_rootless():
+    jobs = [JobSpec("a", deps=("b",)), JobSpec("b", deps=("a",))]
+    with pytest.raises(ValueError):
+        DAGScheduler(IDDS(), jobs).submit()

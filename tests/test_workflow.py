@@ -1,0 +1,149 @@
+"""DG workflow engine semantics (paper Fig. 3): templates, conditions,
+cycles, JSON round trip."""
+import json
+
+import pytest
+
+from repro.core import payloads as reg
+from repro.core.workflow import (Branch, Condition, FileRef, Work,
+                                 WorkStatus, Workflow, WorkTemplate)
+
+
+@pytest.fixture(autouse=True)
+def _payloads():
+    reg.register_payload("t_echo", lambda params, inputs: dict(params))
+    yield
+
+
+def build_wf():
+    wf = Workflow(name="t")
+    wf.add_template(WorkTemplate(name="a", payload="t_echo",
+                                 defaults={"x": 1}))
+    wf.add_template(WorkTemplate(name="b", payload="t_echo"))
+    wf.add_condition(Condition(trigger="a", predicate="always",
+                               true_next=[Branch("b")]))
+    wf.add_initial("a", {"x": 5})
+    return wf
+
+
+def test_instantiation_binds_params():
+    wf = build_wf()
+    works = wf.start()
+    assert len(works) == 1
+    assert works[0].template == "a"
+    assert works[0].params == {"x": 5}  # override beats default
+
+
+def test_defaults_apply():
+    wf = build_wf()
+    w = wf.instantiate("a", {})
+    assert w.params == {"x": 1}
+
+
+def test_condition_fires_on_termination():
+    wf = build_wf()
+    (a,) = wf.start()
+    a.status = WorkStatus.FINISHED
+    a.result = {}
+    new = wf.on_terminated(a)
+    assert [w.template for w in new] == ["b"]
+    assert new[0].iteration == 1
+
+
+def test_false_branch():
+    reg.register_payload("t_noop2", lambda p, i: {})
+    wf = Workflow(name="t2")
+    wf.add_template(WorkTemplate(name="a", payload="t_noop2"))
+    wf.add_template(WorkTemplate(name="yes", payload="t_noop2"))
+    wf.add_template(WorkTemplate(name="no", payload="t_noop2"))
+    wf.add_condition(Condition(trigger="a", predicate="result_true",
+                               true_next=[Branch("yes")],
+                               false_next=[Branch("no")]))
+    (a,) = [wf.instantiate("a", {})]
+    a.status = WorkStatus.FINISHED
+    a.result = {"decision": False}
+    new = wf.on_terminated(a)
+    assert [w.template for w in new] == ["no"]
+
+
+def test_cycle_guard():
+    """a -> a cycle stops at max_iterations."""
+    reg.register_payload("t_noop3", lambda p, i: {})
+    wf = Workflow(name="cyc")
+    wf.add_template(WorkTemplate(name="a", payload="t_noop3"))
+    wf.add_condition(Condition(trigger="a", predicate="always",
+                               true_next=[Branch("a")], max_iterations=3))
+    w = wf.instantiate("a", {})
+    n = 0
+    while True:
+        w.status = WorkStatus.FINISHED
+        w.result = {}
+        nxt = wf.on_terminated(w)
+        if not nxt:
+            break
+        (w,) = nxt
+        n += 1
+    assert n == 3
+
+
+def test_fanout_binder():
+    reg.register_payload("t_noop4", lambda p, i: {})
+    reg.register_binder("t_fan3", lambda params, result: [
+        {"i": i} for i in range(3)])
+    wf = Workflow(name="fan")
+    wf.add_template(WorkTemplate(name="a", payload="t_noop4"))
+    wf.add_template(WorkTemplate(name="b", payload="t_noop4"))
+    wf.add_condition(Condition(trigger="a", true_next=[
+        Branch("b", binder="t_fan3")]))
+    w = wf.instantiate("a", {})
+    w.status = WorkStatus.FINISHED
+    new = wf.on_terminated(w)
+    assert sorted(x.params["i"] for x in new) == [0, 1, 2]
+
+
+def test_json_round_trip():
+    wf = build_wf()
+    wf.start()
+    j = wf.to_json()
+    wf2 = Workflow.from_json(j)
+    assert wf2.to_json() == j
+    assert wf2.name == wf.name
+    assert set(wf2.templates) == {"a", "b"}
+    assert len(wf2.conditions) == 1
+    assert len(wf2.works) == 1
+    # deserialized workflow still evaluates conditions
+    w = next(iter(wf2.works.values()))
+    w.status = WorkStatus.FINISHED
+    w.result = {}
+    assert [x.template for x in wf2.on_terminated(w)] == ["b"]
+
+
+def test_collection_formatting():
+    reg.register_payload("t_noop5", lambda p, i: {})
+    wf = Workflow(name="fmt")
+    wf.add_template(WorkTemplate(
+        name="a", payload="t_noop5",
+        input_collection="in-{dataset}",
+        output_collection="out-{dataset}-{workflow}"))
+    w = wf.instantiate("a", {"dataset": "d1"})
+    assert w.input_collection == "in-d1"
+    assert w.output_collection == f"out-d1-{wf.workflow_id}"
+
+
+def test_unknown_template_rejected():
+    wf = Workflow(name="x")
+    with pytest.raises(KeyError):
+        wf.add_initial("nope", {})
+    wf.add_template(WorkTemplate(name="a", payload="noop"))
+    with pytest.raises(KeyError):
+        wf.add_condition(Condition(trigger="zz"))
+
+
+def test_workflow_finished_counts():
+    wf = build_wf()
+    wf.start()
+    assert not wf.finished
+    for w in wf.works.values():
+        w.status = WorkStatus.FINISHED
+    assert wf.finished
+    assert wf.counts() == {"finished": 1}
