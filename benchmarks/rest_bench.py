@@ -1,0 +1,138 @@
+"""Benchmark: REST gateway throughput + status-poll latency.
+
+Measures the network boundary the paper's head service must sustain
+("heavy traffic from many clients"): N concurrent IDDSClients submitting
+single-work workflows as fast as they can, then hammering status polls
+against the live gateway.  Reports submissions/sec and p50/p95 poll
+latency per client count, in the same keys-header-then-CSV-rows shape as
+the other benchmarks driven by benchmarks/run.py.
+
+    PYTHONPATH=src python -m benchmarks.rest_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import Dict, List
+
+from repro.core.client import IDDSClient
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+
+KEYS = ["clients", "submissions", "sub_wall_s", "sub_per_s",
+        "polls", "poll_p50_ms", "poll_p95_ms", "finished"]
+
+
+def _percentile(xs: List[float], p: float) -> float:
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    k = min(len(xs) - 1, max(0, int(round(p * (len(xs) - 1)))))
+    return xs[k]
+
+
+def run_one(n_clients: int, *, per_client: int = 25,
+            polls_per_client: int = 50) -> Dict:
+    with RestGateway(IDDS()) as gw:
+        rids_per_client: List[List[str]] = [[] for _ in range(n_clients)]
+        poll_lat: List[List[float]] = [[] for _ in range(n_clients)]
+        errors: List[Exception] = []
+        barrier = threading.Barrier(n_clients)
+
+        def submitter(i: int):
+            try:
+                client = IDDSClient(gw.url)
+                barrier.wait()
+                for _ in range(per_client):
+                    # fresh request (new request_id + workflow_id) per submit
+                    rids_per_client[i].append(
+                        client.submit(_make_request_json()))
+            except Exception as e:  # noqa: BLE001 — surfaced below
+                errors.append(e)
+
+        def poller(i: int):
+            try:
+                client = IDDSClient(gw.url)
+                rids = rids_per_client[i]
+                for k in range(polls_per_client):
+                    t0 = time.perf_counter()
+                    client.status(rids[k % len(rids)])
+                    poll_lat[i].append(time.perf_counter() - t0)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        # phase 1: concurrent submissions
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(n_clients)]
+        t0 = time.time()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        sub_wall = time.time() - t0
+        assert not errors, errors
+
+        # phase 2: concurrent status polls against the live gateway
+        threads = [threading.Thread(target=poller, args=(i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+
+        # drain: every submitted workflow must complete
+        client = IDDSClient(gw.url)
+        finished = 0
+        for rids in rids_per_client:
+            for rid in rids:
+                if client.wait(rid, timeout=60)["status"] == "finished":
+                    finished += 1
+
+        lats = [x for per in poll_lat for x in per]
+        n_sub = n_clients * per_client
+        return {
+            "clients": n_clients,
+            "submissions": n_sub,
+            "sub_wall_s": round(sub_wall, 3),
+            "sub_per_s": round(n_sub / sub_wall),
+            "polls": len(lats),
+            "poll_p50_ms": round(_percentile(lats, 0.50) * 1e3, 2),
+            "poll_p95_ms": round(_percentile(lats, 0.95) * 1e3, 2),
+            "finished": finished,
+        }
+
+
+def _make_request_json() -> str:
+    from repro.core.requests import Request
+    from repro.core.workflow import Workflow, WorkTemplate
+    wf = Workflow(name="bench")
+    wf.add_template(WorkTemplate(name="n", payload="noop"))
+    wf.add_initial("n", {})
+    return Request(workflow=wf).to_json()
+
+
+def run(client_counts=(1, 4, 8), *, per_client: int = 25,
+        polls_per_client: int = 50) -> List[Dict]:
+    rows = []
+    for n in client_counts:
+        rows.append(run_one(n, per_client=per_client,
+                            polls_per_client=polls_per_client))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer submissions per client (CI)")
+    args = ap.parse_args(argv)
+    per = 10 if args.quick else 25
+    rows = run(per_client=per)
+    print(",".join(KEYS))
+    for r in rows:
+        print(",".join(str(r[k]) for k in KEYS))
+
+
+if __name__ == "__main__":
+    main()

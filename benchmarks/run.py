@@ -8,6 +8,7 @@ Sections:
   dag        §3.3.1    Rubin-scale DAG scheduling throughput
   pipeline   §1        delivery granularity + straggler hedging
   train      §3.1      carousel-fed training micro-run (loss goes down)
+  rest       §2        REST gateway submission throughput + poll latency
   roofline   —         per-cell roofline terms from the dry-run sweep
 """
 from __future__ import annotations
@@ -67,6 +68,13 @@ def main(argv=None) -> int:
     print(f"yi-6b,{res['steps']},{res['first_loss']:.3f},"
           f"{res['last_loss']:.3f},{res['time_to_first_batch_s']:.2f},"
           f"{res['wall_s']:.1f}")
+
+    _section("rest (paper §2, gateway throughput)")
+    from benchmarks import rest_bench
+    rows = rest_bench.run(per_client=10 if args.quick else 25)
+    print(",".join(rest_bench.KEYS))
+    for r in rows:
+        print(",".join(str(r[k]) for k in rest_bench.KEYS))
 
     _section("roofline (dry-run sweep)")
     from benchmarks import roofline

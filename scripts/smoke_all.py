@@ -1,4 +1,7 @@
-"""Dev script: run one train step + prefill + decode for every smoke arch."""
+"""Dev script: run one train step + prefill + decode for every smoke arch,
+then the REST gateway quickstart (server + client over localhost HTTP)."""
+import os
+import subprocess
 import sys
 import traceback
 
@@ -40,6 +43,20 @@ def smoke_one(arch: str) -> None:
     print(f"[ok] {arch}: loss={loss:.4f}")
 
 
+def smoke_rest() -> None:
+    """End-to-end REST quickstart in a subprocess (own server + client)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "examples",
+                                      "rest_quickstart.py")],
+        cwd=root, env=env, capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    print("[ok] rest quickstart (gateway + client over HTTP)")
+
+
 if __name__ == "__main__":
     archs = sys.argv[1:] or list_archs()
     failed = []
@@ -50,4 +67,10 @@ if __name__ == "__main__":
             failed.append(a)
             print(f"[FAIL] {a}")
             traceback.print_exc()
+    try:
+        smoke_rest()
+    except Exception:
+        failed.append("rest")
+        print("[FAIL] rest")
+        traceback.print_exc()
     sys.exit(1 if failed else 0)

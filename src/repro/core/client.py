@@ -1,0 +1,146 @@
+"""Typed client SDK for the iDDS REST gateway (paper §2, client side).
+
+``IDDSClient`` mirrors the in-process :class:`repro.core.idds.IDDS`
+facade method-for-method, but speaks HTTP to a :class:`repro.core.rest.
+RestGateway`.  Error mapping preserves in-process semantics so callers
+can swap one for the other:
+
+  HTTP 401  -> repro.core.idds.AuthError
+  HTTP 404  -> KeyError
+  other 4xx -> IDDSClientError (no retry)
+  5xx / connection errors -> retried with exponential backoff, then
+               IDDSClientError
+
+Retrying POST /requests is safe: the server deduplicates on the
+client-generated request_id, so a retry after a lost response cannot
+run the workflow twice.
+
+Only the stdlib (``urllib``) is used — no extra dependencies.
+
+    client = IDDSClient("http://127.0.0.1:8443", token="s3cret")
+    rid = client.submit_workflow(wf, requester="alice")
+    info = client.wait(rid, timeout=60)
+"""
+from __future__ import annotations
+
+import json
+import time
+import urllib.error
+import urllib.parse
+import urllib.request
+from typing import Any, Dict, List, Optional
+
+from repro.core.idds import AuthError
+from repro.core.requests import Request
+from repro.core.workflow import Workflow
+
+
+class IDDSClientError(Exception):
+    """Non-auth, non-404 gateway error (carries HTTP status + server type)."""
+
+    def __init__(self, status: int, type_: str, message: str):
+        super().__init__(f"HTTP {status} [{type_}]: {message}")
+        self.status = status
+        self.type = type_
+
+
+class IDDSClient:
+    def __init__(self, base_url: str, *, token: str = "",
+                 timeout: float = 10.0, retries: int = 3,
+                 backoff: float = 0.05):
+        self.base_url = base_url.rstrip("/")
+        self.token = token
+        self.timeout = timeout
+        self.retries = retries
+        self.backoff = backoff
+
+    # ------------------------------------------------------------- transport
+    def _request(self, method: str, path: str,
+                 body: Optional[bytes] = None) -> Any:
+        url = self.base_url + path
+        last_err: Optional[Exception] = None
+        for attempt in range(self.retries + 1):
+            req = urllib.request.Request(url, data=body, method=method)
+            req.add_header("Content-Type", "application/json")
+            if self.token:
+                req.add_header("Authorization", f"Bearer {self.token}")
+            try:
+                with urllib.request.urlopen(req, timeout=self.timeout) as r:
+                    return json.loads(r.read().decode("utf-8"))
+            except urllib.error.HTTPError as e:
+                status = e.code
+                try:
+                    env = json.loads(e.read().decode("utf-8"))["error"]
+                    etype, msg = env["type"], env["message"]
+                except Exception:  # noqa: BLE001 — non-envelope body
+                    etype, msg = "HTTPError", str(e)
+                if status == 401:
+                    raise AuthError(msg) from None
+                if status == 404:
+                    raise KeyError(msg) from None
+                if status < 500:  # client errors never retry
+                    raise IDDSClientError(status, etype, msg) from None
+                last_err = IDDSClientError(status, etype, msg)
+            except (urllib.error.URLError, ConnectionError, TimeoutError,
+                    OSError) as e:
+                last_err = e
+            if attempt < self.retries:
+                time.sleep(self.backoff * (2 ** attempt))
+        raise IDDSClientError(
+            0, type(last_err).__name__,
+            f"{method} {url} failed after {self.retries + 1} attempts: "
+            f"{last_err}")
+
+    def _get(self, path: str) -> Any:
+        return self._request("GET", path)
+
+    def _post(self, path: str, obj: Any) -> Any:
+        return self._request("POST", path,
+                             json.dumps(obj).encode("utf-8"))
+
+    # ------------------------------------------------------------ client API
+    def submit(self, request_json: str) -> str:
+        """Submit a serialized Request; returns the request_id."""
+        return self._post("/requests", json.loads(request_json))["request_id"]
+
+    def submit_workflow(self, wf: Workflow, requester: str = "anonymous",
+                        token: Optional[str] = None) -> str:
+        req = Request(workflow=wf, requester=requester,
+                      token=self.token if token is None else token)
+        return self.submit(req.to_json())
+
+    def status(self, request_id: str) -> Dict[str, Any]:
+        return self._get(f"/requests/{urllib.parse.quote(request_id)}")
+
+    def get_workflow(self, request_id: str) -> Workflow:
+        d = self._get(
+            f"/requests/{urllib.parse.quote(request_id)}/workflow")
+        return Workflow.from_dict(d)
+
+    def wait(self, request_id: str, timeout: float = 60.0,
+             interval: float = 0.02) -> Dict[str, Any]:
+        """Poll until the request's workflow finishes; returns final status."""
+        deadline = time.time() + timeout
+        while True:
+            info = self.status(request_id)
+            if info.get("status") == "finished":
+                return info
+            if time.time() > deadline:
+                raise TimeoutError(
+                    f"request {request_id} not finished in {timeout}s "
+                    f"(last status: {info.get('status')})")
+            time.sleep(interval)
+
+    def lookup_collection(self, name: str) -> Dict[str, Any]:
+        return self._get(
+            f"/collections/{urllib.parse.quote(name, safe='')}")
+
+    def lookup_contents(self, name: str) -> List[Dict[str, Any]]:
+        return self._get(
+            f"/collections/{urllib.parse.quote(name, safe='')}/contents")
+
+    def stats(self) -> Dict[str, int]:
+        return self._get("/stats")
+
+    def healthz(self) -> Dict[str, Any]:
+        return self._get("/healthz")

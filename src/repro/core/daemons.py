@@ -106,11 +106,24 @@ class Context:
     works: Dict[str, Tuple[str, Work]] = field(default_factory=dict)
     processings: Dict[str, Processing] = field(default_factory=dict)
     stats: Dict[str, int] = field(default_factory=dict)
+    # workflow_id -> #work-termination events published but not yet
+    # condition-evaluated by the Marshaller.  While > 0 the workflow may
+    # still grow new Works, so it must not be reported "finished" even if
+    # every existing Work is terminal (threaded-mode status race).
+    inflight: Dict[str, int] = field(default_factory=dict)
     lock: threading.RLock = field(default_factory=threading.RLock)
 
     def bump(self, key: str, n: int = 1) -> None:
         with self.lock:
             self.stats[key] = self.stats.get(key, 0) + n
+
+    def inflight_add(self, workflow_id: str, n: int) -> None:
+        with self.lock:
+            self.inflight[workflow_id] = self.inflight.get(workflow_id, 0) + n
+
+    def quiescent(self, workflow_id: str) -> bool:
+        with self.lock:
+            return self.inflight.get(workflow_id, 0) == 0
 
 
 class Daemon:
@@ -172,16 +185,44 @@ class Marshaller(Daemon):
                 "workflow_id": wf.workflow_id, "work_id": w.work_id})
 
     def process_once(self) -> int:
+        # wf.works mutations happen under ctx.lock so status polls can
+        # snapshot consistently; publishes stay OUTSIDE the lock (bus
+        # subscribers like DAGScheduler take ctx.lock under the bus lock,
+        # so publishing while holding ctx.lock could deadlock).
         n = 0
         for m in self.ctx.bus.poll(M.T_NEW_WORKFLOWS):
             n += 1
-            wf = self.ctx.workflows[m.body["workflow_id"]]
-            self._emit(wf, wf.start())
+            try:
+                wf = self.ctx.workflows[m.body["workflow_id"]]
+                with self.ctx.lock:
+                    new_works = wf.start()
+                self._emit(wf, new_works)
+            except Exception:  # one bad workflow must not drop the batch
+                self.ctx.bump("marshaller_errors")
+                traceback.print_exc()
         for m in self.ctx.bus.poll(M.T_WORK_DONE):
             n += 1
-            wf_id, work = self.ctx.works[m.body["work_id"]]
-            wf = self.ctx.workflows[wf_id]
-            self._emit(wf, wf.on_terminated(work))
+            # per-message isolation: poll() already drained the queue, so
+            # an exception that escaped this loop would silently discard
+            # every later message in the batch (their workflows would
+            # report "running" forever)
+            try:
+                wf_id, work = self.ctx.works[m.body["work_id"]]
+                wf = self.ctx.workflows[wf_id]
+                with self.ctx.lock:
+                    # decrement in the same locked section that
+                    # instantiates the successors: a poll never sees
+                    # quiescent + all-works terminal while successors are
+                    # pending.  finally: a raising predicate/binder must
+                    # not wedge the counter.
+                    try:
+                        new_works = wf.on_terminated(work)
+                    finally:
+                        self.ctx.inflight_add(wf_id, -1)
+                self._emit(wf, new_works)
+            except Exception:
+                self.ctx.bump("marshaller_errors")
+                traceback.print_exc()
         return n
 
 
@@ -268,19 +309,25 @@ class Transformer(Daemon):
         return len(done) == len(coll.files)
 
     def _finalize(self, work: Work) -> None:
+        wf_id, _ = self.ctx.works[work.work_id]
         procs = self._work_procs.pop(work.work_id, [])
         fails = sum(1 for p in procs
                     if p.status == ProcessingStatus.FAILED)
-        work.status = (WorkStatus.FINISHED if fails == 0 else
-                       WorkStatus.SUBFINISHED)
-        work.terminated_at = time.time()
-        # merge processing results: last one wins per key; keep the list too
-        merged: Dict[str, Any] = {}
-        for p in sorted((p for p in procs if p.result),
-                        key=lambda p: p.proc_id):
-            merged.update(p.result)
-            work.results.append(p.result)
-        work.result = merged or work.result
+        with self.ctx.lock:
+            # count the termination event atomically with the work turning
+            # terminal, so no status poll can observe "all works terminal"
+            # with the condition evaluation still queued
+            self.ctx.inflight_add(wf_id, 1)
+            work.status = (WorkStatus.FINISHED if fails == 0 else
+                           WorkStatus.SUBFINISHED)
+            work.terminated_at = time.time()
+            # merge processing results: last wins per key; keep the list too
+            merged: Dict[str, Any] = {}
+            for p in sorted((p for p in procs if p.result),
+                            key=lambda p: p.proc_id):
+                merged.update(p.result)
+                work.results.append(p.result)
+            work.result = merged or work.result
         self._pending.pop(work.work_id, None)
         self.ctx.bump("works_finished")
         self.ctx.bus.publish(M.T_WORK_DONE, {"work_id": work.work_id})

@@ -56,16 +56,24 @@ class IDDS:
 
     # --------------------------------------------------------------- client API
     def submit(self, request_json: str) -> str:
-        """Accept a serialized Request; returns the request_id."""
+        """Accept a serialized Request; returns the request_id.
+
+        Idempotent on request_id: resubmitting an already-registered
+        request (an HTTP client retrying after a lost response) is a
+        no-op, so the workflow never runs twice.
+        """
         req = Request.from_json(request_json)
         self._auth(req.token)
-        self._requests[req.request_id] = {
-            "request_id": req.request_id,
-            "workflow_id": req.workflow.workflow_id,
-            "requester": req.requester,
-            "status": "accepted",
-            "submitted_at": time.time(),
-        }
+        with self.ctx.lock:
+            if req.request_id in self._requests:
+                return req.request_id
+            self._requests[req.request_id] = {
+                "request_id": req.request_id,
+                "workflow_id": req.workflow.workflow_id,
+                "requester": req.requester,
+                "status": "accepted",
+                "submitted_at": time.time(),
+            }
         self.ctx.bus.publish(M.T_NEW_REQUESTS, {
             "request_id": req.request_id,
             "workflow": req.workflow.to_json(),
@@ -81,12 +89,25 @@ class IDDS:
         info = dict(self._requests[request_id])
         wf = self.ctx.workflows.get(info["workflow_id"])
         if wf is not None:
-            info["works"] = wf.counts()
-            info["status"] = "finished" if wf.finished else "running"
+            # snapshot under ctx.lock: daemon threads insert into wf.works
+            # (iteration would race), and finished+quiescent must be read
+            # against the same instant or a poll between the Marshaller's
+            # successor-instantiation and its inflight decrement could
+            # still report a false "finished"
+            with self.ctx.lock:
+                info["works"] = wf.counts()
+                done = wf.finished and self.ctx.quiescent(wf.workflow_id)
+            info["status"] = "finished" if done else "running"
         return info
 
     def get_workflow(self, request_id: str) -> Workflow:
         return self.ctx.workflows[self._requests[request_id]["workflow_id"]]
+
+    def workflow_dict(self, request_id: str) -> Dict[str, Any]:
+        """Serialized workflow snapshot, safe against live daemon threads."""
+        wf = self.get_workflow(request_id)
+        with self.ctx.lock:
+            return wf.to_dict()
 
     def lookup_collection(self, name: str) -> Dict[str, Any]:
         return self.ctx.ddm.get_collection(name).to_dict()

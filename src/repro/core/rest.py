@@ -1,0 +1,364 @@
+"""REST gateway for the iDDS head service (paper §2).
+
+The paper describes iDDS as "a general Restful service to receive
+requests from WFMS" — this module is that network boundary.  It wraps an
+in-process :class:`repro.core.idds.IDDS` in a thread-pooled stdlib HTTP
+server so workflows can be submitted and tracked over the wire by any
+client speaking JSON (see :mod:`repro.core.client` for the typed SDK).
+
+Endpoints (all JSON; details in docs/rest_api.md):
+
+  POST /requests                     submit a serialized Request
+  GET  /requests/<id>                request status + work counts
+  GET  /requests/<id>/workflow       full workflow state (the DG)
+  GET  /collections/<name>           collection metadata
+  GET  /collections/<name>/contents  per-file availability
+  GET  /stats                        daemon counters
+  GET  /healthz                      liveness (never requires auth)
+
+Auth: a bearer token (``Authorization: Bearer <t>`` or ``X-IDDS-Token``)
+checked against the IDDS token set; failures surface as the same
+``AuthError`` the in-process facade raises and map to HTTP 401.  Every
+error is a JSON envelope ``{"error": {"type": ..., "message": ...}}``.
+
+Run standalone:
+
+    PYTHONPATH=src python -m repro.core.rest --port 8443 \
+        --tokens s3cret --payloads my_payload_module
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import re
+import threading
+import time
+import urllib.parse
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional, Set, Tuple
+
+from repro.core.idds import IDDS, AuthError
+
+MAX_BODY_BYTES = 16 * 1024 * 1024  # refuse absurd submissions
+
+
+class RestGateway:
+    """HTTP front-end owning the lifecycle of an IDDS head service.
+
+    ``start()`` spins the IDDS daemon threads and then the HTTP server;
+    ``stop()`` tears both down in reverse order.  Also usable as a
+    context manager.  ``port=0`` binds an ephemeral port (tests).
+    """
+
+    def __init__(self, idds: Optional[IDDS] = None, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 tokens: Optional[Set[str]] = None,
+                 manage_idds: bool = True, quiet: bool = True):
+        self.idds = idds if idds is not None else IDDS(tokens=tokens)
+        if tokens is not None and idds is not None:
+            self.idds._tokens = set(tokens)
+        self.host = host
+        self._requested_port = port
+        self.manage_idds = manage_idds
+        self.quiet = quiet
+        self.started_at: Optional[float] = None
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def port(self) -> int:
+        if self._httpd is None:
+            return self._requested_port
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "RestGateway":
+        if self._httpd is not None:
+            raise RuntimeError("gateway already started")
+        if self.manage_idds:
+            self.idds.start()
+        handler = _make_handler(self)
+        server_cls = type("IDDSHTTPServer", (ThreadingHTTPServer,), {
+            # urllib clients open a fresh connection per call: the default
+            # listen backlog of 5 drops SYNs under concurrent load (1s
+            # retransmit stalls in benchmarks)
+            "request_queue_size": 128,
+        })
+        self._httpd = server_cls((self.host, self._requested_port), handler)
+        self._httpd.daemon_threads = True
+        # small JSON responses: Nagle + delayed ACK costs ~40ms per poll
+        self._httpd.disable_nagle_algorithm = True
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="idds-rest", daemon=True)
+        self._thread.start()
+        self.started_at = time.time()
+        return self
+
+    def stop(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        if self.manage_idds:
+            self.idds.stop()
+
+    def __enter__(self) -> "RestGateway":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------ handlers
+    # Each returns (http_status, json-serializable body).
+    def handle_submit(self, body: bytes, token: str) -> Tuple[int, Dict]:
+        try:
+            d = json.loads(body.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            return 400, _err("BadRequest", f"request body is not JSON: {e}")
+        if not isinstance(d, dict) or "workflow" not in d:
+            return 400, _err("BadRequest",
+                             "body must be a Request object with a "
+                             "'workflow' field")
+        if token and not d.get("token"):
+            d["token"] = token  # header auth wins over an empty body token
+        try:
+            request_id = self.idds.submit(json.dumps(d))
+        except AuthError as e:
+            return 401, _err("AuthError", str(e))
+        except (KeyError, TypeError, ValueError) as e:
+            return 400, _err("BadRequest", f"malformed request: {e}")
+        return 201, {"request_id": request_id, "status": "accepted"}
+
+    def handle_status(self, request_id: str, token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.request_status(request_id)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown request {request_id!r}")
+
+    def handle_workflow(self, request_id: str, token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.workflow_dict(request_id)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown request {request_id!r}")
+
+    def handle_collection(self, name: str, token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.lookup_collection(name)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown collection {name!r}")
+
+    def handle_contents(self, name: str, token: str) -> Tuple[int, Any]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.lookup_contents(name)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown collection {name!r}")
+
+    def handle_stats(self, token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        return 200, self.idds.stats
+
+    def handle_healthz(self) -> Tuple[int, Dict]:
+        return 200, {
+            "status": "ok",
+            "daemons": [d.name for d in self.idds.daemons],
+            "uptime_s": (round(time.time() - self.started_at, 3)
+                         if self.started_at else 0.0),
+        }
+
+
+def _err(type_: str, message: str) -> Dict[str, Dict[str, str]]:
+    return {"error": {"type": type_, "message": message}}
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+# (method, compiled-path-regex, gateway-method, needs_token)
+_ROUTES = [
+    ("POST", re.compile(r"^/requests/?$"), "handle_submit"),
+    ("GET", re.compile(r"^/requests/(?P<request_id>[^/]+)/workflow/?$"),
+     "handle_workflow"),
+    ("GET", re.compile(r"^/requests/(?P<request_id>[^/]+)/?$"),
+     "handle_status"),
+    ("GET", re.compile(r"^/collections/(?P<name>.+)/contents/?$"),
+     "handle_contents"),
+    ("GET", re.compile(r"^/collections/(?P<name>.+?)/?$"),
+     "handle_collection"),
+    ("GET", re.compile(r"^/stats/?$"), "handle_stats"),
+    ("GET", re.compile(r"^/healthz/?$"), "handle_healthz"),
+]
+
+
+def _make_handler(gw: RestGateway):
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+        server_version = "idds-rest/1.0"
+
+        # -- plumbing ----------------------------------------------------
+        def log_message(self, fmt, *args):  # noqa: A003
+            if not gw.quiet:
+                BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+        def _token(self) -> str:
+            auth = self.headers.get("Authorization", "")
+            if auth.lower().startswith("bearer "):
+                return auth[7:].strip()
+            return self.headers.get("X-IDDS-Token", "")
+
+        def _drain_body(self) -> None:
+            """Consume any unread request body before replying: leaving
+            bytes on a keep-alive connection desyncs the next request."""
+            if getattr(self, "_body_consumed", False):
+                return
+            self._body_consumed = True
+            length = int(self.headers.get("Content-Length", 0) or 0)
+            if length <= 0:
+                return
+            if length > MAX_BODY_BYTES:
+                self.close_connection = True  # cheaper than reading it
+                return
+            while length > 0:
+                chunk = self.rfile.read(min(length, 65536))
+                if not chunk:
+                    break
+                length -= len(chunk)
+
+        def _reply(self, status: int, body: Any) -> None:
+            self._drain_body()
+            payload = json.dumps(body).encode("utf-8")
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(payload)))
+            if self.close_connection:
+                self.send_header("Connection", "close")
+            self.end_headers()
+            self.wfile.write(payload)
+
+        def _dispatch(self, method: str) -> None:
+            # Route on the still-quoted path; unquote captured segments in
+            # _invoke so %2F inside a collection name survives routing.
+            path = urllib.parse.urlsplit(self.path).path
+            matched_path = False
+            for m, rx, fn_name in _ROUTES:
+                match = rx.match(path)
+                if match is None:
+                    continue
+                if m != method:
+                    matched_path = True
+                    continue
+                try:
+                    status, body = self._invoke(fn_name, match)
+                except AuthError as e:
+                    status, body = 401, _err("AuthError", str(e))
+                except Exception as e:  # noqa: BLE001 — envelope, not trace
+                    status, body = 500, _err(type(e).__name__, str(e))
+                self._reply(status, body)
+                return
+            if matched_path:
+                self._reply(405, _err("MethodNotAllowed",
+                                      f"{method} not allowed on {path}"))
+            else:
+                self._reply(404, _err("NotFound", f"no route for {path}"))
+
+        def _invoke(self, fn_name: str, match) -> Tuple[int, Any]:
+            token = self._token()
+            if fn_name == "handle_healthz":
+                return gw.handle_healthz()
+            if fn_name == "handle_submit":
+                length = int(self.headers.get("Content-Length", 0))
+                if length > MAX_BODY_BYTES:
+                    self._body_consumed = True
+                    self.close_connection = True  # body left unread
+                    return 413, _err("PayloadTooLarge",
+                                     f"body exceeds {MAX_BODY_BYTES} bytes")
+                body = self.rfile.read(length)
+                self._body_consumed = True
+                return gw.handle_submit(body, token)
+            if fn_name == "handle_stats":
+                return gw.handle_stats(token)
+            kwargs = {k: urllib.parse.unquote(v)
+                      for k, v in match.groupdict().items()}
+            return getattr(gw, fn_name)(**kwargs, token=token)
+
+        # -- verbs -------------------------------------------------------
+        def do_GET(self):  # noqa: N802
+            self._dispatch("GET")
+
+        def do_POST(self):  # noqa: N802
+            self._dispatch("POST")
+
+        # other verbs get the JSON 405/404 envelope, not stock HTML
+        def do_PUT(self):  # noqa: N802
+            self._dispatch("PUT")
+
+        def do_DELETE(self):  # noqa: N802
+            self._dispatch("DELETE")
+
+        def do_PATCH(self):  # noqa: N802
+            self._dispatch("PATCH")
+
+    return Handler
+
+
+# ---------------------------------------------------------------------------
+# CLI entrypoint
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.rest",
+        description="Serve the iDDS head service over HTTP.")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8443)
+    ap.add_argument("--tokens", default=None,
+                    help="comma-separated bearer tokens (omit = auth off)")
+    ap.add_argument("--async-wfm", action="store_true",
+                    help="run payloads on a WFM worker pool instead of "
+                         "inline in the Carrier thread")
+    ap.add_argument("--max-workers", type=int, default=8)
+    ap.add_argument("--payloads", action="append", default=[],
+                    help="importable module that registers payloads "
+                         "(repeatable)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="log each HTTP request")
+    args = ap.parse_args(argv)
+
+    for mod in args.payloads:
+        importlib.import_module(mod)
+
+    tokens = (set(t for t in args.tokens.split(",") if t)
+              if args.tokens else None)
+    idds = IDDS(sync=not args.async_wfm, max_workers=args.max_workers,
+                tokens=tokens)
+    gw = RestGateway(idds, host=args.host, port=args.port,
+                     quiet=not args.verbose)
+    gw.start()
+    print(f"idds-rest serving on {gw.url} "
+          f"(auth={'on' if tokens else 'off'}, "
+          f"wfm={'async' if args.async_wfm else 'sync'})", flush=True)
+    try:
+        while True:
+            time.sleep(1)
+    except KeyboardInterrupt:
+        print("shutting down", flush=True)
+    finally:
+        gw.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -281,8 +281,15 @@ class Workflow:
     # -- DG evaluation ---------------------------------------------------------
     def on_terminated(self, work: Work) -> List[Work]:
         """Evaluate all conditions triggered by ``work``; instantiate and
-        return the next generation of Works (paper Fig. 3 semantics)."""
-        new_works: List[Work] = []
+        return the next generation of Works (paper Fig. 3 semantics).
+
+        All-or-nothing: predicates and binders are all evaluated before
+        any Work is instantiated, and a failure mid-instantiation rolls
+        back — a raising predicate/binder must not leave orphan NEW Works
+        in ``works`` that nobody will ever execute (they would pin the
+        workflow at unfinished forever).
+        """
+        planned: List[Tuple[str, Dict[str, Any]]] = []
         for cond in self.conditions:
             if cond.trigger != work.template:
                 continue
@@ -294,9 +301,17 @@ class Workflow:
                 bound = reg.get_binder(b.binder)(work.params, work.result)
                 # a binder may fan out: list of param dicts -> one Work each
                 for params in (bound if isinstance(bound, list) else [bound]):
-                    new_works.append(
-                        self.instantiate(b.template, params,
-                                         iteration=work.iteration + 1))
+                    planned.append((b.template, params))
+        new_works: List[Work] = []
+        try:
+            for template, params in planned:
+                new_works.append(
+                    self.instantiate(template, params,
+                                     iteration=work.iteration + 1))
+        except Exception:
+            for w in new_works:
+                self.works.pop(w.work_id, None)
+            raise
         return new_works
 
     @property

@@ -149,7 +149,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t1
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = hlo_cost.xla_cost(compiled)
         # our walker: per-device flops/bytes with while-loop trip counts
         # (XLA's cost_analysis counts loop bodies once — see hlo_cost.py)
         walk = hlo_cost.analyze(compiled.as_text()) if collect_hlo else {}

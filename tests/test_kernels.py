@@ -4,7 +4,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # No hypothesis on this machine: the property tests skip but the
+    # parametrized sweeps below must still collect and run.  The stubs
+    # keep the module-level @given/@settings/st.* expressions valid.
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    class _NullStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
 
 from repro.kernels.cross_entropy import cross_entropy_pallas
 from repro.kernels.flash_attention import flash_attention_pallas

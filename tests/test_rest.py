@@ -1,0 +1,236 @@
+"""REST gateway + client SDK: auth, error envelopes, concurrency, and
+end-to-end workflow completion over the wire (paper §2's Restful boundary).
+"""
+import http.client
+import json
+import threading
+
+import pytest
+
+from repro.core import payloads as reg
+from repro.core.client import IDDSClient, IDDSClientError
+from repro.core.idds import IDDS, AuthError
+from repro.core.requests import Request
+from repro.core.rest import RestGateway
+from repro.core.workflow import (Branch, Condition, FileRef, Workflow,
+                                 WorkTemplate)
+
+reg.register_payload("rest_double",
+                     lambda params, inputs: {"x": params["x"] * 2})
+
+
+def _chain_workflow(x=3) -> Workflow:
+    wf = Workflow(name="rest-chain")
+    wf.add_template(WorkTemplate(name="a", payload="rest_double"))
+    wf.add_template(WorkTemplate(name="b", payload="rest_double"))
+    wf.add_condition(Condition(trigger="a", true_next=[Branch("b")]))
+    wf.add_initial("a", {"x": x})
+    return wf
+
+
+@pytest.fixture
+def gateway():
+    gw = RestGateway(IDDS())
+    gw.start()
+    yield gw
+    gw.stop()
+
+
+@pytest.fixture
+def auth_gateway():
+    gw = RestGateway(IDDS(tokens={"s3cret"}))
+    gw.start()
+    yield gw
+    gw.stop()
+
+
+# ----------------------------------------------------------------- basics
+
+def test_healthz_no_auth(auth_gateway):
+    client = IDDSClient(auth_gateway.url)  # no token on purpose
+    h = client.healthz()
+    assert h["status"] == "ok"
+    assert set(h["daemons"]) == {"clerk", "marshaller", "transformer",
+                                 "carrier", "conductor"}
+
+
+def test_end_to_end_workflow(gateway):
+    client = IDDSClient(gateway.url)
+    rid = client.submit_workflow(_chain_workflow(), requester="alice")
+    info = client.wait(rid, timeout=30)
+    assert info["status"] == "finished"
+    assert info["works"] == {"finished": 2}
+    wf = client.get_workflow(rid)
+    assert sorted(w.result["x"] for w in wf.works.values()) == [6, 6]
+    assert client.stats()["requests"] >= 1
+
+
+def test_collection_lookup_over_wire(gateway):
+    gateway.idds.ctx.ddm.register_collection(
+        "data/raw.2026", [FileRef("f0", size=10, available=True),
+                          FileRef("f1", size=20)])
+    client = IDDSClient(gateway.url)
+    coll = client.lookup_collection("data/raw.2026")
+    assert coll["name"] == "data/raw.2026"
+    contents = client.lookup_contents("data/raw.2026")
+    assert [f["name"] for f in contents] == ["f0", "f1"]
+    assert [f["available"] for f in contents] == [True, False]
+
+
+def test_unknown_request_is_404(gateway):
+    client = IDDSClient(gateway.url)
+    with pytest.raises(KeyError):
+        client.status("req-nonexistent")
+    with pytest.raises(KeyError):
+        client.get_workflow("req-nonexistent")
+
+
+def test_unknown_route_and_method(gateway):
+    conn = http.client.HTTPConnection(gateway.host, gateway.port, timeout=5)
+    conn.request("GET", "/nope")
+    r = conn.getresponse()
+    assert r.status == 404
+    assert json.loads(r.read())["error"]["type"] == "NotFound"
+    conn.request("POST", "/stats", body=b"{}")
+    r = conn.getresponse()
+    assert r.status == 405
+    conn.close()
+
+
+# ------------------------------------------------------------------- auth
+
+def test_auth_failure_on_submit(auth_gateway):
+    client = IDDSClient(auth_gateway.url, token="wrong")
+    with pytest.raises(AuthError):
+        client.submit_workflow(_chain_workflow())
+
+
+def test_auth_failure_on_status(auth_gateway):
+    good = IDDSClient(auth_gateway.url, token="s3cret")
+    rid = good.submit_workflow(_chain_workflow())
+    bad = IDDSClient(auth_gateway.url)
+    with pytest.raises(AuthError):
+        bad.status(rid)
+    with pytest.raises(AuthError):
+        bad.stats()
+
+
+def test_auth_success_end_to_end(auth_gateway):
+    client = IDDSClient(auth_gateway.url, token="s3cret")
+    rid = client.submit_workflow(_chain_workflow())
+    info = client.wait(rid, timeout=30)
+    assert info["works"] == {"finished": 2}
+
+
+def test_body_token_also_accepted(auth_gateway):
+    """The Request body can carry the token (in-process parity)."""
+    client = IDDSClient(auth_gateway.url)  # no header token
+    req = Request(workflow=_chain_workflow(), token="s3cret")
+    rid = client.submit(req.to_json())
+    assert rid == req.request_id
+
+
+# ----------------------------------------------------------- bad payloads
+
+def test_bad_json_is_400(gateway):
+    conn = http.client.HTTPConnection(gateway.host, gateway.port, timeout=5)
+    conn.request("POST", "/requests", body=b"{not json!",
+                 headers={"Content-Type": "application/json"})
+    r = conn.getresponse()
+    assert r.status == 400
+    env = json.loads(r.read())["error"]
+    assert env["type"] == "BadRequest"
+    assert "JSON" in env["message"]
+    conn.close()
+
+
+def test_non_request_json_is_400(gateway):
+    conn = http.client.HTTPConnection(gateway.host, gateway.port, timeout=5)
+    for body in (b"[1, 2, 3]", b'{"no": "workflow"}'):
+        conn.request("POST", "/requests", body=body)
+        r = conn.getresponse()
+        assert r.status == 400
+        assert json.loads(r.read())["error"]["type"] == "BadRequest"
+    conn.close()
+
+
+def test_client_error_no_retry_on_4xx(gateway):
+    client = IDDSClient(gateway.url, retries=3, backoff=5.0)
+    # a 400 must raise immediately — a retried 400 would sleep 5s+ here
+    with pytest.raises(IDDSClientError) as ei:
+        client._post("/requests", {"no": "workflow"})
+    assert ei.value.status == 400
+
+
+# ---------------------------------------------------- robustness regressions
+
+def test_duplicate_submit_is_idempotent(gateway):
+    """A client retry after a lost response must not run the workflow
+    twice (server dedups on the client-generated request_id)."""
+    client = IDDSClient(gateway.url)
+    req_json = Request(workflow=_chain_workflow()).to_json()
+    rid1 = client.submit(req_json)
+    rid2 = client.submit(req_json)  # simulated retry
+    assert rid1 == rid2
+    info = client.wait(rid1, timeout=30)
+    assert info["works"] == {"finished": 2}  # not 4
+    assert gateway.idds.stats["requests"] == 1
+
+
+def test_keepalive_survives_bodied_request_to_get_route(gateway):
+    """A 405 reply must drain the unread body, or the next request on the
+    same keep-alive connection is parsed mid-body."""
+    conn = http.client.HTTPConnection(gateway.host, gateway.port, timeout=5)
+    conn.request("POST", "/stats", body=b'{"k": 1}')
+    r = conn.getresponse()
+    assert r.status == 405
+    r.read()
+    conn.request("GET", "/healthz")  # same connection
+    r = conn.getresponse()
+    assert r.status == 200
+    assert json.loads(r.read())["status"] == "ok"
+    conn.close()
+
+
+def test_unregistered_predicate_does_not_wedge_status(gateway):
+    """A raising predicate must not leak the in-flight counter and pin
+    the request at 'running' forever."""
+    wf = Workflow(name="bad-predicate")
+    wf.add_template(WorkTemplate(name="a", payload="rest_double"))
+    wf.add_template(WorkTemplate(name="b", payload="rest_double"))
+    wf.add_condition(Condition(trigger="a", predicate="not-registered",
+                               true_next=[Branch("b")]))
+    wf.add_initial("a", {"x": 1})
+    client = IDDSClient(gateway.url)
+    rid = client.submit_workflow(wf)
+    info = client.wait(rid, timeout=30)  # would TimeoutError if wedged
+    assert info["works"] == {"finished": 1}  # condition eval failed -> no b
+
+
+# ------------------------------------------------------------ concurrency
+
+def test_concurrent_submissions(gateway):
+    n_clients, per_client = 8, 5
+    results, errors = [], []
+
+    def one_client(i):
+        try:
+            client = IDDSClient(gateway.url)
+            rids = [client.submit_workflow(_chain_workflow(x=i))
+                    for _ in range(per_client)]
+            for rid in rids:
+                info = client.wait(rid, timeout=60)
+                results.append(info["works"])
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=one_client, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert len(results) == n_clients * per_client
+    assert all(r == {"finished": 2} for r in results)
+    assert gateway.idds.stats["requests"] == n_clients * per_client

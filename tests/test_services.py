@@ -1,4 +1,5 @@
-"""HPO service (Fig. 6), Active Learning (Fig. 7), Rubin DAG (§3.3.1)."""
+"""HPO service (Fig. 6), Active Learning (Fig. 7), Rubin DAG (§3.3.1),
+head-service auth (shared semantics with the REST gateway in test_rest)."""
 import math
 
 import pytest
@@ -9,7 +10,72 @@ from repro.core.dag import DAGScheduler, JobSpec, layered_dag
 from repro.core.hpo import (GaussianEvolution, HaltonSearch, HPOService,
                             RandomSearch, choice, integer, loguniform,
                             uniform)
-from repro.core.idds import IDDS
+from repro.core.idds import IDDS, AuthError
+from repro.core.workflow import Branch, Condition, Workflow, WorkTemplate
+
+
+# ------------------------------------------------------------------ auth
+
+def _noop_workflow() -> Workflow:
+    wf = Workflow(name="auth-check")
+    wf.add_template(WorkTemplate(name="n", payload="noop"))
+    wf.add_initial("n", {})
+    return wf
+
+
+def test_auth_disabled_accepts_any_token():
+    idds = IDDS()  # tokens=None -> dev mode
+    for token in ("", "anything"):
+        rid = idds.submit_workflow(_noop_workflow(), token=token)
+        assert rid in idds._requests
+
+
+def test_auth_rejects_bad_token():
+    idds = IDDS(tokens={"good"})
+    with pytest.raises(AuthError):
+        idds.submit_workflow(_noop_workflow(), token="bad")
+    with pytest.raises(AuthError):
+        idds.submit_workflow(_noop_workflow())  # empty token
+    assert idds._requests == {}  # nothing registered on auth failure
+
+
+def test_auth_accepts_good_token():
+    idds = IDDS(tokens={"good", "other"})
+    rid = idds.submit_workflow(_noop_workflow(), token="good")
+    idds.pump()
+    assert idds.request_status(rid)["status"] == "finished"
+
+
+# ------------------------------------------------- daemon fault isolation
+
+def _two_step_workflow(name: str, predicate: str = "always") -> Workflow:
+    wf = Workflow(name=name)
+    wf.add_template(WorkTemplate(name="a", payload="noop"))
+    wf.add_template(WorkTemplate(name="b", payload="noop"))
+    wf.add_condition(Condition(trigger="a", predicate=predicate,
+                               true_next=[Branch("b")]))
+    wf.add_initial("a", {})
+    return wf
+
+
+def test_bad_predicate_does_not_drop_batched_messages(capsys):
+    """The Marshaller drains T_WORK_DONE in batches: one workflow with a
+    raising predicate must not discard a co-batched healthy workflow's
+    message (which would wedge it at 'running' forever)."""
+    idds = IDDS()
+    rid_bad = idds.submit_workflow(
+        _two_step_workflow("bad", predicate="never-registered"))
+    rid_good = idds.submit_workflow(_two_step_workflow("good"))
+    idds.pump()
+    capsys.readouterr()  # swallow the printed predicate traceback
+    good = idds.request_status(rid_good)
+    assert good["status"] == "finished"
+    assert good["works"] == {"finished": 2}
+    # the bad workflow degrades (no successors) but is not wedged
+    bad = idds.request_status(rid_bad)
+    assert bad["status"] == "finished"
+    assert bad["works"] == {"finished": 1}
+    assert idds.stats["marshaller_errors"] == 1
 
 
 # ------------------------------------------------------------------- HPO
