@@ -12,7 +12,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.carousel.simulator import SimParams, compare, simulate
+from repro.carousel.simulator import compare
 
 CAMPAIGNS = {
     "small-500f": dict(n_files=500, disk_capacity=1.2e12),

@@ -13,7 +13,7 @@ import time
 from typing import Dict, List
 
 from repro.core import payloads as reg
-from repro.core.hpo import HPOService, OPTIMIZERS, loguniform, uniform
+from repro.core.hpo import HPOService, OPTIMIZERS, uniform
 from repro.core.idds import IDDS
 
 

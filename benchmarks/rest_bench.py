@@ -124,8 +124,8 @@ def run(client_counts=(1, 4, 8), *, per_client: int = 25,
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="fewer submissions per client (CI)")
+    ap.add_argument("--quick", "--smoke", action="store_true",
+                    dest="quick", help="fewer submissions per client (CI)")
     args = ap.parse_args(argv)
     per = 10 if args.quick else 25
     rows = run(per_client=per)

@@ -1,19 +1,28 @@
 """Run every benchmark; one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
+                                            [--json-out results.json]
 
 Sections:
   carousel   Fig. 4/5  fine vs coarse granularity (attempts/disk/makespan)
   hpo        Fig. 6    optimizer quality + async evaluation speedup
   dag        §3.3.1    Rubin-scale DAG scheduling throughput
   pipeline   §1        delivery granularity + straggler hedging
+  store      §2        persistence overhead: in-memory vs SQLite catalogs
   train      §3.1      carousel-fed training micro-run (loss goes down)
   rest       §2        REST gateway submission throughput + poll latency
   roofline   —         per-cell roofline terms from the dry-run sweep
+
+Modes: full (default) the paper-scale sweeps; ``--quick`` smaller
+sweeps; ``--smoke`` the minimal CI pass — service-layer sections only
+(train needs a jax install and the roofline needs a dry-run sweep, so
+both are skipped).  ``--json-out`` writes every section's rows to one
+JSON file (the CI bench-smoke artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -22,65 +31,114 @@ def _section(name):
     print(f"\n===== {name} =====", flush=True)
 
 
+def _print_rows(keys, rows):
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="smaller sweeps (CI)")
+                    help="smaller sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal CI pass: tiny sweeps, service-layer "
+                         "sections only (no jax required)")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write all section results to a JSON file")
     args = ap.parse_args(argv)
+    smoke = args.smoke
+    quick = args.quick or smoke
 
     t0 = time.time()
+    results = {}
 
     _section("carousel (paper Figs. 4-5)")
     from benchmarks import carousel_sim
-    if args.quick:
+    if smoke:
+        carousel_sim.CAMPAIGNS = {
+            "smoke-200f": dict(n_files=200, disk_capacity=1.2e12)}
+    elif quick:
         carousel_sim.CAMPAIGNS = {
             "small-500f": dict(n_files=500, disk_capacity=1.2e12)}
-    carousel_sim.main()
+    results["carousel"] = carousel_sim.run()
+    carousel_keys = ["campaign", "mode", "job_attempts", "attempts_per_job",
+                     "failed_attempts", "peak_disk_TB", "disk_TB_hours",
+                     "ttfp_h", "makespan_h"]
+    _print_rows(carousel_keys, results["carousel"])
 
     _section("hpo (paper Fig. 6)")
     from benchmarks import hpo_bench
-    if args.quick:
-        print("objective,optimizer,budget,best_mean,best_min")
-        for r in hpo_bench.quality(budget=24):
-            print(f"{r['objective']},{r['optimizer']},{r['budget']},"
-                  f"{r['best_mean']:.4f},{r['best_min']:.4f}")
-    else:
-        hpo_bench.main()
+    budget = 16 if smoke else (24 if quick else 64)
+    results["hpo"] = hpo_bench.quality(budget=budget)
+    _print_rows(["objective", "optimizer", "budget", "best_mean",
+                 "best_min"], results["hpo"])
+    if not quick:
+        results["hpo_async"] = hpo_bench.async_speedup()
+        _print_rows(["workers", "budget", "wall_s", "trials_per_s"],
+                    results["hpo_async"])
 
     _section("dag (paper §3.3.1, Rubin)")
     from benchmarks import dag_bench
-    sizes = (1_000, 10_000) if args.quick else (1_000, 10_000, 100_000)
-    keys = ["jobs", "wall_s", "jobs_per_s", "released", "pump_rounds",
-            "us_per_job"]
-    print(",".join(keys))
-    for r in dag_bench.run(sizes):
-        print(",".join(str(r[k]) for k in keys))
+    sizes = ((1_000,) if smoke else
+             (1_000, 10_000) if quick else (1_000, 10_000, 100_000))
+    results["dag"] = dag_bench.run(sizes)
+    _print_rows(["jobs", "wall_s", "jobs_per_s", "released", "pump_rounds",
+                 "us_per_job"], results["dag"])
 
     _section("pipeline (delivery granularity + hedging)")
     from benchmarks import pipeline_bench
-    pipeline_bench.main()
+    results["pipeline"] = pipeline_bench.run()
+    _print_rows(["sweep", "n_shards", "ttfb_ms", "total_ms", "batches",
+                 "hedges"], results["pipeline"])
 
-    _section("train (carousel-fed smoke training)")
-    from repro.launch.train import run_training
-    res = run_training("yi-6b", smoke=True, steps=20, seq_len=32,
-                       global_batch=4, carousel=True)
-    print("arch,steps,first_loss,last_loss,ttfb_s,wall_s")
-    print(f"yi-6b,{res['steps']},{res['first_loss']:.3f},"
-          f"{res['last_loss']:.3f},{res['time_to_first_batch_s']:.2f},"
-          f"{res['wall_s']:.1f}")
+    _section("store (paper §2, persistence overhead)")
+    from benchmarks import store_bench
+    results["store"] = store_bench.run(n=50 if smoke else
+                                       100 if quick else 300)
+    _print_rows(store_bench.KEYS, results["store"])
+
+    if smoke:
+        _section("train (skipped in --smoke: needs jax)")
+        results["train"] = {"skipped": "smoke mode (jax compile cost)"}
+    else:
+        _section("train (carousel-fed smoke training)")
+        from repro.launch.train import run_training
+        res = run_training("yi-6b", smoke=True, steps=20, seq_len=32,
+                           global_batch=4, carousel=True)
+        results["train"] = {
+            "arch": "yi-6b", "steps": res["steps"],
+            "first_loss": round(res["first_loss"], 3),
+            "last_loss": round(res["last_loss"], 3),
+            "ttfb_s": round(res["time_to_first_batch_s"], 2),
+            "wall_s": round(res["wall_s"], 1)}
+        _print_rows(["arch", "steps", "first_loss", "last_loss", "ttfb_s",
+                     "wall_s"], [results["train"]])
 
     _section("rest (paper §2, gateway throughput)")
     from benchmarks import rest_bench
-    rows = rest_bench.run(per_client=10 if args.quick else 25)
-    print(",".join(rest_bench.KEYS))
-    for r in rows:
-        print(",".join(str(r[k]) for k in rest_bench.KEYS))
+    results["rest"] = rest_bench.run(
+        client_counts=(1, 4) if smoke else (1, 4, 8),
+        per_client=5 if smoke else 10 if quick else 25)
+    _print_rows(rest_bench.KEYS, results["rest"])
 
-    _section("roofline (dry-run sweep)")
-    from benchmarks import roofline
-    roofline.main()
+    if smoke:
+        _section("roofline (skipped in --smoke: needs a dry-run sweep)")
+        results["roofline"] = {"skipped": "smoke mode (no dryrun sweep)"}
+    else:
+        _section("roofline (dry-run sweep)")
+        from benchmarks import roofline
+        roofline.main()
 
-    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+    wall = round(time.time() - t0, 1)
+    print(f"\nall benchmarks done in {wall}s")
+
+    if args.json_out:
+        mode = "smoke" if smoke else "quick" if quick else "full"
+        with open(args.json_out, "w") as f:
+            json.dump({"mode": mode, "wall_s": wall,
+                       "sections": results}, f, indent=2, sort_keys=True)
+        print(f"results written to {args.json_out}")
     return 0
 
 

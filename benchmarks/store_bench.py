@@ -1,0 +1,107 @@
+"""Benchmark: persistence overhead + recovery speed (paper §2 catalogs).
+
+Compares sustained head-service throughput with the in-memory store
+against the SQLite-backed store (WAL): submissions/sec into a live
+service, end-to-end workflows/sec through the full daemon machinery,
+and — for SQLite — how fast a fresh head service can ``recover()`` the
+whole catalog after a simulated crash.  This is the price of durability
+the ROADMAP's horizontally-scalable head service pays per request.
+
+    PYTHONPATH=src python -m benchmarks.store_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+from repro.core.idds import IDDS
+from repro.core.requests import Request
+from repro.core.store import InMemoryStore, SqliteStore
+from repro.core.workflow import Workflow, WorkTemplate
+
+KEYS = ["store", "submissions", "submit_wall_s", "submit_per_s",
+        "pump_wall_s", "e2e_per_s", "recover_s", "recovered_works"]
+
+
+def _make_request_json() -> str:
+    wf = Workflow(name="store-bench")
+    wf.add_template(WorkTemplate(name="n", payload="noop"))
+    wf.add_initial("n", {})
+    return Request(workflow=wf).to_json()
+
+
+def run_one(kind: str, n: int, workdir: str) -> Dict:
+    path = os.path.join(workdir, f"bench-{kind}.db")
+    store = SqliteStore(path) if kind == "sqlite" else InMemoryStore()
+    idds = IDDS(store=store)
+    payloads = [_make_request_json() for _ in range(n)]  # not timed
+
+    t0 = time.perf_counter()
+    rids = [idds.submit(p) for p in payloads]
+    t1 = time.perf_counter()
+    idds.pump()
+    t2 = time.perf_counter()
+    finished = sum(idds.request_status(r)["status"] == "finished"
+                   for r in rids)
+    assert finished == n, f"{finished}/{n} finished"
+
+    recover_s = 0.0
+    recovered_works = 0
+    if kind == "sqlite":
+        idds.close()
+        fresh = IDDS(store=SqliteStore(path))
+        t3 = time.perf_counter()
+        counts = fresh.recover()
+        recover_s = time.perf_counter() - t3
+        recovered_works = counts["works"]
+        fresh.close()
+    else:
+        idds.close()
+
+    sub_wall, pump_wall = t1 - t0, t2 - t1
+    return {
+        "store": kind,
+        "submissions": n,
+        "submit_wall_s": round(sub_wall, 3),
+        "submit_per_s": round(n / sub_wall),
+        "pump_wall_s": round(pump_wall, 3),
+        "e2e_per_s": round(n / (sub_wall + pump_wall)),
+        "recover_s": round(recover_s, 3),
+        "recovered_works": recovered_works,
+    }
+
+
+def run(n: int = 300) -> List[Dict]:
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="idds-store-bench-") as d:
+        for kind in ("memory", "sqlite"):
+            rows.append(run_one(kind, n, d))
+    mem, sql = rows
+    rows.append({
+        "store": "ratio(memory/sqlite)",
+        "submit_per_s": round(mem["submit_per_s"]
+                              / max(sql["submit_per_s"], 1), 2),
+        "e2e_per_s": round(mem["e2e_per_s"] / max(sql["e2e_per_s"], 1), 2),
+    })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--quick", action="store_true",
+                    dest="smoke", help="fewer submissions (CI)")
+    ap.add_argument("-n", type=int, default=None,
+                    help="submissions per store backend")
+    args = ap.parse_args(argv)
+    n = args.n if args.n is not None else (50 if args.smoke else 300)
+    rows = run(n)
+    print(",".join(KEYS))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in KEYS))
+
+
+if __name__ == "__main__":
+    main()

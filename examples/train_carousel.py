@@ -3,13 +3,12 @@ fed by the Data Carousel (ColdStore -> Stager -> on-demand packing ->
 incremental delivery), with async checkpoints and resume.
 
     PYTHONPATH=src python examples/train_carousel.py             # smoke
-    PYTHONPATH=src python examples/train_carousel.py --full      # mamba2-130m, 300 steps
+    PYTHONPATH=src python examples/train_carousel.py --full  # 300 steps
 
 The --full run is the deliverable-(b) e2e driver: mamba2-130m (130M
 params) on a synthetic corpus; expect several minutes on CPU.
 """
 import argparse
-import sys
 import tempfile
 
 from repro.launch.train import run_training

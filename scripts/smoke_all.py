@@ -8,8 +8,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (RunConfig, ShapeConfig, get_config,
-                                get_smoke_config, list_archs)
+from repro.configs.base import (RunConfig, ShapeConfig, get_smoke_config,
+                                list_archs)
 from repro.models import registry
 from repro.serve import engine
 from repro.train.step import init_state, make_train_step

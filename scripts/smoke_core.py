@@ -26,7 +26,8 @@ def test_simple_chain():
     assert info["status"] == "finished", info
     server_wf = idds.get_workflow(rid)
     vals = sorted(w.result["x"] for w in server_wf.works.values())
-    assert vals == [6, 6], vals  # b re-doubles the same bound x? -> binder identity keeps x=3
+    # b re-doubles the same bound x: binder identity keeps x=3
+    assert vals == [6, 6], vals
     print("[ok] chain:", info["works"], "stats:", idds.stats)
 
 
@@ -67,7 +68,8 @@ def test_hpo():
     reg.register_payload(
         "smoke_hpo_eval",
         lambda params, inputs: {
-            "objective": (params["lr"] - 0.01) ** 2 + (params["wd"] - 0.5) ** 2})
+            "objective": ((params["lr"] - 0.01) ** 2
+                          + (params["wd"] - 0.5) ** 2)})
     idds = IDDS()
     svc = HPOService(
         idds, {"lr": loguniform(1e-4, 1.0), "wd": uniform(0, 1)},

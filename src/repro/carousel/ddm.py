@@ -6,7 +6,7 @@ moment every consumer of a file is done, its cache bytes are freed.
 from __future__ import annotations
 
 import threading
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable
 
 from repro.carousel.stager import Stager
 from repro.carousel.storage import ColdStore, DiskCache

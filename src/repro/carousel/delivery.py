@@ -12,7 +12,6 @@ shard), keeping the disk footprint at O(open shards), not O(dataset).
 from __future__ import annotations
 
 import collections
-import threading
 import time
 from typing import Any, Dict, Iterator, List, Optional
 
@@ -63,7 +62,8 @@ class DeliveryIterator:
                 remaining -= failed  # skip terminally-failed shards
                 if time.time() > deadline:
                     raise TimeoutError(
-                        f"fine staging timed out; missing {sorted(remaining)[:5]}")
+                        "fine staging timed out; missing "
+                        f"{sorted(remaining)[:5]}")
                 time.sleep(0.002)
 
     # -- batch assembly -------------------------------------------------------

@@ -26,7 +26,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 
@@ -73,7 +73,8 @@ class SimReport:
             "makespan_h": self.makespan / 3600,
             "job_attempts": self.job_attempts,
             "failed_attempts": self.failed_attempts,
-            "attempts_per_job": self.job_attempts / max(self.params.n_files, 1),
+            "attempts_per_job": (self.job_attempts
+                                 / max(self.params.n_files, 1)),
             "peak_disk_TB": self.peak_disk / 1e12,
             "disk_TB_hours": self.disk_byte_seconds / 1e12 / 3600,
             "ttfp_h": self.time_to_first_processing / 3600,
@@ -138,7 +139,8 @@ class _Sim:
         if self.n_done < self.p.n_files:
             raise RuntimeError(
                 f"sim deadlock: {self.n_done}/{self.p.n_files} done "
-                f"(disk {self.disk_used/1e12:.1f}/{self.p.disk_capacity/1e12:.1f} TB)")
+                f"(disk {self.disk_used/1e12:.1f}"
+                f"/{self.p.disk_capacity/1e12:.1f} TB)")
         return self.rep
 
     def _tick_disk(self, t: float) -> None:
@@ -186,7 +188,8 @@ class _Sim:
                     self.stage_attempt[i] += 1
                     self.rep.stage_attempts += 1
                     self.rep.hedges += 1
-                    dur = self.p.mount_latency + self.p.file_size / self.p.bandwidth
+                    dur = (self.p.mount_latency
+                           + self.p.file_size / self.p.bandwidth)
                     self.rep.drive_busy_s += dur
                     self.at(self.now + dur,
                             lambda i=i: self._stage_done(i, False))
@@ -215,7 +218,7 @@ class _Sim:
             self._kick_workers()
         self._kick_drives()
 
-    # -- processing side -------------------------------------------------------
+    # -- processing side ------------------------------------------------------
     def _kick_workers(self) -> None:
         # wake any due retries
         while self.retry_heap and self.retry_heap[0][0] <= self.now:

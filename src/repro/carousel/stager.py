@@ -17,7 +17,7 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.carousel.storage import ColdStore, DiskCache
@@ -140,7 +140,8 @@ class Stager:
             self._futures.append(self._pool.submit(self._stage_once, r.name))
         return issued
 
-    def wait(self, timeout: float = 60.0, hedge_interval: float = 0.05) -> bool:
+    def wait(self, timeout: float = 60.0,
+             hedge_interval: float = 0.05) -> bool:
         """Block until every submitted file landed or terminally failed."""
         deadline = time.time() + timeout
         while time.time() < deadline:

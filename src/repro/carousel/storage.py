@@ -14,8 +14,8 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
 
 
 @dataclass
@@ -65,7 +65,8 @@ class ColdStore:
 
     def stage_latency(self, f: TapeFile) -> float:
         return self.mount_latency + (f.size / self.bandwidth
-                                     if self.bandwidth != float("inf") else 0.0)
+                                     if self.bandwidth != float("inf")
+                                     else 0.0)
 
     def read(self, name: str) -> Any:
         """Blocking staged read through a tape drive (real-time mode)."""
@@ -128,7 +129,8 @@ class DiskCache:
             self.evictions += 1
         return self.used + need <= self.capacity
 
-    def put(self, name: str, data: Any, size: int, *, pin: bool = True) -> None:
+    def put(self, name: str, data: Any, size: int, *,
+            pin: bool = True) -> None:
         with self._lock:
             self._tick()
             if name in self._data:

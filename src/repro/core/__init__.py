@@ -6,6 +6,12 @@ job DAGs).
 """
 from repro.core.idds import IDDS, AuthError  # noqa: F401
 from repro.core.requests import Request  # noqa: F401
+from repro.core.store import (  # noqa: F401
+    InMemoryStore,
+    SqliteStore,
+    Store,
+    StoreError,
+)
 from repro.core.workflow import (  # noqa: F401
     Branch,
     Collection,

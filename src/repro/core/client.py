@@ -112,6 +112,22 @@ class IDDSClient:
     def status(self, request_id: str) -> Dict[str, Any]:
         return self._get(f"/requests/{urllib.parse.quote(request_id)}")
 
+    def list_requests(self, *, status: Optional[str] = None,
+                      limit: Optional[int] = None,
+                      offset: int = 0) -> Dict[str, Any]:
+        """Catalog listing: ``{"requests": [...], "total": N, "limit":
+        ..., "offset": ...}`` with optional status filter and
+        limit/offset pagination (GET /requests)."""
+        params = {}
+        if status is not None:
+            params["status"] = status
+        if limit is not None:
+            params["limit"] = str(limit)
+        if offset:
+            params["offset"] = str(offset)
+        qs = urllib.parse.urlencode(params)
+        return self._get("/requests" + (f"?{qs}" if qs else ""))
+
     def get_workflow(self, request_id: str) -> Workflow:
         d = self._get(
             f"/requests/{urllib.parse.quote(request_id)}/workflow")

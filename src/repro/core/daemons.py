@@ -17,14 +17,14 @@ import time
 import traceback
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core import messaging as M
 from repro.core import payloads as reg
-from repro.core.ddm import DDM, InMemoryDDM
-from repro.core.workflow import (Collection, FileRef, Processing,
-                                 ProcessingStatus, Work, WorkStatus, Workflow,
-                                 _new_id)
+from repro.core.ddm import DDM
+from repro.core.store import InMemoryStore, Store
+from repro.core.workflow import (Processing, ProcessingStatus, Work,
+                                 WorkStatus, Workflow, _new_id)
 
 
 # ---------------------------------------------------------------------------
@@ -102,9 +102,23 @@ class Context:
     bus: M.MessageBus
     ddm: DDM
     wfm: WFMExecutor
+    # durable catalog: daemons journal every request/work/processing/
+    # collection state transition through it (paper §2's database-backed
+    # catalogs); IDDS.recover() replays it after a crash
+    store: Store = field(default_factory=InMemoryStore)
     workflows: Dict[str, Workflow] = field(default_factory=dict)
     works: Dict[str, Tuple[str, Work]] = field(default_factory=dict)
     processings: Dict[str, Processing] = field(default_factory=dict)
+    # request catalog mirror (request_id -> info dict) + the reverse map
+    # the Marshaller uses to write request status transitions through to
+    # the store at the moment they happen (event-driven, so GET /requests
+    # filters stay truthful without rescanning every request per call)
+    requests: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    request_of: Dict[str, str] = field(default_factory=dict)
+    # workflow_ids whose initial works were instantiated (wf.start()):
+    # makes the Marshaller's T_NEW_WORKFLOWS handling idempotent under
+    # duplicate delivery and post-recovery replays
+    started_workflows: Set[str] = field(default_factory=set)
     stats: Dict[str, int] = field(default_factory=dict)
     # workflow_id -> #work-termination events published but not yet
     # condition-evaluated by the Marshaller.  While > 0 the workflow may
@@ -159,7 +173,13 @@ class Clerk(Daemon):
         for m in msgs:
             wf = Workflow.from_json(m.body["workflow"])
             with self.ctx.lock:
-                self.ctx.workflows[wf.workflow_id] = wf
+                # keep the live object on duplicate delivery (a client
+                # resubmit after recovery): its works are already running
+                if wf.workflow_id not in self.ctx.workflows:
+                    self.ctx.workflows[wf.workflow_id] = wf
+                if m.body.get("request_id"):
+                    self.ctx.request_of[wf.workflow_id] = \
+                        m.body["request_id"]
             self.ctx.bump("requests")
             self.ctx.bus.publish(M.T_NEW_WORKFLOWS, {
                 "workflow_id": wf.workflow_id,
@@ -176,13 +196,47 @@ class Clerk(Daemon):
 class Marshaller(Daemon):
     name = "marshaller"
 
-    def _emit(self, wf: Workflow, works: List[Work]) -> None:
-        for w in works:
-            with self.ctx.lock:
+    def _emit(self, wf: Workflow, works: List[Work],
+              journal_with: Optional[List[Work]] = None) -> None:
+        """Register, journal, and announce freshly instantiated works.
+
+        ``journal_with`` rides in the same store transaction: the
+        Marshaller persists a condition-evaluated trigger Work together
+        with its successors, so a crash can never record the evaluation
+        without the works it spawned (or vice versa).
+        """
+        with self.ctx.lock:
+            for w in works:
                 self.ctx.works[w.work_id] = (wf.workflow_id, w)
-            self.ctx.bump("works_created")
+            dicts = [w.to_dict() for w in (journal_with or []) + works]
+        if dicts:
+            self.ctx.store.save_works(wf.workflow_id, dicts)
+        if works:
+            self.ctx.bump("works_created", len(works))
+        for w in works:
             self.ctx.bus.publish(M.T_NEW_WORKS, {
                 "workflow_id": wf.workflow_id, "work_id": w.work_id})
+
+    def _refresh_request(self, wf: Workflow) -> None:
+        """Write the owning request's status transition through to the
+        catalog at the event that caused it — running once works exist,
+        finished once all works are terminal and no evaluation is
+        pending — so listings filter on fresh rows without rescanning
+        every request per query."""
+        rid = self.ctx.request_of.get(wf.workflow_id)
+        if rid is None:
+            return
+        with self.ctx.lock:
+            info = self.ctx.requests.get(rid)
+            if info is None:
+                return
+            done = wf.finished and self.ctx.quiescent(wf.workflow_id)
+            status = "finished" if done else "running"
+            if info.get("status") == status:
+                return
+            info["status"] = status
+            snapshot = dict(info)
+        self.ctx.store.save_request(snapshot)
 
     def process_once(self) -> int:
         # wf.works mutations happen under ctx.lock so status polls can
@@ -195,8 +249,12 @@ class Marshaller(Daemon):
             try:
                 wf = self.ctx.workflows[m.body["workflow_id"]]
                 with self.ctx.lock:
+                    if wf.workflow_id in self.ctx.started_workflows:
+                        continue  # duplicate delivery / recovery replay
+                    self.ctx.started_workflows.add(wf.workflow_id)
                     new_works = wf.start()
                 self._emit(wf, new_works)
+                self._refresh_request(wf)
             except Exception:  # one bad workflow must not drop the batch
                 self.ctx.bump("marshaller_errors")
                 traceback.print_exc()
@@ -217,9 +275,11 @@ class Marshaller(Daemon):
                     # not wedge the counter.
                     try:
                         new_works = wf.on_terminated(work)
+                        work.condition_evaluated = True
                     finally:
                         self.ctx.inflight_add(wf_id, -1)
-                self._emit(wf, new_works)
+                self._emit(wf, new_works, journal_with=[work])
+                self._refresh_request(wf)
             except Exception:
                 self.ctx.bump("marshaller_errors")
                 traceback.print_exc()
@@ -249,6 +309,10 @@ class Transformer(Daemon):
         self._dispatched: Dict[str, set] = {}        # work_id -> file names
         self._open_procs: Dict[str, int] = {}        # work_id -> #unfinished
         self._work_procs: Dict[str, List[Processing]] = {}  # work -> procs
+        # last journaled (available, processed) per file per collection:
+        # journaling writes only the rows that changed, not a full
+        # snapshot per event (O(changes), not O(files^2))
+        self._coll_state: Dict[str, Dict[str, Tuple[bool, bool]]] = {}
 
     # -- helpers ----------------------------------------------------------
     def _make_processing(self, work: Work, files: List[str]) -> Processing:
@@ -267,35 +331,71 @@ class Transformer(Daemon):
         self._work_procs.setdefault(work.work_id, []).append(proc)
         self._open_procs[work.work_id] = (
             self._open_procs.get(work.work_id, 0) + 1)
+        self.ctx.store.save_processing(proc.to_dict())
         self.ctx.bump("processings_created")
         self.ctx.bus.publish(M.T_NEW_PROCESSINGS, {"proc_id": proc.proc_id})
         return proc
 
-    def _try_dispatch(self, work: Work) -> None:
-        """Create whatever Processings the current input state allows."""
+    def _try_dispatch(self, work: Work) -> int:
+        """Create whatever Processings the current input state allows;
+        returns how many were created (callers journal on > 0)."""
         if work.input_collection is None:
             if work.work_id not in self._dispatched:
                 self._dispatched[work.work_id] = {"__virtual__"}
                 work.status = WorkStatus.TRANSFORMING
                 self._make_processing(work, [])
-            return
+                return 1
+            return 0
 
         coll = self.ctx.ddm.get_collection(work.input_collection)
         done = self._dispatched.setdefault(work.work_id, set())
         if work.granularity == "coarse":
             if done:
-                return
+                return 0
             if all(f.available for f in coll.files):
                 done.add("__all__")
                 work.status = WorkStatus.TRANSFORMING
                 self._make_processing(work, [f.name for f in coll.files])
-            return
+                return 1
+            return 0
         # fine granularity: one Processing per newly-available file
+        created = 0
         for f in coll.files:
             if f.available and f.name not in done:
                 done.add(f.name)
                 work.status = WorkStatus.TRANSFORMING
                 self._make_processing(work, [f.name])
+                created += 1
+        return created
+
+    def _journal_dispatch(self, work: Work) -> None:
+        """Persist a work's post-dispatch state + its input collection
+        (availability drives re-dispatch decisions after recovery)."""
+        wf_id, _ = self.ctx.works[work.work_id]
+        with self.ctx.lock:
+            d = work.to_dict()
+        self.ctx.store.save_work(wf_id, d)
+        if work.input_collection is not None:
+            self._journal_collection(work.input_collection)
+
+    def _journal_collection(self, name: str) -> None:
+        """Journal a collection incrementally: full snapshot on first
+        sight, then only the content rows whose availability/processed
+        flags changed since the last journal."""
+        coll = self.ctx.ddm.get_collection(name)
+        seen = self._coll_state.get(name)
+        if seen is None:
+            self.ctx.store.save_collection(coll.to_dict())
+            self._coll_state[name] = {
+                f.name: (f.available, f.processed) for f in coll.files}
+            return
+        changed = [f for f in coll.files
+                   if seen.get(f.name) != (f.available, f.processed)]
+        if changed:
+            self.ctx.store.save_contents(
+                name, [f.to_dict() for f in changed])
+            for f in changed:
+                seen[f.name] = (f.available, f.processed)
 
     def _work_complete(self, work: Work) -> bool:
         if self._open_procs.get(work.work_id, 0) > 0:
@@ -328,7 +428,12 @@ class Transformer(Daemon):
                 merged.update(p.result)
                 work.results.append(p.result)
             work.result = merged or work.result
+            d = work.to_dict()
         self._pending.pop(work.work_id, None)
+        # journal the terminal state (condition_evaluated still False)
+        # BEFORE announcing it: if we crash in between, recovery sees a
+        # terminal, unevaluated work and replays the T_WORK_DONE event
+        self.ctx.store.save_work(wf_id, d)
         self.ctx.bump("works_finished")
         self.ctx.bus.publish(M.T_WORK_DONE, {"work_id": work.work_id})
 
@@ -341,6 +446,7 @@ class Transformer(Daemon):
             work.status = WorkStatus.ACTIVATED
             self._pending[work.work_id] = work
             self._try_dispatch(work)
+            self._journal_dispatch(work)
 
         # DDM announced new file availability -> incremental dispatch
         updated = {m.body.get("collection")
@@ -349,7 +455,8 @@ class Transformer(Daemon):
             n += len(updated)
         for work in list(self._pending.values()):
             if work.input_collection in updated or updated == {None}:
-                self._try_dispatch(work)
+                if self._try_dispatch(work):
+                    self._journal_dispatch(work)
 
         for m in self.ctx.bus.poll(M.T_PROCESSING_DONE):
             n += 1
@@ -365,6 +472,7 @@ class Transformer(Daemon):
                                 work.input_collection, fname)
                         except KeyError:
                             pass
+                    self._journal_collection(work.input_collection)
                 for out in proc.output_files:
                     self.ctx.bus.publish(M.T_OUTPUT_AVAILABLE, {
                         "work_id": work.work_id,
@@ -378,10 +486,52 @@ class Transformer(Daemon):
         # periodic re-scan for coarse works whose inputs completed silently
         for work in list(self._pending.values()):
             if work.status == WorkStatus.ACTIVATED:
-                self._try_dispatch(work)
+                if self._try_dispatch(work):
+                    self._journal_dispatch(work)
                 if self._work_complete(work):
                     self._finalize(work)
         return n
+
+    # -- crash recovery ----------------------------------------------------
+    def restore(self, work: Work, procs: List[Processing]) -> None:
+        """Rebuild the dispatch bookkeeping for a recovered non-terminal
+        work (IDDS.recover): which inputs were already dispatched (from
+        its journaled Processings — so no file is processed twice), how
+        many of them are still open, and whether the work can already be
+        finalized (every proc finished, but the done-events died with
+        the old process)."""
+        if work.work_id in self._pending:
+            return  # idempotent: second recover() must not reset state
+        if work.status == WorkStatus.NEW:
+            # the T_NEW_WORKS announcement died with the old process
+            work.status = WorkStatus.ACTIVATED
+        self._pending[work.work_id] = work
+        done = self._dispatched.setdefault(work.work_id, set())
+        for p in procs:
+            if work.input_collection is None:
+                done.add("__virtual__")
+            elif work.granularity == "coarse":
+                done.add("__all__")
+            else:
+                done.update(p.input_files)
+        self._work_procs[work.work_id] = list(procs)
+        # non-terminal includes FAILED-with-retries: recover() requeues
+        # those, so they are still open from this work's point of view
+        self._open_procs[work.work_id] = sum(
+            1 for p in procs if not p.terminal)
+        for p in procs:
+            # a finished proc whose done-event was lost still owes its
+            # processed-marks (idempotent on the DDM side)
+            if (p.status == ProcessingStatus.FINISHED
+                    and work.input_collection is not None):
+                for fname in p.input_files:
+                    try:
+                        self.ctx.ddm.mark_processed(
+                            work.input_collection, fname)
+                    except KeyError:
+                        pass
+        if self._work_complete(work):
+            self._finalize(work)
 
 
 # ---------------------------------------------------------------------------
@@ -400,6 +550,9 @@ class Carrier(Daemon):
         self.ctx.bump("job_attempts")
         self.ctx.wfm.submit(proc)
         self._running[proc.proc_id] = proc
+        # sync WFM executes inline, so this records the final status;
+        # async records RUNNING and the poll loop journals the outcome
+        self.ctx.store.save_processing(proc.to_dict())
 
     def process_once(self) -> int:
         n = 0
@@ -412,6 +565,8 @@ class Carrier(Daemon):
             if proc.status == ProcessingStatus.FINISHED:
                 n += 1
                 del self._running[proc.proc_id]
+                if not self.ctx.wfm.sync:  # sync journaled at submit
+                    self.ctx.store.save_processing(proc.to_dict())
                 self.ctx.bump("processings_finished")
                 self.ctx.bus.publish(M.T_PROCESSING_DONE,
                                      {"proc_id": proc.proc_id})
@@ -424,6 +579,8 @@ class Carrier(Daemon):
                     self._submit(proc)  # re-submission = another attempt
                 else:
                     del self._running[proc.proc_id]
+                    if not self.ctx.wfm.sync:
+                        self.ctx.store.save_processing(proc.to_dict())
                     self.ctx.bump("processings_failed")
                     self.ctx.bus.publish(M.T_PROCESSING_DONE,
                                          {"proc_id": proc.proc_id})

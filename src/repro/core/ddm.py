@@ -8,7 +8,7 @@ cases (HPO, Rubin DAGs) whose collections are virtual.
 from __future__ import annotations
 
 import threading
-from typing import Dict, Iterable, List, Optional, Protocol
+from typing import Dict, Iterable, Protocol
 
 from repro.core.workflow import Collection, FileRef
 

@@ -13,8 +13,8 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.idds import IDDS
 from repro.core.workflow import Workflow, WorkTemplate
@@ -136,7 +136,8 @@ class GaussianEvolution(Optimizer):
         super().__init__(space, seed)
         self.sigma = sigma
         self.elite_frac = elite_frac
-        self._unit: Dict[str, Dict[str, float]] = {}  # point-key -> unit coords
+        # point-key -> unit coords
+        self._unit: Dict[str, Dict[str, float]] = {}
 
     def _sample_unit(self) -> Dict[str, float]:
         return {k: self.rnd.random() for k in self.space}

@@ -20,11 +20,13 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Set
 
 from repro.core import messaging as M
-from repro.core.daemons import (ALL_DAEMONS, Carrier, Clerk, Conductor,
-                                Context, Marshaller, Transformer, WFMExecutor)
+from repro.core.daemons import ALL_DAEMONS, Context, Transformer, WFMExecutor
 from repro.core.ddm import DDM, InMemoryDDM
 from repro.core.requests import Request
-from repro.core.workflow import Workflow
+from repro.core.store import (InMemoryStore, Store,
+                              VALID_REQUEST_STATUSES)
+from repro.core.workflow import (FileRef, Processing, ProcessingStatus,
+                                 Work, Workflow)
 
 
 class AuthError(Exception):
@@ -35,26 +37,35 @@ class IDDS:
     def __init__(self, *, ddm: Optional[DDM] = None, sync: bool = True,
                  max_workers: int = 8,
                  fault_hook: Optional[Callable] = None,
-                 tokens: Optional[Set[str]] = None):
+                 tokens: Optional[Set[str]] = None,
+                 store: Optional[Store] = None):
         bus = M.MessageBus()
         self.ctx = Context(
             bus=bus,
             ddm=ddm if ddm is not None else InMemoryDDM(),
             wfm=WFMExecutor(sync=sync, max_workers=max_workers,
                             fault_hook=fault_hook),
+            store=store if store is not None else InMemoryStore(),
         )
         self.daemons = [cls(self.ctx) for cls in ALL_DAEMONS]
         self._tokens = tokens  # None -> auth disabled (dev mode)
-        self._requests: Dict[str, Dict[str, Any]] = {}
+        # shared with Context so the Marshaller can write request status
+        # transitions through to the catalog as they happen
+        self._requests = self.ctx.requests
         self._threads: List[threading.Thread] = []
         self._stop = threading.Event()
+        self._recovered_collections: Set[str] = set()
+
+    @property
+    def store(self) -> Store:
+        return self.ctx.store
 
     # ------------------------------------------------------------------ auth
     def _auth(self, token: str) -> None:
         if self._tokens is not None and token not in self._tokens:
             raise AuthError("invalid token")
 
-    # --------------------------------------------------------------- client API
+    # -------------------------------------------------------------- client API
     def submit(self, request_json: str) -> str:
         """Accept a serialized Request; returns the request_id.
 
@@ -64,16 +75,28 @@ class IDDS:
         """
         req = Request.from_json(request_json)
         self._auth(req.token)
+        info = {
+            "request_id": req.request_id,
+            "workflow_id": req.workflow.workflow_id,
+            "requester": req.requester,
+            "status": "accepted",
+            "submitted_at": time.time(),
+        }
         with self.ctx.lock:
             if req.request_id in self._requests:
                 return req.request_id
-            self._requests[req.request_id] = {
-                "request_id": req.request_id,
-                "workflow_id": req.workflow.workflow_id,
-                "requester": req.requester,
-                "status": "accepted",
-                "submitted_at": time.time(),
-            }
+            self._requests[req.request_id] = info
+            self.ctx.request_of[req.workflow.workflow_id] = req.request_id
+        # journal workflow structure before the request row: recovery can
+        # always re-run a journaled workflow, while a request without its
+        # workflow would be stuck at "accepted" forever
+        wf_meta = req.workflow.to_dict()
+        works = wf_meta.pop("works", {})
+        self.ctx.store.save_workflow(wf_meta)
+        if works:  # client-side pre-instantiated works ride along
+            self.ctx.store.save_works(req.workflow.workflow_id,
+                                      list(works.values()))
+        self.ctx.store.save_request(info)
         self.ctx.bus.publish(M.T_NEW_REQUESTS, {
             "request_id": req.request_id,
             "workflow": req.workflow.to_json(),
@@ -86,7 +109,8 @@ class IDDS:
                                    token=token).to_json())
 
     def request_status(self, request_id: str) -> Dict[str, Any]:
-        info = dict(self._requests[request_id])
+        shared = self._requests[request_id]
+        info = dict(shared)
         wf = self.ctx.workflows.get(info["workflow_id"])
         if wf is not None:
             # snapshot under ctx.lock: daemon threads insert into wf.works
@@ -98,7 +122,42 @@ class IDDS:
                 info["works"] = wf.counts()
                 done = wf.finished and self.ctx.quiescent(wf.workflow_id)
             info["status"] = "finished" if done else "running"
+            if shared.get("status") != info["status"]:
+                # write the observed transition through to the catalog so
+                # GET /requests?status= filters stay truthful
+                with self.ctx.lock:
+                    shared["status"] = info["status"]
+                self.ctx.store.save_request(
+                    {k: v for k, v in info.items() if k != "works"})
         return info
+
+    def list_requests(self, *, status: Optional[str] = None,
+                      limit: Optional[int] = None,
+                      offset: int = 0) -> Dict[str, Any]:
+        """Catalog listing with status filtering and limit/offset
+        pagination, backed by store queries (GET /requests)."""
+        if status is not None and status not in VALID_REQUEST_STATUSES:
+            raise ValueError(
+                f"invalid status filter {status!r}; expected one of "
+                f"{', '.join(VALID_REQUEST_STATUSES)}")
+        if limit is not None and (isinstance(limit, bool)
+                                  or not isinstance(limit, int)
+                                  or limit < 0):
+            raise ValueError("limit must be a non-negative integer")
+        if isinstance(offset, bool) or not isinstance(offset, int) \
+                or offset < 0:
+            raise ValueError("offset must be a non-negative integer")
+        # no per-call refresh: the Marshaller writes request transitions
+        # through to the catalog at the events that cause them, and
+        # request_status() writes through on observation — listings read
+        # fresh rows at O(page), not O(all requests)
+        return {
+            "requests": self.ctx.store.list_requests(
+                status=status, limit=limit, offset=offset),
+            "total": self.ctx.store.count_requests(status=status),
+            "limit": limit,
+            "offset": offset,
+        }
 
     def get_workflow(self, request_id: str) -> Workflow:
         return self.ctx.workflows[self._requests[request_id]["workflow_id"]]
@@ -118,6 +177,111 @@ class IDDS:
     @property
     def stats(self) -> Dict[str, int]:
         return dict(self.ctx.stats)
+
+    # ------------------------------------------------------------- recovery
+    def recover(self) -> Dict[str, int]:
+        """Reload persisted state from the store and re-enqueue whatever
+        was in flight when the previous head service died.
+
+        Call on a fresh instance over the same store *before* ``start()``
+        or ``pump()`` — it publishes bus messages which the daemons then
+        drain.  Idempotent: entities already known to this instance are
+        skipped, so running it twice cannot duplicate works or
+        processings.  Returns per-entity recovery counts.
+        """
+        store = self.ctx.store
+        counts = {"requests": 0, "workflows": 0, "works": 0,
+                  "processings": 0, "collections": 0,
+                  "requeued_processings": 0, "replayed_events": 0}
+        transformer = next(d for d in self.daemons
+                           if isinstance(d, Transformer))
+        new_wfs: List[Workflow] = []
+        new_works: List[tuple] = []
+        new_procs: List[Processing] = []
+        procs_by_work: Dict[str, List[Processing]] = {}
+        with self.ctx.lock:
+            # collections first: dispatch decisions read availability
+            for coll in store.load_collections():
+                if coll["name"] in self._recovered_collections:
+                    continue
+                self._recovered_collections.add(coll["name"])
+                self.ctx.ddm.register_collection(
+                    coll["name"],
+                    [FileRef.from_dict(f) for f in coll["files"]])
+                counts["collections"] += 1
+            for r in store.list_requests():
+                if r["request_id"] not in self._requests:
+                    self._requests[r["request_id"]] = dict(r)
+                    counts["requests"] += 1
+                if r.get("workflow_id"):
+                    self.ctx.request_of.setdefault(r["workflow_id"],
+                                                   r["request_id"])
+            for d in store.load_workflows():
+                if d["workflow_id"] in self.ctx.workflows:
+                    continue
+                wf = Workflow.from_dict(d)
+                self.ctx.workflows[wf.workflow_id] = wf
+                new_wfs.append(wf)
+                counts["workflows"] += 1
+            for wf_id, wd in store.load_works():
+                wf = self.ctx.workflows.get(wf_id)
+                if wf is None or wd["work_id"] in wf.works:
+                    continue
+                w = Work.from_dict(wd)
+                wf.works[w.work_id] = w
+                self.ctx.works[w.work_id] = (wf_id, w)
+                new_works.append((wf_id, w))
+                counts["works"] += 1
+            for pd in store.load_processings():
+                if pd["proc_id"] in self.ctx.processings:
+                    p = self.ctx.processings[pd["proc_id"]]
+                else:
+                    p = Processing.from_dict(pd)
+                    self.ctx.processings[p.proc_id] = p
+                    new_procs.append(p)
+                    counts["processings"] += 1
+                procs_by_work.setdefault(p.work_id, []).append(p)
+            # any workflow with works already ran wf.start(); mark it so
+            # replayed T_NEW_WORKFLOWS messages cannot re-instantiate
+            for wf in new_wfs:
+                if wf.works:
+                    self.ctx.started_workflows.add(wf.workflow_id)
+        # publishes happen outside ctx.lock (bus subscribers may take it)
+        for wf in new_wfs:
+            if not wf.works:
+                # journaled at submit but the Marshaller never started it
+                self.ctx.bus.publish(M.T_NEW_WORKFLOWS, {
+                    "workflow_id": wf.workflow_id, "request_id": None})
+                counts["replayed_events"] += 1
+        for wf_id, w in new_works:
+            if w.status.terminated:
+                if not w.condition_evaluated:
+                    # finalized pre-crash, but its T_WORK_DONE died with
+                    # the old process: replay the event (the Marshaller
+                    # then evaluates conditions exactly once)
+                    self.ctx.inflight_add(wf_id, 1)
+                    self.ctx.bus.publish(M.T_WORK_DONE,
+                                         {"work_id": w.work_id})
+                    counts["replayed_events"] += 1
+            else:
+                transformer.restore(w, procs_by_work.get(w.work_id, []))
+        for p in new_procs:
+            if p.terminal:
+                continue
+            if p.status == ProcessingStatus.FAILED:
+                # journaled mid-retry (attempt failed, retries left):
+                # consume the failed attempt exactly as the Carrier's
+                # retry path would have
+                p.attempt += 1
+            # the grid job (if any) died with the old WFM: resubmit,
+            # preserving the attempt count
+            p.status = ProcessingStatus.NEW
+            p.error = None
+            store.save_processing(p.to_dict())
+            self.ctx.bus.publish(M.T_NEW_PROCESSINGS,
+                                 {"proc_id": p.proc_id})
+            counts["requeued_processings"] += 1
+        return counts
 
     # --------------------------------------------------------------- execution
     def pump(self, max_rounds: int = 100_000) -> int:
@@ -156,6 +320,12 @@ class IDDS:
             t.join(timeout=5)
         self._threads.clear()
         self.ctx.wfm.shutdown()
+
+    def close(self) -> None:
+        """Graceful teardown: stop the daemons, then close the store."""
+        if self._threads:
+            self.stop()
+        self.ctx.store.close()
 
     def wait_request(self, request_id: str, timeout: float = 60.0) -> Dict:
         """Block until a request's workflow finishes (threaded mode)."""

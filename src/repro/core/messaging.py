@@ -12,7 +12,7 @@ import collections
 import itertools
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Deque, Dict, List, Optional
 
 
@@ -68,7 +68,8 @@ class MessageBus:
             return len(self._queues[topic])
 
     # -- broadcast semantics --------------------------------------------------
-    def subscribe(self, topic: str, callback: Callable[[Message], None]) -> None:
+    def subscribe(self, topic: str,
+                  callback: Callable[[Message], None]) -> None:
         with self._lock:
             self._subs[topic].append(callback)
 
@@ -78,8 +79,8 @@ T_NEW_REQUESTS = "idds.requests.new"          # client -> Clerk
 T_NEW_WORKFLOWS = "idds.workflows.new"        # Clerk -> Marshaller
 T_NEW_WORKS = "idds.works.new"                # Marshaller -> Transformer
 T_NEW_PROCESSINGS = "idds.processings.new"    # Transformer -> Carrier
-T_PROCESSING_DONE = "idds.processings.done"   # Carrier -> Transformer/Marshaller
+T_PROCESSING_DONE = "idds.processings.done"  # Carrier -> Transf./Marshaller
 T_WORK_DONE = "idds.works.done"               # Transformer -> Marshaller
 T_OUTPUT_AVAILABLE = "idds.outputs.available"  # Transformer -> Conductor
 T_CONSUMER_NOTIFY = "idds.consumers.notify"   # Conductor -> data consumers
-T_COLLECTION_UPDATED = "ddm.collections.updated"  # DDM -> Transformer (incremental)
+T_COLLECTION_UPDATED = "ddm.collections.updated"  # DDM -> Transformer

@@ -11,7 +11,6 @@ import json
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
 
 from repro.core.workflow import Workflow
 

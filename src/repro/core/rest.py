@@ -9,6 +9,8 @@ client speaking JSON (see :mod:`repro.core.client` for the typed SDK).
 Endpoints (all JSON; details in docs/rest_api.md):
 
   POST /requests                     submit a serialized Request
+  GET  /requests                     catalog listing (status filter,
+                                     limit/offset pagination)
   GET  /requests/<id>                request status + work counts
   GET  /requests/<id>/workflow       full workflow state (the DG)
   GET  /collections/<name>           collection metadata
@@ -32,13 +34,15 @@ import argparse
 import importlib
 import json
 import re
+import signal
 import threading
 import time
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Dict, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.idds import IDDS, AuthError
+from repro.core.store import SqliteStore
 
 MAX_BODY_BYTES = 16 * 1024 * 1024  # refuse absurd submissions
 
@@ -137,6 +141,24 @@ class RestGateway:
             return 400, _err("BadRequest", f"malformed request: {e}")
         return 201, {"request_id": request_id, "status": "accepted"}
 
+    def handle_list(self, query: Dict[str, List[str]],
+                    token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        status = query.get("status", [None])[0]
+        try:
+            limit_s = query.get("limit", [None])[0]
+            offset_s = query.get("offset", ["0"])[0]
+            limit = None if limit_s is None else int(limit_s)
+            offset = int(offset_s)
+        except (TypeError, ValueError):
+            return 400, _err("BadRequest",
+                             "limit and offset must be integers")
+        try:
+            return 200, self.idds.list_requests(status=status, limit=limit,
+                                                offset=offset)
+        except ValueError as e:
+            return 400, _err("BadRequest", str(e))
+
     def handle_status(self, request_id: str, token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
         try:
@@ -189,6 +211,7 @@ def _err(type_: str, message: str) -> Dict[str, Dict[str, str]]:
 # (method, compiled-path-regex, gateway-method, needs_token)
 _ROUTES = [
     ("POST", re.compile(r"^/requests/?$"), "handle_submit"),
+    ("GET", re.compile(r"^/requests/?$"), "handle_list"),
     ("GET", re.compile(r"^/requests/(?P<request_id>[^/]+)/workflow/?$"),
      "handle_workflow"),
     ("GET", re.compile(r"^/requests/(?P<request_id>[^/]+)/?$"),
@@ -289,6 +312,10 @@ def _make_handler(gw: RestGateway):
                 return gw.handle_submit(body, token)
             if fn_name == "handle_stats":
                 return gw.handle_stats(token)
+            if fn_name == "handle_list":
+                query = urllib.parse.parse_qs(
+                    urllib.parse.urlsplit(self.path).query)
+                return gw.handle_list(query, token)
             kwargs = {k: urllib.parse.unquote(v)
                       for k, v in match.groupdict().items()}
             return getattr(gw, fn_name)(**kwargs, token=token)
@@ -333,6 +360,10 @@ def main(argv=None) -> int:
     ap.add_argument("--payloads", action="append", default=[],
                     help="importable module that registers payloads "
                          "(repeatable)")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="SQLite file for durable state; requests in "
+                         "flight at a crash are recovered on restart "
+                         "(omit = in-memory, nothing survives)")
     ap.add_argument("--verbose", action="store_true",
                     help="log each HTTP request")
     args = ap.parse_args(argv)
@@ -342,21 +373,42 @@ def main(argv=None) -> int:
 
     tokens = (set(t for t in args.tokens.split(",") if t)
               if args.tokens else None)
+    store = SqliteStore(args.store) if args.store else None
     idds = IDDS(sync=not args.async_wfm, max_workers=args.max_workers,
-                tokens=tokens)
+                tokens=tokens, store=store)
+    if store is not None:
+        counts = idds.recover()
+        recovered = {k: v for k, v in counts.items() if v}
+        if recovered:
+            print(f"idds-rest recovered state from {args.store}: "
+                  f"{recovered}", flush=True)
     gw = RestGateway(idds, host=args.host, port=args.port,
                      quiet=not args.verbose)
+
+    # SIGINT/SIGTERM flip an event instead of killing the process
+    # mid-write: the daemons drain, the HTTP server closes, and the
+    # store is closed cleanly (WAL checkpointed) before exit.
+    stop_evt = threading.Event()
+
+    def _on_signal(signum, frame):
+        stop_evt.set()
+
+    signal.signal(signal.SIGINT, _on_signal)
+    signal.signal(signal.SIGTERM, _on_signal)
+
     gw.start()
     print(f"idds-rest serving on {gw.url} "
           f"(auth={'on' if tokens else 'off'}, "
-          f"wfm={'async' if args.async_wfm else 'sync'})", flush=True)
+          f"wfm={'async' if args.async_wfm else 'sync'}, "
+          f"store={args.store or 'memory'})", flush=True)
     try:
-        while True:
-            time.sleep(1)
-    except KeyboardInterrupt:
-        print("shutting down", flush=True)
+        stop_evt.wait()
+        print("signal received: shutting down", flush=True)
     finally:
-        gw.stop()
+        gw.stop()       # HTTP server down, then daemons stopped
+        idds.close()    # store closed last, after the final writes
+        print("idds-rest stopped (daemons stopped, store closed)",
+              flush=True)
     return 0
 
 

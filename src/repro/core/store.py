@@ -1,0 +1,466 @@
+"""Durable state store for the iDDS head service (paper §2 catalogs).
+
+The paper's iDDS anchors all orchestration state — requests, transforms,
+collections, contents — in database-backed Restful catalogs so daemons
+coordinate through shared state and the service survives restarts.  This
+module is that persistence boundary for the reproduction:
+
+  * :class:`Store`         — the narrow interface daemons journal through;
+  * :class:`InMemoryStore` — dict-backed, zero overhead, no durability
+                             (unit tests, simulators, benchmarks);
+  * :class:`SqliteStore`   — stdlib ``sqlite3`` in WAL mode with one
+                             connection per thread, so the five daemon
+                             threads and the REST pool write concurrently.
+
+Entities are journaled as JSON blobs keyed by their natural primary key,
+with the columns needed for catalog queries (status filtering, pagination)
+lifted out.  ``IDDS.recover()`` replays a store into a fresh head service
+after a crash; see docs/architecture.md for the recovery semantics.
+"""
+from __future__ import annotations
+
+import json
+import sqlite3
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class StoreError(Exception):
+    """The backing file is unusable (corrupt, wrong format, locked away)."""
+
+
+# Request catalog statuses a client may filter on (GET /requests?status=).
+VALID_REQUEST_STATUSES = ("new", "accepted", "running", "finished",
+                          "failed")
+
+
+class Store:
+    """Journal + catalog for head-service state.
+
+    ``save_*`` methods are upserts keyed on the entity's id and must be
+    safe to call from any daemon thread.  ``load_*`` methods return
+    plain dicts in insertion order — `recover()` reassembles the object
+    graph from them.  Implementations must make ``save_works`` atomic:
+    the Marshaller journals a terminated Work together with the
+    successors its conditions spawned, and a crash must never persist
+    one without the other (that is what makes recovery exactly-once).
+    """
+
+    # -- requests ---------------------------------------------------------
+    def save_request(self, info: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def get_request(self, request_id: str) -> Optional[Dict[str, Any]]:
+        raise NotImplementedError
+
+    def list_requests(self, *, status: Optional[str] = None,
+                      limit: Optional[int] = None,
+                      offset: int = 0) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    def count_requests(self, *, status: Optional[str] = None) -> int:
+        raise NotImplementedError
+
+    # -- workflows (structure only; works journaled separately) -----------
+    def save_workflow(self, wf: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def load_workflows(self) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    # -- works -------------------------------------------------------------
+    def save_works(self, workflow_id: str,
+                   works: List[Dict[str, Any]]) -> None:
+        """Upsert a batch of works atomically (all or none)."""
+        raise NotImplementedError
+
+    def save_work(self, workflow_id: str, work: Dict[str, Any]) -> None:
+        self.save_works(workflow_id, [work])
+
+    def load_works(self) -> List[Tuple[str, Dict[str, Any]]]:
+        """Every persisted work as ``(workflow_id, work_dict)``."""
+        raise NotImplementedError
+
+    # -- processings --------------------------------------------------------
+    def save_processing(self, proc: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def load_processings(self) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    # -- collections + contents --------------------------------------------
+    def save_collection(self, coll: Dict[str, Any]) -> None:
+        """Upsert a collection and its per-file contents."""
+        raise NotImplementedError
+
+    def save_contents(self, collection: str,
+                      files: List[Dict[str, Any]]) -> None:
+        """Upsert only the given content rows (a full ``save_collection``
+        rewrite is O(files); state transitions touch one file at a
+        time)."""
+        raise NotImplementedError
+
+    def load_collections(self) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# In-memory (no durability; the pre-PR behaviour, now behind the interface)
+# ---------------------------------------------------------------------------
+
+
+class InMemoryStore(Store):
+    """Dict-backed store: same journaling surface, nothing survives the
+    process.  Keeps the hot path allocation-cheap for simulators and the
+    in-memory arm of ``benchmarks/store_bench.py``."""
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._requests: Dict[str, Dict[str, Any]] = {}
+        self._workflows: Dict[str, Dict[str, Any]] = {}
+        self._works: Dict[str, Tuple[str, Dict[str, Any]]] = {}
+        self._processings: Dict[str, Dict[str, Any]] = {}
+        self._collections: Dict[str, Dict[str, Any]] = {}
+
+    def save_request(self, info: Dict[str, Any]) -> None:
+        with self._lock:
+            self._requests[info["request_id"]] = dict(info)
+
+    def get_request(self, request_id: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            info = self._requests.get(request_id)
+            return dict(info) if info is not None else None
+
+    def list_requests(self, *, status: Optional[str] = None,
+                      limit: Optional[int] = None,
+                      offset: int = 0) -> List[Dict[str, Any]]:
+        with self._lock:
+            rows = [dict(r) for r in self._requests.values()
+                    if status is None or r.get("status") == status]
+        end = None if limit is None else offset + limit
+        return rows[offset:end]
+
+    def count_requests(self, *, status: Optional[str] = None) -> int:
+        with self._lock:
+            return sum(1 for r in self._requests.values()
+                       if status is None or r.get("status") == status)
+
+    def save_workflow(self, wf: Dict[str, Any]) -> None:
+        with self._lock:
+            self._workflows[wf["workflow_id"]] = dict(wf)
+
+    def load_workflows(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [dict(w) for w in self._workflows.values()]
+
+    def save_works(self, workflow_id: str,
+                   works: List[Dict[str, Any]]) -> None:
+        with self._lock:
+            for w in works:
+                self._works[w["work_id"]] = (workflow_id, dict(w))
+
+    def load_works(self) -> List[Tuple[str, Dict[str, Any]]]:
+        with self._lock:
+            return [(wf_id, dict(w))
+                    for wf_id, w in self._works.values()]
+
+    def save_processing(self, proc: Dict[str, Any]) -> None:
+        with self._lock:
+            self._processings[proc["proc_id"]] = dict(proc)
+
+    def load_processings(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [dict(p) for p in self._processings.values()]
+
+    def save_collection(self, coll: Dict[str, Any]) -> None:
+        with self._lock:
+            self._collections[coll["name"]] = json.loads(json.dumps(coll))
+
+    def save_contents(self, collection: str,
+                      files: List[Dict[str, Any]]) -> None:
+        with self._lock:
+            coll = self._collections.setdefault(
+                collection, {"name": collection, "scope": "idds",
+                             "files": []})
+            index = {f["name"]: i for i, f in enumerate(coll["files"])}
+            for f in files:
+                f = dict(f)
+                if f["name"] in index:
+                    coll["files"][index[f["name"]]] = f
+                else:
+                    coll["files"].append(f)
+
+    def load_collections(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [json.loads(json.dumps(c))
+                    for c in self._collections.values()]
+
+
+# ---------------------------------------------------------------------------
+# SQLite (WAL mode, one connection per thread)
+# ---------------------------------------------------------------------------
+
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS requests (
+    request_id   TEXT PRIMARY KEY,
+    workflow_id  TEXT,
+    requester    TEXT,
+    status       TEXT,
+    submitted_at REAL,
+    data         TEXT NOT NULL,
+    seq          INTEGER
+);
+CREATE INDEX IF NOT EXISTS idx_requests_status ON requests (status);
+CREATE TABLE IF NOT EXISTS workflows (
+    workflow_id TEXT PRIMARY KEY,
+    name        TEXT,
+    data        TEXT NOT NULL
+);
+CREATE TABLE IF NOT EXISTS works (
+    work_id     TEXT PRIMARY KEY,
+    workflow_id TEXT,
+    status      TEXT,
+    data        TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_works_workflow ON works (workflow_id);
+CREATE TABLE IF NOT EXISTS processings (
+    proc_id TEXT PRIMARY KEY,
+    work_id TEXT,
+    status  TEXT,
+    data    TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_processings_work ON processings (work_id);
+CREATE TABLE IF NOT EXISTS collections (
+    name  TEXT PRIMARY KEY,
+    scope TEXT
+);
+CREATE TABLE IF NOT EXISTS contents (
+    collection TEXT,
+    name       TEXT,
+    size       INTEGER,
+    available  INTEGER,
+    processed  INTEGER,
+    PRIMARY KEY (collection, name)
+);
+"""
+
+
+class SqliteStore(Store):
+    """Single-file durable store.
+
+    WAL journal mode lets daemon threads write while REST threads read;
+    ``synchronous=NORMAL`` bounds fsync cost to WAL checkpoints (the
+    store journals ~10 small rows per workflow — FULL would fsync each).
+    sqlite3 connections are not thread-safe, so each thread lazily opens
+    its own (`threading.local`); all of them are closed by ``close()``.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._local = threading.local()
+        self._all_conns: List[sqlite3.Connection] = []
+        self._conns_lock = threading.Lock()
+        # validate the file up front: recover() must fail loudly on a
+        # corrupt store, not silently return an empty catalog
+        conn = self._conn()
+        try:
+            conn.execute("SELECT count(*) FROM requests").fetchone()
+        except sqlite3.DatabaseError as e:  # pragma: no cover - re-raise
+            raise StoreError(f"unusable store file {path!r}: {e}") from e
+
+    def _conn(self) -> sqlite3.Connection:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            return conn
+        try:
+            # check_same_thread=False: each connection is only USED by
+            # its owning thread while live, but close() must be able to
+            # reap them all from whichever thread tears the store down
+            conn = sqlite3.connect(self.path, timeout=30.0,
+                                   isolation_level=None,
+                                   check_same_thread=False)
+            conn.execute("PRAGMA journal_mode=WAL")
+            conn.execute("PRAGMA synchronous=NORMAL")
+            conn.executescript(_SCHEMA)
+        except sqlite3.DatabaseError as e:
+            raise StoreError(
+                f"unusable store file {self.path!r}: {e}") from e
+        self._local.conn = conn
+        with self._conns_lock:
+            self._all_conns.append(conn)
+        return conn
+
+    # -- requests ---------------------------------------------------------
+    def save_request(self, info: Dict[str, Any]) -> None:
+        self._conn().execute(
+            "INSERT INTO requests (request_id, workflow_id, requester,"
+            " status, submitted_at, data, seq) VALUES (?, ?, ?, ?, ?, ?,"
+            " (SELECT COALESCE(MAX(seq), 0) + 1 FROM requests))"
+            " ON CONFLICT(request_id) DO UPDATE SET"
+            " status=excluded.status, data=excluded.data",
+            (info["request_id"], info.get("workflow_id"),
+             info.get("requester"), info.get("status"),
+             info.get("submitted_at"), json.dumps(info)))
+
+    def get_request(self, request_id: str) -> Optional[Dict[str, Any]]:
+        row = self._conn().execute(
+            "SELECT data FROM requests WHERE request_id = ?",
+            (request_id,)).fetchone()
+        return json.loads(row[0]) if row else None
+
+    def list_requests(self, *, status: Optional[str] = None,
+                      limit: Optional[int] = None,
+                      offset: int = 0) -> List[Dict[str, Any]]:
+        sql = "SELECT data FROM requests"
+        args: List[Any] = []
+        if status is not None:
+            sql += " WHERE status = ?"
+            args.append(status)
+        # LIMIT is required before OFFSET in sqlite; -1 means unbounded
+        sql += " ORDER BY seq LIMIT ? OFFSET ?"
+        args += [-1 if limit is None else limit, offset]
+        rows = self._conn().execute(sql, args).fetchall()
+        return [json.loads(r[0]) for r in rows]
+
+    def count_requests(self, *, status: Optional[str] = None) -> int:
+        if status is None:
+            row = self._conn().execute(
+                "SELECT count(*) FROM requests").fetchone()
+        else:
+            row = self._conn().execute(
+                "SELECT count(*) FROM requests WHERE status = ?",
+                (status,)).fetchone()
+        return int(row[0])
+
+    # -- workflows ---------------------------------------------------------
+    def save_workflow(self, wf: Dict[str, Any]) -> None:
+        self._conn().execute(
+            "INSERT INTO workflows (workflow_id, name, data)"
+            " VALUES (?, ?, ?) ON CONFLICT(workflow_id) DO UPDATE SET"
+            " data=excluded.data",
+            (wf["workflow_id"], wf.get("name"), json.dumps(wf)))
+
+    def load_workflows(self) -> List[Dict[str, Any]]:
+        rows = self._conn().execute(
+            "SELECT data FROM workflows ORDER BY rowid").fetchall()
+        return [json.loads(r[0]) for r in rows]
+
+    # -- works -------------------------------------------------------------
+    def save_works(self, workflow_id: str,
+                   works: List[Dict[str, Any]]) -> None:
+        if not works:
+            return
+        conn = self._conn()
+        conn.execute("BEGIN IMMEDIATE")
+        try:
+            conn.executemany(
+                "INSERT INTO works (work_id, workflow_id, status, data)"
+                " VALUES (?, ?, ?, ?) ON CONFLICT(work_id) DO UPDATE SET"
+                " status=excluded.status, data=excluded.data",
+                [(w["work_id"], workflow_id, w.get("status"),
+                  json.dumps(w)) for w in works])
+            conn.execute("COMMIT")
+        except BaseException:
+            conn.execute("ROLLBACK")
+            raise
+
+    def load_works(self) -> List[Tuple[str, Dict[str, Any]]]:
+        rows = self._conn().execute(
+            "SELECT workflow_id, data FROM works ORDER BY rowid").fetchall()
+        return [(r[0], json.loads(r[1])) for r in rows]
+
+    # -- processings --------------------------------------------------------
+    def save_processing(self, proc: Dict[str, Any]) -> None:
+        self._conn().execute(
+            "INSERT INTO processings (proc_id, work_id, status, data)"
+            " VALUES (?, ?, ?, ?) ON CONFLICT(proc_id) DO UPDATE SET"
+            " status=excluded.status, data=excluded.data",
+            (proc["proc_id"], proc.get("work_id"), proc.get("status"),
+             json.dumps(proc)))
+
+    def load_processings(self) -> List[Dict[str, Any]]:
+        rows = self._conn().execute(
+            "SELECT data FROM processings ORDER BY rowid").fetchall()
+        return [json.loads(r[0]) for r in rows]
+
+    # -- collections --------------------------------------------------------
+    def save_collection(self, coll: Dict[str, Any]) -> None:
+        conn = self._conn()
+        conn.execute("BEGIN IMMEDIATE")
+        try:
+            conn.execute(
+                "INSERT INTO collections (name, scope) VALUES (?, ?)"
+                " ON CONFLICT(name) DO UPDATE SET scope=excluded.scope",
+                (coll["name"], coll.get("scope", "idds")))
+            conn.executemany(
+                "INSERT INTO contents"
+                " (collection, name, size, available, processed)"
+                " VALUES (?, ?, ?, ?, ?)"
+                " ON CONFLICT(collection, name) DO UPDATE SET"
+                " size=excluded.size, available=excluded.available,"
+                " processed=excluded.processed",
+                [(coll["name"], f["name"], f.get("size", 0),
+                  int(bool(f.get("available"))),
+                  int(bool(f.get("processed"))))
+                 for f in coll.get("files", [])])
+            conn.execute("COMMIT")
+        except BaseException:
+            conn.execute("ROLLBACK")
+            raise
+
+    def save_contents(self, collection: str,
+                      files: List[Dict[str, Any]]) -> None:
+        if not files:
+            return
+        conn = self._conn()
+        conn.execute("BEGIN IMMEDIATE")
+        try:
+            conn.execute(
+                "INSERT OR IGNORE INTO collections (name, scope)"
+                " VALUES (?, 'idds')", (collection,))
+            conn.executemany(
+                "INSERT INTO contents"
+                " (collection, name, size, available, processed)"
+                " VALUES (?, ?, ?, ?, ?)"
+                " ON CONFLICT(collection, name) DO UPDATE SET"
+                " size=excluded.size, available=excluded.available,"
+                " processed=excluded.processed",
+                [(collection, f["name"], f.get("size", 0),
+                  int(bool(f.get("available"))),
+                  int(bool(f.get("processed")))) for f in files])
+            conn.execute("COMMIT")
+        except BaseException:
+            conn.execute("ROLLBACK")
+            raise
+
+    def load_collections(self) -> List[Dict[str, Any]]:
+        conn = self._conn()
+        colls = conn.execute(
+            "SELECT name, scope FROM collections ORDER BY rowid").fetchall()
+        out = []
+        for name, scope in colls:
+            files = conn.execute(
+                "SELECT name, size, available, processed FROM contents"
+                " WHERE collection = ? ORDER BY rowid", (name,)).fetchall()
+            out.append({"name": name, "scope": scope,
+                        "files": [{"name": f[0], "size": f[1],
+                                   "available": bool(f[2]),
+                                   "processed": bool(f[3])}
+                                  for f in files]})
+        return out
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        with self._conns_lock:
+            conns, self._all_conns = self._all_conns, []
+        for conn in conns:
+            try:
+                conn.close()
+            except sqlite3.Error:  # pragma: no cover - best effort
+                pass
+        self._local = threading.local()

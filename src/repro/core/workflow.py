@@ -19,12 +19,11 @@ registry names (see payloads.py).
 from __future__ import annotations
 
 import enum
-import itertools
 import json
 import time
 import uuid
 from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import payloads as reg
 
@@ -68,6 +67,10 @@ class FileRef:
     def to_dict(self):
         return asdict(self)
 
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
 
 @dataclass
 class Collection:
@@ -90,7 +93,7 @@ class Collection:
     @classmethod
     def from_dict(cls, d):
         c = cls(d["name"], d.get("scope", "idds"))
-        c.files = [FileRef(**f) for f in d.get("files", [])]
+        c.files = [FileRef.from_dict(f) for f in d.get("files", [])]
         return c
 
 
@@ -136,6 +139,11 @@ class Work:
     created_at: float = field(default_factory=time.time)
     terminated_at: Optional[float] = None
     iteration: int = 0          # DG cycle count at instantiation
+    # True once the Marshaller has run this (terminated) Work through
+    # condition evaluation.  Journaled atomically with the successors it
+    # spawned, so recovery knows whether a terminal Work still owes a
+    # T_WORK_DONE replay (crash between finalize and evaluation).
+    condition_evaluated: bool = False
 
     def to_dict(self):
         d = asdict(self)
@@ -162,6 +170,15 @@ class Processing:
     max_attempts: int = 3
     result: Optional[Dict[str, Any]] = None
     error: Optional[str] = None
+
+    @property
+    def terminal(self) -> bool:
+        """No further execution will happen: finished, or failed with no
+        attempts left.  A FAILED processing with attempts remaining is
+        NOT terminal — the Carrier (or crash recovery) will retry it."""
+        return (self.status == ProcessingStatus.FINISHED
+                or (self.status == ProcessingStatus.FAILED
+                    and self.attempt >= self.max_attempts))
 
     def to_dict(self):
         d = asdict(self)
@@ -190,6 +207,10 @@ class Branch:
     def to_dict(self):
         return asdict(self)
 
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
 
 @dataclass
 class Condition:
@@ -209,8 +230,9 @@ class Condition:
     def from_dict(cls, d):
         return cls(
             trigger=d["trigger"], predicate=d.get("predicate", "always"),
-            true_next=[Branch(**b) for b in d.get("true_next", [])],
-            false_next=[Branch(**b) for b in d.get("false_next", [])],
+            true_next=[Branch.from_dict(b) for b in d.get("true_next", [])],
+            false_next=[Branch.from_dict(b)
+                        for b in d.get("false_next", [])],
             max_iterations=d.get("max_iterations", 100))
 
 
@@ -252,7 +274,7 @@ class Workflow:
             raise KeyError(f"initial template {template!r} unknown")
         self.initial.append((template, dict(params or {})))
 
-    # -- instantiation ---------------------------------------------------------
+    # -- instantiation --------------------------------------------------------
     def instantiate(self, template: str, params: Dict[str, Any],
                     iteration: int = 0) -> Work:
         t = self.templates[template]
@@ -278,7 +300,7 @@ class Workflow:
         """Instantiate the initial Works (Clerk calls this)."""
         return [self.instantiate(t, p) for t, p in self.initial]
 
-    # -- DG evaluation ---------------------------------------------------------
+    # -- DG evaluation --------------------------------------------------------
     def on_terminated(self, work: Work) -> List[Work]:
         """Evaluate all conditions triggered by ``work``; instantiate and
         return the next generation of Works (paper Fig. 3 semantics).

@@ -7,10 +7,7 @@ CPU via interpret=True in tests).
 """
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 

@@ -162,7 +162,8 @@ def _flash_fwd_inner(
         alpha = jnp.exp(m - m_new)
         l_new = pin((l * alpha + p.sum(axis=-1)).reshape(B, Sq, Hkv * G)
                     ).reshape(B, Sq, Hkv, G)
-        acc_new = acc * alpha[..., None] + jnp.einsum("bqhgk,bkhd->bqhgd", p, vb)
+        acc_new = (acc * alpha[..., None]
+                   + jnp.einsum("bqhgk,bkhd->bqhgd", p, vb))
         acc_new = pin(acc_new.reshape(B, Sq, Hkv * G, D)
                       ).reshape(B, Sq, Hkv, G, D)
         return (m_new, l_new, acc_new), None
@@ -329,7 +330,8 @@ def ssd_ref(
     init_state: Optional[jax.Array] = None,  # (B, H, P, N)
     return_state: bool = False,
 ):
-    """Chunked SSD: y[t] = C[t] . h[t],  h[t] = exp(dt[t] A) h[t-1] + dt[t] B[t] x[t].
+    """Chunked SSD: y[t] = C[t] . h[t],
+    h[t] = exp(dt[t] A) h[t-1] + dt[t] B[t] x[t].
 
     Heads H are grouped over G B/C groups (H % G == 0).
     """
@@ -383,7 +385,8 @@ def ssd_ref(
     states_t = states.transpose(1, 0, 2, 3, 4)        # (C, B, H, P, N)
     decay_t = chunk_decay.transpose(1, 0, 2)          # (C, B, H)
     h_last, h_prev = lax.scan(scan_fn, h0, (states_t, decay_t))
-    h_prev = h_prev.transpose(1, 0, 2, 3, 4)          # (B, C, H, P, N) state BEFORE chunk
+    # (B, C, H, P, N) state BEFORE chunk
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)
 
     # ---- inter-chunk output ----
     in_decay = jnp.exp(dA_cs)                         # (B, C, Q, H)
@@ -481,7 +484,8 @@ def cross_entropy_blockwise_ref(
         vids = j * block_v + jnp.arange(block_v)
         logits = jnp.where(vids[None, :] < V, logits, NEG_INF)
         m_new = jnp.maximum(m, logits.max(axis=-1))
-        l_new = l * jnp.exp(m - m_new) + jnp.exp(logits - m_new[:, None]).sum(-1)
+        l_new = (l * jnp.exp(m - m_new)
+                 + jnp.exp(logits - m_new[:, None]).sum(-1))
         hit = vids[None, :] == targets[:, None]
         tgt_new = tgt + jnp.where(hit, logits, 0.0).sum(-1) \
             + jnp.where(hit.any(-1), 0.0, 0.0)

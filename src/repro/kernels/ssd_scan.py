@@ -16,7 +16,7 @@ algebraically safe: padded dt = 0 gives decay 1 and no state injection.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import (RunConfig, SHAPES, all_cells, cell_is_runnable,
                                 get_config)
@@ -59,7 +58,8 @@ def cache_shardings(cfg, rules: ShardingRules, batch: int, max_len: int):
 
 
 def default_run_config(arch: str, shape_name: str,
-                       overrides: Optional[Dict[str, Any]] = None) -> RunConfig:
+                       overrides: Optional[Dict[str, Any]] = None,
+                       ) -> RunConfig:
     run = RunConfig()
     if (arch, shape_name) == ("zamba2-1.2b", "long_500k"):
         # XLA CPU segfaults compiling the scanned variant of this one
@@ -156,7 +156,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         out = {
             **meta,
             "status": "ok",
-            "mesh": f"{'pod2x' if multi_pod else ''}{tuple(mesh.shape.values())}",
+            "mesh": (f"{'pod2x' if multi_pod else ''}"
+                     f"{tuple(mesh.shape.values())}"),
             "chips": n_chips,
             "lower_s": round(t_lower, 1),
             "compile_s": round(t_compile, 1),
@@ -259,7 +260,8 @@ def main(argv=None) -> int:
                          run_overrides=overrides)
             results.append(r)
             status = r["status"]
-            line = f"[{status}] {arch} x {shape} mesh={'2x16x16' if mp else '16x16'}"
+            line = (f"[{status}] {arch} x {shape} "
+                    f"mesh={'2x16x16' if mp else '16x16'}")
             if status == "ok":
                 rf = r["roofline"]
                 line += (f" flops/dev={r['hlo_flops']:.3e}"

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

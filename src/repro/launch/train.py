@@ -16,7 +16,6 @@ from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.carousel.delivery import DeliveryIterator
 from repro.carousel.stager import Stager

@@ -5,7 +5,7 @@ attention+MLP block and its placement period are kept).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +14,6 @@ from jax import lax
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import layers as L
 from repro.models import mamba2 as M
-from repro.sharding import constrain
 
 Params = Dict[str, Any]
 

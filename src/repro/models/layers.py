@@ -63,7 +63,8 @@ def mlp_defs(cfg: ModelConfig, L: int, d_ff: Optional[int] = None):
         "w_down": pdef(lead + (f, d), ll + ("ffn", "embed"), init="scaled"),
     }
     if cfg.gated_mlp:
-        out["w_gate"] = pdef(lead + (d, f), ll + ("embed", "ffn"), init="scaled")
+        out["w_gate"] = pdef(lead + (d, f), ll + ("embed", "ffn"),
+                             init="scaled")
     if cfg.mlp_bias:
         out["b_up"] = pdef(lead + (f,), ll + ("ffn",), init="zeros")
         out["b_down"] = pdef(lead + (d,), ll + (None,), init="zeros")

@@ -47,7 +47,8 @@ def block_defs(cfg: ModelConfig, n: int) -> Params:
         "conv_x_b": pdef(lead + (din,), ll + ("ffn",), init="zeros"),
         "conv_B_b": pdef(lead + (G * N,), ll + (None,), init="zeros"),
         "conv_C_b": pdef(lead + (G * N,), ll + (None,), init="zeros"),
-        "A_log": pdef(lead + (H,), ll + (None,), init="ssm_a", dtype=jnp.float32),
+        "A_log": pdef(lead + (H,), ll + (None,), init="ssm_a",
+                      dtype=jnp.float32),
         "D": pdef(lead + (H,), ll + (None,), init="ones", dtype=jnp.float32),
         "dt_bias": pdef(lead + (H,), ll + (None,), init="ssm_dt",
                         dtype=jnp.float32),
@@ -176,7 +177,8 @@ def _run_blocks(params, cfg, run, x, state=None):
         outs = []
         for i in range(cfg.num_layers):
             p_l = jax.tree.map(lambda a: a[i], params["blocks"])
-            s_l = None if state is None else jax.tree.map(lambda a: a[i], state)
+            s_l = (None if state is None
+                   else jax.tree.map(lambda a: a[i], state))
             x, ns = fn(p_l, x, s_l)
             outs.append(ns)
         new_state = (None if state is None

@@ -21,10 +21,9 @@ Logical axis names used throughout the model zoo:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +44,8 @@ class ParamDef:
         assert len(self.shape) == len(self.logical), (self.shape, self.logical)
 
 
-def pdef(shape, logical, init="normal", scale=0.02, dtype=jnp.bfloat16) -> ParamDef:
+def pdef(shape, logical, init="normal", scale=0.02,
+         dtype=jnp.bfloat16) -> ParamDef:
     return ParamDef(tuple(shape), tuple(logical), init, scale, dtype)
 
 
@@ -73,7 +73,8 @@ def param_count(defs: Any) -> int:
 
 def param_bytes(defs: Any) -> int:
     leaves = jax.tree.leaves(defs, is_leaf=is_def)
-    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves)
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+               for d in leaves)
 
 
 def _init_leaf(key: jax.Array, d: ParamDef) -> jax.Array:
@@ -82,11 +83,13 @@ def _init_leaf(key: jax.Array, d: ParamDef) -> jax.Array:
     if d.init == "ones":
         return jnp.ones(d.shape, d.dtype)
     if d.init == "normal":
-        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(d.dtype)
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * d.scale).astype(d.dtype)
     if d.init == "scaled":  # fan-in scaled
         fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
         s = 1.0 / math.sqrt(max(fan_in, 1))
-        return (jax.random.normal(key, d.shape, jnp.float32) * s).astype(d.dtype)
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * s).astype(d.dtype)
     if d.init == "ssm_a":  # Mamba2 A_log init: log of Uniform[1, 16]
         u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
         return jnp.log(u).astype(d.dtype)

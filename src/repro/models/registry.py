@@ -17,7 +17,7 @@ frame/patch embeddings.
 from __future__ import annotations
 
 from types import ModuleType
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -95,7 +95,8 @@ def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     return specs
 
 
-def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+def prefill_input_specs(cfg: ModelConfig,
+                        shape: ShapeConfig) -> Dict[str, Any]:
     B, S = shape.global_batch, shape.seq_len
     specs: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
     if cfg.family == "encdec":

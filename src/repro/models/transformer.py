@@ -6,7 +6,6 @@ Layers are stacked along a leading L dim and executed with lax.scan
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -15,7 +14,6 @@ from jax import lax
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import layers as L
-from repro.models.params import pdef
 from repro.sharding import constrain
 
 Params = Dict[str, Any]
@@ -88,7 +86,8 @@ def _run_blocks(params: Params, cfg: ModelConfig, run: RunConfig,
                                      cc, cache_pos, kv_len), run)
         for i in range(n):
             p_l = jax.tree.map(lambda a: a[i], blocks)
-            c_l = None if cache is None else jax.tree.map(lambda a: a[i], cache)
+            c_l = (None if cache is None
+                   else jax.tree.map(lambda a: a[i], cache))
             x, nc = blk_fn(p_l, x, c_l)
             new_layers.append(nc)
         new_cache = (None if cache is None else

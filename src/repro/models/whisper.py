@@ -9,7 +9,7 @@ cross-attention K/V computed once at prefill.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -98,7 +98,8 @@ def _run_decoder(params, cfg, run, tokens, enc_out, pos0, self_cache=None,
     x = L.embed(params["embed"], tokens)
     S = x.shape[1]
     positions = pos0 + jnp.arange(S)
-    x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)[None]
+    x = x + L.sinusoidal_positions(positions,
+                                   cfg.d_model).astype(x.dtype)[None]
 
     def blk(p, hh, sc_, cc_):
         return _dec_block(p, cfg, run, hh, positions, enc_out, sc_, cc_,

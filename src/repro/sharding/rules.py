@@ -53,7 +53,8 @@ _TLS = threading.local()
 
 
 class ShardingRules:
-    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    def __init__(self, mesh: Mesh,
+                 rules: Optional[Dict[str, Tuple[str, ...]]] = None):
         self.mesh = mesh
         self.rules = dict(DEFAULT_RULES)
         if rules:
@@ -69,7 +70,8 @@ class ShardingRules:
         """Mesh axes for one tensor dim, or None (replicated)."""
         if name is None:
             return None
-        axes = tuple(a for a in self.rules.get(name, ()) if a in self.mesh.shape)
+        axes = tuple(a for a in self.rules.get(name, ())
+                     if a in self.mesh.shape)
         if not axes:
             return None
         if dim % self.axis_size(axes) != 0:
@@ -81,7 +83,8 @@ class ShardingRules:
             return None
         return axes if len(axes) > 1 else axes[0]
 
-    def spec(self, logical: Sequence[Optional[str]], shape: Sequence[int]) -> PartitionSpec:
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Sequence[int]) -> PartitionSpec:
         """Resolve logical names, dropping duplicate mesh-axis uses (first
         dim wins) — lets e.g. MoE weights carry both "expert" and "ffn"
         logical tags and shard on whichever the arch's sizes allow."""

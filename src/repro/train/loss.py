@@ -11,7 +11,7 @@ O(T*D + V*D) — this is what lets the 94-layer MoE train_4k cell fit.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +71,8 @@ def _ce_fwd_stats(hidden, w_vocab, targets, block_v,
         vids = j * block_v + jnp.arange(block_v)
         logits = jnp.where(vids[None, :] < V, logits, NEG_INF)
         m_new = jnp.maximum(m, logits.max(axis=-1))
-        l_new = l * jnp.exp(m - m_new) + jnp.exp(logits - m_new[:, None]).sum(-1)
+        l_new = (l * jnp.exp(m - m_new)
+                 + jnp.exp(logits - m_new[:, None]).sum(-1))
         hit = vids[None, :] == targets[:, None]
         tgt_new = tgt + jnp.where(hit, logits, 0.0).sum(-1)
         return (m_new, l_new, tgt_new), None

@@ -8,7 +8,7 @@ layer wraps it with in/out shardings resolved from the param defs.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

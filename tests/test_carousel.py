@@ -1,7 +1,5 @@
 """Carousel: storage tiers, stager (retries/hedging), delivery iterator,
 on-demand transform, and the Fig. 4/5 discrete-event comparison."""
-import threading
-import time
 
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Checkpoint/restart: atomic commit, async writer, resume bit-equality,
 elastic resharding."""
 import os
-import threading
 
 import jax
 import jax.numpy as jnp

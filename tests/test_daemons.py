@@ -7,8 +7,8 @@ from repro.core import payloads as reg
 from repro.core.ddm import InMemoryDDM
 from repro.core.idds import IDDS, AuthError
 from repro.core.requests import Request
-from repro.core.workflow import (Branch, Condition, FileRef, WorkStatus,
-                                 Workflow, WorkTemplate)
+from repro.core.workflow import (Branch, Condition, FileRef, Workflow,
+                                 WorkTemplate)
 
 
 @pytest.fixture(autouse=True)

@@ -2,7 +2,6 @@
 multiplication, collective accounting."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_cost
@@ -56,7 +55,6 @@ def test_nested_scan():
 
 
 def test_collective_bytes_counted():
-    import os
     if jax.device_count() < 2:
         pytest.skip("needs >1 device (run under dryrun env)")
 

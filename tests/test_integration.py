@@ -1,15 +1,10 @@
 """End-to-end integration: carousel-fed training, resume, coarse-vs-fine
 time-to-first-batch, serving driver, iDDS-orchestrated training Works."""
-import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import payloads as reg
 from repro.core.idds import IDDS
-from repro.core.workflow import (Branch, Condition, Workflow, WorkTemplate)
 from repro.launch.serve import run_serving
 from repro.launch.train import run_training
 

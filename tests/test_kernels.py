@@ -156,11 +156,14 @@ SSD_CASES = [
 def test_ssd_pallas_sweep(case, dtype):
     B, S, H, P, G, N, chunk = case
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
-    x = (jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.5).astype(dtype)
+    x = (jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+         * 0.5).astype(dtype)
     dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H), jnp.float32))
     A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
-    Bm = (jax.random.normal(ks[3], (B, S, G, N), jnp.float32) * 0.3).astype(dtype)
-    Cm = (jax.random.normal(ks[4], (B, S, G, N), jnp.float32) * 0.3).astype(dtype)
+    Bm = (jax.random.normal(ks[3], (B, S, G, N), jnp.float32)
+          * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, G, N), jnp.float32)
+          * 0.3).astype(dtype)
     y1 = ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk)
     y2, _ = ssd_sequential_ref(x, dt, A, Bm, Cm)
     np.testing.assert_allclose(np.asarray(y1, np.float32),

@@ -1,15 +1,13 @@
 """HPO service (Fig. 6), Active Learning (Fig. 7), Rubin DAG (§3.3.1),
 head-service auth (shared semantics with the REST gateway in test_rest)."""
-import math
 
 import pytest
 
 from repro.core import payloads as reg
 from repro.core.active_learning import build_active_learning_workflow
 from repro.core.dag import DAGScheduler, JobSpec, layered_dag
-from repro.core.hpo import (GaussianEvolution, HaltonSearch, HPOService,
-                            RandomSearch, choice, integer, loguniform,
-                            uniform)
+from repro.core.hpo import (HaltonSearch, HPOService, RandomSearch, choice,
+                            integer, loguniform, uniform)
 from repro.core.idds import IDDS, AuthError
 from repro.core.workflow import Branch, Condition, Workflow, WorkTemplate
 

@@ -2,10 +2,10 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import Mesh, PartitionSpec
+from jax.sharding import PartitionSpec
 
 from repro.models.params import pdef
-from repro.sharding import (ShardingRules, param_specs, use_rules)
+from repro.sharding import ShardingRules, param_specs
 
 
 @pytest.fixture(scope="module")

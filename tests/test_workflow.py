@@ -1,12 +1,11 @@
 """DG workflow engine semantics (paper Fig. 3): templates, conditions,
 cycles, JSON round trip."""
-import json
 
 import pytest
 
 from repro.core import payloads as reg
-from repro.core.workflow import (Branch, Condition, FileRef, Work,
-                                 WorkStatus, Workflow, WorkTemplate)
+from repro.core.workflow import (Branch, Condition, WorkStatus, Workflow,
+                                 WorkTemplate)
 
 
 @pytest.fixture(autouse=True)
