@@ -11,6 +11,8 @@ Sections:
   store      §2        persistence overhead: in-memory vs SQLite catalogs
   train      §3.1      carousel-fed training micro-run (loss goes down)
   rest       §2        REST gateway submission throughput + poll latency
+  worker     §2        distributed execution plane: jobs/sec vs worker
+                       count + lease-renewal overhead
   roofline   —         per-cell roofline terms from the dry-run sweep
 
 Modes: full (default) the paper-scale sweeps; ``--quick`` smaller
@@ -121,6 +123,15 @@ def main(argv=None) -> int:
         client_counts=(1, 4) if smoke else (1, 4, 8),
         per_client=5 if smoke else 10 if quick else 25)
     _print_rows(rest_bench.KEYS, results["rest"])
+
+    _section("worker (distributed execution plane)")
+    from benchmarks import worker_bench
+    results["worker"] = worker_bench.run(
+        worker_counts=(1, 2, 4),
+        jobs=12 if smoke else 16 if quick else 32,
+        sleep_ms=20.0 if quick else 25.0,
+        renewals=40 if quick else 100)
+    _print_rows(worker_bench.KEYS, results["worker"])
 
     if smoke:
         _section("roofline (skipped in --smoke: needs a dry-run sweep)")

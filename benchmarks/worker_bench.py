@@ -1,0 +1,108 @@
+"""Benchmark: distributed execution plane throughput + lease overhead.
+
+Measures end-to-end jobs/sec through the full stack — REST submit,
+daemon dispatch, lease scheduler, worker pool pulling over HTTP — as
+the worker count scales, plus the lease-renewal (heartbeat) round-trip
+cost a worker pays while executing.  The jobs are fixed-duration
+``sleep_ms`` payloads, so jobs/sec rising with worker count is the
+execution plane actually parallelizing, not a faster payload.
+
+    PYTHONPATH=src python -m benchmarks.worker_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+from typing import Dict, List
+
+from repro.core.client import IDDSClient
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+from repro.core.scheduler import DistributedWFM
+from repro.core.workflow import Processing, Workflow, WorkTemplate
+from repro.worker import WorkerPool
+
+KEYS = ["workers", "jobs", "sleep_ms", "wall_s", "jobs_per_s",
+        "hb_p50_ms", "hb_p95_ms"]
+
+
+def _workflow(n_jobs: int, sleep_ms: float) -> Workflow:
+    wf = Workflow(name="worker-bench")
+    wf.add_template(WorkTemplate(name="s", payload="sleep_ms",
+                                 defaults={"ms": sleep_ms}))
+    for _ in range(n_jobs):
+        wf.add_initial("s", {})
+    return wf
+
+
+def throughput(worker_counts=(1, 2, 4), jobs: int = 16,
+               sleep_ms: float = 25.0) -> List[Dict]:
+    rows = []
+    for n in worker_counts:
+        with RestGateway(IDDS(executor=DistributedWFM(
+                lease_ttl=10.0))) as gw:
+            client = IDDSClient(gw.url)
+            with WorkerPool(gw.url, concurrency=n, poll_interval=0.01,
+                            worker_id=f"bench{n}"):
+                t0 = time.perf_counter()
+                rid = client.submit_workflow(_workflow(jobs, sleep_ms))
+                client.wait(rid, timeout=300, interval=0.01)
+                wall = time.perf_counter() - t0
+        rows.append({
+            "workers": n,
+            "jobs": jobs,
+            "sleep_ms": sleep_ms,
+            "wall_s": round(wall, 3),
+            "jobs_per_s": round(jobs / wall, 2),
+        })
+    return rows
+
+
+def heartbeat_overhead(renewals: int = 100) -> Dict:
+    """Round-trip cost of one lease renewal over HTTP — the tax a
+    worker pays every ttl/3 seconds while executing."""
+    with RestGateway(IDDS(executor=DistributedWFM(
+            lease_ttl=600.0))) as gw:
+        sched = gw.idds.scheduler
+        sched.enqueue(Processing(proc_id="hb-probe", work_id="w",
+                                 payload="noop", params={}))
+        client = IDDSClient(gw.url)
+        job = client.lease_job("hb-bench")
+        assert job is not None
+        samples = []
+        for _ in range(renewals):
+            t0 = time.perf_counter()
+            client.heartbeat_job(job["job_id"], "hb-bench")
+            samples.append((time.perf_counter() - t0) * 1e3)
+        client.complete_job(job["job_id"], "hb-bench", result={})
+    samples.sort()
+    return {
+        "workers": "heartbeat",
+        "jobs": renewals,
+        "hb_p50_ms": round(statistics.median(samples), 3),
+        "hb_p95_ms": round(samples[int(len(samples) * 0.95) - 1], 3),
+    }
+
+
+def run(worker_counts=(1, 2, 4), jobs: int = 16, sleep_ms: float = 25.0,
+        renewals: int = 100) -> List[Dict]:
+    rows = throughput(worker_counts, jobs, sleep_ms)
+    rows.append(heartbeat_overhead(renewals))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--quick", action="store_true",
+                    dest="smoke", help="fewer jobs/renewals (CI)")
+    args = ap.parse_args(argv)
+    rows = (run(jobs=12, sleep_ms=20.0, renewals=40) if args.smoke
+            else run())
+    print(",".join(KEYS))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in KEYS))
+
+
+if __name__ == "__main__":
+    main()

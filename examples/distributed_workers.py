@@ -1,0 +1,84 @@
+"""Distributed workers quickstart: the pilot model, end to end.
+
+Starts a head service whose Carrier dispatches through the lease
+scheduler (``DistributedWFM``) instead of executing payloads inline,
+spawns TWO separate worker processes (``python -m repro.worker``) that
+pull jobs over HTTP, submits a workflow over the REST gateway, and
+shows the work landing on both processes.
+
+    PYTHONPATH=src python examples/distributed_workers.py
+"""
+import os
+import signal
+import subprocess
+import sys
+
+from repro.core.client import IDDSClient
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+from repro.core.scheduler import DistributedWFM
+from repro.core.workflow import Workflow, WorkTemplate
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_JOBS = 8
+TOKEN = "worker-token"
+
+
+def build_workflow() -> Workflow:
+    # sleep_ms is a built-in payload, so the worker processes need no
+    # --payloads module; real deployments register their own on both
+    # head (for validation) and workers (for execution)
+    wf = Workflow(name="distributed-quickstart")
+    wf.add_template(WorkTemplate(name="crunch", payload="sleep_ms",
+                                 defaults={"ms": 60}))
+    for _ in range(N_JOBS):
+        wf.add_initial("crunch", {})
+    return wf
+
+
+def spawn_worker(url: str, name: str) -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.worker", "--url", url,
+         "--token", TOKEN, "--concurrency", "2",
+         "--poll-interval", "0.05", "--worker-id", name],
+        env=env)
+
+
+def main():
+    head = IDDS(tokens={TOKEN}, executor=DistributedWFM(lease_ttl=10.0))
+    with RestGateway(head) as gw:
+        print(f"head up at {gw.url} (distributed mode)")
+        workers = [spawn_worker(gw.url, f"site-{c}") for c in "ab"]
+        try:
+            client = IDDSClient(gw.url, token=TOKEN)
+            print("health:", client.healthz())
+            rid = client.submit_workflow(build_workflow(),
+                                         requester="alice")
+            print(f"submitted {rid} ({N_JOBS} jobs); waiting...")
+            info = client.wait(rid, timeout=60)
+            print(f"finished: works={info['works']}")
+
+            by_process = {}
+            for w in client.list_workers()["workers"]:
+                prefix = w["worker_id"].rsplit("-w", 1)[0]
+                by_process[prefix] = (by_process.get(prefix, 0)
+                                      + w["jobs_completed"])
+            for prefix, n in sorted(by_process.items()):
+                print(f"  {prefix}: completed {n} jobs")
+            assert info["works"] == {"finished": N_JOBS}, info
+            assert sum(by_process.values()) == N_JOBS, by_process
+            assert sum(1 for v in by_process.values() if v > 0) >= 2, \
+                f"expected >=2 worker processes to contribute: {by_process}"
+        finally:
+            for p in workers:
+                p.send_signal(signal.SIGTERM)
+            for p in workers:
+                p.wait(timeout=15)
+    print("distributed quickstart passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,18 +43,28 @@ def smoke_one(arch: str) -> None:
     print(f"[ok] {arch}: loss={loss:.4f}")
 
 
-def smoke_rest() -> None:
-    """End-to-end REST quickstart in a subprocess (own server + client)."""
+def _smoke_example(name: str) -> None:
+    """Run one examples/ script in a subprocess and require success."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["PYTHONPATH"] = (os.path.join(root, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
     r = subprocess.run(
-        [sys.executable, os.path.join(root, "examples",
-                                      "rest_quickstart.py")],
+        [sys.executable, os.path.join(root, "examples", name)],
         cwd=root, env=env, capture_output=True, text=True, timeout=120)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+
+
+def smoke_rest() -> None:
+    """End-to-end REST quickstart in a subprocess (own server + client)."""
+    _smoke_example("rest_quickstart.py")
     print("[ok] rest quickstart (gateway + client over HTTP)")
+
+
+def smoke_workers() -> None:
+    """Execution-plane e2e: head + 2 worker processes over the wire."""
+    _smoke_example("distributed_workers.py")
+    print("[ok] distributed workers (head + 2 worker processes)")
 
 
 if __name__ == "__main__":
@@ -72,5 +82,11 @@ if __name__ == "__main__":
     except Exception:
         failed.append("rest")
         print("[FAIL] rest")
+        traceback.print_exc()
+    try:
+        smoke_workers()
+    except Exception:
+        failed.append("workers")
+        print("[FAIL] workers")
         traceback.print_exc()
     sys.exit(1 if failed else 0)

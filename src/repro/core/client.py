@@ -7,13 +7,19 @@ can swap one for the other:
 
   HTTP 401  -> repro.core.idds.AuthError
   HTTP 404  -> KeyError
+  HTTP 409  -> ConflictError (stale/expired lease; never retried)
   other 4xx -> IDDSClientError (no retry)
-  5xx / connection errors -> retried with exponential backoff, then
-               IDDSClientError
+  5xx / connection errors -> retried with jittered exponential backoff
+               *only for idempotent calls*, then IDDSClientError; a
+               non-idempotent call fails immediately (a blind retry
+               after a lost response could apply it twice)
 
-Retrying POST /requests is safe: the server deduplicates on the
-client-generated request_id, so a retry after a lost response cannot
-run the workflow twice.
+Every GET is idempotent.  POSTs are retried only where a retry is
+provably safe: POST /requests deduplicates server-side on the
+client-generated request_id; POST /jobs/lease carries a client-supplied
+idempotency key so a retried lease returns the same job instead of
+leasing a second one; heartbeat renewal and completion are deduplicated
+per (job, worker) on the server.
 
 Only the stdlib (``urllib``) is used — no extra dependencies.
 
@@ -24,10 +30,12 @@ Only the stdlib (``urllib``) is used — no extra dependencies.
 from __future__ import annotations
 
 import json
+import random
 import time
 import urllib.error
 import urllib.parse
 import urllib.request
+import uuid
 from typing import Any, Dict, List, Optional
 
 from repro.core.idds import AuthError
@@ -44,6 +52,15 @@ class IDDSClientError(Exception):
         self.type = type_
 
 
+class ConflictError(IDDSClientError):
+    """HTTP 409: lease validation failed (expired or held by another
+    worker).  The server state did not change; retrying verbatim cannot
+    succeed, so the worker should drop the job and lease a fresh one."""
+
+    def __init__(self, message: str):
+        super().__init__(409, "Conflict", message)
+
+
 class IDDSClient:
     def __init__(self, base_url: str, *, token: str = "",
                  timeout: float = 10.0, retries: int = 3,
@@ -56,7 +73,15 @@ class IDDSClient:
 
     # ------------------------------------------------------------- transport
     def _request(self, method: str, path: str,
-                 body: Optional[bytes] = None) -> Any:
+                 body: Optional[bytes] = None, *,
+                 idempotent: Optional[bool] = None) -> Any:
+        """One HTTP call with the retry policy.  ``idempotent=None``
+        derives it from the verb (GET yes, POST no); non-idempotent
+        calls are never retried — a 5xx or dropped connection leaves the
+        server in an unknown state, and replaying could apply the action
+        twice."""
+        if idempotent is None:
+            idempotent = method == "GET"
         url = self.base_url + path
         last_err: Optional[Exception] = None
         for attempt in range(self.retries + 1):
@@ -78,14 +103,29 @@ class IDDSClient:
                     raise AuthError(msg) from None
                 if status == 404:
                     raise KeyError(msg) from None
+                if status == 409:
+                    raise ConflictError(msg) from None
                 if status < 500:  # client errors never retry
                     raise IDDSClientError(status, etype, msg) from None
                 last_err = IDDSClientError(status, etype, msg)
             except (urllib.error.URLError, ConnectionError, TimeoutError,
                     OSError) as e:
                 last_err = e
+            if not idempotent:
+                # preserve the real HTTP status/type so callers can still
+                # distinguish a 5xx from a dropped connection
+                status, etype = ((last_err.status, last_err.type)
+                                 if isinstance(last_err, IDDSClientError)
+                                 else (0, type(last_err).__name__))
+                raise IDDSClientError(
+                    status, etype,
+                    f"{method} {url} failed (non-idempotent call, not "
+                    f"retried): {last_err}")
             if attempt < self.retries:
-                time.sleep(self.backoff * (2 ** attempt))
+                # full jitter: desynchronizes a worker fleet hammering a
+                # recovering head (0.5x..1.5x the exponential step)
+                time.sleep(self.backoff * (2 ** attempt)
+                           * (0.5 + random.random()))
         raise IDDSClientError(
             0, type(last_err).__name__,
             f"{method} {url} failed after {self.retries + 1} attempts: "
@@ -94,14 +134,19 @@ class IDDSClient:
     def _get(self, path: str) -> Any:
         return self._request("GET", path)
 
-    def _post(self, path: str, obj: Any) -> Any:
+    def _post(self, path: str, obj: Any, *,
+              idempotent: bool = False) -> Any:
         return self._request("POST", path,
-                             json.dumps(obj).encode("utf-8"))
+                             json.dumps(obj).encode("utf-8"),
+                             idempotent=idempotent)
 
     # ------------------------------------------------------------ client API
     def submit(self, request_json: str) -> str:
-        """Submit a serialized Request; returns the request_id."""
-        return self._post("/requests", json.loads(request_json))["request_id"]
+        """Submit a serialized Request; returns the request_id.
+        Retry-safe: the server deduplicates on the client-generated
+        request_id."""
+        return self._post("/requests", json.loads(request_json),
+                          idempotent=True)["request_id"]
 
     def submit_workflow(self, wf: Workflow, requester: str = "anonymous",
                         token: Optional[str] = None) -> str:
@@ -160,3 +205,42 @@ class IDDSClient:
 
     def healthz(self) -> Dict[str, Any]:
         return self._get("/healthz")
+
+    # ----------------------------------------------- execution plane (jobs)
+    def lease_job(self, worker_id: str, *,
+                  queues: Optional[List[str]] = None,
+                  ttl: Optional[float] = None) -> Optional[Dict[str, Any]]:
+        """Lease the next dispatchable job (POST /jobs/lease); None when
+        nothing is pending.  Retry-safe: a fresh idempotency key per
+        logical call means a retried request returns the same job rather
+        than leasing a second one."""
+        body: Dict[str, Any] = {
+            "worker_id": worker_id,
+            "idempotency_key": uuid.uuid4().hex,
+        }
+        if queues:
+            body["queues"] = list(queues)
+        if ttl is not None:
+            body["lease_ttl"] = ttl
+        return self._post("/jobs/lease", body, idempotent=True)["job"]
+
+    def heartbeat_job(self, job_id: str, worker_id: str) -> Dict[str, Any]:
+        """Renew a held lease; raises ConflictError once it is lost."""
+        return self._post(
+            f"/jobs/{urllib.parse.quote(job_id)}/heartbeat",
+            {"worker_id": worker_id}, idempotent=True)
+
+    def complete_job(self, job_id: str, worker_id: str, *,
+                     result: Optional[Dict[str, Any]] = None,
+                     error: Optional[str] = None) -> Dict[str, Any]:
+        """Report a job outcome (result or error).  Retry-safe: the
+        server deduplicates per (job, worker); a stale worker whose
+        lease expired gets ConflictError and must drop the job."""
+        return self._post(
+            f"/jobs/{urllib.parse.quote(job_id)}/complete",
+            {"worker_id": worker_id, "result": result, "error": error},
+            idempotent=True)
+
+    def list_workers(self) -> Dict[str, Any]:
+        """Execution-plane worker registry (GET /workers)."""
+        return self._get("/workers")

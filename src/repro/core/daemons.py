@@ -52,6 +52,11 @@ class WFMExecutor:
         self._lock = threading.RLock()
         self.submitted = 0
 
+    def attach(self, ctx: "Context") -> None:
+        """Late-bind the shared Context (store, stats).  The inline
+        executor needs nothing from it; ``DistributedWFM`` (scheduler.py)
+        wires its lease scheduler to the store here."""
+
     def _execute(self, proc: Processing) -> Processing:
         try:
             if self.fault_hook is not None:
@@ -142,6 +147,10 @@ class Context:
 
 class Daemon:
     name = "daemon"
+    # bus topics this daemon consumes: an idle thread blocks on the bus
+    # condition for these instead of sleep-and-poll, so a publish wakes
+    # it immediately and idle loops burn far fewer wakeups
+    topics: Tuple[str, ...] = ()
 
     def __init__(self, ctx: Context):
         self.ctx = ctx
@@ -149,7 +158,13 @@ class Daemon:
     def process_once(self) -> int:
         raise NotImplementedError
 
-    def run_forever(self, stop: threading.Event, interval: float = 0.01):
+    def _idle_wait(self, interval: float) -> None:
+        if self.topics:
+            self.ctx.bus.wait_any(self.topics, timeout=interval)
+        else:
+            time.sleep(interval)
+
+    def run_forever(self, stop: threading.Event, interval: float = 0.05):
         while not stop.is_set():
             try:
                 n = self.process_once()
@@ -157,7 +172,7 @@ class Daemon:
                 traceback.print_exc()
                 n = 0
             if n == 0:
-                time.sleep(interval)
+                self._idle_wait(interval)
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +182,7 @@ class Daemon:
 
 class Clerk(Daemon):
     name = "clerk"
+    topics = (M.T_NEW_REQUESTS,)
 
     def process_once(self) -> int:
         msgs = self.ctx.bus.poll(M.T_NEW_REQUESTS)
@@ -195,6 +211,7 @@ class Clerk(Daemon):
 
 class Marshaller(Daemon):
     name = "marshaller"
+    topics = (M.T_NEW_WORKFLOWS, M.T_WORK_DONE)
 
     def _emit(self, wf: Workflow, works: List[Work],
               journal_with: Optional[List[Work]] = None) -> None:
@@ -302,6 +319,7 @@ class Transformer(Daemon):
              (the pre-iDDS baseline the paper improves on).
     """
     name = "transformer"
+    topics = (M.T_NEW_WORKS, M.T_COLLECTION_UPDATED, M.T_PROCESSING_DONE)
 
     def __init__(self, ctx: Context):
         super().__init__(ctx)
@@ -541,10 +559,19 @@ class Transformer(Daemon):
 
 class Carrier(Daemon):
     name = "carrier"
+    topics = (M.T_NEW_PROCESSINGS,)
 
     def __init__(self, ctx: Context):
         super().__init__(ctx)
         self._running: Dict[str, Processing] = {}
+
+    def _idle_wait(self, interval: float) -> None:
+        if self._running:
+            # outcomes arrive via WFM polling (worker pool futures or the
+            # lease scheduler), not the bus: keep the poll loop ticking
+            time.sleep(0.01)
+        else:
+            super()._idle_wait(interval)
 
     def _submit(self, proc: Processing) -> None:
         self.ctx.bump("job_attempts")
@@ -594,6 +621,7 @@ class Carrier(Daemon):
 
 class Conductor(Daemon):
     name = "conductor"
+    topics = (M.T_OUTPUT_AVAILABLE,)
 
     def process_once(self) -> int:
         msgs = self.ctx.bus.poll(M.T_OUTPUT_AVAILABLE)

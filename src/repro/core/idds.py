@@ -38,15 +38,22 @@ class IDDS:
                  max_workers: int = 8,
                  fault_hook: Optional[Callable] = None,
                  tokens: Optional[Set[str]] = None,
-                 store: Optional[Store] = None):
+                 store: Optional[Store] = None,
+                 executor: Optional[WFMExecutor] = None):
         bus = M.MessageBus()
+        # executor= overrides the inline WFM: pass a DistributedWFM
+        # (repro.core.scheduler) to dispatch Processings to pull-based
+        # remote workers instead of executing them in-process
+        wfm = (executor if executor is not None else
+               WFMExecutor(sync=sync, max_workers=max_workers,
+                           fault_hook=fault_hook))
         self.ctx = Context(
             bus=bus,
             ddm=ddm if ddm is not None else InMemoryDDM(),
-            wfm=WFMExecutor(sync=sync, max_workers=max_workers,
-                            fault_hook=fault_hook),
+            wfm=wfm,
             store=store if store is not None else InMemoryStore(),
         )
+        wfm.attach(self.ctx)
         self.daemons = [cls(self.ctx) for cls in ALL_DAEMONS]
         self._tokens = tokens  # None -> auth disabled (dev mode)
         # shared with Context so the Marshaller can write request status
@@ -59,6 +66,22 @@ class IDDS:
     @property
     def store(self) -> Store:
         return self.ctx.store
+
+    @property
+    def scheduler(self):
+        """The lease scheduler when running a DistributedWFM executor,
+        else None (inline execution — no jobs to lease)."""
+        return getattr(self.ctx.wfm, "scheduler", None)
+
+    def daemon_liveness(self) -> Dict[str, bool]:
+        """Per-daemon liveness for operators (/healthz).  In threaded
+        mode this reflects the actual thread state; in pump mode the
+        daemons run inside the caller's pump and are reported alive."""
+        if not self._threads:
+            return {d.name: True for d in self.daemons}
+        alive = {t.name: t.is_alive() for t in self._threads}
+        return {d.name: alive.get(f"idds-{d.name}", False)
+                for d in self.daemons}
 
     # ------------------------------------------------------------------ auth
     def _auth(self, token: str) -> None:
@@ -192,7 +215,8 @@ class IDDS:
         store = self.ctx.store
         counts = {"requests": 0, "workflows": 0, "works": 0,
                   "processings": 0, "collections": 0,
-                  "requeued_processings": 0, "replayed_events": 0}
+                  "requeued_processings": 0, "replayed_events": 0,
+                  "orphaned_leases": 0}
         transformer = next(d for d in self.daemons
                            if isinstance(d, Transformer))
         new_wfs: List[Workflow] = []
@@ -281,6 +305,14 @@ class IDDS:
             self.ctx.bus.publish(M.T_NEW_PROCESSINGS,
                                  {"proc_id": p.proc_id})
             counts["requeued_processings"] += 1
+        # leases journaled by the old head's scheduler are orphans: the
+        # jobs they covered were requeued above (non-terminal processings
+        # are re-announced), the new scheduler starts with an empty lease
+        # table, and a stale worker reporting against the dead lease gets
+        # a 409 — so dropping the rows is the whole requeue
+        for row in store.load_leases():
+            store.delete_lease(row["job_id"])
+            counts["orphaned_leases"] += 1
         return counts
 
     # --------------------------------------------------------------- execution

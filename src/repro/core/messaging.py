@@ -13,7 +13,7 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, Iterable, List, Optional
 
 
 @dataclass(frozen=True)
@@ -54,6 +54,8 @@ class MessageBus:
             return [q.popleft() for _ in range(n)]
 
     def wait(self, topic: str, timeout: float = 1.0) -> Optional[Message]:
+        """Blocking consume: pop one message, waiting up to ``timeout``
+        for a publish (condition-based — no sleep-and-poll)."""
         deadline = time.time() + timeout
         with self._cv:
             while not self._queues[topic]:
@@ -62,6 +64,20 @@ class MessageBus:
                     return None
                 self._cv.wait(rem)
             return self._queues[topic].popleft()
+
+    def wait_any(self, topics: Iterable[str], timeout: float = 1.0) -> bool:
+        """Block until at least one of ``topics`` has a queued message
+        (True) or ``timeout`` elapses (False).  Consumes nothing — the
+        daemon loops that idle on this then drain via ``poll``."""
+        topics = tuple(topics)
+        deadline = time.time() + timeout
+        with self._cv:
+            while not any(self._queues[t] for t in topics):
+                rem = deadline - time.time()
+                if rem <= 0:
+                    return False
+                self._cv.wait(rem)
+            return True
 
     def depth(self, topic: str) -> int:
         with self._lock:

@@ -10,6 +10,7 @@ execution time, exactly as PanDA tasks carry transformation names.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict
 
 _PAYLOADS: Dict[str, Callable[..., Any]] = {}
@@ -60,6 +61,15 @@ def get_binder(name: str) -> Callable[..., Dict[str, Any]]:
 
 
 register_payload("noop", lambda params, inputs: {"ok": True, **params})
+
+
+@register_payload("sleep_ms")
+def _sleep_ms(params, inputs):
+    """Occupy a worker for ``ms`` milliseconds — the execution plane's
+    stand-in for real compute (worker tests, worker_bench)."""
+    ms = float(params.get("ms", 10))
+    time.sleep(ms / 1000.0)
+    return {"ok": True, "slept_ms": ms, "n_inputs": len(inputs)}
 
 
 @register_predicate("always")

@@ -15,8 +15,19 @@ Endpoints (all JSON; details in docs/rest_api.md):
   GET  /requests/<id>/workflow       full workflow state (the DG)
   GET  /collections/<name>           collection metadata
   GET  /collections/<name>/contents  per-file availability
+  POST /jobs/lease                   worker: lease the next job
+  POST /jobs/<id>/heartbeat          worker: renew a held lease
+  POST /jobs/<id>/complete           worker: report result or error
+  GET  /workers                      execution-plane worker registry
   GET  /stats                        daemon counters
-  GET  /healthz                      liveness (never requires auth)
+  GET  /healthz                      liveness + store backend + daemon
+                                     liveness + connected-worker count
+                                     (never requires auth)
+
+The /jobs endpoints are the pull-based execution plane (paper's pilot
+model): they 400 with type ``NotDistributed`` unless the head runs a
+``DistributedWFM`` executor, and lease-validation failures (expired or
+reassigned leases) are 409 envelopes with type ``Conflict``.
 
 Auth: a bearer token (``Authorization: Bearer <t>`` or ``X-IDDS-Token``)
 checked against the IDDS token set; failures surface as the same
@@ -42,6 +53,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.idds import IDDS, AuthError
+from repro.core.scheduler import DistributedWFM, SchedulerConflict
 from repro.core.store import SqliteStore
 
 MAX_BODY_BYTES = 16 * 1024 * 1024  # refuse absurd submissions
@@ -123,11 +135,10 @@ class RestGateway:
     # ------------------------------------------------------------ handlers
     # Each returns (http_status, json-serializable body).
     def handle_submit(self, body: bytes, token: str) -> Tuple[int, Dict]:
-        try:
-            d = json.loads(body.decode("utf-8"))
-        except (UnicodeDecodeError, json.JSONDecodeError) as e:
-            return 400, _err("BadRequest", f"request body is not JSON: {e}")
-        if not isinstance(d, dict) or "workflow" not in d:
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        if "workflow" not in d:
             return 400, _err("BadRequest",
                              "body must be a Request object with a "
                              "'workflow' field")
@@ -191,10 +202,87 @@ class RestGateway:
         self.idds._auth(token)
         return 200, self.idds.stats
 
+    # -- execution plane (pull-based workers) ----------------------------
+    def _scheduler(self):
+        sched = self.idds.scheduler
+        if sched is None:
+            raise _NotDistributed(
+                "head service executes payloads inline; start it with a "
+                "DistributedWFM executor (--distributed) to serve workers")
+        return sched
+
+    def handle_lease(self, body: bytes, token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        worker_id = d.get("worker_id")
+        if not worker_id or not isinstance(worker_id, str):
+            return 400, _err("BadRequest", "worker_id (string) is required")
+        queues = d.get("queues")
+        if queues is not None and (
+                not isinstance(queues, list)
+                or not all(isinstance(q, str) for q in queues)):
+            return 400, _err("BadRequest", "queues must be a string list")
+        try:
+            ttl = (None if d.get("lease_ttl") is None
+                   else float(d["lease_ttl"]))
+            job = self._scheduler().lease(
+                worker_id, queues=queues, ttl=ttl,
+                idempotency_key=d.get("idempotency_key"))
+        except (TypeError, ValueError) as e:
+            return 400, _err("BadRequest", f"malformed lease request: {e}")
+        return 200, {"job": job}
+
+    def handle_job_heartbeat(self, job_id: str, body: bytes,
+                             token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        worker_id = d.get("worker_id")
+        if not worker_id or not isinstance(worker_id, str):
+            return 400, _err("BadRequest", "worker_id (string) is required")
+        return 200, self._scheduler().heartbeat(job_id, worker_id)
+
+    def handle_job_complete(self, job_id: str, body: bytes,
+                            token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        worker_id = d.get("worker_id")
+        if not worker_id or not isinstance(worker_id, str):
+            return 400, _err("BadRequest", "worker_id (string) is required")
+        result = d.get("result")
+        if result is not None and not isinstance(result, dict):
+            return 400, _err("BadRequest", "result must be an object")
+        error = d.get("error")
+        if error is not None and not isinstance(error, str):
+            return 400, _err("BadRequest", "error must be a string")
+        return 200, self._scheduler().complete(
+            job_id, worker_id, result=result, error=error)
+
+    def handle_workers(self, token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        sched = self.idds.scheduler
+        if sched is None:
+            return 200, {"workers": [], "connected": 0,
+                         "distributed": False}
+        return 200, {"workers": sched.workers(),
+                     "connected": sched.worker_count(),
+                     "distributed": True,
+                     "queues": sched.queue_depths()}
+
     def handle_healthz(self) -> Tuple[int, Dict]:
+        sched = self.idds.scheduler
         return 200, {
             "status": "ok",
-            "daemons": [d.name for d in self.idds.daemons],
+            "daemons": self.idds.daemon_liveness(),
+            "store": type(self.idds.store).__name__,
+            "distributed": sched is not None,
+            "workers_connected": (sched.worker_count()
+                                  if sched is not None else 0),
             "uptime_s": (round(time.time() - self.started_at, 3)
                          if self.started_at else 0.0),
         }
@@ -202,6 +290,26 @@ class RestGateway:
 
 def _err(type_: str, message: str) -> Dict[str, Dict[str, str]]:
     return {"error": {"type": type_, "message": message}}
+
+
+class _NotDistributed(Exception):
+    """A /jobs call reached a head running the inline executor."""
+
+
+def _parse_json_object(body: bytes):
+    """Decode a request body as a JSON object; empty body -> {}.
+    Returns ``(obj, None)`` or ``(None, (status, envelope))``."""
+    if not body:
+        return {}, None
+    try:
+        d = json.loads(body.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        return None, (400, _err("BadRequest",
+                                f"request body is not JSON: {e}"))
+    if not isinstance(d, dict):
+        return None, (400, _err("BadRequest",
+                                "request body must be a JSON object"))
+    return d, None
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +320,12 @@ def _err(type_: str, message: str) -> Dict[str, Dict[str, str]]:
 _ROUTES = [
     ("POST", re.compile(r"^/requests/?$"), "handle_submit"),
     ("GET", re.compile(r"^/requests/?$"), "handle_list"),
+    ("POST", re.compile(r"^/jobs/lease/?$"), "handle_lease"),
+    ("POST", re.compile(r"^/jobs/(?P<job_id>[^/]+)/heartbeat/?$"),
+     "handle_job_heartbeat"),
+    ("POST", re.compile(r"^/jobs/(?P<job_id>[^/]+)/complete/?$"),
+     "handle_job_complete"),
+    ("GET", re.compile(r"^/workers/?$"), "handle_workers"),
     ("GET", re.compile(r"^/requests/(?P<request_id>[^/]+)/workflow/?$"),
      "handle_workflow"),
     ("GET", re.compile(r"^/requests/(?P<request_id>[^/]+)/?$"),
@@ -286,6 +400,10 @@ def _make_handler(gw: RestGateway):
                     status, body = self._invoke(fn_name, match)
                 except AuthError as e:
                     status, body = 401, _err("AuthError", str(e))
+                except SchedulerConflict as e:
+                    status, body = 409, _err("Conflict", str(e))
+                except _NotDistributed as e:
+                    status, body = 400, _err("NotDistributed", str(e))
                 except Exception as e:  # noqa: BLE001 — envelope, not trace
                     status, body = 500, _err(type(e).__name__, str(e))
                 self._reply(status, body)
@@ -296,11 +414,18 @@ def _make_handler(gw: RestGateway):
             else:
                 self._reply(404, _err("NotFound", f"no route for {path}"))
 
+        # handlers that consume the request body (all POST routes)
+        _BODY_HANDLERS = frozenset({
+            "handle_submit", "handle_lease", "handle_job_heartbeat",
+            "handle_job_complete"})
+
         def _invoke(self, fn_name: str, match) -> Tuple[int, Any]:
             token = self._token()
             if fn_name == "handle_healthz":
                 return gw.handle_healthz()
-            if fn_name == "handle_submit":
+            kwargs = {k: urllib.parse.unquote(v)
+                      for k, v in match.groupdict().items()}
+            if fn_name in self._BODY_HANDLERS:
                 length = int(self.headers.get("Content-Length", 0))
                 if length > MAX_BODY_BYTES:
                     self._body_consumed = True
@@ -309,15 +434,14 @@ def _make_handler(gw: RestGateway):
                                      f"body exceeds {MAX_BODY_BYTES} bytes")
                 body = self.rfile.read(length)
                 self._body_consumed = True
-                return gw.handle_submit(body, token)
+                return getattr(gw, fn_name)(body=body, token=token,
+                                            **kwargs)
             if fn_name == "handle_stats":
                 return gw.handle_stats(token)
             if fn_name == "handle_list":
                 query = urllib.parse.parse_qs(
                     urllib.parse.urlsplit(self.path).query)
                 return gw.handle_list(query, token)
-            kwargs = {k: urllib.parse.unquote(v)
-                      for k, v in match.groupdict().items()}
             return getattr(gw, fn_name)(**kwargs, token=token)
 
         # -- verbs -------------------------------------------------------
@@ -356,6 +480,13 @@ def main(argv=None) -> int:
     ap.add_argument("--async-wfm", action="store_true",
                     help="run payloads on a WFM worker pool instead of "
                          "inline in the Carrier thread")
+    ap.add_argument("--distributed", action="store_true",
+                    help="dispatch payloads to pull-based remote workers "
+                         "(python -m repro.worker) via the lease "
+                         "scheduler instead of executing them in-process")
+    ap.add_argument("--lease-ttl", type=float, default=30.0,
+                    help="seconds a worker lease lives between "
+                         "heartbeats (--distributed)")
     ap.add_argument("--max-workers", type=int, default=8)
     ap.add_argument("--payloads", action="append", default=[],
                     help="importable module that registers payloads "
@@ -374,8 +505,10 @@ def main(argv=None) -> int:
     tokens = (set(t for t in args.tokens.split(",") if t)
               if args.tokens else None)
     store = SqliteStore(args.store) if args.store else None
+    executor = (DistributedWFM(lease_ttl=args.lease_ttl)
+                if args.distributed else None)
     idds = IDDS(sync=not args.async_wfm, max_workers=args.max_workers,
-                tokens=tokens, store=store)
+                tokens=tokens, store=store, executor=executor)
     if store is not None:
         counts = idds.recover()
         recovered = {k: v for k, v in counts.items() if v}
@@ -397,9 +530,11 @@ def main(argv=None) -> int:
     signal.signal(signal.SIGTERM, _on_signal)
 
     gw.start()
+    wfm_mode = ("distributed" if args.distributed else
+                "async" if args.async_wfm else "sync")
     print(f"idds-rest serving on {gw.url} "
           f"(auth={'on' if tokens else 'off'}, "
-          f"wfm={'async' if args.async_wfm else 'sync'}, "
+          f"wfm={wfm_mode}, "
           f"store={args.store or 'memory'})", flush=True)
     try:
         stop_evt.wait()

@@ -1,0 +1,527 @@
+"""Distributed execution plane, head side: lease-based job scheduling.
+
+The paper's iDDS never executes payloads itself — a workflow-management
+system (PanDA) with *pull-based pilots* on grid sites does the
+processing.  This module is that boundary for the reproduction:
+
+  * :class:`JobScheduler` — a priority job queue with lease-based
+    dispatch.  Workers lease jobs (``POST /jobs/lease``), renew their
+    lease with heartbeats while executing, and report the outcome; a
+    lease that is not renewed before its deadline expires and the job is
+    requeued automatically, consuming an attempt exactly as the
+    Carrier's retry path would.  Deadlines use the monotonic clock so
+    wall-clock jumps can neither kill nor immortalize a lease; the lease
+    table is journaled through the :class:`~repro.core.store.Store` so
+    ``IDDS.recover()`` can requeue leases orphaned by a head crash.
+  * :class:`DistributedWFM` — a :class:`~repro.core.daemons.WFMExecutor`
+    whose "grid sites" are remote worker processes (``python -m
+    repro.worker``) pulling over the REST gateway.  ``IDDS(executor=
+    DistributedWFM())`` switches the Carrier from in-process execution
+    to distributed dispatch without touching daemon logic.
+
+Priority and routing ride on the Processing's params: ``priority``
+(higher leases first, default 0) and ``queue`` (default ``"default"``).
+Per-queue throttling caps bound how many leases a queue may have
+outstanding at once.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+import uuid
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.daemons import WFMExecutor
+from repro.core.store import Store
+from repro.core.workflow import Processing, ProcessingStatus
+
+_PENDING, _LEASED, _DONE = "pending", "leased", "done"
+
+
+class SchedulerConflict(Exception):
+    """Lease validation failed (stale worker, expired lease, unknown
+    job).  The scheduler's state did not change; the REST layer maps
+    this to a 409 envelope."""
+
+
+class _Lease:
+    __slots__ = ("lease_id", "worker_id", "deadline", "ttl")
+
+    def __init__(self, worker_id: str, deadline: float, ttl: float):
+        self.lease_id = f"lease-{uuid.uuid4().hex[:12]}"
+        self.worker_id = worker_id
+        self.deadline = deadline
+        self.ttl = ttl
+
+
+class _Job:
+    __slots__ = ("proc", "queue", "priority", "attempt", "state", "lease",
+                 "seq", "outcome", "completed_by", "lease_key")
+
+    def __init__(self, proc: Processing, queue: str, priority: int,
+                 seq: int):
+        self.proc = proc
+        self.queue = queue
+        self.priority = priority
+        self.attempt = proc.attempt
+        self.state = _PENDING
+        self.lease: Optional[_Lease] = None
+        self.lease_key: Optional[str] = None  # idempotency key, if any
+        self.seq = seq
+        # (status, result, error, attempt) once terminal from the
+        # scheduler's point of view; consumed by DistributedWFM.poll
+        self.outcome: Optional[Tuple[str, Any, Optional[str], int]] = None
+        self.completed_by: Optional[str] = None
+
+
+class JobScheduler:
+    """Priority job queue with lease-based dispatch (head side).
+
+    Thread-safe: REST threads lease/heartbeat/complete while the
+    Carrier thread enqueues and polls outcomes.  Never takes any lock
+    other than its own (callers must not hold ``Context.lock`` when
+    calling in — the stat hook takes it).
+    """
+
+    def __init__(self, *, default_ttl: float = 30.0, max_ttl: float = 300.0,
+                 queue_caps: Optional[Dict[str, int]] = None,
+                 worker_ttl: float = 60.0, retain_done: int = 4096,
+                 clock: Optional[Callable[[], float]] = None):
+        self.default_ttl = default_ttl
+        self.max_ttl = max_ttl
+        self.queue_caps = dict(queue_caps or {})
+        self.worker_ttl = worker_ttl
+        self._clock = clock if clock is not None else time.monotonic
+        self._lock = threading.RLock()
+        self._jobs: Dict[str, _Job] = {}
+        self._heaps: Dict[str, List[Tuple[int, int, str]]] = {}
+        self._deadlines: List[Tuple[float, str, str]] = []  # (dl, lease, job)
+        self._queue_active: Dict[str, int] = {}
+        self._workers: Dict[str, Dict[str, Any]] = {}
+        self._lease_keys: Dict[str, str] = {}       # idempotency key -> job
+        self._done_ring: deque = deque()
+        self._retain_done = retain_done
+        self._next_worker_prune = self._clock() + worker_ttl
+        self._seq = 0
+        self._draining = False
+        self._store: Optional[Store] = None
+        self._on_stat: Optional[Callable[[str, int], None]] = None
+
+    # ------------------------------------------------------------- wiring
+    def attach(self, store: Store,
+               on_stat: Optional[Callable[..., None]] = None) -> None:
+        """Bind the head service's store (lease journaling) and stats
+        hook; called by ``DistributedWFM.attach`` from ``IDDS``."""
+        self._store = store
+        self._on_stat = on_stat
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        if self._on_stat is not None:
+            self._on_stat(key, n)
+
+    def _journal_lease(self, job: _Job) -> None:
+        if self._store is None or job.lease is None:
+            return
+        self._store.save_lease({
+            "job_id": job.proc.proc_id,
+            "lease_id": job.lease.lease_id,
+            "worker_id": job.lease.worker_id,
+            "queue": job.queue,
+            "attempt": job.attempt,
+            "ttl": job.lease.ttl,
+            # wall clock: a restarted head cannot compare old monotonic
+            # values, and recovery treats every journaled lease as
+            # orphaned anyway — this is operator-facing metadata
+            "expires_at": time.time() + job.lease.ttl,
+        })
+
+    def _drop_lease_row(self, job_id: str) -> None:
+        if self._store is not None:
+            self._store.delete_lease(job_id)
+
+    # ------------------------------------------------------------ enqueue
+    def enqueue(self, proc: Processing) -> None:
+        """Register a Processing for dispatch.  Idempotent per proc_id:
+        a re-submission (Carrier retry, crash recovery) resets the job
+        to pending with the Processing's current attempt count; any
+        live lease is revoked (the stale worker's report gets a 409)."""
+        queue = str(proc.params.get("queue", "default"))
+        priority = int(proc.params.get("priority", 0))
+        with self._lock:
+            job = self._jobs.get(proc.proc_id)
+            if job is None:
+                self._seq += 1
+                job = _Job(proc, queue, priority, self._seq)
+                self._jobs[proc.proc_id] = job
+            else:
+                if job.state == _PENDING:
+                    return  # duplicate announcement
+                if job.state == _LEASED:
+                    self._release_lease(job)
+                job.proc = proc
+                job.attempt = proc.attempt
+                job.outcome = None
+                job.completed_by = None
+                job.state = _PENDING
+                self._seq += 1
+                job.seq = self._seq
+            self._push(job)
+            self._bump("jobs_queued")
+
+    def _push(self, job: _Job) -> None:
+        job.state = _PENDING
+        job.lease = None
+        heapq.heappush(self._heaps.setdefault(job.queue, []),
+                       (-job.priority, job.seq, job.proc.proc_id))
+
+    # -------------------------------------------------------------- lease
+    def lease(self, worker_id: str, *, queues: Optional[List[str]] = None,
+              ttl: Optional[float] = None,
+              idempotency_key: Optional[str] = None) -> Optional[Dict]:
+        """Hand the highest-priority pending job to ``worker_id`` under a
+        new lease, or return None if nothing is dispatchable (empty
+        queues, throttling caps, draining).  ``idempotency_key`` makes a
+        client retry safe: a repeated key while the resulting lease is
+        still held returns the same job instead of leasing a second
+        one."""
+        if not worker_id:
+            raise ValueError("worker_id is required")
+        ttl = self.default_ttl if ttl is None else min(float(ttl),
+                                                       self.max_ttl)
+        if ttl <= 0:
+            raise ValueError("lease_ttl must be positive")
+        now = self._clock()
+        with self._lock:
+            self._expire_locked(now)
+            self._touch_worker(worker_id)
+            if self._draining:
+                return None
+            if idempotency_key:
+                jid = self._lease_keys.get(idempotency_key)
+                if jid is not None:
+                    job = self._jobs.get(jid)
+                    if (job is not None and job.state == _LEASED
+                            and job.lease.worker_id == worker_id):
+                        return self._job_payload(job)  # replayed response
+            job = self._pop_best(queues)
+            if job is None:
+                return None
+            job.state = _LEASED
+            job.lease = _Lease(worker_id, now + ttl, ttl)
+            job.proc.status = ProcessingStatus.RUNNING
+            self._queue_active[job.queue] = (
+                self._queue_active.get(job.queue, 0) + 1)
+            heapq.heappush(self._deadlines,
+                           (job.lease.deadline, job.lease.lease_id,
+                            job.proc.proc_id))
+            if idempotency_key:
+                self._lease_keys[idempotency_key] = job.proc.proc_id
+                job.lease_key = idempotency_key
+            self._workers[worker_id]["active_leases"] += 1
+            self._journal_lease(job)
+            self._bump("jobs_leased")
+            return self._job_payload(job)
+
+    def _pop_best(self, queues: Optional[List[str]]) -> Optional[_Job]:
+        allowed = list(queues) if queues else list(self._heaps)
+        best: Optional[_Job] = None
+        best_q: Optional[str] = None
+        for q in allowed:
+            heap = self._heaps.get(q)
+            if not heap:
+                continue
+            cap = self.queue_caps.get(q)
+            if cap is not None and self._queue_active.get(q, 0) >= cap:
+                continue  # throttled: queue at its outstanding-lease cap
+            # lazy deletion: skip entries whose job moved on (re-enqueue
+            # with a newer seq, completion, revoked lease)
+            while heap:
+                neg_pr, seq, jid = heap[0]
+                job = self._jobs.get(jid)
+                if (job is None or job.state != _PENDING
+                        or job.seq != seq or job.queue != q):
+                    heapq.heappop(heap)
+                    continue
+                break
+            if not heap:
+                continue
+            neg_pr, seq, jid = heap[0]
+            job = self._jobs[jid]
+            # best across queues: highest priority, then oldest seq
+            if best is None or (neg_pr, seq) < (-best.priority, best.seq):
+                best, best_q = job, q
+        if best is None:
+            return None
+        heapq.heappop(self._heaps[best_q])
+        return best
+
+    def _job_payload(self, job: _Job) -> Dict[str, Any]:
+        p = job.proc
+        return {
+            "job_id": p.proc_id,
+            "payload": p.payload,
+            "params": dict(p.params),
+            "input_files": list(p.input_files),
+            "attempt": job.attempt,
+            "max_attempts": p.max_attempts,
+            "queue": job.queue,
+            "priority": job.priority,
+            "lease": {
+                "lease_id": job.lease.lease_id,
+                "worker_id": job.lease.worker_id,
+                "ttl": job.lease.ttl,
+            },
+        }
+
+    # ---------------------------------------------------------- heartbeat
+    def heartbeat(self, job_id: str, worker_id: str) -> Dict[str, Any]:
+        """Renew the lease on ``job_id``; raises SchedulerConflict if the
+        worker no longer holds it (expired → requeued, or reassigned)."""
+        now = self._clock()
+        with self._lock:
+            self._expire_locked(now)
+            self._touch_worker(worker_id)
+            job = self._require_holder(job_id, worker_id, "heartbeat")
+            job.lease.deadline = now + job.lease.ttl
+            heapq.heappush(self._deadlines,
+                           (job.lease.deadline, job.lease.lease_id,
+                            job_id))
+            self._journal_lease(job)
+            return {"ok": True, "lease_id": job.lease.lease_id,
+                    "deadline_in": job.lease.ttl}
+
+    # ----------------------------------------------------------- complete
+    def complete(self, job_id: str, worker_id: str, *,
+                 result: Optional[Dict[str, Any]] = None,
+                 error: Optional[str] = None) -> Dict[str, Any]:
+        """Record a worker's outcome.  Idempotent for the worker that
+        holds (or already completed) the job; any other reporter — e.g.
+        a stale worker whose lease expired and whose job was requeued —
+        gets a SchedulerConflict and causes no state change."""
+        now = self._clock()
+        with self._lock:
+            self._expire_locked(now)
+            self._touch_worker(worker_id)
+            job = self._jobs.get(job_id)
+            if (job is not None and job.state == _DONE
+                    and job.completed_by == worker_id):
+                return {"ok": True, "duplicate": True}  # idempotent retry
+            job = self._require_holder(job_id, worker_id, "completion")
+            status = "failed" if error else "finished"
+            job.outcome = (status, result, error, job.attempt)
+            job.completed_by = worker_id
+            self._release_lease(job)  # decrements the holder's lease count
+            job.state = _DONE
+            self._retire(job)
+            w = self._workers[worker_id]
+            w["jobs_failed" if error else "jobs_completed"] += 1
+            self._bump("jobs_failed_by_worker" if error
+                       else "jobs_completed_by_worker")
+            return {"ok": True, "duplicate": False}
+
+    def _require_holder(self, job_id: str, worker_id: str,
+                        verb: str) -> _Job:
+        job = self._jobs.get(job_id)
+        if job is None:
+            raise SchedulerConflict(f"{verb} rejected: unknown job "
+                                    f"{job_id!r}")
+        if job.state != _LEASED or job.lease is None:
+            raise SchedulerConflict(
+                f"{verb} rejected: job {job_id!r} is not leased "
+                f"(state={job.state})")
+        if job.lease.worker_id != worker_id:
+            raise SchedulerConflict(
+                f"{verb} rejected: job {job_id!r} is leased by "
+                f"{job.lease.worker_id!r}, not {worker_id!r}")
+        return job
+
+    def _release_lease(self, job: _Job) -> None:
+        if job.lease is None:
+            return
+        w = self._workers.get(job.lease.worker_id)
+        if w is not None:
+            w["active_leases"] = max(0, w["active_leases"] - 1)
+        self._queue_active[job.queue] = max(
+            0, self._queue_active.get(job.queue, 0) - 1)
+        job.lease = None
+        # the idempotency key only replays while the lease is held, so
+        # release is also the key's end of life (bounds the key map)
+        if job.lease_key is not None:
+            self._lease_keys.pop(job.lease_key, None)
+            job.lease_key = None
+        self._drop_lease_row(job.proc.proc_id)
+
+    def _retire(self, job: _Job) -> None:
+        """Bound memory: DONE jobs are retained (for duplicate-completion
+        dedup and stale-worker 409s) up to ``retain_done``, oldest out."""
+        self._done_ring.append(job.proc.proc_id)
+        while len(self._done_ring) > self._retain_done:
+            old = self._done_ring.popleft()
+            j = self._jobs.get(old)
+            if j is not None and j.state == _DONE and j.outcome is None:
+                del self._jobs[old]
+
+    # -------------------------------------------------------------- expiry
+    def expire(self) -> int:
+        """Requeue every job whose lease deadline passed; returns how
+        many.  Runs implicitly on every lease/heartbeat/complete/poll,
+        so a dedicated reaper thread is unnecessary."""
+        with self._lock:
+            return self._expire_locked(self._clock())
+
+    def _expire_locked(self, now: float) -> int:
+        # amortized registry pruning: worker ids embed pid + random
+        # suffixes, so a churning fleet would otherwise grow _workers
+        # monotonically.  Entries silent for 10× worker_ttl with nothing
+        # leased are gone for good — drop them (at most once per ttl).
+        if now >= self._next_worker_prune:
+            self._next_worker_prune = now + self.worker_ttl
+            cutoff = now - 10.0 * self.worker_ttl
+            for wid in [wid for wid, w in self._workers.items()
+                        if w["last_seen"] < cutoff
+                        and w["active_leases"] == 0]:
+                del self._workers[wid]
+        n = 0
+        while self._deadlines and self._deadlines[0][0] <= now:
+            deadline, lease_id, job_id = heapq.heappop(self._deadlines)
+            job = self._jobs.get(job_id)
+            if (job is None or job.state != _LEASED or job.lease is None
+                    or job.lease.lease_id != lease_id
+                    or job.lease.deadline != deadline):
+                continue  # stale entry: renewed, completed, or revoked
+            worker = job.lease.worker_id
+            self._release_lease(job)
+            self._bump("lease_expiries")
+            n += 1
+            if job.attempt < job.proc.max_attempts:
+                # consume an attempt exactly as the Carrier's retry path
+                # would, then hand the job to the next worker
+                job.attempt += 1
+                job.proc.attempt = job.attempt
+                self._seq += 1
+                job.seq = self._seq
+                self._push(job)
+                self._bump("lease_requeues")
+            else:
+                job.outcome = (
+                    "failed", None,
+                    f"lease expired (worker {worker!r}); "
+                    f"{job.attempt} attempts exhausted", job.attempt)
+                job.state = _DONE
+                self._retire(job)
+        return n
+
+    # ------------------------------------------------------------- outcome
+    def take_outcome(self, proc_id: str) -> Optional[
+            Tuple[str, Any, Optional[str], int]]:
+        """Pop the terminal outcome for ``proc_id`` if one is ready:
+        ``(status, result, error, attempt)``.  Called by
+        ``DistributedWFM.poll`` from the Carrier thread."""
+        with self._lock:
+            self._expire_locked(self._clock())
+            job = self._jobs.get(proc_id)
+            if job is None or job.state != _DONE or job.outcome is None:
+                return None
+            out, job.outcome = job.outcome, None
+            return out
+
+    # ------------------------------------------------------------- workers
+    def _touch_worker(self, worker_id: str) -> None:
+        w = self._workers.get(worker_id)
+        if w is None:
+            w = self._workers[worker_id] = {
+                "worker_id": worker_id, "active_leases": 0,
+                "jobs_completed": 0, "jobs_failed": 0, "last_seen": 0.0}
+        w["last_seen"] = self._clock()
+
+    def workers(self) -> List[Dict[str, Any]]:
+        """Per-worker registry snapshot (GET /workers)."""
+        now = self._clock()
+        with self._lock:
+            self._expire_locked(now)
+            return [{
+                "worker_id": w["worker_id"],
+                "active_leases": w["active_leases"],
+                "jobs_completed": w["jobs_completed"],
+                "jobs_failed": w["jobs_failed"],
+                "last_seen_ago_s": round(now - w["last_seen"], 3),
+                "connected": (now - w["last_seen"]) < self.worker_ttl,
+            } for w in self._workers.values()]
+
+    def worker_count(self) -> int:
+        """Workers seen within ``worker_ttl`` (healthz)."""
+        now = self._clock()
+        with self._lock:
+            return sum(1 for w in self._workers.values()
+                       if (now - w["last_seen"]) < self.worker_ttl)
+
+    def queue_depths(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            out: Dict[str, Dict[str, int]] = {}
+            for jid, job in self._jobs.items():
+                if job.state in (_PENDING, _LEASED):
+                    q = out.setdefault(job.queue,
+                                       {"pending": 0, "leased": 0})
+                    q[job.state] += 1
+            return out
+
+    def shutdown(self) -> None:
+        """Stop handing out new leases (in-flight ones may still report)."""
+        with self._lock:
+            self._draining = True
+
+
+# ---------------------------------------------------------------------------
+# The executor the Carrier drives
+# ---------------------------------------------------------------------------
+
+
+class DistributedWFM(WFMExecutor):
+    """WFM boundary backed by remote pull-based workers.
+
+    ``submit`` enqueues the Processing on the :class:`JobScheduler`;
+    ``poll`` applies worker-reported outcomes (and drives lease expiry).
+    The Carrier's retry semantics are unchanged: a worker-reported
+    failure surfaces as a FAILED poll and the Carrier re-submits with
+    ``attempt + 1``; a lease expiry consumes attempts inside the
+    scheduler and only surfaces FAILED once they are exhausted.
+    """
+
+    def __init__(self, *, scheduler: Optional[JobScheduler] = None,
+                 lease_ttl: float = 30.0,
+                 queue_caps: Optional[Dict[str, int]] = None):
+        # no super().__init__: there is no in-process thread pool
+        self.sync = False
+        self.fault_hook = None
+        self.scheduler = scheduler if scheduler is not None else \
+            JobScheduler(default_ttl=lease_ttl, queue_caps=queue_caps)
+        self.submitted = 0
+        self._lock = threading.RLock()
+
+    def attach(self, ctx) -> None:
+        self.scheduler.attach(ctx.store, on_stat=ctx.bump)
+
+    def submit(self, proc: Processing) -> None:
+        with self._lock:
+            self.submitted += 1
+        proc.status = ProcessingStatus.SUBMITTED
+        self.scheduler.enqueue(proc)
+
+    def poll(self, proc: Processing) -> Processing:
+        out = self.scheduler.take_outcome(proc.proc_id)
+        if out is None:
+            return proc
+        status, result, error, attempt = out
+        proc.attempt = attempt
+        proc.error = error
+        if status == "finished":
+            proc.result = result
+            proc.status = ProcessingStatus.FINISHED
+        else:
+            proc.status = ProcessingStatus.FAILED
+        return proc
+
+    def shutdown(self) -> None:
+        self.scheduler.shutdown()

@@ -88,6 +88,19 @@ class Store:
     def load_processings(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
 
+    # -- leases (distributed execution plane) ------------------------------
+    def save_lease(self, lease: Dict[str, Any]) -> None:
+        """Upsert one lease row keyed on ``job_id`` (the scheduler
+        journals grants and renewals so a head crash mid-lease can be
+        audited and the lease requeued by ``recover()``)."""
+        raise NotImplementedError
+
+    def delete_lease(self, job_id: str) -> None:
+        raise NotImplementedError
+
+    def load_leases(self) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
     # -- collections + contents --------------------------------------------
     def save_collection(self, coll: Dict[str, Any]) -> None:
         """Upsert a collection and its per-file contents."""
@@ -125,6 +138,7 @@ class InMemoryStore(Store):
         self._works: Dict[str, Tuple[str, Dict[str, Any]]] = {}
         self._processings: Dict[str, Dict[str, Any]] = {}
         self._collections: Dict[str, Dict[str, Any]] = {}
+        self._leases: Dict[str, Dict[str, Any]] = {}
 
     def save_request(self, info: Dict[str, Any]) -> None:
         with self._lock:
@@ -175,6 +189,18 @@ class InMemoryStore(Store):
     def load_processings(self) -> List[Dict[str, Any]]:
         with self._lock:
             return [dict(p) for p in self._processings.values()]
+
+    def save_lease(self, lease: Dict[str, Any]) -> None:
+        with self._lock:
+            self._leases[lease["job_id"]] = dict(lease)
+
+    def delete_lease(self, job_id: str) -> None:
+        with self._lock:
+            self._leases.pop(job_id, None)
+
+    def load_leases(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [dict(le) for le in self._leases.values()]
 
     def save_collection(self, coll: Dict[str, Any]) -> None:
         with self._lock:
@@ -235,6 +261,13 @@ CREATE TABLE IF NOT EXISTS processings (
     data    TEXT NOT NULL
 );
 CREATE INDEX IF NOT EXISTS idx_processings_work ON processings (work_id);
+CREATE TABLE IF NOT EXISTS leases (
+    job_id     TEXT PRIMARY KEY,
+    worker_id  TEXT,
+    queue      TEXT,
+    expires_at REAL,
+    data       TEXT NOT NULL
+);
 CREATE TABLE IF NOT EXISTS collections (
     name  TEXT PRIMARY KEY,
     scope TEXT
@@ -386,6 +419,26 @@ class SqliteStore(Store):
     def load_processings(self) -> List[Dict[str, Any]]:
         rows = self._conn().execute(
             "SELECT data FROM processings ORDER BY rowid").fetchall()
+        return [json.loads(r[0]) for r in rows]
+
+    # -- leases --------------------------------------------------------------
+    def save_lease(self, lease: Dict[str, Any]) -> None:
+        self._conn().execute(
+            "INSERT INTO leases (job_id, worker_id, queue, expires_at,"
+            " data) VALUES (?, ?, ?, ?, ?)"
+            " ON CONFLICT(job_id) DO UPDATE SET"
+            " worker_id=excluded.worker_id, expires_at=excluded.expires_at,"
+            " data=excluded.data",
+            (lease["job_id"], lease.get("worker_id"), lease.get("queue"),
+             lease.get("expires_at"), json.dumps(lease)))
+
+    def delete_lease(self, job_id: str) -> None:
+        self._conn().execute("DELETE FROM leases WHERE job_id = ?",
+                             (job_id,))
+
+    def load_leases(self) -> List[Dict[str, Any]]:
+        rows = self._conn().execute(
+            "SELECT data FROM leases ORDER BY rowid").fetchall()
         return [json.loads(r[0]) for r in rows]
 
     # -- collections --------------------------------------------------------

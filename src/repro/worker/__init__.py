@@ -1,0 +1,16 @@
+"""Pull-based worker agents for the iDDS distributed execution plane.
+
+The paper's pilot/late-binding model: workers run anywhere, pull jobs
+from the head service over the REST gateway (``POST /jobs/lease``),
+execute the payload via the local payload registry, and report back —
+the head never pushes work to a site it cannot reach.
+
+  * :class:`~repro.worker.agent.WorkerAgent` — one lease → execute →
+    report loop with background heartbeat renewal;
+  * :class:`~repro.worker.pool.WorkerPool`   — N agents in one process;
+  * ``python -m repro.worker``               — the worker CLI.
+"""
+from repro.worker.agent import WorkerAgent
+from repro.worker.pool import WorkerPool
+
+__all__ = ["WorkerAgent", "WorkerPool"]

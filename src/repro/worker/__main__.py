@@ -1,0 +1,84 @@
+"""Worker CLI: run a pool of pull-based agents against a head service.
+
+    PYTHONPATH=src python -m repro.worker --url http://127.0.0.1:8443 \
+        --token s3cret --concurrency 4 --payloads my_payload_module
+
+The process pulls jobs until SIGINT/SIGTERM, then drains its agents and
+prints a summary.  Payload modules are imported locally (the head ships
+payload *names*, never code), exactly like ``python -m repro.core.rest
+--payloads`` on the head side.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import signal
+import threading
+
+from repro.worker.agent import default_worker_id
+from repro.worker.pool import WorkerPool
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.worker",
+        description="Pull-based payload worker for the iDDS execution "
+                    "plane.")
+    ap.add_argument("--url", required=True,
+                    help="head-service gateway, e.g. http://host:8443")
+    ap.add_argument("--token", default="",
+                    help="bearer token (omit if the head runs auth-off)")
+    ap.add_argument("--concurrency", type=int, default=2,
+                    help="agents (= concurrent payloads) in this process")
+    ap.add_argument("--queues", default=None,
+                    help="comma-separated queue names to pull from "
+                         "(omit = all queues)")
+    ap.add_argument("--lease-ttl", type=float, default=30.0,
+                    help="requested lease seconds between heartbeats")
+    ap.add_argument("--poll-interval", type=float, default=0.25,
+                    help="idle seconds between empty lease attempts")
+    ap.add_argument("--worker-id", default=None,
+                    help="worker id base (default: host-pid); agents "
+                         "append -w<i>")
+    ap.add_argument("--payloads", action="append", default=[],
+                    help="importable module that registers payloads "
+                         "(repeatable)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="log each job")
+    args = ap.parse_args(argv)
+
+    for mod in args.payloads:
+        importlib.import_module(mod)
+
+    queues = ([q for q in args.queues.split(",") if q]
+              if args.queues else None)
+    base = args.worker_id or default_worker_id()
+    pool = WorkerPool(args.url, concurrency=args.concurrency,
+                      worker_id=base, token=args.token, queues=queues,
+                      lease_ttl=args.lease_ttl,
+                      poll_interval=args.poll_interval,
+                      verbose=args.verbose)
+
+    stop_evt = threading.Event()
+
+    def _on_signal(signum, frame):
+        stop_evt.set()
+
+    signal.signal(signal.SIGINT, _on_signal)
+    signal.signal(signal.SIGTERM, _on_signal)
+
+    pool.start()
+    print(f"worker {base} pulling from {args.url} "
+          f"(concurrency={args.concurrency}, "
+          f"queues={','.join(queues) if queues else 'all'})", flush=True)
+    try:
+        stop_evt.wait()
+        print(f"worker {base}: signal received, draining", flush=True)
+    finally:
+        pool.stop()
+        print(f"worker {base} stopped: {pool.stats()}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,157 @@
+"""The worker agent: lease -> execute -> report (one pilot).
+
+An agent is a client of the REST gateway and nothing more — it holds no
+head-service state, so any number of agents on any number of hosts can
+pull from one head.  While a payload runs, a background thread renews
+the lease at ``ttl / 3``; if the head declares the lease lost (409),
+the agent drops the job — the head has already requeued it, and a stale
+completion would be rejected with the same 409.
+
+Payloads resolve against the *local* registry
+(:mod:`repro.core.payloads`), exactly as PanDA pilots resolve
+transformation names on the worker node: the head ships names and
+params, never code.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import traceback
+import uuid
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import payloads as reg
+from repro.core.client import ConflictError, IDDSClient, IDDSClientError
+from repro.core.idds import AuthError
+
+
+def default_worker_id(suffix: str = "") -> str:
+    base = f"{socket.gethostname()}-{os.getpid()}"
+    return f"{base}{suffix}" if suffix else \
+        f"{base}-{uuid.uuid4().hex[:6]}"
+
+
+class WorkerAgent:
+    def __init__(self, url: str, *, token: str = "",
+                 worker_id: Optional[str] = None,
+                 queues: Optional[List[str]] = None,
+                 lease_ttl: float = 30.0, poll_interval: float = 0.25,
+                 client: Optional[IDDSClient] = None,
+                 verbose: bool = False):
+        self.worker_id = worker_id or default_worker_id()
+        self.client = client if client is not None else \
+            IDDSClient(url, token=token)
+        self.queues = list(queues) if queues else None
+        self.lease_ttl = lease_ttl
+        self.poll_interval = poll_interval
+        self.verbose = verbose
+        # counters (read by the pool/CLI for the exit summary)
+        self.jobs_done = 0
+        self.jobs_failed = 0
+        self.leases_lost = 0
+        self.transport_errors = 0
+
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(f"[{self.worker_id}] {msg}", flush=True)
+
+    # ---------------------------------------------------------- execution
+    def _execute(self, job: Dict[str, Any]) -> Tuple[Optional[Dict],
+                                                     Optional[str]]:
+        try:
+            fn = reg.get_payload(job["payload"])
+            return fn(dict(job["params"]), list(job["input_files"])), None
+        except Exception as e:  # noqa: BLE001 — becomes a reported failure
+            return None, f"{type(e).__name__}: {e}"
+
+    def process(self, job: Dict[str, Any]) -> bool:
+        """Execute one leased job under heartbeat renewal and report the
+        outcome; returns True unless the lease was lost mid-run."""
+        job_id = job["job_id"]
+        ttl = float(job.get("lease", {}).get("ttl", self.lease_ttl))
+        stop_hb = threading.Event()
+        lost = threading.Event()
+
+        def _renew() -> None:
+            while not stop_hb.wait(max(ttl / 3.0, 0.02)):
+                try:
+                    self.client.heartbeat_job(job_id, self.worker_id)
+                except ConflictError:
+                    lost.set()  # head requeued the job; stop renewing
+                    return
+                except (IDDSClientError, AuthError, OSError):
+                    # transient transport trouble: the lease may still be
+                    # live on the head — keep trying until it expires
+                    self.transport_errors += 1
+
+        hb = threading.Thread(target=_renew, daemon=True,
+                              name=f"hb-{self.worker_id}")
+        hb.start()
+        try:
+            result, error = self._execute(job)
+        finally:
+            stop_hb.set()
+        hb.join(timeout=2.0)
+        if lost.is_set():
+            self.leases_lost += 1
+            self._log(f"lease lost mid-run for {job_id} (requeued by head)")
+            return False
+        try:
+            self.client.complete_job(job_id, self.worker_id,
+                                     result=result, error=error)
+        except ConflictError:
+            # expired between last heartbeat and completion: the head
+            # already handed the job to someone else — drop it
+            self.leases_lost += 1
+            self._log(f"completion rejected for {job_id} (stale lease)")
+            return False
+        if error:
+            self.jobs_failed += 1
+            self._log(f"job {job_id} failed: {error}")
+        else:
+            self.jobs_done += 1
+            self._log(f"job {job_id} done (attempt {job['attempt']})")
+        return True
+
+    # --------------------------------------------------------------- loop
+    def run_once(self) -> bool:
+        """One lease attempt; returns True if a job was processed."""
+        job = self.client.lease_job(self.worker_id, queues=self.queues,
+                                    ttl=self.lease_ttl)
+        if job is None:
+            return False
+        self.process(job)
+        return True
+
+    def run(self, stop: threading.Event) -> None:
+        """Pull until ``stop`` is set.  Transport errors back off and
+        retry — a worker outliving a head restart reconnects by itself.
+        Auth failures are permanent (a bad or revoked token cannot heal
+        by retrying), so they stop the agent loudly instead."""
+        idle_wait = self.poll_interval
+        while not stop.is_set():
+            try:
+                worked = self.run_once()
+                idle_wait = self.poll_interval
+            except AuthError as e:
+                print(f"[{self.worker_id}] auth rejected by head, "
+                      f"stopping: {e}", flush=True)
+                return
+            except (IDDSClientError, OSError) as e:
+                self.transport_errors += 1
+                self._log(f"transport error: {e}")
+                worked = False
+                # capped backoff so a dead head isn't hammered
+                idle_wait = min(max(idle_wait * 2, self.poll_interval), 5.0)
+            except Exception:  # pragma: no cover — agent resilience
+                traceback.print_exc()
+                worked = False
+            if not worked:
+                stop.wait(idle_wait)
+
+    def stats(self) -> Dict[str, int]:
+        return {"jobs_done": self.jobs_done,
+                "jobs_failed": self.jobs_failed,
+                "leases_lost": self.leases_lost,
+                "transport_errors": self.transport_errors}

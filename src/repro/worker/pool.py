@@ -1,0 +1,58 @@
+"""Multi-agent worker pool: N concurrent lease loops in one process.
+
+Each agent gets its own worker_id (``<base>-w<i>``) so the head's
+worker registry and lease table see them as distinct pilots; payload
+execution happens on the agent threads, so ``concurrency`` bounds how
+many payloads this process runs at once.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from repro.worker.agent import WorkerAgent, default_worker_id
+
+
+class WorkerPool:
+    def __init__(self, url: str, *, concurrency: int = 2,
+                 worker_id: Optional[str] = None, **agent_kwargs):
+        if concurrency < 1:
+            raise ValueError("concurrency must be >= 1")
+        base = worker_id or default_worker_id()
+        self.agents: List[WorkerAgent] = [
+            WorkerAgent(url, worker_id=f"{base}-w{i}", **agent_kwargs)
+            for i in range(concurrency)
+        ]
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+
+    def start(self) -> "WorkerPool":
+        if self._threads:
+            raise RuntimeError("pool already started")
+        self._stop.clear()
+        for agent in self.agents:
+            t = threading.Thread(target=agent.run, args=(self._stop,),
+                                 name=agent.worker_id, daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=timeout)
+        self._threads.clear()
+
+    def __enter__(self) -> "WorkerPool":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def stats(self) -> Dict[str, int]:
+        """Aggregate counters across the pool's agents."""
+        out: Dict[str, int] = {}
+        for agent in self.agents:
+            for k, v in agent.stats().items():
+                out[k] = out.get(k, 0) + v
+        return out

@@ -1,0 +1,399 @@
+"""Lease scheduler: priority dispatch, throttling, expiry/requeue
+races, attempt accounting, idempotent leasing, and head-crash recovery
+of orphaned leases (the distributed execution plane, head side)."""
+import pytest
+
+from repro.core import messaging as M
+from repro.core import payloads as reg
+from repro.core.idds import IDDS
+from repro.core.scheduler import (DistributedWFM, JobScheduler,
+                                  SchedulerConflict)
+from repro.core.store import InMemoryStore, SqliteStore
+from repro.core.workflow import (Processing, ProcessingStatus, Workflow,
+                                 WorkTemplate)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _sched(**kw):
+    clock = FakeClock()
+    kw.setdefault("default_ttl", 10.0)
+    s = JobScheduler(clock=clock, **kw)
+    s.attach(InMemoryStore())
+    return s, clock
+
+
+def _proc(pid, priority=0, queue="default", max_attempts=3):
+    return Processing(proc_id=pid, work_id="w", payload="noop",
+                      params={"priority": priority, "queue": queue},
+                      max_attempts=max_attempts)
+
+
+# -------------------------------------------------------------- dispatch
+
+def test_priority_order():
+    s, _ = _sched()
+    for pid, pr in (("lo", 0), ("hi", 9), ("mid", 4)):
+        s.enqueue(_proc(pid, priority=pr))
+    order = [s.lease("w1")["job_id"] for _ in range(3)]
+    assert order == ["hi", "mid", "lo"]
+    assert s.lease("w1") is None
+
+
+def test_fifo_within_priority():
+    s, _ = _sched()
+    for pid in ("a", "b", "c"):
+        s.enqueue(_proc(pid))
+    assert [s.lease("w")["job_id"] for _ in range(3)] == ["a", "b", "c"]
+
+
+def test_queue_caps_throttle_leases():
+    s, _ = _sched(queue_caps={"default": 1})
+    s.enqueue(_proc("p1"))
+    s.enqueue(_proc("p2"))
+    job = s.lease("w1")
+    assert job["job_id"] == "p1"
+    assert s.lease("w2") is None  # queue at its outstanding-lease cap
+    s.complete("p1", "w1", result={})
+    assert s.lease("w2")["job_id"] == "p2"
+
+
+def test_queue_routing():
+    s, _ = _sched()
+    s.enqueue(_proc("gpu-job", queue="gpu"))
+    s.enqueue(_proc("cpu-job", queue="cpu"))
+    assert s.lease("w1", queues=["gpu"])["job_id"] == "gpu-job"
+    assert s.lease("w1", queues=["gpu"]) is None
+    assert s.lease("w1", queues=["cpu", "gpu"])["job_id"] == "cpu-job"
+
+
+def test_duplicate_enqueue_is_idempotent():
+    s, _ = _sched()
+    p = _proc("p1")
+    s.enqueue(p)
+    s.enqueue(p)  # duplicate bus delivery
+    assert s.lease("w")["job_id"] == "p1"
+    assert s.lease("w") is None
+
+
+def test_lease_payload_shape():
+    s, _ = _sched()
+    p = Processing(proc_id="p1", work_id="w", payload="noop",
+                   params={"x": 1}, input_files=["f0"], max_attempts=2)
+    s.enqueue(p)
+    job = s.lease("w1", ttl=5.0)
+    assert job["payload"] == "noop"
+    assert job["params"] == {"x": 1}
+    assert job["input_files"] == ["f0"]
+    assert job["attempt"] == 1 and job["max_attempts"] == 2
+    assert job["lease"]["ttl"] == 5.0
+    assert job["lease"]["worker_id"] == "w1"
+    assert p.status == ProcessingStatus.RUNNING
+
+
+# --------------------------------------------------- expiry and heartbeats
+
+def test_heartbeat_renews_lease():
+    s, clock = _sched(default_ttl=10.0)
+    s.enqueue(_proc("p1"))
+    s.lease("w1")
+    clock.advance(8)
+    s.heartbeat("p1", "w1")
+    clock.advance(8)  # t=16: original deadline long gone, renewed holds
+    assert s.expire() == 0
+    s.complete("p1", "w1", result={})
+    assert s.take_outcome("p1")[0] == "finished"
+
+
+def test_expiry_requeues_exactly_once_with_attempt_accounting():
+    s, clock = _sched(default_ttl=10.0)
+    s.enqueue(_proc("p1"))
+    job = s.lease("w1")
+    assert job["attempt"] == 1
+    clock.advance(11)
+    assert s.expire() == 1
+    assert s.expire() == 0  # requeued exactly once
+    job2 = s.lease("w2")
+    assert job2["job_id"] == "p1"
+    assert job2["attempt"] == 2  # expiry consumed an attempt
+
+
+def test_stale_worker_completion_is_conflict_with_no_state_change():
+    s, clock = _sched(default_ttl=10.0)
+    s.enqueue(_proc("p1"))
+    s.lease("w1")
+    clock.advance(11)  # w1's lease expires; job requeued
+    job = s.lease("w2")
+    assert job["job_id"] == "p1"
+    with pytest.raises(SchedulerConflict):
+        s.complete("p1", "w1", result={"stale": True})
+    assert s.take_outcome("p1") is None  # no state change
+    s.complete("p1", "w2", result={"fresh": True})
+    assert s.take_outcome("p1") == ("finished", {"fresh": True}, None, 2)
+
+
+def test_stale_heartbeat_is_conflict():
+    s, clock = _sched(default_ttl=10.0)
+    s.enqueue(_proc("p1"))
+    s.lease("w1")
+    clock.advance(11)
+    with pytest.raises(SchedulerConflict):
+        s.heartbeat("p1", "w1")
+
+
+def test_double_completion_same_worker_is_idempotent():
+    s, _ = _sched()
+    s.enqueue(_proc("p1"))
+    s.lease("w1")
+    r1 = s.complete("p1", "w1", result={"x": 1})
+    r2 = s.complete("p1", "w1", result={"x": 1})  # retried POST
+    assert r1["duplicate"] is False and r2["duplicate"] is True
+    # the outcome is delivered once and counters aren't double-bumped
+    assert s.take_outcome("p1") == ("finished", {"x": 1}, None, 1)
+    assert s.take_outcome("p1") is None
+    (w,) = [w for w in s.workers() if w["worker_id"] == "w1"]
+    assert w["jobs_completed"] == 1
+
+
+def test_expiry_exhausts_attempts_into_failed_outcome():
+    s, clock = _sched(default_ttl=10.0)
+    s.enqueue(_proc("p1", max_attempts=2))
+    s.lease("w1")
+    clock.advance(11)
+    s.expire()  # attempt 1 -> 2, requeued
+    s.lease("w2")
+    clock.advance(11)
+    s.expire()  # attempts exhausted -> terminal failure
+    status, result, error, attempt = s.take_outcome("p1")
+    assert status == "failed" and attempt == 2
+    assert "lease expired" in error
+    assert s.lease("w3") is None
+
+
+def test_worker_reported_error_becomes_failed_outcome():
+    s, _ = _sched()
+    s.enqueue(_proc("p1"))
+    s.lease("w1")
+    s.complete("p1", "w1", error="ValueError: boom")
+    assert s.take_outcome("p1") == ("failed", None, "ValueError: boom", 1)
+
+
+def test_idempotency_key_replays_same_job():
+    s, _ = _sched()
+    s.enqueue(_proc("p1"))
+    s.enqueue(_proc("p2"))
+    j1 = s.lease("w1", idempotency_key="k1")
+    j1b = s.lease("w1", idempotency_key="k1")  # retried request
+    assert j1["job_id"] == j1b["job_id"] == "p1"
+    assert j1b["lease"]["lease_id"] == j1["lease"]["lease_id"]
+    assert s.lease("w1", idempotency_key="k2")["job_id"] == "p2"
+
+
+def test_lease_requires_worker_and_positive_ttl():
+    s, _ = _sched()
+    with pytest.raises(ValueError):
+        s.lease("")
+    with pytest.raises(ValueError):
+        s.lease("w", ttl=0)
+
+
+def test_active_leases_counts_concurrent_holds():
+    """Completing one of two concurrent leases leaves the other counted
+    (regression: complete() used to decrement active_leases twice)."""
+    s, _ = _sched()
+    s.enqueue(_proc("p1"))
+    s.enqueue(_proc("p2"))
+    s.lease("w1")
+    s.lease("w1")
+    (w,) = s.workers()
+    assert w["active_leases"] == 2
+    s.complete("p1", "w1", result={})
+    (w,) = s.workers()
+    assert w["active_leases"] == 1
+    s.complete("p2", "w1", result={})
+    (w,) = s.workers()
+    assert w["active_leases"] == 0
+
+
+def test_idempotency_keys_do_not_accumulate():
+    """Keys die with their lease (regression: the key map used to grow
+    by one entry per lease ever granted)."""
+    s, _ = _sched()
+    for i in range(5):
+        s.enqueue(_proc(f"p{i}"))
+    for i in range(5):
+        s.lease("w1", idempotency_key=f"k{i}")
+        s.complete(f"p{i}", "w1", result={})
+    assert len(s._lease_keys) == 0
+
+
+def test_workers_registry_and_connectivity():
+    s, clock = _sched(worker_ttl=60.0)
+    s.enqueue(_proc("p1"))
+    s.lease("w1")
+    s.lease("w2")  # nothing left, but the worker is now known
+    assert s.worker_count() == 2
+    clock.advance(120)
+    assert s.worker_count() == 0
+    stale = {w["worker_id"]: w["connected"] for w in s.workers()}
+    assert stale == {"w1": False, "w2": False}
+
+
+def test_worker_registry_prunes_stale_entries():
+    """Long-silent workers with nothing leased drop out of the registry
+    (worker ids embed pids, so churn would otherwise grow it forever)."""
+    s, clock = _sched(worker_ttl=10.0)
+    s.lease("ghost")  # registers, leases nothing (empty queue)
+    clock.advance(150)  # > 10x worker_ttl
+    s.lease("fresh")
+    assert {w["worker_id"] for w in s.workers()} == {"fresh"}
+
+
+def test_shutdown_stops_leasing():
+    s, _ = _sched()
+    s.enqueue(_proc("p1"))
+    s.shutdown()
+    assert s.lease("w1") is None
+
+
+# --------------------------------------- DistributedWFM through the daemons
+
+def _drain_as_worker(idds, worker_id="wk"):
+    """Act as an in-process worker against the head's scheduler."""
+    done = 0
+    sched = idds.scheduler
+    while True:
+        job = sched.lease(worker_id)
+        if job is None:
+            return done
+        fn = reg.get_payload(job["payload"])
+        sched.complete(job["job_id"], worker_id,
+                       result=fn(job["params"], job["input_files"]))
+        done += 1
+
+
+def test_distributed_wfm_executes_via_leases():
+    idds = IDDS(executor=DistributedWFM())
+    wf = Workflow(name="dist")
+    wf.add_template(WorkTemplate(name="n", payload="noop"))
+    wf.add_initial("n", {"x": 1})
+    wf.add_initial("n", {"x": 2})
+    rid = idds.submit_workflow(wf)
+    idds.pump()  # quiesces with 2 jobs pending (nothing executes inline)
+    assert idds.request_status(rid)["status"] == "running"
+    assert _drain_as_worker(idds) == 2
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["status"] == "finished"
+    assert info["works"] == {"finished": 2}
+    assert idds.stats["jobs_leased"] == 2
+
+
+def test_distributed_worker_failure_uses_carrier_retries():
+    """A worker-reported error flows through the Carrier's retry path:
+    re-submission, attempt + 1, success on the retry."""
+    idds = IDDS(executor=DistributedWFM())
+    wf = Workflow(name="retry")
+    wf.add_template(WorkTemplate(name="n", payload="noop",
+                                 max_attempts=3))
+    wf.add_initial("n", {})
+    rid = idds.submit_workflow(wf)
+    idds.pump()
+    sched = idds.scheduler
+    job = sched.lease("bad-worker")
+    sched.complete(job["job_id"], "bad-worker", error="RuntimeError: x")
+    idds.pump()  # Carrier consumes the failure and resubmits
+    job2 = sched.lease("good-worker")
+    assert job2["job_id"] == job["job_id"]
+    assert job2["attempt"] == 2
+    sched.complete(job2["job_id"], "good-worker", result={"ok": True})
+    idds.pump()
+    assert idds.request_status(rid)["status"] == "finished"
+    assert idds.stats["job_retries"] == 1
+
+
+# ------------------------------------------------------------- recovery
+
+def test_recover_requeues_orphaned_leases(tmp_path):
+    """Head crash mid-lease: the journaled lease is orphaned, recover()
+    requeues the job, the stale worker's completion gets a conflict, and
+    the job is executed exactly once (by the new holder)."""
+    path = str(tmp_path / "head.db")
+    idds = IDDS(store=SqliteStore(path), executor=DistributedWFM())
+    wf = Workflow(name="crash")
+    wf.add_template(WorkTemplate(name="n", payload="noop"))
+    wf.add_initial("n", {"x": 7})
+    rid = idds.submit_workflow(wf)
+    idds.pump()
+    job = idds.scheduler.lease("doomed-worker")
+    assert job is not None
+    assert len(idds.store.load_leases()) == 1
+    idds.ctx.store.close()  # crash: lease row survives in the store
+
+    fresh = IDDS(store=SqliteStore(path), executor=DistributedWFM())
+    counts = fresh.recover()
+    assert counts["orphaned_leases"] == 1
+    assert counts["requeued_processings"] == 1
+    assert fresh.store.load_leases() == []  # second recover finds none
+    fresh.pump()
+    # the dead head's worker reports against the new head: rejected
+    with pytest.raises(SchedulerConflict):
+        fresh.scheduler.complete(job["job_id"], "doomed-worker",
+                                 result={})
+    executed = _drain_as_worker(fresh, "survivor")
+    assert executed == 1  # exactly once, by the new lease holder
+    fresh.pump()
+    info = fresh.request_status(rid)
+    assert info["status"] == "finished"
+    assert info["works"] == {"finished": 1}
+    fresh.close()
+
+
+def test_store_lease_roundtrip_both_backends(tmp_path):
+    rows = [{"job_id": "p1", "lease_id": "l1", "worker_id": "w1",
+             "queue": "default", "attempt": 1, "ttl": 30.0,
+             "expires_at": 123.0}]
+    for store in (InMemoryStore(),
+                  SqliteStore(str(tmp_path / "leases.db"))):
+        store.save_lease(rows[0])
+        store.save_lease({**rows[0], "worker_id": "w2"})  # upsert
+        loaded = store.load_leases()
+        assert len(loaded) == 1 and loaded[0]["worker_id"] == "w2"
+        store.delete_lease("p1")
+        store.delete_lease("p1")  # idempotent
+        assert store.load_leases() == []
+        store.close()
+
+
+# ----------------------------------------------------- blocking bus waits
+
+def test_wait_any_wakes_on_publish():
+    import threading
+    import time as _time
+    bus = M.MessageBus()
+
+    def _publish_later():
+        _time.sleep(0.05)
+        bus.publish(M.T_NEW_WORKS, {"work_id": "w"})
+
+    threading.Thread(target=_publish_later, daemon=True).start()
+    t0 = _time.perf_counter()
+    woke = bus.wait_any((M.T_NEW_WORKFLOWS, M.T_NEW_WORKS), timeout=5.0)
+    elapsed = _time.perf_counter() - t0
+    assert woke is True
+    assert elapsed < 2.0  # condition wakeup, not a full timeout sleep
+    assert bus.depth(M.T_NEW_WORKS) == 1  # wait_any consumes nothing
+
+
+def test_wait_any_times_out_quickly_when_idle():
+    bus = M.MessageBus()
+    assert bus.wait_any((M.T_NEW_WORKS,), timeout=0.01) is False

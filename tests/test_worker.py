@@ -1,0 +1,336 @@
+"""Execution plane over the wire: REST lease lifecycle, 409 envelopes,
+the client retry policy, and the e2e acceptance path — a workflow
+submitted over REST completed by two separate worker *processes*."""
+import http.client
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import pytest
+
+from repro.core.client import ConflictError, IDDSClient, IDDSClientError
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+from repro.core.scheduler import DistributedWFM
+from repro.core.workflow import Workflow, WorkTemplate
+from repro.worker import WorkerAgent, WorkerPool
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _sleep_workflow(n_jobs, ms=40, priority=0):
+    wf = Workflow(name="worker-e2e")
+    wf.add_template(WorkTemplate(
+        name="s", payload="sleep_ms",
+        defaults={"ms": ms, "priority": priority}))
+    for _ in range(n_jobs):
+        wf.add_initial("s", {})
+    return wf
+
+
+@pytest.fixture
+def dist_gateway():
+    gw = RestGateway(IDDS(executor=DistributedWFM(lease_ttl=5.0)))
+    gw.start()
+    yield gw
+    gw.stop()
+
+
+def _lease_with_retry(client, worker_id, timeout=10.0, **kw):
+    """Lease once the daemons have dispatched the submitted workflow."""
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        job = client.lease_job(worker_id, **kw)
+        if job is not None:
+            return job
+        time.sleep(0.02)
+    raise TimeoutError("no job became leasable")
+
+
+# ------------------------------------------------------------ REST surface
+
+def test_lease_execute_complete_over_rest(dist_gateway):
+    client = IDDSClient(dist_gateway.url)
+    rid = client.submit_workflow(_sleep_workflow(1, ms=1))
+    job = _lease_with_retry(client, "rest-w1")
+    assert job["payload"] == "sleep_ms"
+    hb = client.heartbeat_job(job["job_id"], "rest-w1")
+    assert hb["ok"] is True
+    r = client.complete_job(job["job_id"], "rest-w1",
+                            result={"ok": True, "slept_ms": 1})
+    assert r["ok"] is True and r["duplicate"] is False
+    info = client.wait(rid, timeout=30)
+    assert info["works"] == {"finished": 1}
+    workers = client.list_workers()
+    assert workers["connected"] == 1
+    (w,) = workers["workers"]
+    assert w["worker_id"] == "rest-w1" and w["jobs_completed"] == 1
+
+
+def test_worker_agent_drives_workflow(dist_gateway):
+    client = IDDSClient(dist_gateway.url)
+    rid = client.submit_workflow(_sleep_workflow(3, ms=5))
+    agent = WorkerAgent(dist_gateway.url, worker_id="agent-1",
+                        poll_interval=0.02)
+    deadline = time.time() + 30
+    while client.status(rid)["status"] != "finished":
+        agent.run_once() or time.sleep(0.02)
+        assert time.time() < deadline
+    assert agent.jobs_done == 3
+
+
+def test_stale_completion_is_409_envelope(dist_gateway):
+    client = IDDSClient(dist_gateway.url)
+    client.submit_workflow(_sleep_workflow(1, ms=1))
+    job = _lease_with_retry(client, "victim", ttl=0.2)
+    time.sleep(0.4)  # lease expires; head requeues the job
+    job2 = _lease_with_retry(client, "thief")
+    assert job2["job_id"] == job["job_id"]
+    assert job2["attempt"] == job["attempt"] + 1
+    # raw wire check: exactly a 409 with a Conflict envelope
+    conn = http.client.HTTPConnection(dist_gateway.host,
+                                      dist_gateway.port, timeout=5)
+    conn.request("POST", f"/jobs/{job['job_id']}/complete",
+                 body=json.dumps({"worker_id": "victim",
+                                  "result": {}}).encode())
+    resp = conn.getresponse()
+    assert resp.status == 409
+    assert json.loads(resp.read())["error"]["type"] == "Conflict"
+    conn.close()
+    # typed SDK path raises ConflictError without retrying
+    with pytest.raises(ConflictError):
+        client.complete_job(job["job_id"], "victim", result={})
+    # ...and the fresh holder still completes cleanly: no state change
+    r = client.complete_job(job2["job_id"], "thief", result={"ok": True})
+    assert r["ok"] is True
+
+
+def test_requeued_exactly_once_after_expiry(dist_gateway):
+    client = IDDSClient(dist_gateway.url)
+    client.submit_workflow(_sleep_workflow(1, ms=1))
+    _lease_with_retry(client, "dying", ttl=0.2)
+    time.sleep(0.5)
+    assert _lease_with_retry(client, "w2") is not None
+    assert client.lease_job("w3") is None  # requeued once, not twice
+
+
+def test_jobs_endpoints_require_distributed_mode():
+    with RestGateway(IDDS()) as gw:  # inline executor
+        client = IDDSClient(gw.url)
+        with pytest.raises(IDDSClientError) as ei:
+            client.lease_job("w1")
+        assert ei.value.status == 400
+        assert ei.value.type == "NotDistributed"
+        workers = client.list_workers()
+        assert workers == {"workers": [], "connected": 0,
+                           "distributed": False}
+
+
+def test_lease_validation_envelopes(dist_gateway):
+    conn = http.client.HTTPConnection(dist_gateway.host,
+                                      dist_gateway.port, timeout=5)
+    for body in (b"{not json", b'{"queues": ["a"]}',
+                 b'{"worker_id": "w", "queues": "a"}',
+                 b'{"worker_id": "w", "lease_ttl": -1}'):
+        conn.request("POST", "/jobs/lease", body=body)
+        resp = conn.getresponse()
+        assert resp.status == 400, body
+        assert json.loads(resp.read())["error"]["type"] == "BadRequest"
+    # heartbeat/complete validate worker_id the same way as lease: a
+    # non-string worker_id is a 400 envelope, not a 500
+    for path in ("/jobs/x/heartbeat", "/jobs/x/complete"):
+        for body in (b"{}", b'{"worker_id": ["w1"]}',
+                     b'{"worker_id": 5}'):
+            conn.request("POST", path, body=body)
+            resp = conn.getresponse()
+            assert resp.status == 400, (path, body)
+            env = json.loads(resp.read())["error"]
+            assert env["type"] == "BadRequest", (path, body)
+    conn.close()
+
+
+def test_agent_stops_on_auth_failure():
+    """A worker with a bad token must stop, not retry forever."""
+    with RestGateway(IDDS(tokens={"right"},
+                          executor=DistributedWFM())) as gw:
+        agent = WorkerAgent(gw.url, token="wrong", worker_id="badtok",
+                            poll_interval=0.01)
+        stop = threading.Event()
+        t = threading.Thread(target=agent.run, args=(stop,), daemon=True)
+        t.start()
+        t.join(timeout=5)
+        assert not t.is_alive()  # exited by itself, stop never set
+        stop.set()
+
+
+def test_healthz_reports_execution_plane(dist_gateway):
+    client = IDDSClient(dist_gateway.url)
+    h = client.healthz()
+    assert h["store"] == "InMemoryStore"
+    assert h["distributed"] is True
+    assert h["workers_connected"] == 0
+    assert h["daemons"] == {"clerk": True, "marshaller": True,
+                            "transformer": True, "carrier": True,
+                            "conductor": True}
+    client.lease_job("probe")  # empty lease still registers the worker
+    assert client.healthz()["workers_connected"] == 1
+
+
+def test_priority_orders_lease_dispatch(dist_gateway):
+    client = IDDSClient(dist_gateway.url)
+    client.submit_workflow(_sleep_workflow(1, ms=1, priority=1))
+    client.submit_workflow(_sleep_workflow(1, ms=1, priority=9))
+    # wait until both jobs are queued (GET /workers exposes depths)...
+    deadline = time.time() + 10
+    while True:
+        depths = client.list_workers().get("queues", {})
+        if depths.get("default", {}).get("pending", 0) >= 2:
+            break
+        assert time.time() < deadline
+        time.sleep(0.02)
+    # ...then the high-priority one must lease first
+    first = _lease_with_retry(client, "w1")
+    assert first["priority"] == 9
+
+
+# --------------------------------------------------------- client retries
+
+class _FlakyHandler(BaseHTTPRequestHandler):
+    """Counts hits; returns 500 for the first ``fail_first`` requests
+    per path, then 200 with a JSON body."""
+    hits = {}
+    fail_first = 1
+
+    def log_message(self, *a):  # noqa: A003
+        pass
+
+    def _serve(self):
+        n = self.hits.get(self.path, 0) + 1
+        self.hits[self.path] = n
+        length = int(self.headers.get("Content-Length", 0) or 0)
+        if length:
+            self.rfile.read(length)
+        if n <= self.fail_first:
+            payload = json.dumps(
+                {"error": {"type": "Boom", "message": "transient"}})
+            code = 500
+        else:
+            payload = json.dumps({"ok": True, "hits": n})
+            code = 200
+        data = payload.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    do_GET = _serve
+    do_POST = _serve
+
+
+@pytest.fixture
+def flaky_server():
+    _FlakyHandler.hits = {}
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), _FlakyHandler)
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    yield f"http://127.0.0.1:{httpd.server_address[1]}"
+    httpd.shutdown()
+    httpd.server_close()
+
+
+def test_idempotent_get_retries_5xx(flaky_server):
+    client = IDDSClient(flaky_server, retries=3, backoff=0.01)
+    assert client._get("/stats")["ok"] is True
+    assert _FlakyHandler.hits["/stats"] == 2  # one 500, one retry
+
+
+def test_non_idempotent_post_never_retries_5xx(flaky_server):
+    client = IDDSClient(flaky_server, retries=3, backoff=0.01)
+    with pytest.raises(IDDSClientError) as ei:
+        client._post("/mutate", {"x": 1})  # idempotent=False default
+    assert "not retried" in str(ei.value)
+    # the real HTTP status and server error type survive the wrap
+    assert ei.value.status == 500 and ei.value.type == "Boom"
+    assert _FlakyHandler.hits["/mutate"] == 1  # exactly one attempt
+
+
+def test_opt_in_idempotent_post_retries_5xx(flaky_server):
+    client = IDDSClient(flaky_server, retries=3, backoff=0.01)
+    assert client._post("/jobs/lease", {"worker_id": "w"},
+                        idempotent=True)["ok"] is True
+    assert _FlakyHandler.hits["/jobs/lease"] == 2
+
+
+def test_non_idempotent_post_never_retries_connection_error():
+    # nothing listens here: connection refused on the first try
+    client = IDDSClient("http://127.0.0.1:9", retries=3, backoff=0.01)
+    t0 = time.perf_counter()
+    with pytest.raises(IDDSClientError) as ei:
+        client._post("/mutate", {"x": 1})
+    assert "not retried" in str(ei.value)
+    assert time.perf_counter() - t0 < 2.0  # no backoff sleeps happened
+
+
+# ------------------------------------------------------- e2e (acceptance)
+
+def test_workflow_completed_by_two_worker_processes(dist_gateway):
+    """Acceptance: a workflow submitted over REST finishes with its
+    processings executed by >= 2 separate worker processes pulling over
+    the wire."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "repro.worker",
+         "--url", dist_gateway.url, "--concurrency", "2",
+         "--poll-interval", "0.05", "--worker-id", f"e2e-proc{i}"],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True) for i in range(2)]
+    try:
+        client = IDDSClient(dist_gateway.url)
+        rid = client.submit_workflow(_sleep_workflow(10, ms=60))
+        info = client.wait(rid, timeout=90)
+        assert info["status"] == "finished"
+        assert info["works"] == {"finished": 10}
+        by_process = {}
+        for w in client.list_workers()["workers"]:
+            prefix = w["worker_id"].rsplit("-w", 1)[0]
+            by_process[prefix] = (by_process.get(prefix, 0)
+                                  + w["jobs_completed"])
+        assert sum(by_process.values()) == 10
+        assert sum(1 for v in by_process.values() if v > 0) >= 2, \
+            by_process
+    finally:
+        for p in procs:
+            p.send_signal(signal.SIGTERM)
+        for p in procs:
+            out, _ = p.communicate(timeout=20)
+            assert p.returncode == 0, out[-2000:]
+
+
+def test_worker_killed_mid_job_lease_expires_and_requeues(dist_gateway):
+    """Worker dies mid-job: its lease expires, the head requeues the job
+    exactly once, and a surviving in-process pool finishes the work."""
+    client = IDDSClient(dist_gateway.url)
+    rid = client.submit_workflow(_sleep_workflow(1, ms=1))
+    victim_job = _lease_with_retry(client, "victim", ttl=0.3)
+    # "kill" the victim: it simply never heartbeats or completes
+    time.sleep(0.6)
+    with WorkerPool(dist_gateway.url, concurrency=1,
+                    worker_id="survivor", poll_interval=0.02):
+        info = client.wait(rid, timeout=30)
+    assert info["works"] == {"finished": 1}
+    workers = {w["worker_id"]: w for w in client.list_workers()["workers"]}
+    assert workers["survivor-w0"]["jobs_completed"] == 1
+    assert workers["victim"]["jobs_completed"] == 0
+    # the job ran once on the survivor with the expiry's attempt bump
+    wf = client.get_workflow(rid)
+    (work,) = wf.works.values()
+    assert work.result["ok"] is True
+    assert victim_job["attempt"] == 1
