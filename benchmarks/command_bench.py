@@ -1,0 +1,81 @@
+"""Benchmark: lifecycle-command round-trip latency.
+
+Measures the steering plane an operator leans on in an incident: the
+wall time from ``POST /v1/requests/<id>/commands`` to the Commander
+journaling the command ``done`` (suspend->resume pairs against live
+requests over the wire).  Reports p50/p95 round-trip latency and
+commands/sec per client count, in the same keys-header-then-CSV-rows
+shape as the other benchmarks driven by benchmarks/run.py.
+
+    PYTHONPATH=src python -m benchmarks.command_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+from benchmarks.rest_bench import _percentile
+from repro.core.client import IDDSClient
+from repro.core.idds import IDDS
+from repro.core.requests import Request
+from repro.core.rest import RestGateway
+from repro.core.spec import WorkflowSpec
+
+KEYS = ["requests", "commands", "wall_s", "cmd_per_s",
+        "rt_p50_ms", "rt_p95_ms"]
+
+
+def _request_json() -> str:
+    spec = WorkflowSpec("cmd-bench")
+    # a long-sleeping work keeps the request steerable for the whole run
+    spec.work("s", payload="sleep_ms", defaults={"ms": 2000}, start={})
+    return Request(workflow=spec.build()).to_json()
+
+
+def run_one(n_requests: int, *, pairs_per_request: int = 4) -> Dict:
+    """suspend/resume round trips against ``n_requests`` live requests."""
+    with RestGateway(IDDS(sync=False, max_workers=4)) as gw:
+        client = IDDSClient(gw.url)
+        rids = [client.submit(_request_json()) for _ in range(n_requests)]
+        lats: List[float] = []
+        t0 = time.perf_counter()
+        for rid in rids:
+            for _ in range(pairs_per_request):
+                for action in ("suspend", "resume"):
+                    t1 = time.perf_counter()
+                    cmd = client.command(rid, action, wait=True)
+                    lats.append(time.perf_counter() - t1)
+                    assert cmd["status"] == "done", cmd
+        wall = time.perf_counter() - t0
+        for rid in rids:  # leave no live payloads behind
+            client.abort(rid, wait=True)
+        return {
+            "requests": n_requests,
+            "commands": len(lats),
+            "wall_s": round(wall, 3),
+            "cmd_per_s": round(len(lats) / wall, 1),
+            "rt_p50_ms": round(_percentile(lats, 0.50) * 1e3, 2),
+            "rt_p95_ms": round(_percentile(lats, 0.95) * 1e3, 2),
+        }
+
+
+def run(request_counts=(1, 4), *, pairs_per_request: int = 4) -> List[Dict]:
+    return [run_one(n, pairs_per_request=pairs_per_request)
+            for n in request_counts]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rows = run((1,) if args.quick else (1, 4),
+               pairs_per_request=2 if args.quick else 4)
+    print(",".join(KEYS))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in KEYS))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

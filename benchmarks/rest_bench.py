@@ -106,11 +106,10 @@ def run_one(n_clients: int, *, per_client: int = 25,
 
 def _make_request_json() -> str:
     from repro.core.requests import Request
-    from repro.core.workflow import Workflow, WorkTemplate
-    wf = Workflow(name="bench")
-    wf.add_template(WorkTemplate(name="n", payload="noop"))
-    wf.add_initial("n", {})
-    return Request(workflow=wf).to_json()
+    from repro.core.spec import WorkflowSpec
+    spec = WorkflowSpec("bench")
+    spec.work("n", payload="noop", start={})
+    return Request(workflow=spec.build()).to_json()
 
 
 def run(client_counts=(1, 4, 8), *, per_client: int = 25,

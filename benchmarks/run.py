@@ -11,6 +11,8 @@ Sections:
   store      §2        persistence overhead: in-memory vs SQLite catalogs
   train      §3.1      carousel-fed training micro-run (loss goes down)
   rest       §2        REST gateway submission throughput + poll latency
+  command    §2        steering plane: lifecycle-command round-trip
+                       latency (suspend/resume over the wire)
   worker     §2        distributed execution plane: jobs/sec vs worker
                        count + lease-renewal overhead
   roofline   —         per-cell roofline terms from the dry-run sweep
@@ -123,6 +125,13 @@ def main(argv=None) -> int:
         client_counts=(1, 4) if smoke else (1, 4, 8),
         per_client=5 if smoke else 10 if quick else 25)
     _print_rows(rest_bench.KEYS, results["rest"])
+
+    _section("command (steering plane round-trip latency)")
+    from benchmarks import command_bench
+    results["command"] = command_bench.run(
+        (1,) if smoke else (1, 4),
+        pairs_per_request=2 if quick else 4)
+    _print_rows(command_bench.KEYS, results["command"])
 
     _section("worker (distributed execution plane)")
     from benchmarks import worker_bench

@@ -19,18 +19,17 @@ from typing import Dict, List
 
 from repro.core.idds import IDDS
 from repro.core.requests import Request
+from repro.core.spec import WorkflowSpec
 from repro.core.store import InMemoryStore, SqliteStore
-from repro.core.workflow import Workflow, WorkTemplate
 
 KEYS = ["store", "submissions", "submit_wall_s", "submit_per_s",
         "pump_wall_s", "e2e_per_s", "recover_s", "recovered_works"]
 
 
 def _make_request_json() -> str:
-    wf = Workflow(name="store-bench")
-    wf.add_template(WorkTemplate(name="n", payload="noop"))
-    wf.add_initial("n", {})
-    return Request(workflow=wf).to_json()
+    spec = WorkflowSpec("store-bench")
+    spec.work("n", payload="noop", start={})
+    return Request(workflow=spec.build()).to_json()
 
 
 def run_one(kind: str, n: int, workdir: str) -> Dict:

@@ -20,7 +20,8 @@ from repro.core.client import IDDSClient
 from repro.core.idds import IDDS
 from repro.core.rest import RestGateway
 from repro.core.scheduler import DistributedWFM
-from repro.core.workflow import Processing, Workflow, WorkTemplate
+from repro.core.spec import WorkflowSpec
+from repro.core.workflow import Processing, Workflow
 from repro.worker import WorkerPool
 
 KEYS = ["workers", "jobs", "sleep_ms", "wall_s", "jobs_per_s",
@@ -28,12 +29,10 @@ KEYS = ["workers", "jobs", "sleep_ms", "wall_s", "jobs_per_s",
 
 
 def _workflow(n_jobs: int, sleep_ms: float) -> Workflow:
-    wf = Workflow(name="worker-bench")
-    wf.add_template(WorkTemplate(name="s", payload="sleep_ms",
-                                 defaults={"ms": sleep_ms}))
-    for _ in range(n_jobs):
-        wf.add_initial("s", {})
-    return wf
+    spec = WorkflowSpec("worker-bench")
+    spec.work("s", payload="sleep_ms", defaults={"ms": sleep_ms},
+              start=[{} for _ in range(n_jobs)])
+    return spec.build()
 
 
 def throughput(worker_counts=(1, 2, 4), jobs: int = 16,

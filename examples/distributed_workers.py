@@ -17,7 +17,8 @@ from repro.core.client import IDDSClient
 from repro.core.idds import IDDS
 from repro.core.rest import RestGateway
 from repro.core.scheduler import DistributedWFM
-from repro.core.workflow import Workflow, WorkTemplate
+from repro.core.spec import WorkflowSpec
+from repro.core.workflow import Workflow
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 N_JOBS = 8
@@ -28,12 +29,10 @@ def build_workflow() -> Workflow:
     # sleep_ms is a built-in payload, so the worker processes need no
     # --payloads module; real deployments register their own on both
     # head (for validation) and workers (for execution)
-    wf = Workflow(name="distributed-quickstart")
-    wf.add_template(WorkTemplate(name="crunch", payload="sleep_ms",
-                                 defaults={"ms": 60}))
-    for _ in range(N_JOBS):
-        wf.add_initial("crunch", {})
-    return wf
+    spec = WorkflowSpec("distributed-quickstart")
+    spec.work("crunch", payload="sleep_ms", defaults={"ms": 60},
+              start=[{} for _ in range(N_JOBS)])
+    return spec.build()
 
 
 def spawn_worker(url: str, name: str) -> subprocess.Popen:

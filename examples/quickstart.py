@@ -6,7 +6,7 @@ boundary, let the five daemons run it (paper Figs. 1-3 in one file).
 from repro.core import payloads as reg
 from repro.core.idds import IDDS
 from repro.core.requests import Request
-from repro.core.workflow import Branch, Condition, Workflow, WorkTemplate
+from repro.core.spec import WorkflowSpec
 
 # 1. register payloads (what PanDA would execute on the grid)
 reg.register_payload("simulate", lambda params, inputs: {
@@ -26,15 +26,15 @@ def pass_events(params, result):
 
 
 def main():
-    # 2. client side: build the workflow (a DG of Work templates)
-    wf = Workflow(name="quickstart")
-    wf.add_template(WorkTemplate(name="sim", payload="simulate"))
-    wf.add_template(WorkTemplate(name="reco", payload="reconstruct"))
-    wf.add_condition(Condition(
-        trigger="sim", predicate="good_quality",
-        true_next=[Branch("reco", binder="pass_events")]))
-    wf.add_initial("sim", {"n_events": 800})
-    wf.add_initial("sim", {"n_events": 200})  # fails the quality cut
+    # 2. client side: declare the workflow (a DG of Work templates)
+    #    with the fluent WorkflowSpec builder
+    spec = WorkflowSpec("quickstart")
+    reco = spec.work("reco", payload="reconstruct")
+    spec.work("sim", payload="simulate") \
+        .when("good_quality", then=[(reco, "pass_events")]) \
+        .start({"n_events": 800}) \
+        .start({"n_events": 200})  # fails the quality cut
+    wf = spec.build()
 
     # 3. serialize -> submit -> the server deserializes (Fig. 2)
     idds = IDDS()

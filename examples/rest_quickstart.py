@@ -13,7 +13,8 @@ from repro.core import payloads as reg
 from repro.core.client import IDDSClient
 from repro.core.idds import IDDS
 from repro.core.rest import RestGateway
-from repro.core.workflow import Branch, Condition, Workflow, WorkTemplate
+from repro.core.spec import WorkflowSpec
+from repro.core.workflow import Workflow
 
 # payloads live server-side: the gateway process registers them, clients
 # only ever reference them by name inside serialized workflows
@@ -34,15 +35,13 @@ def pass_events(params, result):
 
 
 def build_workflow() -> Workflow:
-    wf = Workflow(name="rest-quickstart")
-    wf.add_template(WorkTemplate(name="sim", payload="simulate"))
-    wf.add_template(WorkTemplate(name="reco", payload="reconstruct"))
-    wf.add_condition(Condition(
-        trigger="sim", predicate="good_quality",
-        true_next=[Branch("reco", binder="pass_events")]))
-    wf.add_initial("sim", {"n_events": 800})
-    wf.add_initial("sim", {"n_events": 200})  # fails the quality cut
-    return wf
+    spec = WorkflowSpec("rest-quickstart")
+    reco = spec.work("reco", payload="reconstruct")
+    spec.work("sim", payload="simulate") \
+        .when("good_quality", then=[(reco, "pass_events")]) \
+        .start({"n_events": 800}) \
+        .start({"n_events": 200})  # fails the quality cut
+    return spec.build()
 
 
 def main():

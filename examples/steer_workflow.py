@@ -1,0 +1,96 @@
+"""Steering quickstart: the request lifecycle command plane, end to end.
+
+Starts a distributed head (lease scheduler + REST gateway) and one live
+worker process, then drives a request through the full steering
+vocabulary over the wire:
+
+  submit -> suspend (worker leases are fenced; nothing dispatches)
+         -> resume  (parked jobs flow again; the workflow finishes)
+  submit -> abort   (works cancelled, leases revoked, request terminal)
+
+    PYTHONPATH=src python examples/steer_workflow.py
+"""
+import os
+import signal
+import subprocess
+import sys
+
+from repro.core.client import IDDSClient
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+from repro.core.scheduler import DistributedWFM
+from repro.core.spec import WorkflowSpec
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOKEN = "steer-token"
+N_JOBS = 4
+
+
+def build_workflow(name: str):
+    spec = WorkflowSpec(name)
+    # slow enough that steering commands land while jobs are running
+    spec.work("crunch", payload="sleep_ms", defaults={"ms": 150},
+              start=[{} for _ in range(N_JOBS)])
+    return spec.build()
+
+
+def spawn_worker(url: str) -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.worker", "--url", url,
+         "--token", TOKEN, "--concurrency", "2",
+         "--poll-interval", "0.05", "--worker-id", "steer-site"],
+        env=env)
+
+
+def main():
+    head = IDDS(tokens={TOKEN}, executor=DistributedWFM(lease_ttl=5.0))
+    with RestGateway(head) as gw:
+        print(f"head up at {gw.url} (distributed mode)")
+        worker = spawn_worker(gw.url)
+        try:
+            client = IDDSClient(gw.url, token=TOKEN)
+
+            # -- suspend / resume ------------------------------------
+            rid = client.submit_workflow(build_workflow("steer-sr"),
+                                         requester="operator")
+            cmd = client.suspend(rid, wait=True)
+            assert cmd["status"] == "done", cmd
+            info = client.status(rid)
+            print(f"suspended {rid}: status={info['status']} "
+                  f"suspended={info['suspended']}")
+            assert info["status"] == "suspended" and info["suspended"]
+            h = client.healthz()
+            print("healthz queues:", h["queues"],
+                  "pending_commands:", h["pending_commands"])
+
+            cmd = client.resume(rid, wait=True)
+            assert cmd["status"] == "done", cmd
+            info = client.wait(rid, timeout=60)
+            print(f"resumed {rid}: status={info['status']} "
+                  f"works={info['works']}")
+            assert info["works"] == {"finished": N_JOBS}, info
+
+            # -- abort -----------------------------------------------
+            rid2 = client.submit_workflow(build_workflow("steer-abort"),
+                                          requester="operator")
+            cmd = client.abort(rid2, wait=True)
+            assert cmd["status"] == "done", cmd
+            info2 = client.wait(rid2, timeout=60)
+            print(f"aborted {rid2}: status={info2['status']} "
+                  f"works={info2.get('works')}")
+            assert info2["status"] == "aborted", info2
+
+            journal = client.list_commands(rid)["commands"]
+            print(f"command journal for {rid}: "
+                  f"{[(c['action'], c['status']) for c in journal]}")
+            print("steering quickstart passed")
+        finally:
+            worker.send_signal(signal.SIGTERM)
+            worker.wait(timeout=20)
+
+
+if __name__ == "__main__":
+    main()

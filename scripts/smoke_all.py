@@ -67,6 +67,13 @@ def smoke_workers() -> None:
     print("[ok] distributed workers (head + 2 worker processes)")
 
 
+def smoke_commands() -> None:
+    """Command-plane e2e: submit -> suspend -> resume -> abort over the
+    wire with a live worker process."""
+    _smoke_example("steer_workflow.py")
+    print("[ok] command smoke (suspend/resume/abort with a live worker)")
+
+
 if __name__ == "__main__":
     archs = sys.argv[1:] or list_archs()
     failed = []
@@ -88,5 +95,11 @@ if __name__ == "__main__":
     except Exception:
         failed.append("workers")
         print("[FAIL] workers")
+        traceback.print_exc()
+    try:
+        smoke_commands()
+    except Exception:
+        failed.append("commands")
+        print("[FAIL] commands")
         traceback.print_exc()
     sys.exit(1 if failed else 0)

@@ -7,17 +7,16 @@ from repro.core.dag import DAGScheduler, layered_dag
 from repro.core.hpo import HPOService, loguniform, uniform
 from repro.core.idds import IDDS
 from repro.core.requests import Request
-from repro.core.workflow import (Branch, Condition, Workflow, WorkTemplate)
+from repro.core.spec import WorkflowSpec
 
 
 def test_simple_chain():
     reg.register_payload("smoke_double",
                          lambda params, inputs: {"x": params["x"] * 2})
-    wf = Workflow(name="chain")
-    wf.add_template(WorkTemplate(name="a", payload="smoke_double"))
-    wf.add_template(WorkTemplate(name="b", payload="smoke_double"))
-    wf.add_condition(Condition(trigger="a", true_next=[Branch("b")]))
-    wf.add_initial("a", {"x": 3})
+    spec = WorkflowSpec("chain")
+    a = spec.work("a", payload="smoke_double", start={"x": 3})
+    a.then(spec.work("b", payload="smoke_double"))
+    wf = spec.build()
 
     idds = IDDS()
     rid = idds.submit(Request(workflow=wf).to_json())
@@ -85,10 +84,10 @@ def test_threaded():
     reg.register_payload("smoke_sleepy",
                          lambda params, inputs: (time.sleep(0.01),
                                                  {"i": params["i"]})[1])
-    wf = Workflow(name="threaded")
-    wf.add_template(WorkTemplate(name="t", payload="smoke_sleepy"))
-    for i in range(16):
-        wf.add_initial("t", {"i": i})
+    spec = WorkflowSpec("threaded")
+    spec.work("t", payload="smoke_sleepy",
+              start=[{"i": i} for i in range(16)])
+    wf = spec.build()
     idds = IDDS(sync=False, max_workers=8)
     idds.start()
     try:
@@ -110,10 +109,9 @@ def test_retries():
         return {"ok": True}
 
     reg.register_payload("smoke_flaky", flaky)
-    wf = Workflow(name="flaky")
-    wf.add_template(WorkTemplate(name="f", payload="smoke_flaky",
-                                 max_attempts=5))
-    wf.add_initial("f", {})
+    spec = WorkflowSpec("flaky")
+    spec.work("f", payload="smoke_flaky", max_attempts=5, start={})
+    wf = spec.build()
     idds = IDDS()
     idds.submit_workflow(wf)
     idds.pump()

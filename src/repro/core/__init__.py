@@ -1,11 +1,17 @@
 """iDDS core: the paper's primary contribution.
 
-Workflow DG engine, the five daemons, the message bus, the JSON request
-boundary, and the services built on top (HPO, Active Learning, Rubin-style
-job DAGs).
+Workflow DG engine, the six daemons (including the steering-plane
+Commander), the message bus, the JSON request boundary, the declarative
+WorkflowSpec builder, and the services built on top (HPO, Active
+Learning, Rubin-style job DAGs).
 """
+from repro.core.commands import (  # noqa: F401
+    Command,
+    CommandConflict,
+)
 from repro.core.idds import IDDS, AuthError  # noqa: F401
 from repro.core.requests import Request  # noqa: F401
+from repro.core.spec import WorkflowSpec, WorkStep  # noqa: F401
 from repro.core.store import (  # noqa: F401
     InMemoryStore,
     SqliteStore,

@@ -12,7 +12,8 @@ from __future__ import annotations
 from typing import Any, Dict, Optional
 
 from repro.core import payloads as reg
-from repro.core.workflow import Branch, Condition, Workflow, WorkTemplate
+from repro.core.spec import WorkflowSpec
+from repro.core.workflow import Workflow
 
 
 @reg.register_binder("al_pass_result")
@@ -47,19 +48,16 @@ def build_active_learning_workflow(
     input_collection: Optional[str] = None,
 ) -> Workflow:
     """process --always--> decide --(decision==True)--> process (cycle)."""
-    wf = Workflow(name=name)
-    wf.add_template(WorkTemplate(
-        name="process", payload=process_payload,
-        input_collection=input_collection, granularity="fine"))
-    wf.add_template(WorkTemplate(name="decide", payload=decide_payload))
-    wf.add_condition(Condition(
-        trigger="process", predicate="always",
-        true_next=[Branch("decide", binder="al_to_decision")],
-        max_iterations=2 * max_iterations + 1))
-    wf.add_condition(Condition(
-        trigger="decide", predicate="al_continue",
-        true_next=[Branch("process", binder="al_pass_result")],
-        false_next=[],  # stop: no further works
-        max_iterations=2 * max_iterations))
-    wf.add_initial("process", {"round": 0, **(init_params or {})})
-    return wf
+    spec = WorkflowSpec(name)
+    process = spec.work("process", payload=process_payload,
+                        input_collection=input_collection,
+                        granularity="fine",
+                        start={"round": 0, **(init_params or {})})
+    decide = spec.work("decide", payload=decide_payload)
+    process.then(decide, binder="al_to_decision",
+                 max_iterations=2 * max_iterations + 1)
+    # a false verdict ends the loop: no `otherwise` branch, no new works
+    decide.when("al_continue",
+                then=[(process, "al_pass_result")],
+                max_iterations=2 * max_iterations)
+    return spec.build()

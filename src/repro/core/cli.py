@@ -1,0 +1,135 @@
+"""Operator CLI for the iDDS REST gateway (the steering console).
+
+Thin argparse front-end over :class:`repro.core.client.IDDSClient` —
+every verb maps to one SDK call against the ``/v1`` namespace and
+prints the JSON response, so output composes with ``jq`` and scripts.
+
+    PYTHONPATH=src python -m repro.core.cli --url http://127.0.0.1:8443 \
+        [--token T] VERB [ARGS]
+
+Verbs:
+
+  health                      GET /v1/healthz (queue depths, pending
+                              commands, daemon liveness)
+  stats                       GET /v1/stats
+  list [--status S] [--limit N] [--offset N]
+  status REQUEST_ID           status + work counts + suspended flag
+  workflow REQUEST_ID         the full DG state
+  transforms REQUEST_ID       the request's Works
+  processings REQUEST_ID      the request's Processings
+  commands REQUEST_ID         the request's command journal
+  submit FILE [--requester R] submit a workflow JSON file (a Workflow
+                              dict, e.g. WorkflowSpec(...).build()
+                              .to_dict()); '-' reads stdin
+  abort REQUEST_ID            \\
+  suspend REQUEST_ID           } lifecycle commands; --no-wait returns
+  resume REQUEST_ID           /  immediately instead of polling until
+  retry REQUEST_ID           /   the Commander applied the command
+  workers                     execution-plane worker registry
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.client import IDDSClient
+from repro.core.requests import Request
+from repro.core.workflow import Workflow
+
+COMMAND_VERBS = ("abort", "suspend", "resume", "retry")
+
+
+def _print(obj) -> None:
+    print(json.dumps(obj, indent=2, sort_keys=True))
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.cli",
+        description="Steer and inspect an iDDS head service over HTTP.")
+    ap.add_argument("--url", default="http://127.0.0.1:8443")
+    ap.add_argument("--token", default="")
+    ap.add_argument("--timeout", type=float, default=10.0)
+    sub = ap.add_subparsers(dest="verb", required=True)
+
+    sub.add_parser("health")
+    sub.add_parser("stats")
+    sub.add_parser("workers")
+
+    p = sub.add_parser("list")
+    p.add_argument("--status", default=None)
+    p.add_argument("--limit", type=int, default=None)
+    p.add_argument("--offset", type=int, default=0)
+
+    for verb in ("status", "workflow", "transforms", "processings",
+                 "commands"):
+        p = sub.add_parser(verb)
+        p.add_argument("request_id")
+
+    p = sub.add_parser("submit")
+    p.add_argument("file", help="workflow JSON file ('-' for stdin)")
+    p.add_argument("--requester", default="cli")
+    p.add_argument("--wait", action="store_true",
+                   help="poll until the request finishes")
+
+    for verb in COMMAND_VERBS:
+        p = sub.add_parser(verb)
+        p.add_argument("request_id")
+        p.add_argument("--no-wait", action="store_true",
+                       help="return the pending command immediately "
+                            "instead of polling until it applied")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    client = IDDSClient(args.url, token=args.token, timeout=args.timeout)
+    try:
+        if args.verb == "health":
+            _print(client.healthz())
+        elif args.verb == "stats":
+            _print(client.stats())
+        elif args.verb == "workers":
+            _print(client.list_workers())
+        elif args.verb == "list":
+            _print(client.list_requests(status=args.status,
+                                        limit=args.limit,
+                                        offset=args.offset))
+        elif args.verb == "status":
+            _print(client.status(args.request_id))
+        elif args.verb == "workflow":
+            _print(client.get_workflow(args.request_id).to_dict())
+        elif args.verb == "transforms":
+            _print(client.list_transforms(args.request_id))
+        elif args.verb == "processings":
+            _print(client.list_processings(args.request_id))
+        elif args.verb == "commands":
+            _print(client.list_commands(args.request_id))
+        elif args.verb == "submit":
+            raw = (sys.stdin.read() if args.file == "-"
+                   else open(args.file).read())
+            wf = Workflow.from_dict(json.loads(raw))
+            req = Request(workflow=wf, requester=args.requester,
+                          token=client.token)
+            rid = client.submit(req.to_json())
+            if args.wait:
+                _print(client.wait(rid))
+            else:
+                _print({"request_id": rid, "status": "accepted"})
+        elif args.verb in COMMAND_VERBS:
+            _print(client.command(args.request_id, args.verb,
+                                  wait=not args.no_wait))
+    except KeyError as e:
+        print(json.dumps({"error": {"type": "NotFound",
+                                    "message": str(e)}}), file=sys.stderr)
+        return 2
+    except Exception as e:  # noqa: BLE001 — CLI boundary
+        print(json.dumps({"error": {"type": type(e).__name__,
+                                    "message": str(e)}}), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

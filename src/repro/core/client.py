@@ -2,12 +2,15 @@
 
 ``IDDSClient`` mirrors the in-process :class:`repro.core.idds.IDDS`
 facade method-for-method, but speaks HTTP to a :class:`repro.core.rest.
-RestGateway`.  Error mapping preserves in-process semantics so callers
-can swap one for the other:
+RestGateway` — always through the versioned ``/v1`` namespace (the
+unversioned paths are deprecated aliases kept for old clients).  Error
+mapping preserves in-process semantics so callers can swap one for the
+other:
 
   HTTP 401  -> repro.core.idds.AuthError
   HTTP 404  -> KeyError
-  HTTP 409  -> ConflictError (stale/expired lease; never retried)
+  HTTP 409  -> ConflictError (stale/expired lease or lifecycle-command
+               conflict; never retried)
   other 4xx -> IDDSClientError (no retry)
   5xx / connection errors -> retried with jittered exponential backoff
                *only for idempotent calls*, then IDDSClientError; a
@@ -59,6 +62,10 @@ class ConflictError(IDDSClientError):
 
     def __init__(self, message: str):
         super().__init__(409, "Conflict", message)
+
+
+# the stable API namespace every SDK call goes through
+API_PREFIX = "/v1"
 
 
 class IDDSClient:
@@ -145,7 +152,8 @@ class IDDSClient:
         """Submit a serialized Request; returns the request_id.
         Retry-safe: the server deduplicates on the client-generated
         request_id."""
-        return self._post("/requests", json.loads(request_json),
+        return self._post(f"{API_PREFIX}/requests",
+                          json.loads(request_json),
                           idempotent=True)["request_id"]
 
     def submit_workflow(self, wf: Workflow, requester: str = "anonymous",
@@ -155,7 +163,9 @@ class IDDSClient:
         return self.submit(req.to_json())
 
     def status(self, request_id: str) -> Dict[str, Any]:
-        return self._get(f"/requests/{urllib.parse.quote(request_id)}")
+        return self._get(
+            f"{API_PREFIX}/requests/"
+            f"{urllib.parse.quote(request_id)}")
 
     def list_requests(self, *, status: Optional[str] = None,
                       limit: Optional[int] = None,
@@ -171,20 +181,23 @@ class IDDSClient:
         if offset:
             params["offset"] = str(offset)
         qs = urllib.parse.urlencode(params)
-        return self._get("/requests" + (f"?{qs}" if qs else ""))
+        return self._get(f"{API_PREFIX}/requests"
+                         + (f"?{qs}" if qs else ""))
 
     def get_workflow(self, request_id: str) -> Workflow:
         d = self._get(
-            f"/requests/{urllib.parse.quote(request_id)}/workflow")
+            f"{API_PREFIX}/requests/"
+            f"{urllib.parse.quote(request_id)}/workflow")
         return Workflow.from_dict(d)
 
     def wait(self, request_id: str, timeout: float = 60.0,
              interval: float = 0.02) -> Dict[str, Any]:
-        """Poll until the request's workflow finishes; returns final status."""
+        """Poll until the request reaches a terminal state (finished, or
+        aborted by a command); returns the final status."""
         deadline = time.time() + timeout
         while True:
             info = self.status(request_id)
-            if info.get("status") == "finished":
+            if info.get("status") in ("finished", "aborted"):
                 return info
             if time.time() > deadline:
                 raise TimeoutError(
@@ -192,19 +205,99 @@ class IDDSClient:
                     f"(last status: {info.get('status')})")
             time.sleep(interval)
 
+    def list_transforms(self, request_id: str) -> Dict[str, Any]:
+        """The request's Works as read resources (GET
+        /v1/requests/<id>/transforms)."""
+        return self._get(
+            f"{API_PREFIX}/requests/"
+            f"{urllib.parse.quote(request_id)}/transforms")
+
+    def list_processings(self, request_id: str) -> Dict[str, Any]:
+        """The request's Processings as read resources (GET
+        /v1/requests/<id>/processings)."""
+        return self._get(
+            f"{API_PREFIX}/requests/"
+            f"{urllib.parse.quote(request_id)}/processings")
+
+    # ------------------------------------------- steering (lifecycle plane)
+    def command(self, request_id: str, action: str, *,
+                wait: bool = False,
+                timeout: float = 30.0) -> Dict[str, Any]:
+        """Submit a lifecycle command (abort/suspend/resume/retry).
+
+        Retry-safe: a client-generated command_id makes the POST
+        idempotent — a retried submission returns the journaled command
+        instead of applying the action twice.  ``wait=True`` polls the
+        command resource until the Commander has applied it.
+        """
+        cmd = self._post(
+            f"{API_PREFIX}/requests/"
+            f"{urllib.parse.quote(request_id)}/commands",
+            {"action": action, "command_id": f"cmd-{uuid.uuid4().hex[:12]}"},
+            idempotent=True)
+        if wait:
+            return self.wait_command(request_id, cmd["command_id"],
+                                     timeout=timeout)
+        return cmd
+
+    def abort(self, request_id: str, **kw) -> Dict[str, Any]:
+        """Abort the request: cancel its works/processings and revoke
+        outstanding worker leases.  Terminal."""
+        return self.command(request_id, "abort", **kw)
+
+    def suspend(self, request_id: str, **kw) -> Dict[str, Any]:
+        """Suspend the request: fence its jobs and park new dispatch."""
+        return self.command(request_id, "suspend", **kw)
+
+    def resume(self, request_id: str, **kw) -> Dict[str, Any]:
+        """Resume a suspended request."""
+        return self.command(request_id, "resume", **kw)
+
+    def retry(self, request_id: str, **kw) -> Dict[str, Any]:
+        """Re-run the request's terminally failed processings with a
+        fresh attempt budget."""
+        return self.command(request_id, "retry", **kw)
+
+    def get_command(self, request_id: str,
+                    command_id: str) -> Dict[str, Any]:
+        return self._get(
+            f"{API_PREFIX}/requests/{urllib.parse.quote(request_id)}"
+            f"/commands/{urllib.parse.quote(command_id)}")
+
+    def list_commands(self, request_id: str) -> Dict[str, Any]:
+        return self._get(
+            f"{API_PREFIX}/requests/"
+            f"{urllib.parse.quote(request_id)}/commands")
+
+    def wait_command(self, request_id: str, command_id: str,
+                     timeout: float = 30.0,
+                     interval: float = 0.02) -> Dict[str, Any]:
+        """Poll a command until it leaves ``pending``."""
+        deadline = time.time() + timeout
+        while True:
+            cmd = self.get_command(request_id, command_id)
+            if cmd["status"] != "pending":
+                return cmd
+            if time.time() > deadline:
+                raise TimeoutError(
+                    f"command {command_id} still pending after {timeout}s")
+            time.sleep(interval)
+
     def lookup_collection(self, name: str) -> Dict[str, Any]:
         return self._get(
-            f"/collections/{urllib.parse.quote(name, safe='')}")
+            f"{API_PREFIX}/collections/"
+            f"{urllib.parse.quote(name, safe='')}")
 
     def lookup_contents(self, name: str) -> List[Dict[str, Any]]:
         return self._get(
-            f"/collections/{urllib.parse.quote(name, safe='')}/contents")
+            f"{API_PREFIX}/collections/"
+            f"{urllib.parse.quote(name, safe='')}/contents")
 
     def stats(self) -> Dict[str, int]:
-        return self._get("/stats")
+        return self._get(f"{API_PREFIX}/stats")
 
     def healthz(self) -> Dict[str, Any]:
-        return self._get("/healthz")
+        return self._get(f"{API_PREFIX}/healthz")
 
     # ----------------------------------------------- execution plane (jobs)
     def lease_job(self, worker_id: str, *,
@@ -222,12 +315,13 @@ class IDDSClient:
             body["queues"] = list(queues)
         if ttl is not None:
             body["lease_ttl"] = ttl
-        return self._post("/jobs/lease", body, idempotent=True)["job"]
+        return self._post(f"{API_PREFIX}/jobs/lease", body,
+                          idempotent=True)["job"]
 
     def heartbeat_job(self, job_id: str, worker_id: str) -> Dict[str, Any]:
         """Renew a held lease; raises ConflictError once it is lost."""
         return self._post(
-            f"/jobs/{urllib.parse.quote(job_id)}/heartbeat",
+            f"{API_PREFIX}/jobs/{urllib.parse.quote(job_id)}/heartbeat",
             {"worker_id": worker_id}, idempotent=True)
 
     def complete_job(self, job_id: str, worker_id: str, *,
@@ -237,10 +331,10 @@ class IDDSClient:
         server deduplicates per (job, worker); a stale worker whose
         lease expired gets ConflictError and must drop the job."""
         return self._post(
-            f"/jobs/{urllib.parse.quote(job_id)}/complete",
+            f"{API_PREFIX}/jobs/{urllib.parse.quote(job_id)}/complete",
             {"worker_id": worker_id, "result": result, "error": error},
             idempotent=True)
 
     def list_workers(self) -> Dict[str, Any]:
         """Execution-plane worker registry (GET /workers)."""
-        return self._get("/workers")
+        return self._get(f"{API_PREFIX}/workers")

@@ -1,0 +1,98 @@
+"""Request lifecycle commands (the steering plane).
+
+The paper's iDDS is not submit-and-watch: operators steer running
+workflows — abort a bad campaign, suspend one while a storage endpoint
+drains, resume it later, retry the transforms that failed.  A command is
+a first-class journaled entity (like a request) so steering survives a
+head crash: ``IDDS.command()`` journals it *before* announcing it on the
+bus, the :class:`~repro.core.daemons.Commander` daemon applies it and
+journals the terminal transition, and ``IDDS.recover()`` replays any
+command journaled but not yet applied — exactly once, because applying
+is idempotent and an applied command is journaled as ``done``.
+
+Actions (all request-scoped):
+
+  abort    cancel the request: non-terminal works and processings turn
+           ``cancelled``, outstanding worker leases are revoked (the
+           worker observes the fence on its next heartbeat and drops
+           the job), and no further dispatch happens.  Terminal.
+  suspend  fence the request: pending jobs stop being leased, live
+           leases are revoked back to a parked state, and the daemons
+           stop creating/submitting processings for it.  Reversible.
+  resume   lift a suspension: parked processings are re-submitted and
+           fenced jobs become leasable again.
+  retry    re-run the request's terminally-failed processings with a
+           fresh attempt budget (works leave ``failed``/``subfinished``
+           and are finalized again when the re-runs complete).
+
+Command statuses: ``pending`` (journaled, not yet applied) -> ``done``
+or ``failed`` (validation failed at apply time; ``error`` says why).
+"""
+from __future__ import annotations
+
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+VALID_COMMAND_ACTIONS = ("abort", "suspend", "resume", "retry")
+
+# request control states (Context.control values; absence means active)
+CTRL_SUSPENDED = "suspended"
+CTRL_ABORTED = "aborted"
+
+
+class CommandConflict(Exception):
+    """The command cannot apply to the request's current lifecycle state
+    (e.g. resume on a request that is not suspended, or any steering of
+    an aborted request).  Maps to HTTP 409."""
+
+
+def _new_command_id() -> str:
+    return f"cmd-{uuid.uuid4().hex[:12]}"
+
+
+@dataclass
+class Command:
+    """One journaled steering command against a request."""
+    request_id: str
+    action: str
+    workflow_id: str = ""
+    command_id: str = field(default_factory=_new_command_id)
+    status: str = "pending"          # pending | done | failed
+    created_at: float = field(default_factory=time.time)
+    processed_at: Optional[float] = None
+    error: Optional[str] = None
+    # what the apply touched: {"works": n, "processings": n, ...}
+    detail: Optional[Dict[str, Any]] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "command_id": self.command_id,
+            "request_id": self.request_id,
+            "workflow_id": self.workflow_id,
+            "action": self.action,
+            "status": self.status,
+            "created_at": self.created_at,
+            "processed_at": self.processed_at,
+            "error": self.error,
+            "detail": self.detail,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Command":
+        return cls(
+            request_id=d["request_id"],
+            action=d["action"],
+            workflow_id=d.get("workflow_id", ""),
+            command_id=d["command_id"],
+            status=d.get("status", "pending"),
+            created_at=d.get("created_at", time.time()),
+            processed_at=d.get("processed_at"),
+            error=d.get("error"),
+            detail=d.get("detail"),
+        )
+
+    @property
+    def pending(self) -> bool:
+        return self.status == "pending"

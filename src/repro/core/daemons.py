@@ -1,7 +1,10 @@
-"""The five iDDS daemons (paper Fig. 1) + the WFM-system boundary.
+"""The six iDDS daemons (paper Fig. 1 + the steering plane) + the
+WFM-system boundary.
 
   Clerk       requests -> Workflow objects
   Marshaller  DG management: Workflow -> Works; condition evaluation
+  Commander   lifecycle commands (abort/suspend/resume/retry) -> the
+              live object graph (see commands.py)
   Transformer input/output association; Work -> Processing(s); DDM calls
   Carrier     Processing -> WFM submit / poll / retry (job attempts)
   Conductor   output availability -> consumer notifications (messaging)
@@ -21,6 +24,8 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core import messaging as M
 from repro.core import payloads as reg
+from repro.core.commands import (CTRL_ABORTED, CTRL_SUSPENDED, Command,
+                                 CommandConflict)
 from repro.core.ddm import DDM
 from repro.core.store import InMemoryStore, Store
 from repro.core.workflow import (Processing, ProcessingStatus, Work,
@@ -56,6 +61,24 @@ class WFMExecutor:
         """Late-bind the shared Context (store, stats).  The inline
         executor needs nothing from it; ``DistributedWFM`` (scheduler.py)
         wires its lease scheduler to the store here."""
+
+    # -- lifecycle-command hooks (Commander calls these) -----------------
+    def fence(self, procs: List[Processing]) -> None:
+        """Suspend: stop outstanding execution being handed out.  The
+        inline executors have no leases to fence — already-running
+        payloads simply finish; only *new* submissions are parked (by
+        the Carrier).  ``DistributedWFM`` revokes live worker leases."""
+
+    def release(self, procs: List[Processing]) -> None:
+        """Resume: undo ``fence`` for these processings."""
+
+    def cancel(self, procs: List[Processing]) -> None:
+        """Abort: forget these processings entirely.  A thread-pool
+        payload already running cannot be interrupted, but dropping its
+        future means its (stale) outcome is never observed."""
+        with self._lock:
+            for p in procs:
+                self._futures.pop(p.proc_id, None)
 
     def _execute(self, proc: Processing) -> Processing:
         try:
@@ -124,6 +147,21 @@ class Context:
     # makes the Marshaller's T_NEW_WORKFLOWS handling idempotent under
     # duplicate delivery and post-recovery replays
     started_workflows: Set[str] = field(default_factory=set)
+    # steering plane: workflow_id -> "suspended" | "aborted" (absence
+    # means active — daemons gate dispatch/submission on this), plus the
+    # command registry the Commander applies from (command_id -> Command)
+    # and its per-request index (status polls tally a request's commands
+    # on every poll — that must not scan every command ever submitted)
+    control: Dict[str, str] = field(default_factory=dict)
+    commands: Dict[str, Command] = field(default_factory=dict)
+    commands_by_request: Dict[str, List[Command]] = field(
+        default_factory=dict)
+
+    def register_command(self, cmd: Command) -> None:
+        """Index a new command (caller holds ``lock``)."""
+        self.commands[cmd.command_id] = cmd
+        self.commands_by_request.setdefault(cmd.request_id,
+                                            []).append(cmd)
     stats: Dict[str, int] = field(default_factory=dict)
     # workflow_id -> #work-termination events published but not yet
     # condition-evaluated by the Marshaller.  While > 0 the workflow may
@@ -244,6 +282,8 @@ class Marshaller(Daemon):
         if rid is None:
             return
         with self.ctx.lock:
+            if self.ctx.control.get(wf.workflow_id):
+                return  # suspended/aborted: the Commander owns status
             info = self.ctx.requests.get(rid)
             if info is None:
                 return
@@ -268,6 +308,11 @@ class Marshaller(Daemon):
                 with self.ctx.lock:
                     if wf.workflow_id in self.ctx.started_workflows:
                         continue  # duplicate delivery / recovery replay
+                    if self.ctx.control.get(wf.workflow_id) \
+                            == CTRL_ABORTED:
+                        # aborted before the DG ever started: never start
+                        self.ctx.started_workflows.add(wf.workflow_id)
+                        continue
                     self.ctx.started_workflows.add(wf.workflow_id)
                     new_works = wf.start()
                 self._emit(wf, new_works)
@@ -291,7 +336,12 @@ class Marshaller(Daemon):
                     # pending.  finally: a raising predicate/binder must
                     # not wedge the counter.
                     try:
-                        new_works = wf.on_terminated(work)
+                        if self.ctx.control.get(wf_id) == CTRL_ABORTED:
+                            # a straggler finishing after an abort must
+                            # not spawn successors of a dead request
+                            new_works = []
+                        else:
+                            new_works = wf.on_terminated(work)
                         work.condition_evaluated = True
                     finally:
                         self.ctx.inflight_add(wf_id, -1)
@@ -319,7 +369,8 @@ class Transformer(Daemon):
              (the pre-iDDS baseline the paper improves on).
     """
     name = "transformer"
-    topics = (M.T_NEW_WORKS, M.T_COLLECTION_UPDATED, M.T_PROCESSING_DONE)
+    topics = (M.T_NEW_WORKS, M.T_COLLECTION_UPDATED, M.T_PROCESSING_DONE,
+              M.T_CMD_TRANSFORMER)
 
     def __init__(self, ctx: Context):
         super().__init__(ctx)
@@ -357,8 +408,14 @@ class Transformer(Daemon):
     def _try_dispatch(self, work: Work) -> int:
         """Create whatever Processings the current input state allows;
         returns how many were created (callers journal on > 0)."""
+        wf_id, _ = self.ctx.works[work.work_id]
+        if self.ctx.control.get(wf_id):
+            return 0  # suspended/aborted: no new processings
         if work.input_collection is None:
-            if work.work_id not in self._dispatched:
+            # truthiness, not key presence: recovery may have seeded an
+            # empty dispatched-set for a work that never got its
+            # Processing (e.g. suspended before dispatch)
+            if not self._dispatched.get(work.work_id):
                 self._dispatched[work.work_id] = {"__virtual__"}
                 work.status = WorkStatus.TRANSFORMING
                 self._make_processing(work, [])
@@ -430,12 +487,18 @@ class Transformer(Daemon):
         wf_id, _ = self.ctx.works[work.work_id]
         procs = self._work_procs.pop(work.work_id, [])
         fails = sum(1 for p in procs
-                    if p.status == ProcessingStatus.FAILED)
+                    if p.status in (ProcessingStatus.FAILED,
+                                    ProcessingStatus.CANCELLED))
+        # a work re-finalizing after a `retry` command already had its
+        # conditions evaluated — successors from the original evaluation
+        # exist, so re-announcing T_WORK_DONE would double-spawn them
+        announce = not work.condition_evaluated
         with self.ctx.lock:
             # count the termination event atomically with the work turning
             # terminal, so no status poll can observe "all works terminal"
             # with the condition evaluation still queued
-            self.ctx.inflight_add(wf_id, 1)
+            if announce:
+                self.ctx.inflight_add(wf_id, 1)
             work.status = (WorkStatus.FINISHED if fails == 0 else
                            WorkStatus.SUBFINISHED)
             work.terminated_at = time.time()
@@ -453,14 +516,72 @@ class Transformer(Daemon):
         # terminal, unevaluated work and replays the T_WORK_DONE event
         self.ctx.store.save_work(wf_id, d)
         self.ctx.bump("works_finished")
-        self.ctx.bus.publish(M.T_WORK_DONE, {"work_id": work.work_id})
+        if announce:
+            self.ctx.bus.publish(M.T_WORK_DONE, {"work_id": work.work_id})
+
+    # -- steering (Commander -> Transformer) -------------------------------
+    def _handle_control(self, m: M.Message) -> None:
+        action = m.body["action"]
+        wf_id = m.body["workflow_id"]
+        if action == "abort":
+            # the Commander already cancelled the works; drop the
+            # dispatch bookkeeping so nothing re-activates them
+            for wid in [w.work_id for w in self._pending.values()
+                        if self.ctx.works[w.work_id][0] == wf_id]:
+                self._pending.pop(wid, None)
+                self._dispatched.pop(wid, None)
+                self._open_procs.pop(wid, None)
+                self._work_procs.pop(wid, None)
+        elif action == "resume":
+            # re-dispatch whatever each suspended work's inputs allow now
+            for work in list(self._pending.values()):
+                if self.ctx.works[work.work_id][0] != wf_id:
+                    continue
+                if self._try_dispatch(work):
+                    self._journal_dispatch(work)
+                if (self._work_complete(work)
+                        and not work.status.terminated):
+                    self._finalize(work)
+        elif action == "retry":
+            # the Commander reset the failed processings to NEW and the
+            # works to TRANSFORMING; re-own them and re-announce the
+            # fresh attempts (this daemon owns dispatch bookkeeping)
+            for wid in m.body.get("work_ids", []):
+                _, work = self.ctx.works[wid]
+                procs = [p for p in self.ctx.processings.values()
+                         if p.work_id == wid]
+                self._pending[wid] = work
+                self._work_procs[wid] = procs
+                self._open_procs[wid] = sum(
+                    1 for p in procs if not p.terminal)
+                # re-seed the dispatched-inputs set exactly like crash
+                # recovery does: after a head restart nothing restored
+                # it for this (then-terminal) work, and _work_complete
+                # requires it to be truthy to ever finalize again
+                done = self._dispatched.setdefault(wid, set())
+                for p in procs:
+                    if work.input_collection is None:
+                        done.add("__virtual__")
+                    elif work.granularity == "coarse":
+                        done.add("__all__")
+                    else:
+                        done.update(p.input_files)
+                for p in procs:
+                    if p.status == ProcessingStatus.NEW:
+                        self.ctx.bus.publish(M.T_NEW_PROCESSINGS,
+                                             {"proc_id": p.proc_id})
 
     # -- main loop ---------------------------------------------------------
     def process_once(self) -> int:
         n = 0
+        for m in self.ctx.bus.poll(M.T_CMD_TRANSFORMER):
+            n += 1
+            self._handle_control(m)
         for m in self.ctx.bus.poll(M.T_NEW_WORKS):
             n += 1
             _, work = self.ctx.works[m.body["work_id"]]
+            if work.status.terminated:
+                continue  # cancelled by an abort before activation
             work.status = WorkStatus.ACTIVATED
             self._pending[work.work_id] = work
             self._try_dispatch(work)
@@ -498,7 +619,9 @@ class Transformer(Daemon):
                         "file": out,
                         "result": proc.result,
                     })
-            if self._work_complete(work):
+            if self._work_complete(work) and not work.status.terminated:
+                # terminated guard: a work cancelled by an abort command
+                # must not be resurrected by a late processing outcome
                 self._finalize(work)
 
         # periodic re-scan for coarse works whose inputs completed silently
@@ -506,7 +629,8 @@ class Transformer(Daemon):
             if work.status == WorkStatus.ACTIVATED:
                 if self._try_dispatch(work):
                     self._journal_dispatch(work)
-                if self._work_complete(work):
+                if (self._work_complete(work)
+                        and not work.status.terminated):
                     self._finalize(work)
         return n
 
@@ -559,11 +683,14 @@ class Transformer(Daemon):
 
 class Carrier(Daemon):
     name = "carrier"
-    topics = (M.T_NEW_PROCESSINGS,)
+    topics = (M.T_NEW_PROCESSINGS, M.T_CMD_CARRIER)
 
     def __init__(self, ctx: Context):
         super().__init__(ctx)
         self._running: Dict[str, Processing] = {}
+        # wf_id -> {proc_id: Processing} announced while the request was
+        # suspended: submitted on resume, dropped on abort
+        self._parked: Dict[str, Dict[str, Processing]] = {}
 
     def _idle_wait(self, interval: float) -> None:
         if self._running:
@@ -581,13 +708,47 @@ class Carrier(Daemon):
         # async records RUNNING and the poll loop journals the outcome
         self.ctx.store.save_processing(proc.to_dict())
 
+    def _wf_of(self, proc: Processing) -> str:
+        return self.ctx.works[proc.work_id][0]
+
     def process_once(self) -> int:
         n = 0
+        for m in self.ctx.bus.poll(M.T_CMD_CARRIER):
+            n += 1
+            wf_id, action = m.body["workflow_id"], m.body["action"]
+            if action == "resume":
+                for proc in self._parked.pop(wf_id, {}).values():
+                    self._submit(proc)
+            elif action == "abort":
+                self._parked.pop(wf_id, None)
+                for pid in [pid for pid, p in self._running.items()
+                            if self._wf_of(p) == wf_id]:
+                    del self._running[pid]
         for m in self.ctx.bus.poll(M.T_NEW_PROCESSINGS):
             n += 1
-            self._submit(self.ctx.processings[m.body["proc_id"]])
+            proc = self.ctx.processings[m.body["proc_id"]]
+            ctrl = self.ctx.control.get(self._wf_of(proc))
+            if ctrl == CTRL_ABORTED:
+                continue  # cancelled by command; nothing to run
+            if ctrl == CTRL_SUSPENDED:
+                # park instead of submitting; resume re-announces
+                self._parked.setdefault(
+                    self._wf_of(proc), {})[proc.proc_id] = proc
+                continue
+            self._submit(proc)
 
         for proc in list(self._running.values()):
+            if (proc.status == ProcessingStatus.CANCELLED
+                    or self.ctx.control.get(self._wf_of(proc))
+                    == CTRL_ABORTED):
+                # aborted mid-flight: whatever the executor eventually
+                # reports is stale — drop it without a done-event.  The
+                # control check also covers the async-pool race where a
+                # still-running payload thread overwrites the CANCELLED
+                # status on the shared Processing after the abort.
+                n += 1
+                del self._running[proc.proc_id]
+                continue
             proc = self.ctx.wfm.poll(proc)
             if proc.status == ProcessingStatus.FINISHED:
                 n += 1
@@ -631,4 +792,207 @@ class Conductor(Daemon):
         return len(msgs)
 
 
-ALL_DAEMONS = (Clerk, Marshaller, Transformer, Carrier, Conductor)
+# ---------------------------------------------------------------------------
+# Commander: the steering plane (request lifecycle commands)
+# ---------------------------------------------------------------------------
+
+
+class Commander(Daemon):
+    """Applies journaled lifecycle commands (abort/suspend/resume/retry,
+    see :mod:`repro.core.commands`) to the live object graph.
+
+    Applying is idempotent per command — a replayed ``pending`` command
+    after crash recovery re-applies against state that already reflects
+    it and degrades to a no-op — and the terminal transition is
+    journaled *after* the effects, so the effect of every command
+    happens exactly once across restarts.
+    """
+    name = "commander"
+    topics = (M.T_NEW_COMMANDS,)
+
+    def process_once(self) -> int:
+        msgs = self.ctx.bus.poll(M.T_NEW_COMMANDS)
+        for m in msgs:
+            cmd = self.ctx.commands.get(m.body["command_id"])
+            if cmd is None or not cmd.pending:
+                continue  # duplicate delivery / already applied
+            try:
+                cmd.detail = self._apply(cmd)
+                cmd.status = "done"
+            except CommandConflict as e:
+                cmd.status = "failed"
+                cmd.error = str(e)
+            except Exception as e:  # one bad command must not drop the batch
+                cmd.status = "failed"
+                cmd.error = f"{type(e).__name__}: {e}"
+                self.ctx.bump("commander_errors")
+                traceback.print_exc()
+            cmd.processed_at = time.time()
+            self.ctx.store.save_command(cmd.to_dict())
+            self.ctx.bump(f"commands_{cmd.status}")
+        return len(msgs)
+
+    # -- helpers -----------------------------------------------------------
+    def _set_request_status(self, cmd: Command, status: str) -> None:
+        with self.ctx.lock:
+            info = self.ctx.requests.get(cmd.request_id)
+            if info is None:
+                return
+            info["status"] = status
+            # catalog rows carry the flag so GET /requests listings can
+            # tell a steered pause from a stuck request without a
+            # per-request status poll
+            info["suspended"] = status == "suspended"
+            snapshot = dict(info)
+        self.ctx.store.save_request(snapshot)
+
+    def _live_procs(self, wf: Workflow) -> List[Processing]:
+        return [p for p in self.ctx.processings.values()
+                if p.work_id in wf.works and not p.terminal]
+
+    def _apply(self, cmd: Command) -> Dict[str, Any]:
+        return getattr(self, f"_apply_{cmd.action}")(
+            cmd, self.ctx.workflows.get(cmd.workflow_id))
+
+    # -- actions -----------------------------------------------------------
+    def _apply_abort(self, cmd: Command,
+                     wf: Optional[Workflow]) -> Dict[str, Any]:
+        wf_id = cmd.workflow_id
+        with self.ctx.lock:
+            # NO early-return on control == aborted: a crash mid-apply
+            # journals the request row (which recover() rebuilds control
+            # from) before the cancelled works, so the replayed command
+            # must still cancel whatever is left.  Cancellation is
+            # idempotent — a true duplicate finds nothing non-terminal.
+            already = self.ctx.control.get(wf_id) == "aborted"
+            self.ctx.control[wf_id] = "aborted"
+            procs = self._live_procs(wf) if wf is not None else []
+            for p in procs:
+                p.status = ProcessingStatus.CANCELLED
+                p.error = f"aborted by command {cmd.command_id}"
+            works = ([w for w in wf.works.values()
+                      if not w.status.terminated]
+                     if wf is not None else [])
+            now = time.time()
+            for w in works:
+                w.status = WorkStatus.CANCELLED
+                w.terminated_at = now
+                # cancelled works never evaluate conditions; mark them so
+                # recovery cannot replay a T_WORK_DONE for them
+                w.condition_evaluated = True
+            work_dicts = [w.to_dict() for w in works]
+            proc_dicts = [p.to_dict() for p in procs]
+        if already and not works and not procs:
+            return {"noop": True}  # duplicate abort: nothing left to do
+        self._set_request_status(cmd, "aborted")
+        if work_dicts:
+            self.ctx.store.save_works(wf_id, work_dicts)
+        for d in proc_dicts:
+            self.ctx.store.save_processing(d)
+        # revoke outstanding leases (workers observe on heartbeat) /
+        # drop thread-pool futures, then let the daemons clean house
+        self.ctx.wfm.cancel(procs)
+        self.ctx.bus.publish(M.T_CMD_TRANSFORMER,
+                             {"workflow_id": wf_id, "action": "abort"})
+        self.ctx.bus.publish(M.T_CMD_CARRIER,
+                             {"workflow_id": wf_id, "action": "abort"})
+        return {"works_cancelled": len(works),
+                "processings_cancelled": len(procs)}
+
+    def _apply_suspend(self, cmd: Command,
+                       wf: Optional[Workflow]) -> Dict[str, Any]:
+        wf_id = cmd.workflow_id
+        with self.ctx.lock:
+            ctrl = self.ctx.control.get(wf_id)
+            if ctrl == "aborted":
+                raise CommandConflict(
+                    f"request {cmd.request_id!r} is aborted")
+            if ctrl == "suspended":
+                return {"noop": True}
+            if (wf is not None and wf.finished
+                    and self.ctx.quiescent(wf_id)):
+                # lost the race with completion: there is nothing to
+                # fence, and flipping a finished request's catalog row
+                # to "suspended" would mislabel it forever
+                return {"noop": True, "reason": "request already finished"}
+            self.ctx.control[wf_id] = "suspended"
+            procs = self._live_procs(wf) if wf is not None else []
+        self._set_request_status(cmd, "suspended")
+        # fence the execution plane: live leases are revoked (the worker
+        # is fenced on its next heartbeat) and pending jobs stop leasing
+        self.ctx.wfm.fence(procs)
+        return {"processings_fenced": len(procs)}
+
+    def _apply_resume(self, cmd: Command,
+                      wf: Optional[Workflow]) -> Dict[str, Any]:
+        wf_id = cmd.workflow_id
+        with self.ctx.lock:
+            if self.ctx.control.get(wf_id) != "suspended":
+                return {"noop": True}  # replayed after the state moved on
+            del self.ctx.control[wf_id]
+            procs = self._live_procs(wf) if wf is not None else []
+        self._set_request_status(cmd, "running")
+        self.ctx.wfm.release(procs)
+        self.ctx.bus.publish(M.T_CMD_TRANSFORMER,
+                             {"workflow_id": wf_id, "action": "resume"})
+        self.ctx.bus.publish(M.T_CMD_CARRIER,
+                             {"workflow_id": wf_id, "action": "resume"})
+        return {"processings_released": len(procs)}
+
+    def _apply_retry(self, cmd: Command,
+                     wf: Optional[Workflow]) -> Dict[str, Any]:
+        wf_id = cmd.workflow_id
+        with self.ctx.lock:
+            ctrl = self.ctx.control.get(wf_id)
+            if ctrl == "aborted":
+                raise CommandConflict(
+                    f"request {cmd.request_id!r} is aborted")
+            retried_works: List[Work] = []
+            retried_procs: List[Processing] = []
+            if wf is not None:
+                for w in wf.works.values():
+                    if w.status not in (WorkStatus.FAILED,
+                                        WorkStatus.SUBFINISHED):
+                        continue
+                    failed = [p for p in self.ctx.processings.values()
+                              if p.work_id == w.work_id
+                              and p.status == ProcessingStatus.FAILED
+                              and p.terminal]
+                    if not failed:
+                        continue
+                    for p in failed:
+                        p.attempt = 1  # fresh attempt budget
+                        p.status = ProcessingStatus.NEW
+                        p.error = None
+                    w.status = WorkStatus.TRANSFORMING
+                    w.terminated_at = None
+                    # the re-finalize rebuilds these from the full
+                    # processing set, so drop the stale merge
+                    w.results = []
+                    retried_works.append(w)
+                    retried_procs.extend(failed)
+            if not retried_works:
+                return {"noop": True,
+                        "reason": "no terminally failed processings"}
+            work_dicts = [w.to_dict() for w in retried_works]
+            proc_dicts = [p.to_dict() for p in retried_procs]
+        # retrying a suspended request must not lift (or mislabel) the
+        # suspension: the re-announced processings park in the Carrier
+        # until an explicit resume
+        self._set_request_status(
+            cmd, "suspended" if ctrl == CTRL_SUSPENDED else "running")
+        self.ctx.store.save_works(wf_id, work_dicts)
+        for d in proc_dicts:
+            self.ctx.store.save_processing(d)
+        self.ctx.bump("works_retried", len(retried_works))
+        # the Transformer re-owns the works and re-announces the NEW
+        # processings from its own thread (it owns dispatch bookkeeping)
+        self.ctx.bus.publish(M.T_CMD_TRANSFORMER, {
+            "workflow_id": wf_id, "action": "retry",
+            "work_ids": [w.work_id for w in retried_works]})
+        return {"works_retried": len(retried_works),
+                "processings_retried": len(retried_procs)}
+
+
+ALL_DAEMONS = (Clerk, Marshaller, Commander, Transformer, Carrier,
+               Conductor)

@@ -17,7 +17,8 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.idds import IDDS
-from repro.core.workflow import Workflow, WorkTemplate
+from repro.core.spec import WorkflowSpec
+from repro.core.workflow import Workflow
 
 
 # ---------------------------------------------------------------------------
@@ -206,14 +207,11 @@ class HPOService:
 
     def _round_workflow(self, points: List[Dict[str, Any]],
                         rnd: int) -> Workflow:
-        wf = Workflow(name=f"hpo-round-{rnd}")
-        wf.add_template(WorkTemplate(
-            name="evaluate", payload=self.eval_payload, max_attempts=2))
-        for i, p in enumerate(points):
-            wf.add_initial("evaluate",
-                           {**self.extra, **p, "_hpo_round": rnd,
-                            "_hpo_idx": i})
-        return wf
+        spec = WorkflowSpec(f"hpo-round-{rnd}")
+        spec.work("evaluate", payload=self.eval_payload, max_attempts=2,
+                  start=[{**self.extra, **p, "_hpo_round": rnd,
+                          "_hpo_idx": i} for i, p in enumerate(points)])
+        return spec.build()
 
     def run(self, *, sync: Optional[bool] = None,
             timeout: float = 300.0) -> HPOResult:

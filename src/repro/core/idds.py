@@ -20,6 +20,9 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Set
 
 from repro.core import messaging as M
+from repro.core.commands import (CTRL_ABORTED, CTRL_SUSPENDED,
+                                 VALID_COMMAND_ACTIONS, Command,
+                                 CommandConflict)
 from repro.core.daemons import ALL_DAEMONS, Context, Transformer, WFMExecutor
 from repro.core.ddm import DDM, InMemoryDDM
 from repro.core.requests import Request
@@ -135,6 +138,14 @@ class IDDS:
         shared = self._requests[request_id]
         info = dict(shared)
         wf = self.ctx.workflows.get(info["workflow_id"])
+        with self.ctx.lock:
+            ctrl = self.ctx.control.get(info["workflow_id"])
+            cmds = list(self.ctx.commands_by_request.get(request_id, ()))
+        # pollers distinguish "suspended" from "stuck": the flag plus the
+        # command tally ride on every status response
+        info["suspended"] = ctrl == CTRL_SUSPENDED
+        info["commands"] = {"total": len(cmds),
+                            "pending": sum(1 for c in cmds if c.pending)}
         if wf is not None:
             # snapshot under ctx.lock: daemon threads insert into wf.works
             # (iteration would race), and finished+quiescent must be read
@@ -144,14 +155,18 @@ class IDDS:
             with self.ctx.lock:
                 info["works"] = wf.counts()
                 done = wf.finished and self.ctx.quiescent(wf.workflow_id)
-            info["status"] = "finished" if done else "running"
+            if ctrl is not None:
+                info["status"] = ctrl  # "suspended" | "aborted"
+            else:
+                info["status"] = "finished" if done else "running"
             if shared.get("status") != info["status"]:
                 # write the observed transition through to the catalog so
                 # GET /requests?status= filters stay truthful
                 with self.ctx.lock:
                     shared["status"] = info["status"]
                 self.ctx.store.save_request(
-                    {k: v for k, v in info.items() if k != "works"})
+                    {k: v for k, v in info.items()
+                     if k not in ("works", "commands")})
         return info
 
     def list_requests(self, *, status: Optional[str] = None,
@@ -191,6 +206,134 @@ class IDDS:
         with self.ctx.lock:
             return wf.to_dict()
 
+    def list_transforms(self, request_id: str) -> Dict[str, Any]:
+        """The request's Works as first-class read resources (the paper's
+        transforms), with per-work status for steering operators."""
+        wf = self.get_workflow(request_id)
+        with self.ctx.lock:
+            transforms = [w.to_dict() for w in wf.works.values()]
+        return {"transforms": transforms, "total": len(transforms)}
+
+    def list_processings(self, request_id: str) -> Dict[str, Any]:
+        """The request's Processings as first-class read resources."""
+        wf = self.get_workflow(request_id)
+        with self.ctx.lock:
+            procs = [p.to_dict() for p in self.ctx.processings.values()
+                     if p.work_id in wf.works]
+        return {"processings": procs, "total": len(procs)}
+
+    # ------------------------------------------------------------- steering
+    def command(self, request_id: str, action: str, *,
+                command_id: Optional[str] = None) -> Dict[str, Any]:
+        """Submit a lifecycle command against a request.
+
+        Journals the command (``pending``) before announcing it, so a
+        crash between the two is replayed by ``recover()``.  Idempotent
+        on ``command_id``: resubmitting a known command (an HTTP client
+        retrying after a lost response) returns its current state
+        instead of applying the action twice.
+
+        Raises ``KeyError`` (unknown request), ``ValueError`` (unknown
+        action) or :class:`~repro.core.commands.CommandConflict` (the
+        action cannot apply to the request's current lifecycle state).
+        """
+        if action not in VALID_COMMAND_ACTIONS:
+            raise ValueError(
+                f"invalid action {action!r}; expected one of "
+                f"{', '.join(VALID_COMMAND_ACTIONS)}")
+        with self.ctx.lock:
+            info = self._requests[request_id]  # KeyError -> 404
+            if command_id and command_id in self.ctx.commands:
+                existing = self.ctx.commands[command_id]
+                if (existing.request_id != request_id
+                        or existing.action != action):
+                    # a replay must BE a replay — echoing back some
+                    # other request's command would silently drop the
+                    # caller's intended action
+                    raise CommandConflict(
+                        f"command_id {command_id!r} was already used "
+                        f"for {existing.action!r} on request "
+                        f"{existing.request_id!r}")
+                return existing.to_dict()
+            wf_id = info["workflow_id"]
+            ctrl = self.ctx.control.get(wf_id)
+            # strict submit-time checks (the Commander itself is lenient
+            # so crash-replays of already-applied commands degrade to
+            # no-ops instead of spurious failures)
+            if ctrl == CTRL_ABORTED and action != "abort":
+                raise CommandConflict(
+                    f"request {request_id!r} is aborted; only a "
+                    f"duplicate abort is accepted")
+            if action == "resume" and ctrl != CTRL_SUSPENDED:
+                raise CommandConflict(
+                    f"request {request_id!r} is not suspended")
+            if action == "suspend" and ctrl is None:
+                wf = self.ctx.workflows.get(wf_id)
+                if (wf is not None and wf.finished
+                        and self.ctx.quiescent(wf_id)):
+                    raise CommandConflict(
+                        f"request {request_id!r} already finished; "
+                        f"nothing to suspend")
+            cmd = Command(request_id=request_id, action=action,
+                          workflow_id=wf_id,
+                          **({"command_id": command_id}
+                             if command_id else {}))
+            self.ctx.register_command(cmd)
+            d = cmd.to_dict()
+        # journal BEFORE announcing: a command on the bus but not in the
+        # store would be lost by a crash; the reverse is replayed
+        self.ctx.store.save_command(d)
+        self.ctx.bus.publish(M.T_NEW_COMMANDS,
+                             {"command_id": cmd.command_id})
+        return d
+
+    def abort(self, request_id: str, **kw) -> Dict[str, Any]:
+        return self.command(request_id, "abort", **kw)
+
+    def suspend(self, request_id: str, **kw) -> Dict[str, Any]:
+        return self.command(request_id, "suspend", **kw)
+
+    def resume(self, request_id: str, **kw) -> Dict[str, Any]:
+        return self.command(request_id, "resume", **kw)
+
+    def retry(self, request_id: str, **kw) -> Dict[str, Any]:
+        return self.command(request_id, "retry", **kw)
+
+    def get_command(self, request_id: str,
+                    command_id: str) -> Dict[str, Any]:
+        with self.ctx.lock:
+            cmd = self.ctx.commands.get(command_id)
+            if cmd is None or cmd.request_id != request_id:
+                raise KeyError(f"unknown command {command_id!r} for "
+                               f"request {request_id!r}")
+            return cmd.to_dict()
+
+    def list_commands(self, request_id: str) -> Dict[str, Any]:
+        self._requests[request_id]  # KeyError -> 404
+        with self.ctx.lock:
+            cmds = [c.to_dict() for c in
+                    self.ctx.commands_by_request.get(request_id, ())]
+        return {"commands": cmds, "total": len(cmds)}
+
+    def pending_commands(self) -> int:
+        """Commands journaled but not yet applied (healthz: a wedged
+        command plane shows up as this number growing)."""
+        with self.ctx.lock:
+            return sum(1 for c in self.ctx.commands.values() if c.pending)
+
+    def wait_command(self, request_id: str, command_id: str,
+                     timeout: float = 30.0) -> Dict[str, Any]:
+        """Block until a command leaves ``pending`` (threaded mode)."""
+        deadline = time.time() + timeout
+        while True:
+            d = self.get_command(request_id, command_id)
+            if d["status"] != "pending":
+                return d
+            if time.time() > deadline:
+                raise TimeoutError(
+                    f"command {command_id} still pending after {timeout}s")
+            time.sleep(0.01)
+
     def lookup_collection(self, name: str) -> Dict[str, Any]:
         return self.ctx.ddm.get_collection(name).to_dict()
 
@@ -214,9 +357,9 @@ class IDDS:
         """
         store = self.ctx.store
         counts = {"requests": 0, "workflows": 0, "works": 0,
-                  "processings": 0, "collections": 0,
+                  "processings": 0, "collections": 0, "commands": 0,
                   "requeued_processings": 0, "replayed_events": 0,
-                  "orphaned_leases": 0}
+                  "replayed_commands": 0, "orphaned_leases": 0}
         transformer = next(d for d in self.daemons
                            if isinstance(d, Transformer))
         new_wfs: List[Workflow] = []
@@ -240,6 +383,19 @@ class IDDS:
                 if r.get("workflow_id"):
                     self.ctx.request_of.setdefault(r["workflow_id"],
                                                    r["request_id"])
+                    # rebuild the steering state the daemons gate on: a
+                    # suspended/aborted request stays fenced across the
+                    # restart until an operator resumes it
+                    if r.get("status") in (CTRL_SUSPENDED, CTRL_ABORTED):
+                        self.ctx.control[r["workflow_id"]] = r["status"]
+            new_cmds: List[Command] = []
+            for c in store.load_commands():
+                if c["command_id"] in self.ctx.commands:
+                    continue
+                cmd = Command.from_dict(c)
+                self.ctx.register_command(cmd)
+                new_cmds.append(cmd)
+                counts["commands"] += 1
             for d in store.load_workflows():
                 if d["workflow_id"] in self.ctx.workflows:
                     continue
@@ -313,6 +469,15 @@ class IDDS:
         for row in store.load_leases():
             store.delete_lease(row["job_id"])
             counts["orphaned_leases"] += 1
+        # commands journaled pending but never applied (or applied but
+        # not journaled done) died with the old Commander: replay them.
+        # Applying is idempotent against already-reflected state, so the
+        # effect of each command happens exactly once across restarts.
+        for cmd in new_cmds:
+            if cmd.pending:
+                self.ctx.bus.publish(M.T_NEW_COMMANDS,
+                                     {"command_id": cmd.command_id})
+                counts["replayed_commands"] += 1
         return counts
 
     # --------------------------------------------------------------- execution
@@ -360,11 +525,12 @@ class IDDS:
         self.ctx.store.close()
 
     def wait_request(self, request_id: str, timeout: float = 60.0) -> Dict:
-        """Block until a request's workflow finishes (threaded mode)."""
+        """Block until a request's workflow reaches a terminal state —
+        finished, or aborted by a command (threaded mode)."""
         deadline = time.time() + timeout
         while time.time() < deadline:
             info = self.request_status(request_id)
-            if info.get("status") == "finished":
+            if info.get("status") in ("finished", "aborted"):
                 return info
             time.sleep(0.01)
         raise TimeoutError(f"request {request_id} not finished in {timeout}s")

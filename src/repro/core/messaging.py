@@ -100,3 +100,7 @@ T_WORK_DONE = "idds.works.done"               # Transformer -> Marshaller
 T_OUTPUT_AVAILABLE = "idds.outputs.available"  # Transformer -> Conductor
 T_CONSUMER_NOTIFY = "idds.consumers.notify"   # Conductor -> data consumers
 T_COLLECTION_UPDATED = "ddm.collections.updated"  # DDM -> Transformer
+# steering plane (request lifecycle commands)
+T_NEW_COMMANDS = "idds.commands.new"              # client -> Commander
+T_CMD_TRANSFORMER = "idds.commands.transformer"   # Commander -> Transformer
+T_CMD_CARRIER = "idds.commands.carrier"           # Commander -> Carrier

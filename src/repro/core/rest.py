@@ -3,31 +3,49 @@
 The paper describes iDDS as "a general Restful service to receive
 requests from WFMS" — this module is that network boundary.  It wraps an
 in-process :class:`repro.core.idds.IDDS` in a thread-pooled stdlib HTTP
-server so workflows can be submitted and tracked over the wire by any
-client speaking JSON (see :mod:`repro.core.client` for the typed SDK).
+server so workflows can be submitted, steered and tracked over the wire
+by any client speaking JSON (see :mod:`repro.core.client` for the typed
+SDK and :mod:`repro.core.cli` for the operator CLI).
 
-Endpoints (all JSON; details in docs/rest_api.md):
+The public surface is the **versioned /v1 namespace** (all JSON;
+details + deprecation table in docs/rest_api.md):
 
-  POST /requests                     submit a serialized Request
-  GET  /requests                     catalog listing (status filter,
-                                     limit/offset pagination)
-  GET  /requests/<id>                request status + work counts
-  GET  /requests/<id>/workflow       full workflow state (the DG)
-  GET  /collections/<name>           collection metadata
-  GET  /collections/<name>/contents  per-file availability
-  POST /jobs/lease                   worker: lease the next job
-  POST /jobs/<id>/heartbeat          worker: renew a held lease
-  POST /jobs/<id>/complete           worker: report result or error
-  GET  /workers                      execution-plane worker registry
-  GET  /stats                        daemon counters
-  GET  /healthz                      liveness + store backend + daemon
-                                     liveness + connected-worker count
-                                     (never requires auth)
+  POST /v1/requests                        submit a serialized Request
+  GET  /v1/requests                        catalog listing (status
+                                           filter, limit/offset)
+  GET  /v1/requests/<id>                   status + work counts +
+                                           suspended flag
+  GET  /v1/requests/<id>/workflow          full workflow state (the DG)
+  GET  /v1/requests/<id>/transforms        the request's Works
+  GET  /v1/requests/<id>/processings       the request's Processings
+  POST /v1/requests/<id>/commands          steer: abort / suspend /
+                                           resume / retry (202)
+  GET  /v1/requests/<id>/commands          command journal
+  GET  /v1/requests/<id>/commands/<cid>    one command's state
+  GET  /v1/collections/<name>              collection metadata
+  GET  /v1/collections/<name>/contents     per-file availability
+  POST /v1/jobs/lease                      worker: lease the next job
+  POST /v1/jobs/<id>/heartbeat             worker: renew a held lease
+  POST /v1/jobs/<id>/complete              worker: report result/error
+  GET  /v1/workers                         worker registry
+  GET  /v1/stats                           daemon counters
+  GET  /v1/healthz                         liveness + store backend +
+                                           scheduler queue depths +
+                                           pending-command count
+                                           (never requires auth)
+
+Every pre-v1 unversioned path is kept as a **deprecated alias**: same
+handler, same semantics, plus a ``Deprecation: true`` response header
+and a ``Link: </v1/...>; rel="successor-version"`` pointer.  The v1-only
+resources (transforms/processings/commands) have no unversioned alias.
 
 The /jobs endpoints are the pull-based execution plane (paper's pilot
 model): they 400 with type ``NotDistributed`` unless the head runs a
 ``DistributedWFM`` executor, and lease-validation failures (expired or
-reassigned leases) are 409 envelopes with type ``Conflict``.
+reassigned leases) are 409 envelopes with type ``Conflict``.  Lifecycle
+conflicts (e.g. resuming a request that is not suspended) are 409
+envelopes too.  A known path hit with the wrong method is a 405
+envelope carrying an ``Allow`` header listing the methods that work.
 
 Auth: a bearer token (``Authorization: Bearer <t>`` or ``X-IDDS-Token``)
 checked against the IDDS token set; failures surface as the same
@@ -52,6 +70,7 @@ import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Set, Tuple
 
+from repro.core.commands import CommandConflict
 from repro.core.idds import IDDS, AuthError
 from repro.core.scheduler import DistributedWFM, SchedulerConflict
 from repro.core.store import SqliteStore
@@ -184,6 +203,64 @@ class RestGateway:
         except KeyError:
             return 404, _err("NotFound", f"unknown request {request_id!r}")
 
+    def handle_transforms(self, request_id: str,
+                          token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.list_transforms(request_id)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown request {request_id!r}")
+
+    def handle_processings(self, request_id: str,
+                           token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.list_processings(request_id)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown request {request_id!r}")
+
+    # -- steering (request lifecycle commands) ---------------------------
+    def handle_command_submit(self, request_id: str, body: bytes,
+                              token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        action = d.get("action")
+        if not action or not isinstance(action, str):
+            return 400, _err("BadRequest", "action (string) is required")
+        command_id = d.get("command_id")
+        if command_id is not None and not isinstance(command_id, str):
+            return 400, _err("BadRequest", "command_id must be a string")
+        try:
+            cmd = self.idds.command(request_id, action,
+                                    command_id=command_id)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown request {request_id!r}")
+        except ValueError as e:
+            return 400, _err("BadRequest", str(e))
+        except CommandConflict as e:
+            return 409, _err("Conflict", str(e))
+        # 202: the Commander applies asynchronously; poll the command URL
+        return 202, cmd
+
+    def handle_command_list(self, request_id: str,
+                            token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.list_commands(request_id)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown request {request_id!r}")
+
+    def handle_command_get(self, request_id: str, command_id: str,
+                           token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.get_command(request_id, command_id)
+        except KeyError:
+            return 404, _err("NotFound",
+                             f"unknown command {command_id!r}")
+
     def handle_collection(self, name: str, token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
         try:
@@ -283,6 +360,10 @@ class RestGateway:
             "distributed": sched is not None,
             "workers_connected": (sched.worker_count()
                                   if sched is not None else 0),
+            # operators spot a wedged command/execution plane here: a
+            # growing pending_commands or an all-suspended queue
+            "queues": (sched.queue_depths() if sched is not None else {}),
+            "pending_commands": self.idds.pending_commands(),
             "uptime_s": (round(time.time() - self.started_at, 3)
                          if self.started_at else 0.0),
         }
@@ -316,26 +397,50 @@ def _parse_json_object(body: bytes):
 # Routing
 # ---------------------------------------------------------------------------
 
-# (method, compiled-path-regex, gateway-method, needs_token)
+API_PREFIX = "/v1"
+
+# (method, path-pattern relative to the mount, handler, has-legacy-alias).
+# Order matters: more specific patterns first.  Routes with legacy=True
+# predate the /v1 namespace and stay mounted unversioned as deprecated
+# aliases; v1-only resources (commands/transforms/processings) do not.
+_ROUTE_SPECS = [
+    ("POST", r"requests/?", "handle_submit", True),
+    ("GET", r"requests/?", "handle_list", True),
+    ("POST", r"jobs/lease/?", "handle_lease", True),
+    ("POST", r"jobs/(?P<job_id>[^/]+)/heartbeat/?",
+     "handle_job_heartbeat", True),
+    ("POST", r"jobs/(?P<job_id>[^/]+)/complete/?",
+     "handle_job_complete", True),
+    ("GET", r"workers/?", "handle_workers", True),
+    ("POST", r"requests/(?P<request_id>[^/]+)/commands/?",
+     "handle_command_submit", False),
+    ("GET", r"requests/(?P<request_id>[^/]+)/commands/"
+     r"(?P<command_id>[^/]+)/?", "handle_command_get", False),
+    ("GET", r"requests/(?P<request_id>[^/]+)/commands/?",
+     "handle_command_list", False),
+    ("GET", r"requests/(?P<request_id>[^/]+)/transforms/?",
+     "handle_transforms", False),
+    ("GET", r"requests/(?P<request_id>[^/]+)/processings/?",
+     "handle_processings", False),
+    ("GET", r"requests/(?P<request_id>[^/]+)/workflow/?",
+     "handle_workflow", True),
+    ("GET", r"requests/(?P<request_id>[^/]+)/?", "handle_status", True),
+    ("GET", r"collections/(?P<name>.+)/contents/?",
+     "handle_contents", True),
+    ("GET", r"collections/(?P<name>.+?)/?", "handle_collection", True),
+    ("GET", r"stats/?", "handle_stats", True),
+    ("GET", r"healthz/?", "handle_healthz", True),
+]
+
+# (method, compiled-regex, gateway-method, deprecated) — the v1 mounts
+# first (canonical), then the legacy aliases that answer with a
+# Deprecation header pointing at their v1 successor.
 _ROUTES = [
-    ("POST", re.compile(r"^/requests/?$"), "handle_submit"),
-    ("GET", re.compile(r"^/requests/?$"), "handle_list"),
-    ("POST", re.compile(r"^/jobs/lease/?$"), "handle_lease"),
-    ("POST", re.compile(r"^/jobs/(?P<job_id>[^/]+)/heartbeat/?$"),
-     "handle_job_heartbeat"),
-    ("POST", re.compile(r"^/jobs/(?P<job_id>[^/]+)/complete/?$"),
-     "handle_job_complete"),
-    ("GET", re.compile(r"^/workers/?$"), "handle_workers"),
-    ("GET", re.compile(r"^/requests/(?P<request_id>[^/]+)/workflow/?$"),
-     "handle_workflow"),
-    ("GET", re.compile(r"^/requests/(?P<request_id>[^/]+)/?$"),
-     "handle_status"),
-    ("GET", re.compile(r"^/collections/(?P<name>.+)/contents/?$"),
-     "handle_contents"),
-    ("GET", re.compile(r"^/collections/(?P<name>.+?)/?$"),
-     "handle_collection"),
-    ("GET", re.compile(r"^/stats/?$"), "handle_stats"),
-    ("GET", re.compile(r"^/healthz/?$"), "handle_healthz"),
+    (m, re.compile(f"^{re.escape(API_PREFIX)}/{pat}$"), fn, False)
+    for m, pat, fn, _legacy in _ROUTE_SPECS
+] + [
+    (m, re.compile(f"^/{pat}$"), fn, True)
+    for m, pat, fn, legacy in _ROUTE_SPECS if legacy
 ]
 
 
@@ -373,51 +478,70 @@ def _make_handler(gw: RestGateway):
                     break
                 length -= len(chunk)
 
-        def _reply(self, status: int, body: Any) -> None:
+        def _reply(self, status: int, body: Any,
+                   headers: Optional[List[Tuple[str, str]]] = None) -> None:
             self._drain_body()
             payload = json.dumps(body).encode("utf-8")
             self.send_response(status)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(payload)))
+            for k, v in headers or ():
+                self.send_header(k, v)
             if self.close_connection:
                 self.send_header("Connection", "close")
             self.end_headers()
             self.wfile.write(payload)
 
         def _dispatch(self, method: str) -> None:
+            # one handler instance serves every request on a keep-alive
+            # connection: reset the per-request drain marker, or the
+            # second bodied request would never be drained (desync)
+            self._body_consumed = False
             # Route on the still-quoted path; unquote captured segments in
             # _invoke so %2F inside a collection name survives routing.
             path = urllib.parse.urlsplit(self.path).path
-            matched_path = False
-            for m, rx, fn_name in _ROUTES:
+            allowed: List[str] = []
+            for m, rx, fn_name, deprecated in _ROUTES:
                 match = rx.match(path)
                 if match is None:
                     continue
                 if m != method:
-                    matched_path = True
+                    if m not in allowed:
+                        allowed.append(m)
                     continue
+                headers: List[Tuple[str, str]] = []
+                if deprecated:
+                    # pre-v1 alias: same behaviour, but tell clients
+                    # where the stable surface lives
+                    headers.append(("Deprecation", "true"))
+                    headers.append(("Link",
+                                    f'<{API_PREFIX}{path}>; '
+                                    f'rel="successor-version"'))
                 try:
                     status, body = self._invoke(fn_name, match)
                 except AuthError as e:
                     status, body = 401, _err("AuthError", str(e))
-                except SchedulerConflict as e:
+                except (SchedulerConflict, CommandConflict) as e:
                     status, body = 409, _err("Conflict", str(e))
                 except _NotDistributed as e:
                     status, body = 400, _err("NotDistributed", str(e))
                 except Exception as e:  # noqa: BLE001 — envelope, not trace
                     status, body = 500, _err(type(e).__name__, str(e))
-                self._reply(status, body)
+                self._reply(status, body, headers)
                 return
-            if matched_path:
+            if allowed:
+                # known path, wrong method: an Allow header tells the
+                # client what would have worked (RFC 9110 §15.5.6)
                 self._reply(405, _err("MethodNotAllowed",
-                                      f"{method} not allowed on {path}"))
+                                      f"{method} not allowed on {path}"),
+                            [("Allow", ", ".join(sorted(set(allowed))))])
             else:
                 self._reply(404, _err("NotFound", f"no route for {path}"))
 
         # handlers that consume the request body (all POST routes)
         _BODY_HANDLERS = frozenset({
             "handle_submit", "handle_lease", "handle_job_heartbeat",
-            "handle_job_complete"})
+            "handle_job_complete", "handle_command_submit"})
 
         def _invoke(self, fn_name: str, match) -> Tuple[int, Any]:
             token = self._token()

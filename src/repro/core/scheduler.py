@@ -38,6 +38,8 @@ from repro.core.store import Store
 from repro.core.workflow import Processing, ProcessingStatus
 
 _PENDING, _LEASED, _DONE = "pending", "leased", "done"
+# fenced by a `suspend` lifecycle command: not leasable until resumed
+_SUSPENDED = "suspended"
 
 
 class SchedulerConflict(Exception):
@@ -363,6 +365,59 @@ class JobScheduler:
             if j is not None and j.state == _DONE and j.outcome is None:
                 del self._jobs[old]
 
+    # ----------------------------------------- steering (lifecycle plane)
+    def fence_jobs(self, proc_ids: List[str]) -> int:
+        """Suspend: make these jobs unleasable.  A held lease is revoked
+        — the worker observes the fence as a 409 on its next heartbeat
+        (or completion) and drops the job — *without* consuming an
+        attempt (suspension is not a failure).  Returns #jobs fenced."""
+        with self._lock:
+            n = 0
+            for pid in proc_ids:
+                job = self._jobs.get(pid)
+                if job is None or job.state in (_DONE, _SUSPENDED):
+                    continue
+                if job.state == _LEASED:
+                    self._release_lease(job)
+                    self._bump("leases_fenced")
+                job.state = _SUSPENDED
+                n += 1
+            return n
+
+    def resume_jobs(self, proc_ids: List[str]) -> int:
+        """Resume: re-queue jobs fenced by ``fence_jobs``."""
+        with self._lock:
+            n = 0
+            for pid in proc_ids:
+                job = self._jobs.get(pid)
+                if job is None or job.state != _SUSPENDED:
+                    continue
+                self._seq += 1
+                job.seq = self._seq
+                self._push(job)
+                n += 1
+            return n
+
+    def revoke_jobs(self, proc_ids: List[str]) -> int:
+        """Abort: retire these jobs with no outcome.  A held lease is
+        revoked (stale worker reports get a 409); the job is never
+        requeued and ``take_outcome`` never surfaces it — the Carrier
+        drops the cancelled Processing on its own."""
+        with self._lock:
+            n = 0
+            for pid in proc_ids:
+                job = self._jobs.get(pid)
+                if job is None or job.state == _DONE:
+                    continue
+                if job.state == _LEASED:
+                    self._release_lease(job)
+                    self._bump("leases_revoked")
+                job.state = _DONE
+                job.outcome = None
+                self._retire(job)
+                n += 1
+            return n
+
     # -------------------------------------------------------------- expiry
     def expire(self) -> int:
         """Requeue every job whose lease deadline passed; returns how
@@ -461,9 +516,10 @@ class JobScheduler:
         with self._lock:
             out: Dict[str, Dict[str, int]] = {}
             for jid, job in self._jobs.items():
-                if job.state in (_PENDING, _LEASED):
-                    q = out.setdefault(job.queue,
-                                       {"pending": 0, "leased": 0})
+                if job.state in (_PENDING, _LEASED, _SUSPENDED):
+                    q = out.setdefault(job.queue, {"pending": 0,
+                                                   "leased": 0,
+                                                   "suspended": 0})
                     q[job.state] += 1
             return out
 
@@ -508,6 +564,15 @@ class DistributedWFM(WFMExecutor):
             self.submitted += 1
         proc.status = ProcessingStatus.SUBMITTED
         self.scheduler.enqueue(proc)
+
+    def fence(self, procs: List[Processing]) -> None:
+        self.scheduler.fence_jobs([p.proc_id for p in procs])
+
+    def release(self, procs: List[Processing]) -> None:
+        self.scheduler.resume_jobs([p.proc_id for p in procs])
+
+    def cancel(self, procs: List[Processing]) -> None:
+        self.scheduler.revoke_jobs([p.proc_id for p in procs])
 
     def poll(self, proc: Processing) -> Processing:
         out = self.scheduler.take_outcome(proc.proc_id)

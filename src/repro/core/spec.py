@@ -1,0 +1,173 @@
+"""Declarative workflow authoring: the ``WorkflowSpec`` builder.
+
+Hand-wiring ``add_template`` / ``add_condition`` / ``add_initial`` calls
+spreads one logical edge across three statements and leaks the DG's
+internal vocabulary (templates, branches, triggers) into every client.
+``WorkflowSpec`` is the fluent authoring surface the examples and
+services build on instead — it produces exactly the same JSON-
+serializable :class:`~repro.core.workflow.Workflow`, so nothing changes
+on the wire or in the daemons:
+
+    spec = WorkflowSpec("quickstart")
+    reco = spec.work("reco", payload="reconstruct")
+    spec.work("sim", payload="simulate") \\
+        .when("good_quality", then=[(reco, "pass_events")]) \\
+        .start({"n_events": 800}) \\
+        .start({"n_events": 200})
+    wf = spec.build()
+
+Vocabulary:
+
+  ``spec.work(name, payload, ...)``  declare a work template; returns a
+                                     chainable :class:`WorkStep`.
+  ``step.start(params)``             mark an initial Work instance
+                                     (repeatable for fan-out).
+  ``step.then(target, ...)``         unconditional successor edge;
+                                     returns the *target* step so
+                                     pipelines read left-to-right:
+                                     ``a.then(b).then(c)``.
+  ``step.when(predicate, then=..., otherwise=...)``
+                                     conditional edge (the DG's
+                                     Condition); returns *self* so one
+                                     step can carry several conditions.
+
+Branch targets are ``WorkStep`` objects, template-name strings, or
+``(target, binder_name)`` pairs when the edge re-binds parameters.
+Cycles are legal (that is what ``max_iterations`` bounds) — this is a
+DG builder, not a DAG builder.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Tuple, Union
+
+from repro.core.workflow import (Branch, Condition, Workflow,
+                                 WorkTemplate)
+
+# a branch target: a step, a template name, or (target, binder)
+Target = Union["WorkStep", str, Tuple[Union["WorkStep", str], str]]
+
+
+class WorkStep:
+    """One declared work template, chainable into edges."""
+
+    def __init__(self, spec: "WorkflowSpec", template: WorkTemplate):
+        self._spec = spec
+        self._template = template
+
+    @property
+    def name(self) -> str:
+        return self._template.name
+
+    def start(self, params: Optional[Dict[str, Any]] = None) -> "WorkStep":
+        """Add an initial Work instance bound to ``params``.  Call
+        repeatedly to fan out (one Work per call)."""
+        self._spec._initial.append((self.name, dict(params or {})))
+        return self
+
+    def then(self, target: Target, *, binder: str = "identity",
+             max_iterations: int = 100) -> "WorkStep":
+        """Unconditional successor: when a Work of this step terminates,
+        instantiate ``target``.  Returns the target step so pipelines
+        chain: ``a.then(b).then(c)``."""
+        self.when("always", then=[_with_binder(target, binder)],
+                  max_iterations=max_iterations)
+        return self._spec._resolve(target)
+
+    def when(self, predicate: str, *, then: Iterable[Target] = (),
+             otherwise: Iterable[Target] = (), binder: str = "identity",
+             max_iterations: int = 100) -> "WorkStep":
+        """Conditional successors: evaluate ``predicate`` against this
+        step's terminated Works; satisfied -> instantiate every target
+        in ``then``, else every target in ``otherwise``.  Returns
+        *self* so a step can stack multiple conditions."""
+        self._spec._conditions.append(Condition(
+            trigger=self.name, predicate=predicate,
+            true_next=self._spec._branches(then, binder),
+            false_next=self._spec._branches(otherwise, binder),
+            max_iterations=max_iterations))
+        return self
+
+
+def _with_binder(target: Target, binder: str) -> Target:
+    if binder == "identity" or isinstance(target, tuple):
+        return target
+    return (target, binder)
+
+
+class WorkflowSpec:
+    """Declarative builder producing a plain :class:`Workflow`."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._templates: Dict[str, WorkTemplate] = {}
+        self._conditions: List[Condition] = []
+        self._initial: List[Tuple[str, Dict[str, Any]]] = []
+
+    # -- declaration -------------------------------------------------------
+    def work(self, name: str, payload: str, *,
+             defaults: Optional[Dict[str, Any]] = None,
+             input_collection: Optional[str] = None,
+             output_collection: Optional[str] = None,
+             granularity: str = "fine",
+             max_attempts: int = 3,
+             start: Optional[Union[Dict[str, Any],
+                                   Iterable[Dict[str, Any]]]] = None,
+             ) -> WorkStep:
+        """Declare a work template.  ``start=`` is shorthand for
+        ``.start(...)`` — pass one params dict, or a list of dicts for
+        fan-out."""
+        if name in self._templates:
+            raise ValueError(f"work {name!r} declared twice")
+        t = WorkTemplate(
+            name=name, payload=payload, defaults=dict(defaults or {}),
+            input_collection=input_collection,
+            output_collection=output_collection,
+            granularity=granularity, max_attempts=max_attempts)
+        self._templates[name] = t
+        step = WorkStep(self, t)
+        if start is not None:
+            for params in ([start] if isinstance(start, dict) else start):
+                step.start(params)
+        return step
+
+    # -- assembly ----------------------------------------------------------
+    def build(self) -> Workflow:
+        """Validate and assemble the Workflow (same JSON shape as the
+        hand-wired API — submit it exactly as before)."""
+        wf = Workflow(name=self.name)
+        for t in self._templates.values():
+            wf.add_template(t)
+        for c in self._conditions:
+            wf.add_condition(c)  # validates trigger + branch targets
+        for template, params in self._initial:
+            wf.add_initial(template, params)
+        return wf
+
+    # -- internals ---------------------------------------------------------
+    def _resolve(self, target: Target) -> WorkStep:
+        if isinstance(target, tuple):
+            target = target[0]
+        if isinstance(target, WorkStep):
+            if target._spec is not self:
+                raise ValueError(
+                    f"work {target.name!r} belongs to another spec")
+            return target
+        if target not in self._templates:
+            raise KeyError(f"unknown work {target!r}; declare it with "
+                           f"spec.work(...) first")
+        return WorkStep(self, self._templates[target])
+
+    def _branches(self, targets: Union[Target, Iterable[Target]],
+                  binder: str) -> List[Branch]:
+        if isinstance(targets, (WorkStep, str)) or (
+                isinstance(targets, tuple) and len(targets) == 2
+                and isinstance(targets[1], str)
+                and isinstance(targets[0], (WorkStep, str))):
+            targets = [targets]  # single target passed bare
+        out = []
+        for t in targets:
+            b = binder
+            if isinstance(t, tuple):
+                t, b = t
+            out.append(Branch(self._resolve(t).name, binder=b))
+        return out

@@ -9,7 +9,7 @@ module is that persistence boundary for the reproduction:
   * :class:`InMemoryStore` — dict-backed, zero overhead, no durability
                              (unit tests, simulators, benchmarks);
   * :class:`SqliteStore`   — stdlib ``sqlite3`` in WAL mode with one
-                             connection per thread, so the five daemon
+                             connection per thread, so the six daemon
                              threads and the REST pool write concurrently.
 
 Entities are journaled as JSON blobs keyed by their natural primary key,
@@ -30,8 +30,9 @@ class StoreError(Exception):
 
 
 # Request catalog statuses a client may filter on (GET /requests?status=).
-VALID_REQUEST_STATUSES = ("new", "accepted", "running", "finished",
-                          "failed")
+# "suspended"/"aborted" are entered via lifecycle commands (commands.py).
+VALID_REQUEST_STATUSES = ("new", "accepted", "running", "suspended",
+                          "finished", "failed", "aborted")
 
 
 class Store:
@@ -101,6 +102,17 @@ class Store:
     def load_leases(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
 
+    # -- lifecycle commands (steering plane) -------------------------------
+    def save_command(self, cmd: Dict[str, Any]) -> None:
+        """Upsert one command row keyed on ``command_id``.  Commands are
+        journaled ``pending`` before they are announced and ``done``/
+        ``failed`` after they apply, so ``recover()`` can replay the
+        in-flight ones exactly once."""
+        raise NotImplementedError
+
+    def load_commands(self) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
     # -- collections + contents --------------------------------------------
     def save_collection(self, coll: Dict[str, Any]) -> None:
         """Upsert a collection and its per-file contents."""
@@ -139,6 +151,7 @@ class InMemoryStore(Store):
         self._processings: Dict[str, Dict[str, Any]] = {}
         self._collections: Dict[str, Dict[str, Any]] = {}
         self._leases: Dict[str, Dict[str, Any]] = {}
+        self._commands: Dict[str, Dict[str, Any]] = {}
 
     def save_request(self, info: Dict[str, Any]) -> None:
         with self._lock:
@@ -201,6 +214,14 @@ class InMemoryStore(Store):
     def load_leases(self) -> List[Dict[str, Any]]:
         with self._lock:
             return [dict(le) for le in self._leases.values()]
+
+    def save_command(self, cmd: Dict[str, Any]) -> None:
+        with self._lock:
+            self._commands[cmd["command_id"]] = dict(cmd)
+
+    def load_commands(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [dict(c) for c in self._commands.values()]
 
     def save_collection(self, coll: Dict[str, Any]) -> None:
         with self._lock:
@@ -268,6 +289,15 @@ CREATE TABLE IF NOT EXISTS leases (
     expires_at REAL,
     data       TEXT NOT NULL
 );
+CREATE TABLE IF NOT EXISTS commands (
+    command_id TEXT PRIMARY KEY,
+    request_id TEXT,
+    action     TEXT,
+    status     TEXT,
+    created_at REAL,
+    data       TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_commands_request ON commands (request_id);
 CREATE TABLE IF NOT EXISTS collections (
     name  TEXT PRIMARY KEY,
     scope TEXT
@@ -439,6 +469,21 @@ class SqliteStore(Store):
     def load_leases(self) -> List[Dict[str, Any]]:
         rows = self._conn().execute(
             "SELECT data FROM leases ORDER BY rowid").fetchall()
+        return [json.loads(r[0]) for r in rows]
+
+    # -- commands ------------------------------------------------------------
+    def save_command(self, cmd: Dict[str, Any]) -> None:
+        self._conn().execute(
+            "INSERT INTO commands (command_id, request_id, action,"
+            " status, created_at, data) VALUES (?, ?, ?, ?, ?, ?)"
+            " ON CONFLICT(command_id) DO UPDATE SET"
+            " status=excluded.status, data=excluded.data",
+            (cmd["command_id"], cmd.get("request_id"), cmd.get("action"),
+             cmd.get("status"), cmd.get("created_at"), json.dumps(cmd)))
+
+    def load_commands(self) -> List[Dict[str, Any]]:
+        rows = self._conn().execute(
+            "SELECT data FROM commands ORDER BY rowid").fetchall()
         return [json.loads(r[0]) for r in rows]
 
     # -- collections --------------------------------------------------------

@@ -36,11 +36,12 @@ class WorkStatus(str, enum.Enum):
     FINISHED = "finished"
     SUBFINISHED = "subfinished"    # some processings failed terminally
     FAILED = "failed"
+    CANCELLED = "cancelled"        # aborted by a lifecycle command
 
     @property
     def terminated(self) -> bool:
         return self in (WorkStatus.FINISHED, WorkStatus.SUBFINISHED,
-                        WorkStatus.FAILED)
+                        WorkStatus.FAILED, WorkStatus.CANCELLED)
 
 
 class ProcessingStatus(str, enum.Enum):
@@ -49,6 +50,7 @@ class ProcessingStatus(str, enum.Enum):
     RUNNING = "running"
     FINISHED = "finished"
     FAILED = "failed"
+    CANCELLED = "cancelled"        # aborted by a lifecycle command
 
 
 # ---------------------------------------------------------------------------
@@ -173,10 +175,12 @@ class Processing:
 
     @property
     def terminal(self) -> bool:
-        """No further execution will happen: finished, or failed with no
-        attempts left.  A FAILED processing with attempts remaining is
-        NOT terminal — the Carrier (or crash recovery) will retry it."""
-        return (self.status == ProcessingStatus.FINISHED
+        """No further execution will happen: finished, cancelled by a
+        lifecycle command, or failed with no attempts left.  A FAILED
+        processing with attempts remaining is NOT terminal — the Carrier
+        (or crash recovery) will retry it."""
+        return (self.status in (ProcessingStatus.FINISHED,
+                                ProcessingStatus.CANCELLED)
                 or (self.status == ProcessingStatus.FAILED
                     and self.attempt >= self.max_attempts))
 

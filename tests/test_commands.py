@@ -1,0 +1,707 @@
+"""Request lifecycle command plane: abort/suspend/resume/retry through
+every layer — in-process pump mode, the lease scheduler (fencing live
+workers), crash recovery on both store backends (exactly-once replay),
+and the /v1 REST surface with its deprecated legacy aliases.
+"""
+import http.client
+import json
+import os
+import time
+
+import pytest
+
+from repro.core import payloads as reg
+from repro.core.client import ConflictError, IDDSClient
+from repro.core.commands import CommandConflict
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+from repro.core.scheduler import DistributedWFM, SchedulerConflict
+from repro.core.spec import WorkflowSpec
+from repro.core.store import InMemoryStore, SqliteStore
+
+reg.register_payload("cmd_double",
+                     lambda params, inputs: {"x": params["x"] * 2})
+
+
+def _chain_workflow(x=3):
+    spec = WorkflowSpec("cmd-chain")
+    a = spec.work("a", payload="cmd_double", start={"x": x})
+    a.then(spec.work("b", payload="cmd_double"))
+    return spec.build()
+
+
+def _sleep_workflow(n_jobs=2, ms=30):
+    spec = WorkflowSpec("cmd-sleep")
+    spec.work("s", payload="sleep_ms", defaults={"ms": ms},
+              start=[{} for _ in range(n_jobs)])
+    return spec.build()
+
+
+@pytest.fixture(params=["memory", "sqlite"])
+def store_factory(request, tmp_path):
+    """Factory returning a *fresh handle on the same persisted state*,
+    so kill-and-restart works on both backends (the memory backend
+    survives by sharing the instance, sqlite by sharing the file)."""
+    if request.param == "memory":
+        s = InMemoryStore()
+        yield lambda: s
+    else:
+        path = str(tmp_path / "cmd.db")
+        handles = []
+
+        def make():
+            h = SqliteStore(path)
+            handles.append(h)
+            return h
+
+        yield make
+        for h in handles:
+            h.close()
+
+
+# --------------------------------------------------------- pump-mode basics
+
+def test_suspend_blocks_dispatch_then_resume_finishes():
+    idds = IDDS()
+    rid = idds.submit_workflow(_chain_workflow())
+    cmd = idds.suspend(rid)
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["status"] == "suspended"
+    assert info["suspended"] is True
+    assert info["works"] == {"activated": 1}  # created but never dispatched
+    assert idds.get_command(rid, cmd["command_id"])["status"] == "done"
+    # suspended is not stuck: the flag + command tally say why it idles
+    assert info["commands"]["total"] == 1
+    idds.resume(rid)
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["status"] == "finished"
+    assert info["suspended"] is False
+    assert info["works"] == {"finished": 2}
+
+
+def test_abort_cancels_works_and_is_terminal():
+    idds = IDDS()
+    rid = idds.submit_workflow(_chain_workflow())
+    idds.abort(rid)
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["status"] == "aborted"
+    assert info["works"] == {"cancelled": 1}
+    # steering an aborted request conflicts at submit time...
+    with pytest.raises(CommandConflict):
+        idds.resume(rid)
+    with pytest.raises(CommandConflict):
+        idds.retry(rid)
+    # ...but a duplicate abort is an accepted no-op
+    dup = idds.abort(rid)
+    idds.pump()
+    assert idds.get_command(rid, dup["command_id"])["status"] == "done"
+
+
+def test_abort_midway_cancels_only_unfinished_works():
+    """Abort after the first work finished: its result survives, the
+    already-spawned successor is cancelled, and nothing new spawns."""
+    idds = IDDS(executor=DistributedWFM(lease_ttl=30.0))
+    rid = idds.submit_workflow(_chain_workflow(x=3))
+    idds.pump_until(lambda: idds.scheduler.queue_depths())
+    job_a = idds.scheduler.lease("w1")
+    idds.scheduler.complete(job_a["job_id"], "w1", result={"x": 6})
+    # pump until a finalized and its successor b is queued for dispatch
+    idds.pump_until(lambda: idds.scheduler.queue_depths()
+                    .get("default", {}).get("pending", 0) > 0)
+    idds.abort(rid)
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["status"] == "aborted"
+    assert info["works"] == {"finished": 1, "cancelled": 1}
+    wf = idds.get_workflow(rid)
+    by_status = {w.status.value: w for w in wf.works.values()}
+    assert by_status["finished"].result == {"x": 6}  # survived the abort
+    assert idds.scheduler.lease("w2") is None  # b's job was revoked
+
+
+def test_resume_requires_suspended_state():
+    idds = IDDS()
+    rid = idds.submit_workflow(_chain_workflow())
+    with pytest.raises(CommandConflict):
+        idds.resume(rid)
+    with pytest.raises(ValueError):
+        idds.command(rid, "explode")
+    with pytest.raises(KeyError):
+        idds.suspend("req-nonexistent")
+
+
+def test_suspend_of_finished_request_conflicts():
+    """Losing the race with completion must not mislabel a finished
+    request as suspended (regression)."""
+    idds = IDDS()
+    rid = idds.submit_workflow(_chain_workflow())
+    idds.pump()
+    assert idds.request_status(rid)["status"] == "finished"
+    with pytest.raises(CommandConflict):
+        idds.suspend(rid)
+    # the lenient apply path no-ops too (race: finished between submit
+    # pre-check and the Commander's apply — inject the command directly,
+    # exactly as a crash replay would deliver it)
+    from repro.core import messaging as M
+    from repro.core.commands import Command
+    late = Command(request_id=rid, action="suspend",
+                   workflow_id=idds._requests[rid]["workflow_id"],
+                   command_id="cmd-late")
+    with idds.ctx.lock:
+        idds.ctx.register_command(late)
+    idds.ctx.bus.publish(M.T_NEW_COMMANDS, {"command_id": "cmd-late"})
+    idds.pump()
+    d = idds.get_command(rid, "cmd-late")
+    assert d["status"] == "done" and d["detail"]["noop"] is True
+    assert idds.request_status(rid)["status"] == "finished"
+
+
+def test_retry_while_suspended_stays_suspended():
+    """Retrying a suspended request must not flip its catalog row to
+    'running' while dispatch is still fenced (regression)."""
+    from repro.core.workflow import FileRef
+
+    def hopeless(params, inputs):
+        raise RuntimeError("broken")
+
+    reg.register_payload("cmd_hopeless2", hopeless)
+    spec = WorkflowSpec("retry-susp")
+    spec.work("f", payload="cmd_hopeless2", max_attempts=1, start={})
+    # a second work waiting on an unavailable input keeps the request
+    # non-terminal, so the suspend is legal
+    spec.work("waiting", payload="noop", input_collection="retry-in",
+              start={})
+    idds = IDDS()
+    idds.ctx.ddm.register_collection(
+        "retry-in", [FileRef("f0", available=False)])
+    rid = idds.submit_workflow(spec.build())
+    idds.pump()
+    assert idds.request_status(rid)["works"] == {
+        "subfinished": 1, "activated": 1}
+    idds.suspend(rid)
+    idds.pump()
+    idds.retry(rid)
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["status"] == "suspended" and info["suspended"]
+    rows = idds.list_requests(status="suspended")["requests"]
+    assert [r["request_id"] for r in rows] == [rid]
+    # the fresh attempt parked: the payload did not run yet
+    assert info["works"]["transforming"] == 1
+    # resume releases the parked retry attempt (fails again -> terminal)
+    idds.resume(rid)
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["status"] == "running"  # "waiting" still needs its input
+    assert info["works"] == {"subfinished": 1, "activated": 1}
+
+
+def test_command_id_reuse_across_requests_conflicts():
+    idds = IDDS()
+    rid_a = idds.submit_workflow(_chain_workflow())
+    rid_b = idds.submit_workflow(_chain_workflow())
+    idds.command(rid_a, "suspend", command_id="cmd-shared")
+    with pytest.raises(CommandConflict):
+        idds.command(rid_b, "suspend", command_id="cmd-shared")
+    with pytest.raises(CommandConflict):
+        idds.command(rid_a, "abort", command_id="cmd-shared")
+
+
+def test_command_submission_is_idempotent_on_command_id():
+    idds = IDDS()
+    rid = idds.submit_workflow(_chain_workflow())
+    first = idds.command(rid, "suspend", command_id="cmd-fixed")
+    replay = idds.command(rid, "suspend", command_id="cmd-fixed")
+    assert first["command_id"] == replay["command_id"] == "cmd-fixed"
+    idds.pump()
+    assert idds.list_commands(rid)["total"] == 1  # not applied twice
+    # post-apply replay returns the journaled terminal state
+    done = idds.command(rid, "suspend", command_id="cmd-fixed")
+    assert done["status"] == "done"
+
+
+def test_suspended_flag_rides_catalog_listing():
+    idds = IDDS()
+    rid = idds.submit_workflow(_chain_workflow())
+    idds.suspend(rid)
+    idds.pump()
+    idds.request_status(rid)  # write-through
+    rows = idds.list_requests(status="suspended")
+    assert [r["request_id"] for r in rows["requests"]] == [rid]
+
+
+# ------------------------------------------------------------------- retry
+
+def test_retry_reruns_failed_processings_with_fresh_budget():
+    calls = {"n": 0}
+
+    def flaky(params, inputs):
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise RuntimeError("transient")
+        return {"ok": True}
+
+    reg.register_payload("cmd_flaky", flaky)
+    spec = WorkflowSpec("retryable")
+    spec.work("f", payload="cmd_flaky", max_attempts=2, start={})
+    idds = IDDS()
+    rid = idds.submit_workflow(spec.build())
+    idds.pump()
+    assert idds.request_status(rid)["works"] == {"subfinished": 1}
+    assert calls["n"] == 2  # original budget exhausted
+    cmd = idds.retry(rid)
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["works"] == {"finished": 1}
+    assert calls["n"] == 4  # two fresh attempts: 3rd fails, 4th succeeds
+    d = idds.get_command(rid, cmd["command_id"])
+    assert d["status"] == "done"
+    assert d["detail"] == {"works_retried": 1, "processings_retried": 1}
+
+
+def test_retry_exhausting_attempt_budgets_repeatedly():
+    def hopeless(params, inputs):
+        raise RuntimeError("always broken")
+
+    reg.register_payload("cmd_hopeless", hopeless)
+    spec = WorkflowSpec("hopeless")
+    spec.work("f", payload="cmd_hopeless", max_attempts=2, start={})
+    idds = IDDS()
+    rid = idds.submit_workflow(spec.build())
+    idds.pump()
+    assert idds.request_status(rid)["works"] == {"subfinished": 1}
+    assert idds.stats["job_attempts"] == 2
+    for round_no in (1, 2):
+        idds.retry(rid)
+        idds.pump()
+        # each retry grants a fresh budget, burns it, and re-terminates
+        assert idds.request_status(rid)["works"] == {"subfinished": 1}
+        assert idds.stats["job_attempts"] == 2 + 2 * round_no
+    # a request with nothing failed retries as a no-op
+    idds2 = IDDS()
+    rid2 = idds2.submit_workflow(_chain_workflow())
+    idds2.pump()
+    cmd = idds2.retry(rid2)
+    idds2.pump()
+    d = idds2.get_command(rid2, cmd["command_id"])
+    assert d["status"] == "done" and d["detail"]["noop"] is True
+
+
+def test_retry_does_not_respawn_successors():
+    """A failed trigger work whose condition already fired must not
+    double-instantiate its successors when retried to success."""
+    calls = {"n": 0}
+
+    def once_flaky(params, inputs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("first time fails")
+        return {"x": 1}
+
+    reg.register_payload("cmd_once_flaky", once_flaky)
+    spec = WorkflowSpec("respawn")
+    a = spec.work("a", payload="cmd_once_flaky", max_attempts=1,
+                  start={})
+    a.then(spec.work("b", payload="cmd_double",
+                     defaults={"x": 1}))
+    idds = IDDS()
+    rid = idds.submit_workflow(spec.build())
+    idds.pump()
+    # a subfinished, but its (always) condition fired -> b ran fine
+    assert idds.request_status(rid)["works"] == {
+        "subfinished": 1, "finished": 1}
+    idds.retry(rid)
+    idds.pump()
+    info = idds.request_status(rid)
+    assert info["works"] == {"finished": 2}  # still 2 works, not 3
+
+
+# ----------------------------------------------- scheduler / worker fencing
+
+def test_abort_while_leased_fences_worker_no_double_completion():
+    idds = IDDS(executor=DistributedWFM(lease_ttl=30.0))
+    rid = idds.submit_workflow(_sleep_workflow(n_jobs=1))
+    idds.pump_until(lambda: idds.scheduler.queue_depths())
+    job = idds.scheduler.lease("w1")
+    assert job is not None
+    idds.abort(rid)
+    idds.pump()
+    # the worker observes the fence on heartbeat...
+    with pytest.raises(SchedulerConflict):
+        idds.scheduler.heartbeat(job["job_id"], "w1")
+    # ...and a late completion is rejected the same way (no double
+    # completion of a cancelled job)
+    with pytest.raises(SchedulerConflict):
+        idds.scheduler.complete(job["job_id"], "w1", result={"ok": True})
+    info = idds.request_status(rid)
+    assert info["status"] == "aborted"
+    assert info["works"] == {"cancelled": 1}
+    # the revoked job never resurfaces to another worker
+    assert idds.scheduler.lease("w2") is None
+
+
+def test_suspend_fences_lease_and_resume_releases_without_attempt_cost():
+    idds = IDDS(executor=DistributedWFM(lease_ttl=30.0))
+    rid = idds.submit_workflow(_sleep_workflow(n_jobs=1))
+    idds.pump_until(lambda: idds.scheduler.queue_depths())
+    job = idds.scheduler.lease("victim")
+    idds.suspend(rid)
+    idds.pump()
+    with pytest.raises(SchedulerConflict):
+        idds.scheduler.heartbeat(job["job_id"], "victim")
+    assert idds.scheduler.lease("w2") is None  # fenced: not leasable
+    depths = idds.scheduler.queue_depths()
+    assert depths["default"]["suspended"] == 1
+    idds.resume(rid)
+    idds.pump()
+    job2 = idds.scheduler.lease("w2")
+    assert job2 is not None and job2["job_id"] == job["job_id"]
+    # suspension consumed no attempt
+    assert job2["attempt"] == job["attempt"]
+
+
+# ----------------------------------------------------------- crash recovery
+
+def test_suspend_kill_recover_resume_both_backends(store_factory):
+    idds = IDDS(store=store_factory())
+    rid = idds.submit_workflow(_chain_workflow())
+    idds.suspend(rid)
+    idds.pump()
+    assert idds.request_status(rid)["status"] == "suspended"
+    # "kill": a fresh head over the same persisted state
+    idds2 = IDDS(store=store_factory())
+    counts = idds2.recover()
+    assert counts["commands"] == 1 and counts["replayed_commands"] == 0
+    idds2.pump()
+    info = idds2.request_status(rid)
+    assert info["status"] == "suspended"  # fence survived the restart
+    assert info["works"] == {"activated": 1}
+    idds2.resume(rid)
+    idds2.pump()
+    info = idds2.request_status(rid)
+    assert info["status"] == "finished"
+    assert info["works"] == {"finished": 2}  # exactly once: no dupes
+
+
+def test_pending_command_replays_exactly_once(store_factory):
+    """A command journaled but never applied (head died first) is
+    replayed by recover() and applied exactly once."""
+    store = store_factory()
+    idds = IDDS(store=store)
+    rid = idds.submit_workflow(_chain_workflow())
+    idds.suspend(rid)  # journaled pending; NO pump: Commander never ran
+    idds2 = IDDS(store=store_factory())
+    counts = idds2.recover()
+    assert counts["replayed_commands"] == 1
+    idds2.pump()
+    info = idds2.request_status(rid)
+    assert info["status"] == "suspended"
+    assert idds2.list_commands(rid)["commands"][0]["status"] == "done"
+    # a second recover() must not re-apply it
+    counts2 = idds2.recover()
+    assert counts2["replayed_commands"] == 0
+    idds2.pump()
+    idds2.resume(rid)
+    idds2.pump()
+    assert idds2.request_status(rid)["works"] == {"finished": 2}
+
+
+def test_retry_after_restart_finalizes(store_factory):
+    """A retry issued against a *recovered* head must finalize: the
+    Transformer's retry handler re-seeds the dispatched-inputs set that
+    recovery skipped for then-terminal works (regression: the work
+    wedged at `transforming` forever)."""
+    calls = {"n": 0}
+
+    def flaky(params, inputs):
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise RuntimeError("transient")
+        return {"ok": True}
+
+    reg.register_payload("cmd_restart_flaky", flaky)
+    spec = WorkflowSpec("retry-restart")
+    spec.work("f", payload="cmd_restart_flaky", max_attempts=1, start={})
+    idds = IDDS(store=store_factory())
+    rid = idds.submit_workflow(spec.build())
+    idds.pump()
+    assert idds.request_status(rid)["works"] == {"subfinished": 1}
+    # kill -> recover -> retry on the fresh head
+    idds2 = IDDS(store=store_factory())
+    idds2.recover()
+    idds2.pump()
+    idds2.retry(rid)
+    idds2.pump()
+    info = idds2.request_status(rid)
+    assert info["status"] == "finished"
+    assert info["works"] == {"finished": 1}
+
+
+def test_abort_replay_after_partial_apply_still_cancels(store_factory):
+    """Crash window: the Commander journaled the request row 'aborted'
+    but died before journaling the cancelled works; the replayed
+    pending abort must still cancel them (regression: the replay
+    degraded to a noop because control was rebuilt from the request
+    row)."""
+    store = store_factory()
+    idds = IDDS(store=store)
+    rid = idds.submit_workflow(_chain_workflow())
+    idds.suspend(rid)
+    idds.pump()  # works exist (activated) and stay fenced
+    cmd = idds.abort(rid)  # journaled pending; Commander never runs
+    # simulate the partial apply: request row updated, works untouched
+    info = dict(idds.ctx.requests[rid])
+    info["status"] = "aborted"
+    store.save_request(info)
+    # kill -> recover (control rebuilt as aborted, abort replayed)
+    idds2 = IDDS(store=store_factory())
+    counts = idds2.recover()
+    assert counts["replayed_commands"] == 1
+    idds2.pump()
+    info2 = idds2.request_status(rid)
+    assert info2["status"] == "aborted"
+    assert info2["works"] == {"cancelled": 1}  # NOT left activated
+    d = idds2.get_command(rid, cmd["command_id"])
+    assert d["status"] == "done"
+    assert d["detail"]["works_cancelled"] == 1
+
+
+def test_aborted_request_stays_aborted_after_recovery(store_factory):
+    idds = IDDS(store=store_factory())
+    rid = idds.submit_workflow(_chain_workflow())
+    idds.abort(rid)
+    idds.pump()
+    idds2 = IDDS(store=store_factory())
+    idds2.recover()
+    idds2.pump()
+    info = idds2.request_status(rid)
+    assert info["status"] == "aborted"
+    assert info["works"] == {"cancelled": 1}  # nothing was resurrected
+
+
+# ------------------------------------------------------------ REST surface
+
+@pytest.fixture
+def gateway():
+    gw = RestGateway(IDDS())
+    gw.start()
+    yield gw
+    gw.stop()
+
+
+@pytest.fixture
+def dist_gateway():
+    gw = RestGateway(IDDS(executor=DistributedWFM(lease_ttl=5.0)))
+    gw.start()
+    yield gw
+    gw.stop()
+
+
+def test_v1_command_round_trip_over_the_wire(gateway):
+    client = IDDSClient(gateway.url)
+    # slow enough that the suspend lands while the request is running
+    # (suspending an already-finished request is a 409 by design)
+    rid = client.submit_workflow(_sleep_workflow(n_jobs=4, ms=300))
+    cmd = client.suspend(rid, wait=True)
+    assert cmd["status"] == "done"
+    info = client.status(rid)
+    assert info["status"] == "suspended" and info["suspended"] is True
+    cmd = client.resume(rid, wait=True)
+    assert cmd["status"] == "done"
+    info = client.wait(rid, timeout=30)
+    assert info["works"] == {"finished": 4}
+    journal = client.list_commands(rid)
+    assert [c["action"] for c in journal["commands"]] == [
+        "suspend", "resume"]
+    assert client.get_command(
+        rid, journal["commands"][0]["command_id"])["status"] == "done"
+
+
+def test_v1_abort_over_the_wire_with_live_worker(dist_gateway):
+    """Acceptance: abort-while-leased over HTTP — the worker agent is
+    fenced on heartbeat, drops the job, and nothing double-completes."""
+    from repro.worker import WorkerAgent
+    client = IDDSClient(dist_gateway.url)
+    rid = client.submit_workflow(_sleep_workflow(n_jobs=1, ms=30))
+    agent = WorkerAgent(dist_gateway.url, worker_id="fenced-w",
+                        poll_interval=0.02)
+    deadline = time.time() + 10
+    job = None
+    while job is None:
+        job = client.lease_job("fenced-w")
+        assert time.time() < deadline
+        time.sleep(0.02)
+    client.abort(rid, wait=True)
+    with pytest.raises(ConflictError):
+        client.heartbeat_job(job["job_id"], "fenced-w")
+    with pytest.raises(ConflictError):
+        client.complete_job(job["job_id"], "fenced-w", result={"ok": 1})
+    info = client.wait(rid, timeout=30)
+    assert info["status"] == "aborted"
+    assert agent.jobs_done == 0
+
+
+def test_command_validation_envelopes(gateway):
+    client = IDDSClient(gateway.url)
+    rid = client.submit_workflow(_chain_workflow())
+    conn = http.client.HTTPConnection(gateway.host, gateway.port,
+                                      timeout=5)
+    for body, expect in ((b"{not json", 400), (b"{}", 400),
+                         (b'{"action": 5}', 400),
+                         (b'{"action": "explode"}', 400),
+                         (b'{"action": "resume"}', 409)):
+        conn.request("POST", f"/v1/requests/{rid}/commands", body=body)
+        resp = conn.getresponse()
+        assert resp.status == expect, body
+        env = json.loads(resp.read())["error"]
+        assert env["type"] == ("Conflict" if expect == 409
+                               else "BadRequest")
+    conn.request("POST", "/v1/requests/req-nope/commands",
+                 body=b'{"action": "abort"}')
+    resp = conn.getresponse()
+    assert resp.status == 404
+    resp.read()
+    conn.close()
+    with pytest.raises(KeyError):
+        client.get_command(rid, "cmd-nope")
+
+
+def test_transforms_and_processings_read_resources(gateway):
+    client = IDDSClient(gateway.url)
+    rid = client.submit_workflow(_chain_workflow())
+    client.wait(rid, timeout=30)
+    transforms = client.list_transforms(rid)
+    assert transforms["total"] == 2
+    assert sorted(t["template"] for t in transforms["transforms"]) == [
+        "a", "b"]
+    assert all(t["status"] == "finished"
+               for t in transforms["transforms"])
+    procs = client.list_processings(rid)
+    assert procs["total"] == 2
+    assert all(p["status"] == "finished" for p in procs["processings"])
+    with pytest.raises(KeyError):
+        client.list_transforms("req-nope")
+
+
+def test_healthz_reports_command_plane(dist_gateway):
+    client = IDDSClient(dist_gateway.url)
+    h = client.healthz()
+    assert h["pending_commands"] == 0
+    assert h["queues"] == {}
+    rid = client.submit_workflow(_sleep_workflow(n_jobs=1))
+    client.suspend(rid, wait=True)
+    deadline = time.time() + 10
+    while True:
+        h = client.healthz()
+        depths = h["queues"].get("default", {})
+        if depths.get("suspended") or depths.get("pending"):
+            break
+        assert time.time() < deadline
+        time.sleep(0.02)
+    client.abort(rid, wait=True)
+
+
+# ------------------------------------- legacy aliases + protocol hardening
+
+def test_legacy_paths_send_deprecation_header(gateway):
+    conn = http.client.HTTPConnection(gateway.host, gateway.port,
+                                      timeout=5)
+    conn.request("GET", "/healthz")
+    r = conn.getresponse()
+    assert r.status == 200
+    assert r.getheader("Deprecation") == "true"
+    assert '</v1/healthz>; rel="successor-version"' in \
+        r.getheader("Link", "")
+    r.read()
+    # the canonical /v1 path carries no deprecation marker
+    conn.request("GET", "/v1/healthz")
+    r = conn.getresponse()
+    assert r.status == 200
+    assert r.getheader("Deprecation") is None
+    r.read()
+    conn.close()
+
+
+def test_legacy_submit_and_status_still_work_unversioned(gateway):
+    """Old clients keep working verbatim on the deprecated aliases."""
+    from repro.core.requests import Request
+    conn = http.client.HTTPConnection(gateway.host, gateway.port,
+                                      timeout=5)
+    body = Request(workflow=_chain_workflow()).to_json().encode()
+    conn.request("POST", "/requests", body=body)
+    r = conn.getresponse()
+    assert r.status == 201
+    rid = json.loads(r.read())["request_id"]
+    conn.request("GET", f"/requests/{rid}")
+    r = conn.getresponse()
+    assert r.status == 200
+    assert r.getheader("Deprecation") == "true"
+    assert json.loads(r.read())["request_id"] == rid
+    # v1-only resources have no unversioned alias
+    conn.request("GET", f"/requests/{rid}/commands")
+    r = conn.getresponse()
+    assert r.status == 404
+    r.read()
+    conn.close()
+
+
+def test_405_carries_allow_header(gateway):
+    conn = http.client.HTTPConnection(gateway.host, gateway.port,
+                                      timeout=5)
+    # /v1/requests accepts GET and POST: DELETE must list both
+    conn.request("DELETE", "/v1/requests")
+    r = conn.getresponse()
+    assert r.status == 405
+    assert r.getheader("Allow") == "GET, POST"
+    assert json.loads(r.read())["error"]["type"] == "MethodNotAllowed"
+    # GET-only route advertises exactly GET, on legacy and v1 mounts
+    for path in ("/v1/stats", "/stats"):
+        conn.request("POST", path, body=b"{}")
+        r = conn.getresponse()
+        assert r.status == 405, path
+        assert r.getheader("Allow") == "GET"
+        r.read()
+    conn.close()
+
+
+def test_cli_steering_verbs(gateway, tmp_path):
+    """The operator CLI drives the full steering vocabulary."""
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    base = [sys.executable, "-m", "repro.core.cli",
+            "--url", gateway.url]
+
+    def cli(*args):
+        r = subprocess.run(base + list(args), capture_output=True,
+                           text=True, env=env, timeout=30)
+        assert r.returncode == 0, r.stderr
+        return json.loads(r.stdout)
+
+    wf_file = tmp_path / "wf.json"
+    # long-running: CLI subprocess startup must land the suspend while
+    # the request is still running
+    wf_file.write_text(json.dumps(
+        _sleep_workflow(n_jobs=4, ms=1500).to_dict()))
+    rid = cli("submit", str(wf_file))["request_id"]
+    assert cli("suspend", rid)["status"] == "done"
+    assert cli("status", rid)["suspended"] is True
+    assert cli("resume", rid)["status"] == "done"
+    deadline = time.time() + 60
+    while cli("status", rid)["status"] != "finished":
+        assert time.time() < deadline
+        time.sleep(0.05)
+    assert [c["action"] for c in cli("commands", rid)["commands"]] == [
+        "suspend", "resume"]
+    assert cli("transforms", rid)["total"] == 4
+
+
+if __name__ == "__main__":
+    raise SystemExit(os.system(
+        f"python -m pytest -x -q {__file__}") >> 8)

@@ -50,8 +50,8 @@ def test_healthz_no_auth(auth_gateway):
     client = IDDSClient(auth_gateway.url)  # no token on purpose
     h = client.healthz()
     assert h["status"] == "ok"
-    assert set(h["daemons"]) == {"clerk", "marshaller", "transformer",
-                                 "carrier", "conductor"}
+    assert set(h["daemons"]) == {"clerk", "marshaller", "commander",
+                                 "transformer", "carrier", "conductor"}
 
 
 def test_end_to_end_workflow(gateway):
@@ -94,6 +94,29 @@ def test_unknown_route_and_method(gateway):
     conn.request("POST", "/stats", body=b"{}")
     r = conn.getresponse()
     assert r.status == 405
+    # known path + wrong method: the Allow header lists what works
+    assert r.getheader("Allow") == "GET"
+    r.read()
+    conn.request("DELETE", "/v1/requests")
+    r = conn.getresponse()
+    assert r.status == 405
+    assert r.getheader("Allow") == "GET, POST"
+    conn.close()
+
+
+def test_legacy_alias_deprecation_header(gateway):
+    """Unversioned paths still serve, marked deprecated; /v1 is clean."""
+    conn = http.client.HTTPConnection(gateway.host, gateway.port, timeout=5)
+    conn.request("GET", "/stats")
+    r = conn.getresponse()
+    assert r.status == 200
+    assert r.getheader("Deprecation") == "true"
+    assert 'rel="successor-version"' in r.getheader("Link", "")
+    r.read()
+    conn.request("GET", "/v1/stats")
+    r = conn.getresponse()
+    assert r.status == 200
+    assert r.getheader("Deprecation") is None
     conn.close()
 
 

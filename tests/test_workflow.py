@@ -1,9 +1,11 @@
 """DG workflow engine semantics (paper Fig. 3): templates, conditions,
-cycles, JSON round trip."""
+cycles, JSON round trip — and the declarative WorkflowSpec builder that
+produces the same serializable Workflow."""
 
 import pytest
 
 from repro.core import payloads as reg
+from repro.core.spec import WorkflowSpec
 from repro.core.workflow import (Branch, Condition, WorkStatus, Workflow,
                                  WorkTemplate)
 
@@ -146,3 +148,69 @@ def test_workflow_finished_counts():
         w.status = WorkStatus.FINISHED
     assert wf.finished
     assert wf.counts() == {"finished": 1}
+
+
+# ---------------------------------------------------- WorkflowSpec builder
+
+def test_spec_builds_same_shape_as_hand_wired():
+    spec = WorkflowSpec("t")
+    b = spec.work("b", payload="t_echo")
+    spec.work("a", payload="t_echo", defaults={"x": 1}) \
+        .when("always", then=b) \
+        .start({"x": 5})
+    built = spec.build().to_dict()
+    hand = build_wf().to_dict()
+    for key in ("templates", "conditions", "initial"):
+        assert built[key] == hand[key], key
+
+
+def test_spec_then_chains_and_returns_target():
+    spec = WorkflowSpec("chain")
+    a = spec.work("a", payload="t_echo", start={})
+    b = spec.work("b", payload="t_echo")
+    c = spec.work("c", payload="t_echo")
+    assert a.then(b).then(c) is c
+    wf = spec.build()
+    assert [cond.trigger for cond in wf.conditions] == ["a", "b"]
+    assert wf.conditions[0].true_next[0].template == "b"
+    assert wf.conditions[1].true_next[0].template == "c"
+
+
+def test_spec_when_branches_binders_and_fanout_start():
+    spec = WorkflowSpec("w")
+    yes = spec.work("yes", payload="t_echo")
+    spec.work("no", payload="t_echo")
+    spec.work("a", payload="t_echo",
+              start=[{"i": 0}, {"i": 1}]) \
+        .when("result_true", then=[(yes, "increment_round")],
+              otherwise="no", max_iterations=7)
+    wf = spec.build()
+    (cond,) = wf.conditions
+    assert cond.predicate == "result_true"
+    assert cond.max_iterations == 7
+    assert [(br.template, br.binder) for br in cond.true_next] == [
+        ("yes", "increment_round")]
+    assert [br.template for br in cond.false_next] == ["no"]
+    assert wf.initial == [("a", {"i": 0}), ("a", {"i": 1})]
+
+
+def test_spec_validation():
+    spec = WorkflowSpec("v")
+    spec.work("a", payload="t_echo")
+    with pytest.raises(ValueError):
+        spec.work("a", payload="t_echo")  # declared twice
+    with pytest.raises(KeyError):
+        spec._resolve("ghost")  # unknown branch target
+    other = WorkflowSpec("other")
+    foreign = other.work("x", payload="t_echo")
+    with pytest.raises(ValueError):
+        spec.work("b", payload="t_echo").then(foreign)
+
+
+def test_spec_workflow_round_trips_to_json():
+    spec = WorkflowSpec("rt")
+    spec.work("a", payload="t_echo", start={"x": 2}) \
+        .then("a", max_iterations=2)  # a self-cycle: DG, not DAG
+    wf = spec.build()
+    wf2 = Workflow.from_json(wf.to_json())
+    assert wf2.to_json() == wf.to_json()
