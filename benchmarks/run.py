@@ -8,6 +8,8 @@ Sections:
   hpo        Fig. 6    optimizer quality + async evaluation speedup
   dag        §3.3.1    Rubin-scale DAG scheduling throughput
   pipeline   §1        delivery granularity + straggler hedging
+  delivery   §3.1      content delivery plane: time-to-first-delivery
+                       fine vs coarse + content-journal rows/s
   store      §2        persistence overhead: in-memory vs SQLite catalogs
   train      §3.1      carousel-fed training micro-run (loss goes down)
   rest       §2        REST gateway submission throughput + poll latency
@@ -95,6 +97,14 @@ def main(argv=None) -> int:
     results["pipeline"] = pipeline_bench.run()
     _print_rows(["sweep", "n_shards", "ttfb_ms", "total_ms", "batches",
                  "hedges"], results["pipeline"])
+
+    _section("delivery (content delivery plane: fine vs coarse TTFD)")
+    from benchmarks import delivery_bench
+    results["delivery"] = delivery_bench.run(
+        n_shards=6 if smoke else 12,
+        latency=0.02 if quick else 0.01,
+        n_contents=300 if smoke else 1000 if quick else 2000)
+    _print_rows(delivery_bench.KEYS, results["delivery"])
 
     _section("store (paper §2, persistence overhead)")
     from benchmarks import store_bench

@@ -74,6 +74,13 @@ def smoke_commands() -> None:
     print("[ok] command smoke (suspend/resume/abort with a live worker)")
 
 
+def smoke_carousel() -> None:
+    """Delivery-plane e2e: Data Carousel feeding two worker processes —
+    per-file dispatch as shards land, content rows + consumer acks."""
+    _smoke_example("carousel_workers.py")
+    print("[ok] carousel smoke (carousel -> distributed workers)")
+
+
 if __name__ == "__main__":
     archs = sys.argv[1:] or list_archs()
     failed = []
@@ -101,5 +108,11 @@ if __name__ == "__main__":
     except Exception:
         failed.append("commands")
         print("[FAIL] commands")
+        traceback.print_exc()
+    try:
+        smoke_carousel()
+    except Exception:
+        failed.append("carousel")
+        print("[FAIL] carousel")
         traceback.print_exc()
     sys.exit(1 if failed else 0)

@@ -2,14 +2,24 @@
 DiskCache + Stager.  The iDDS Transformer daemon talks to this object;
 ``mark_processed`` implements the carousel's *prompt release* — the
 moment every consumer of a file is done, its cache bytes are freed.
+
+Mounted into a head service via ``IDDS(ddm=CarouselDDM(...))`` (or
+``python -m repro.core.rest --carousel``): the head calls ``bind()`` at
+construction, handing over its message bus and durable store, so every
+content state transition (new -> staging -> available -> delivered |
+failed) is announced on the bus (driving the Transformer's incremental
+per-file dispatch) AND journaled through the store (so ``recover()``
+rebuilds per-file delivery state after a crash).
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, Iterable
+from typing import Dict, Iterable, List, Optional
 
 from repro.carousel.stager import Stager
 from repro.carousel.storage import ColdStore, DiskCache
+from repro.core import messaging as M
+from repro.core.store import Store
 from repro.core.workflow import Collection, FileRef
 
 
@@ -19,21 +29,78 @@ class CarouselDDM:
         self.cold = cold
         self.cache = cache
         self.prompt_release = prompt_release
+        self.bus: Optional[M.MessageBus] = None
+        self.store: Optional[Store] = None
         self._lock = threading.RLock()
         self._collections: Dict[str, Collection] = {}
         self._stagers: Dict[str, Stager] = {}
 
+    # ------------------------------------------------------------- wiring
+    def bind(self, bus: Optional[M.MessageBus] = None,
+             store: Optional[Store] = None) -> None:
+        """Late-bind the head service's bus + store (``IDDS.__init__``
+        calls this).  Already-attached stagers inherit the bus so their
+        availability announcements reach the Transformer."""
+        self.bus = bus
+        self.store = store
+        with self._lock:
+            stagers = list(self._stagers.values())
+        for st in stagers:
+            if st.bus is None:
+                st.bus = bus
+
+    def _journal(self, collection: str, f: FileRef) -> None:
+        if self.store is not None:
+            self.store.save_contents(collection, [f.to_dict()])
+
+    def _journal_collection(self, coll: Collection) -> None:
+        if self.store is not None:
+            self.store.save_collection(coll.to_dict())
+
+    # ------------------------------------------------------------ stagers
     def attach_stager(self, collection: str, stager: Stager) -> None:
         with self._lock:
             self._stagers[collection] = stager
-        stager.on_available = lambda name: self.set_available(collection, name)
+        stager.collection = collection
+        if stager.bus is None:
+            stager.bus = self.bus
+        stager.on_submitted = lambda name: self.mark_staging(collection,
+                                                             name)
+        stager.on_available = lambda name: self.set_available(collection,
+                                                              name)
+        stager.on_failed = lambda name: self.set_failed(collection, name)
 
+    def stage_collection(self, name: str, *,
+                         stager: Optional[Stager] = None,
+                         **stager_kwargs) -> Stager:
+        """Start staging every not-yet-available file of ``name``: build
+        (or adopt) a Stager wired to this DDM's bus/store hooks and
+        submit the cold files.  Returns the stager (caller owns
+        ``shutdown``, or leaves it to :meth:`shutdown`)."""
+        coll = self.get_collection(name)
+        if stager is None:
+            stager = Stager(self.cold, self.cache, self.bus,
+                            collection=name, **stager_kwargs)
+        self.attach_stager(name, stager)
+        with self._lock:
+            todo = [f.name for f in coll.files if not f.available]
+        stager.submit_all(todo)
+        return stager
+
+    def shutdown(self) -> None:
+        with self._lock:
+            stagers = list(self._stagers.values())
+        for st in stagers:
+            st.shutdown()
+
+    # -------------------------------------------------------- collections
     def register_collection(self, name: str,
                             files: Iterable[FileRef]) -> Collection:
         with self._lock:
             c = Collection(name, files=list(files))
             self._collections[name] = c
-            return c
+        self._journal_collection(c)
+        return c
 
     def register_from_cold(self, name: str) -> Collection:
         return self.register_collection(
@@ -47,24 +114,71 @@ class CarouselDDM:
                 self._collections[name] = Collection(name)
             return self._collections[name]
 
+    def list_collections(self) -> List[str]:
+        with self._lock:
+            return list(self._collections)
+
+    # ----------------------------------------------- content state machine
+    def _find(self, name: str, file_name: str) -> Optional[FileRef]:
+        for f in self.get_collection(name).files:
+            if f.name == file_name:
+                return f
+        return None
+
+    def mark_staging(self, name: str, file_name: str) -> None:
+        with self._lock:
+            f = self._find(name, file_name)
+            if f is None or f.available or f.status == "failed":
+                return
+            f.set_status("staging")
+        self._journal(name, f)
+
     def set_available(self, name: str, file_name: str,
                       available: bool = True) -> None:
         with self._lock:
-            coll = self._collections[name]
-            for f in coll.files:
-                if f.name == file_name:
-                    f.available = available
-                    return
-            # late-registered output content
-            coll.files.append(FileRef(file_name, available=available))
+            f = self._find(name, file_name)
+            if f is None:
+                # late-registered output content
+                f = FileRef(file_name, available=available)
+                self.get_collection(name).files.append(f)
+            else:
+                f.available = available
+                f.set_status("available" if available else "new")
+        self._journal(name, f)
+
+    def set_failed(self, name: str, file_name: str) -> None:
+        """Terminal staging failure (the Stager exhausted its attempts)."""
+        with self._lock:
+            f = self._find(name, file_name)
+            if f is None:
+                f = FileRef(file_name)
+                self.get_collection(name).files.append(f)
+            if f.available:
+                return  # a hedge landed it; the failure lost the race
+            f.set_status("failed")
+        self._journal(name, f)
+
+    def ensure_content(self, name: str, file_name: str,
+                       size: int = 0) -> FileRef:
+        with self._lock:
+            f = self._find(name, file_name)
+            if f is None:
+                f = FileRef(file_name, size=size, available=True)
+                self.get_collection(name).files.append(f)
+            elif not f.available:
+                f.available = True
+                f.set_status("available")
+        self._journal(name, f)
+        return f
 
     def mark_processed(self, name: str, file_name: str) -> None:
         with self._lock:
-            for f in self._collections[name].files:
-                if f.name == file_name:
-                    f.processed = True
-                    break
-            else:
+            f = self._find(name, file_name)
+            if f is None:
                 raise KeyError(file_name)
+            f.processed = True
+            # input content delivered to (and consumed by) its processing
+            f.set_status("delivered")
+        self._journal(name, f)
         # the carousel's prompt release: free cache bytes immediately
         self.cache.release(file_name, drop=self.prompt_release)

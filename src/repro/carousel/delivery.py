@@ -6,6 +6,14 @@ the paper's optimum), with double-buffered host->device prefetch so the
 input pipeline overlaps with compute.  ``coarse=True`` reproduces the
 pre-iDDS baseline: block until the whole collection is staged.
 
+Row conservation: every row of every successfully staged shard is
+delivered exactly once — the final partial batch (fewer than
+``batch_rows`` rows) is emitted too.  Shards that fail staging
+terminally are skipped and recorded (``failed_shards`` /
+``skipped_shards``) in both modes; if *every* shard failed, iteration
+raises instead of silently yielding nothing.  Deadlines use the
+monotonic clock.
+
 Consumed rows are released from the DiskCache promptly (pin/release per
 shard), keeping the disk footprint at O(open shards), not O(dataset).
 """
@@ -34,20 +42,37 @@ class DeliveryIterator:
         self.device_put = device_put
         self.prefetch = max(1, prefetch)
         self.timeout = timeout
-        self.first_batch_at: Optional[float] = None
-        self.started_at: Optional[float] = None
+        self.first_batch_at: Optional[float] = None   # monotonic
+        self.started_at: Optional[float] = None       # monotonic
         self.batches_delivered = 0
+        self.rows_delivered = 0
+        self.failed_shards = 0
+        self.skipped_shards: List[str] = []
+
+    def _record_failed(self, failed) -> None:
+        self.failed_shards += len(failed)
+        self.skipped_shards.extend(sorted(failed))
+        if self.names and self.failed_shards >= len(self.names):
+            raise RuntimeError(
+                f"all {len(self.names)} shards failed staging: "
+                f"{self.skipped_shards[:5]}")
 
     # -- shard arrival order (fine mode consumes in landing order) ----------
     def _iter_ready_shards(self) -> Iterator[str]:
         remaining = set(self.names)
-        deadline = time.time() + self.timeout
+        deadline = time.monotonic() + self.timeout
         if self.coarse:
             # baseline: wait for the ENTIRE collection before any delivery
             if not self.stager.wait(timeout=self.timeout):
                 raise TimeoutError("coarse staging timed out")
+            failed = set(self.stager.failed()) & remaining
+            if failed:
+                # skip-with-record, mirroring fine mode (and raise when
+                # nothing at all survived staging)
+                remaining -= failed
+                self._record_failed(failed)
             for n in self.names:
-                if n in self.cache:
+                if n in remaining and n in self.cache:
                     remaining.discard(n)
                     yield n
             return
@@ -59,8 +84,12 @@ class DeliveryIterator:
                 yield n
             if not landed:
                 failed = set(self.stager.failed()) & remaining
-                remaining -= failed  # skip terminally-failed shards
-                if time.time() > deadline:
+                if failed:
+                    remaining -= failed  # skip terminally-failed shards
+                    self._record_failed(failed)
+                if not remaining:
+                    return
+                if time.monotonic() > deadline:
                     raise TimeoutError(
                         "fine staging timed out; missing "
                         f"{sorted(remaining)[:5]}")
@@ -68,7 +97,7 @@ class DeliveryIterator:
 
     # -- batch assembly -------------------------------------------------------
     def __iter__(self) -> Iterator[Dict[str, Any]]:
-        self.started_at = time.time()
+        self.started_at = time.monotonic()
         rows: Dict[str, List[np.ndarray]] = collections.defaultdict(list)
         n_rows = 0
         pending: collections.deque = collections.deque()
@@ -82,7 +111,7 @@ class DeliveryIterator:
             while pending and (force or len(pending) >= self.prefetch):
                 b = pending.popleft()
                 if self.first_batch_at is None:
-                    self.first_batch_at = time.time()
+                    self.first_batch_at = time.monotonic()
                 self.batches_delivered += 1
                 yield b
 
@@ -103,6 +132,14 @@ class DeliveryIterator:
                     if v.shape[0]:
                         rows[k].append(v)
                 n_rows -= self.batch_rows
+                self.rows_delivered += self.batch_rows
                 emit(head)
                 yield from drain()
+        if n_rows > 0:
+            # the final partial batch: without this, delivered rows !=
+            # dataset rows whenever the dataset isn't a multiple of
+            # batch_rows
+            batch = {k: np.concatenate(v) for k, v in rows.items()}
+            self.rows_delivered += n_rows
+            emit(batch)
         yield from drain(force=True)

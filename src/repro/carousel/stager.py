@@ -7,18 +7,27 @@ per-file availability on the bus (T_COLLECTION_UPDATED) — the signal that
 drives the Transformer daemon's incremental dispatch.
 
 Fault tolerance:
-  * retries with exponential backoff on tape read errors;
+  * retries with exponential backoff on tape read errors (no backoff
+    sleep after the final attempt — a terminal failure is marked, and
+    announced, immediately);
   * hedged (duplicate) requests for stragglers: if a file's stage time
     exceeds ``hedge_factor`` x the observed median, a second request is
     issued and the first to land wins — classic tail-latency mitigation.
+
+All timing (stage records, medians, deadlines) uses the monotonic
+clock: a wall-clock step must not corrupt hedge decisions or expire a
+``wait``.  The ``on_submitted`` / ``on_available`` / ``on_failed``
+hooks let a DDM (see :class:`repro.carousel.ddm.CarouselDDM`) advance
+and journal the per-file content state machine.
 """
 from __future__ import annotations
 
+import collections
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 from repro.carousel.storage import ColdStore, DiskCache
 from repro.core import messaging as M
@@ -27,7 +36,7 @@ from repro.core import messaging as M
 @dataclass
 class StageRecord:
     name: str
-    submitted: float
+    submitted: float             # monotonic
     finished: Optional[float] = None
     attempts: int = 0
     hedged: bool = False
@@ -40,15 +49,19 @@ class Stager:
                  collection: str = "carousel",
                  workers: int = 4, max_attempts: int = 4,
                  backoff: float = 0.02, hedge_factor: float = 3.0,
-                 hedge_min_samples: int = 8,
+                 hedge_min_samples: int = 8, latency_window: int = 512,
                  transform: Optional[Callable[[str, Any], Any]] = None,
-                 on_available: Optional[Callable[[str], None]] = None):
+                 on_available: Optional[Callable[[str], None]] = None,
+                 on_failed: Optional[Callable[[str], None]] = None,
+                 on_submitted: Optional[Callable[[str], None]] = None):
         self.cold = cold
         self.cache = cache
         self.bus = bus
         self.collection = collection
         self.transform = transform
         self.on_available = on_available
+        self.on_failed = on_failed
+        self.on_submitted = on_submitted
         self.max_attempts = max_attempts
         self.backoff = backoff
         self.hedge_factor = hedge_factor
@@ -58,7 +71,10 @@ class Stager:
         self._lock = threading.RLock()
         self.records: Dict[str, StageRecord] = {}
         self._landed: Dict[str, bool] = {}
-        self._latencies: List[float] = []
+        # rolling window: long-running stagers see millions of files,
+        # and the median only needs the recent latency regime anyway
+        self._latencies: Deque[float] = collections.deque(
+            maxlen=latency_window)
         self._futures: List[Future] = []
         self.hedges_issued = 0
 
@@ -77,15 +93,17 @@ class Stager:
                 return False
             self._landed[name] = True
             rec = self.records[name]
-            rec.finished = time.time()
+            rec.finished = time.monotonic()
             rec.ok = True
             self._latencies.append(rec.finished - rec.submitted)
         self.cache.put(name, data, size, pin=False)
+        # DDM state first, bus second: a consumer woken by the
+        # announcement must observe the availability it announces
+        if self.on_available is not None:
+            self.on_available(name)
         if self.bus is not None:
             self.bus.publish(M.T_COLLECTION_UPDATED,
                              {"collection": self.collection, "file": name})
-        if self.on_available is not None:
-            self.on_available(name)
         return True
 
     def _stage_once(self, name: str) -> None:
@@ -103,18 +121,32 @@ class Stager:
                 self._land(name, data, size)
                 return
             except IOError:
-                time.sleep(self.backoff * (2 ** (attempt - 1)))
+                if attempt < self.max_attempts:
+                    # no sleep after the FINAL attempt: the record turns
+                    # failed now, not one backoff interval later
+                    time.sleep(self.backoff * (2 ** (attempt - 1)))
         # exhausted: only mark failed if nobody else landed it
         with self._lock:
-            if not self._landed.get(name):
-                rec.finished = time.time()
-                rec.ok = False
+            if self._landed.get(name):
+                return
+            rec.finished = time.monotonic()
+            rec.ok = False
+        if self.on_failed is not None:
+            self.on_failed(name)
+        if self.bus is not None:
+            # announce terminal failure too, so pending fine-granularity
+            # works re-evaluate completion instead of waiting forever
+            self.bus.publish(M.T_COLLECTION_UPDATED,
+                             {"collection": self.collection, "file": name,
+                              "failed": True})
 
     def submit(self, name: str) -> None:
         with self._lock:
             if name in self.records:
                 return
-            self.records[name] = StageRecord(name, time.time())
+            self.records[name] = StageRecord(name, time.monotonic())
+        if self.on_submitted is not None:
+            self.on_submitted(name)
         self._futures.append(self._pool.submit(self._stage_once, name))
 
     def submit_all(self, names: List[str]) -> None:
@@ -127,7 +159,7 @@ class Stager:
         if med is None:
             return 0
         issued = 0
-        now = time.time()
+        now = time.monotonic()
         with self._lock:
             cands = [r for r in self.records.values()
                      if not r.finished and not r.hedged
@@ -143,8 +175,8 @@ class Stager:
     def wait(self, timeout: float = 60.0,
              hedge_interval: float = 0.05) -> bool:
         """Block until every submitted file landed or terminally failed."""
-        deadline = time.time() + timeout
-        while time.time() < deadline:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
             self.hedge_check()
             with self._lock:
                 pend = [r for r in self.records.values() if r.finished is None]

@@ -10,7 +10,8 @@ prints the JSON response, so output composes with ``jq`` and scripts.
 Verbs:
 
   health                      GET /v1/healthz (queue depths, pending
-                              commands, daemon liveness)
+                              commands, daemon liveness, content +
+                              delivery tallies)
   stats                       GET /v1/stats
   list [--status S] [--limit N] [--offset N]
   status REQUEST_ID           status + work counts + suspended flag
@@ -26,6 +27,15 @@ Verbs:
   resume REQUEST_ID           /  immediately instead of polling until
   retry REQUEST_ID           /   the Commander applied the command
   workers                     execution-plane worker registry
+  collections                 collection catalog + content tallies
+  contents NAME [--status S] [--limit N] [--offset N]
+                              per-file content records of a collection
+  subscribe --consumer C [--collections A,B]
+                              register with the delivery plane
+  subscriptions               subscription registry
+  deliveries SUB_ID [--status S]
+                              a subscription's tracked deliveries
+  ack SUB_ID DELIVERY_ID...   acknowledge deliveries
 """
 from __future__ import annotations
 
@@ -79,6 +89,29 @@ def build_parser() -> argparse.ArgumentParser:
         p.add_argument("--no-wait", action="store_true",
                        help="return the pending command immediately "
                             "instead of polling until it applied")
+
+    sub.add_parser("collections")
+    sub.add_parser("subscriptions")
+
+    p = sub.add_parser("contents")
+    p.add_argument("name")
+    p.add_argument("--status", default=None)
+    p.add_argument("--limit", type=int, default=None)
+    p.add_argument("--offset", type=int, default=0)
+
+    p = sub.add_parser("subscribe")
+    p.add_argument("--consumer", required=True)
+    p.add_argument("--collections", default=None,
+                   help="comma-separated collection names or fnmatch "
+                        "patterns (omit = every collection)")
+
+    p = sub.add_parser("deliveries")
+    p.add_argument("sub_id")
+    p.add_argument("--status", default=None)
+
+    p = sub.add_parser("ack")
+    p.add_argument("sub_id")
+    p.add_argument("delivery_ids", nargs="+")
     return ap
 
 
@@ -120,6 +153,23 @@ def main(argv=None) -> int:
         elif args.verb in COMMAND_VERBS:
             _print(client.command(args.request_id, args.verb,
                                   wait=not args.no_wait))
+        elif args.verb == "collections":
+            _print(client.list_collections())
+        elif args.verb == "contents":
+            _print(client.list_contents(args.name, status=args.status,
+                                        limit=args.limit,
+                                        offset=args.offset))
+        elif args.verb == "subscribe":
+            colls = ([c for c in args.collections.split(",") if c]
+                     if args.collections else None)
+            _print(client.subscribe(args.consumer, colls))
+        elif args.verb == "subscriptions":
+            _print(client.list_subscriptions())
+        elif args.verb == "deliveries":
+            _print(client.list_deliveries(args.sub_id,
+                                          status=args.status))
+        elif args.verb == "ack":
+            _print(client.ack(args.sub_id, args.delivery_ids))
     except KeyError as e:
         print(json.dumps({"error": {"type": "NotFound",
                                     "message": str(e)}}), file=sys.stderr)

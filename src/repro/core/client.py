@@ -194,12 +194,12 @@ class IDDSClient:
              interval: float = 0.02) -> Dict[str, Any]:
         """Poll until the request reaches a terminal state (finished, or
         aborted by a command); returns the final status."""
-        deadline = time.time() + timeout
+        deadline = time.monotonic() + timeout
         while True:
             info = self.status(request_id)
             if info.get("status") in ("finished", "aborted"):
                 return info
-            if time.time() > deadline:
+            if time.monotonic() > deadline:
                 raise TimeoutError(
                     f"request {request_id} not finished in {timeout}s "
                     f"(last status: {info.get('status')})")
@@ -273,12 +273,12 @@ class IDDSClient:
                      timeout: float = 30.0,
                      interval: float = 0.02) -> Dict[str, Any]:
         """Poll a command until it leaves ``pending``."""
-        deadline = time.time() + timeout
+        deadline = time.monotonic() + timeout
         while True:
             cmd = self.get_command(request_id, command_id)
             if cmd["status"] != "pending":
                 return cmd
-            if time.time() > deadline:
+            if time.monotonic() > deadline:
                 raise TimeoutError(
                     f"command {command_id} still pending after {timeout}s")
             time.sleep(interval)
@@ -288,10 +288,72 @@ class IDDSClient:
             f"{API_PREFIX}/collections/"
             f"{urllib.parse.quote(name, safe='')}")
 
-    def lookup_contents(self, name: str) -> List[Dict[str, Any]]:
+    def list_collections(self) -> Dict[str, Any]:
+        """Collection catalog with per-collection content tallies (GET
+        /v1/collections)."""
+        return self._get(f"{API_PREFIX}/collections")
+
+    def list_contents(self, name: str, *, status: Optional[str] = None,
+                      limit: Optional[int] = None,
+                      offset: int = 0) -> Dict[str, Any]:
+        """Per-file content catalog: ``{"contents": [...], "total": N,
+        "limit": ..., "offset": ...}`` with optional status filter
+        (new/staging/available/delivered/failed) and pagination."""
+        params = {}
+        if status is not None:
+            params["status"] = status
+        if limit is not None:
+            params["limit"] = str(limit)
+        if offset:
+            params["offset"] = str(offset)
+        qs = urllib.parse.urlencode(params)
         return self._get(
             f"{API_PREFIX}/collections/"
-            f"{urllib.parse.quote(name, safe='')}/contents")
+            f"{urllib.parse.quote(name, safe='')}/contents"
+            + (f"?{qs}" if qs else ""))
+
+    def lookup_contents(self, name: str) -> List[Dict[str, Any]]:
+        return self.list_contents(name)["contents"]
+
+    # --------------------------------------------- delivery plane (consumer)
+    def subscribe(self, consumer: str,
+                  collections: Optional[List[str]] = None, *,
+                  sub_id: Optional[str] = None) -> Dict[str, Any]:
+        """Register a consumer subscription with the Conductor (POST
+        /v1/subscriptions).  Retry-safe: a client-generated sub_id makes
+        a replayed POST return the existing registration."""
+        body: Dict[str, Any] = {
+            "consumer": consumer,
+            "sub_id": sub_id or f"sub-{uuid.uuid4().hex[:12]}",
+        }
+        if collections:
+            body["collections"] = list(collections)
+        return self._post(f"{API_PREFIX}/subscriptions", body,
+                          idempotent=True)
+
+    def list_subscriptions(self) -> Dict[str, Any]:
+        return self._get(f"{API_PREFIX}/subscriptions")
+
+    def get_subscription(self, sub_id: str) -> Dict[str, Any]:
+        return self._get(f"{API_PREFIX}/subscriptions/"
+                         f"{urllib.parse.quote(sub_id)}")
+
+    def list_deliveries(self, sub_id: str, *,
+                        status: Optional[str] = None) -> Dict[str, Any]:
+        """A subscription's tracked deliveries (GET
+        /v1/subscriptions/<id>/deliveries), optionally filtered by
+        status (notified/acked/failed)."""
+        qs = (f"?status={urllib.parse.quote(status)}"
+              if status is not None else "")
+        return self._get(f"{API_PREFIX}/subscriptions/"
+                         f"{urllib.parse.quote(sub_id)}/deliveries{qs}")
+
+    def ack(self, sub_id: str, delivery_ids: List[str]) -> Dict[str, Any]:
+        """Acknowledge deliveries (POST /v1/subscriptions/<id>/ack).
+        Retry-safe: acking is idempotent per delivery server-side."""
+        return self._post(
+            f"{API_PREFIX}/subscriptions/{urllib.parse.quote(sub_id)}/ack",
+            {"delivery_ids": list(delivery_ids)}, idempotent=True)
 
     def stats(self) -> Dict[str, int]:
         return self._get(f"{API_PREFIX}/stats")

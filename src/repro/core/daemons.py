@@ -27,6 +27,7 @@ from repro.core import payloads as reg
 from repro.core.commands import (CTRL_ABORTED, CTRL_SUSPENDED, Command,
                                  CommandConflict)
 from repro.core.ddm import DDM
+from repro.core.delivery import Subscription
 from repro.core.store import InMemoryStore, Store
 from repro.core.workflow import (Processing, ProcessingStatus, Work,
                                  WorkStatus, Workflow, _new_id)
@@ -162,6 +163,10 @@ class Context:
         self.commands[cmd.command_id] = cmd
         self.commands_by_request.setdefault(cmd.request_id,
                                             []).append(cmd)
+    # delivery plane: consumer subscriptions the Conductor matches
+    # output availability against (sub_id -> Subscription); mutated by
+    # REST threads under ``lock``, journaled through ``store``
+    subscriptions: Dict[str, Subscription] = field(default_factory=dict)
     stats: Dict[str, int] = field(default_factory=dict)
     # workflow_id -> #work-termination events published but not yet
     # condition-evaluated by the Marshaller.  While > 0 the workflow may
@@ -378,10 +383,10 @@ class Transformer(Daemon):
         self._dispatched: Dict[str, set] = {}        # work_id -> file names
         self._open_procs: Dict[str, int] = {}        # work_id -> #unfinished
         self._work_procs: Dict[str, List[Processing]] = {}  # work -> procs
-        # last journaled (available, processed) per file per collection:
-        # journaling writes only the rows that changed, not a full
-        # snapshot per event (O(changes), not O(files^2))
-        self._coll_state: Dict[str, Dict[str, Tuple[bool, bool]]] = {}
+        # last journaled (available, processed, status) per file per
+        # collection: journaling writes only the rows that changed, not
+        # a full snapshot per event (O(changes), not O(files^2))
+        self._coll_state: Dict[str, Dict[str, Tuple[bool, bool, str]]] = {}
 
     # -- helpers ----------------------------------------------------------
     def _make_processing(self, work: Work, files: List[str]) -> Processing:
@@ -427,12 +432,20 @@ class Transformer(Daemon):
         if work.granularity == "coarse":
             if done:
                 return 0
-            if all(f.available for f in coll.files):
-                done.add("__all__")
-                work.status = WorkStatus.TRANSFORMING
-                self._make_processing(work, [f.name for f in coll.files])
-                return 1
-            return 0
+            # dispatch once every file is terminal (available or failed
+            # staging) — a terminally-failed shard must not make the
+            # baseline wait forever; the survivors are processed and the
+            # skips surface as fails in _finalize (subfinished)
+            if any(not f.available and f.status != "failed"
+                   for f in coll.files):
+                return 0
+            ready = [f.name for f in coll.files if f.available]
+            if coll.files and not ready:
+                return 0  # every shard failed: _work_complete finalizes
+            done.add("__all__")
+            work.status = WorkStatus.TRANSFORMING
+            self._make_processing(work, ready)
+            return 1
         # fine granularity: one Processing per newly-available file
         created = 0
         for f in coll.files:
@@ -462,15 +475,17 @@ class Transformer(Daemon):
         if seen is None:
             self.ctx.store.save_collection(coll.to_dict())
             self._coll_state[name] = {
-                f.name: (f.available, f.processed) for f in coll.files}
+                f.name: (f.available, f.processed, f.status)
+                for f in coll.files}
             return
         changed = [f for f in coll.files
-                   if seen.get(f.name) != (f.available, f.processed)]
+                   if seen.get(f.name) != (f.available, f.processed,
+                                           f.status)]
         if changed:
             self.ctx.store.save_contents(
                 name, [f.to_dict() for f in changed])
             for f in changed:
-                seen[f.name] = (f.available, f.processed)
+                seen[f.name] = (f.available, f.processed, f.status)
 
     def _work_complete(self, work: Work) -> bool:
         if self._open_procs.get(work.work_id, 0) > 0:
@@ -480,8 +495,18 @@ class Transformer(Daemon):
         coll = self.ctx.ddm.get_collection(work.input_collection)
         done = self._dispatched.get(work.work_id, set())
         if work.granularity == "coarse":
-            return bool(done)
-        return len(done) == len(coll.files)
+            if done:
+                return True
+            # every shard failed staging: nothing will ever dispatch —
+            # complete with zero procs; _finalize counts the fails
+            return bool(coll.files) and all(f.status == "failed"
+                                            for f in coll.files)
+        # fine: every input dispatched, EXCEPT contents that failed
+        # staging terminally — those can never become available, and
+        # waiting on them would wedge the work (they surface as fails
+        # in _finalize instead)
+        return all(f.name in done for f in coll.files
+                   if f.status != "failed")
 
     def _finalize(self, work: Work) -> None:
         wf_id, _ = self.ctx.works[work.work_id]
@@ -489,6 +514,13 @@ class Transformer(Daemon):
         fails = sum(1 for p in procs
                     if p.status in (ProcessingStatus.FAILED,
                                     ProcessingStatus.CANCELLED))
+        if work.input_collection is not None:
+            # inputs that failed staging terminally never got a
+            # Processing; they still count against a clean FINISHED
+            done = self._dispatched.get(work.work_id, set())
+            coll = self.ctx.ddm.get_collection(work.input_collection)
+            fails += sum(1 for f in coll.files
+                         if f.status == "failed" and f.name not in done)
         # a work re-finalizing after a `retry` command already had its
         # conditions evaluated — successors from the original evaluation
         # exist, so re-announcing T_WORK_DONE would double-spawn them
@@ -587,7 +619,10 @@ class Transformer(Daemon):
             self._try_dispatch(work)
             self._journal_dispatch(work)
 
-        # DDM announced new file availability -> incremental dispatch
+        # DDM announced new file availability (or a terminal staging
+        # failure) -> incremental dispatch + completion re-check: a work
+        # whose last missing input just failed staging must finalize
+        # (subfinished) instead of waiting forever
         updated = {m.body.get("collection")
                    for m in self.ctx.bus.poll(M.T_COLLECTION_UPDATED)}
         if updated:
@@ -596,6 +631,10 @@ class Transformer(Daemon):
             if work.input_collection in updated or updated == {None}:
                 if self._try_dispatch(work):
                     self._journal_dispatch(work)
+                if (self._work_complete(work)
+                        and not work.status.terminated):
+                    self._journal_dispatch(work)
+                    self._finalize(work)
 
         for m in self.ctx.bus.poll(M.T_PROCESSING_DONE):
             n += 1
@@ -781,15 +820,106 @@ class Carrier(Daemon):
 
 
 class Conductor(Daemon):
+    """The delivery daemon: turns per-file output availability into
+    tracked consumer deliveries.
+
+    For every ``T_OUTPUT_AVAILABLE`` it (1) registers the output content
+    in the DDM and journals its row, (2) broadcasts the legacy
+    ``T_CONSUMER_NOTIFY`` for in-process listeners, and (3) matches the
+    content against the registered :class:`~repro.core.delivery.
+    Subscription` set, creating one :class:`~repro.core.delivery.
+    Delivery` per matching subscription and publishing an addressed
+    notification.  Deliveries left un-acked are re-notified every
+    ``retry_interval`` seconds up to ``max_notify_attempts`` total
+    publishes, then marked failed — every transition journaled through
+    the store, so a head crash loses no delivery state (a recovered
+    ``notified`` delivery is simply re-notified).
+    """
     name = "conductor"
     topics = (M.T_OUTPUT_AVAILABLE,)
+    retry_interval = 2.0       # seconds between re-notifications
+    max_notify_attempts = 5    # total publishes before a delivery fails
+
+    def __init__(self, ctx: Context):
+        super().__init__(ctx)
+        # delivery_id -> monotonic next-retry time.  Absent for a
+        # delivery recovered from the store: its original notification
+        # died with the old head's bus, so it is due immediately.
+        self._next_retry: Dict[str, float] = {}
+
+    def _journal_sub(self, sub: Subscription) -> None:
+        self.ctx.store.save_subscription(sub.to_dict())
+
+    def _register_output(self, collection: str, file_name: str) -> None:
+        f = self.ctx.ddm.ensure_content(collection, file_name)
+        self.ctx.store.save_contents(collection, [f.to_dict()])
+
+    def _notify(self, sub: Subscription, d, result=None) -> None:
+        self._next_retry[d.delivery_id] = (time.monotonic()
+                                           + self.retry_interval)
+        self.ctx.bump("deliveries_notified")
+        body = {"sub_id": sub.sub_id, "consumer": sub.consumer,
+                "delivery_id": d.delivery_id, "collection": d.collection,
+                "file": d.file, "attempt": d.attempts}
+        if result is not None:
+            body["result"] = result
+        self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, body)
+
+    def _handle_output(self, m: M.Message) -> None:
+        self.ctx.bump("notifications")
+        # legacy broadcast: in-process consumers subscribed to the topic
+        self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, dict(m.body))
+        coll, fname = m.body.get("collection"), m.body.get("file")
+        if not coll or not fname:
+            return  # anonymous output: nothing to track per-file
+        self._register_output(coll, fname)
+        with self.ctx.lock:
+            created = []
+            for sub in self.ctx.subscriptions.values():
+                if not sub.matches(coll):
+                    continue
+                d = sub.ensure_delivery(coll, fname)
+                if d is not None:
+                    created.append((sub, d))
+        for sub, d in created:
+            self._notify(sub, d, m.body.get("result"))
+            self._journal_sub(sub)
+
+    def _retry_pass(self) -> int:
+        """Re-notify overdue un-acked deliveries; fail the exhausted
+        ones.  Returns how many deliveries moved."""
+        now = time.monotonic()
+        due, failed = [], []
+        with self.ctx.lock:
+            for sub in self.ctx.subscriptions.values():
+                for d in sub.deliveries.values():
+                    if d.status != "notified":
+                        continue
+                    if now < self._next_retry.get(d.delivery_id, now):
+                        continue
+                    if d.attempts >= self.max_notify_attempts:
+                        d.set_status("failed")
+                        self._next_retry.pop(d.delivery_id, None)
+                        failed.append(sub)
+                    else:
+                        d.attempts += 1
+                        due.append((sub, d))
+        for sub, d in due:
+            self.ctx.bump("delivery_retries")
+            self._notify(sub, d)
+            self._journal_sub(sub)
+        for sub in failed:
+            self.ctx.bump("deliveries_failed")
+            self._journal_sub(sub)
+        return len(due) + len(failed)
 
     def process_once(self) -> int:
-        msgs = self.ctx.bus.poll(M.T_OUTPUT_AVAILABLE)
-        for m in msgs:
-            self.ctx.bump("notifications")
-            self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, dict(m.body))
-        return len(msgs)
+        n = 0
+        for m in self.ctx.bus.poll(M.T_OUTPUT_AVAILABLE):
+            n += 1
+            self._handle_output(m)
+        n += self._retry_pass()
+        return n
 
 
 # ---------------------------------------------------------------------------

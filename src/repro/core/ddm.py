@@ -4,22 +4,33 @@ iDDS daemons talk to a DDM through this narrow interface; the carousel
 package provides the production implementation (ColdStore + DiskCache +
 Stager).  ``InMemoryDDM`` backs unit tests and the pure-orchestration use
 cases (HPO, Rubin DAGs) whose collections are virtual.
+
+Every per-file mutation also advances the content state machine
+(``FileRef.status``: new -> staging -> available -> delivered | failed)
+so the delivery plane can journal and expose per-file state.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, Iterable, Protocol
+from typing import Dict, Iterable, List, Protocol
 
 from repro.core.workflow import Collection, FileRef
 
 
 class DDM(Protocol):
     def get_collection(self, name: str) -> Collection: ...
+    def list_collections(self) -> List[str]: ...
     def register_collection(self, name: str,
                             files: Iterable[FileRef]) -> Collection: ...
     def set_available(self, name: str, file_name: str,
                       available: bool = True) -> None: ...
     def mark_processed(self, name: str, file_name: str) -> None: ...
+
+    def ensure_content(self, name: str, file_name: str,
+                       size: int = 0) -> FileRef:
+        """Register-or-mark-available one content (the Conductor calls
+        this for freshly announced outputs)."""
+        ...
 
 
 class InMemoryDDM:
@@ -35,6 +46,10 @@ class InMemoryDDM:
                     name, files=[FileRef(f"{name}#0", size=0, available=True)])
             return self._collections[name]
 
+    def list_collections(self) -> List[str]:
+        with self._lock:
+            return list(self._collections)
+
     def register_collection(self, name: str,
                             files: Iterable[FileRef]) -> Collection:
         with self._lock:
@@ -48,13 +63,34 @@ class InMemoryDDM:
             for f in self._collections[name].files:
                 if f.name == file_name:
                     f.available = available
+                    f.set_status("available" if available else "new")
                     return
             raise KeyError(file_name)
+
+    def ensure_content(self, name: str, file_name: str,
+                       size: int = 0) -> FileRef:
+        with self._lock:
+            coll = self._collections.get(name)
+            if coll is None:
+                # output collections materialize lazily, initially empty
+                coll = self._collections[name] = Collection(name)
+            for f in coll.files:
+                if f.name == file_name:
+                    if not f.available:
+                        f.available = True
+                        f.set_status("available")
+                    return f
+            f = FileRef(file_name, size=size, available=True)
+            coll.files.append(f)
+            return f
 
     def mark_processed(self, name: str, file_name: str) -> None:
         with self._lock:
             for f in self._collections[name].files:
                 if f.name == file_name:
                     f.processed = True
+                    # the input content was delivered to (and consumed
+                    # by) its processing — a terminal content state
+                    f.set_status("delivered")
                     return
             raise KeyError(file_name)

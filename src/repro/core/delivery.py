@@ -1,0 +1,140 @@
+"""Delivery-plane entities: consumer subscriptions + tracked deliveries.
+
+The paper's Conductor "delivers output data to consumers" — consumers
+register interest in collections, and every per-file output availability
+is matched against those registrations, notified on the bus, tracked,
+retried while unacknowledged, and journaled through the Store so a head
+crash loses no delivery state.
+
+  * :class:`Subscription` — one consumer's registration: which
+    collections (exact names or fnmatch patterns; empty = all) it wants
+    output notifications for, plus the deliveries it has accrued.
+  * :class:`Delivery` — one (subscription, content) notification record:
+    ``notified`` -> ``acked`` (consumer confirmed receipt) or ``failed``
+    (notification attempts exhausted).
+
+The Conductor daemon (daemons.py) owns the state machine; the IDDS
+facade (idds.py) exposes subscribe/list/ack, and rest.py mounts them at
+``/v1/subscriptions``.
+"""
+from __future__ import annotations
+
+import fnmatch
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.workflow import _new_id
+
+DELIVERY_STATUSES = ("notified", "acked", "failed")
+
+
+def content_key(collection: str, file_name: str) -> str:
+    return f"{collection}::{file_name}"
+
+
+@dataclass
+class Delivery:
+    """One tracked notification of one content to one subscriber."""
+    delivery_id: str
+    collection: str
+    file: str
+    status: str = "notified"
+    attempts: int = 1            # notifications published so far
+    created_at: float = field(default_factory=time.time)
+    updated_at: float = 0.0
+
+    def __post_init__(self):
+        if not self.updated_at:
+            self.updated_at = self.created_at
+
+    def set_status(self, status: str) -> None:
+        if status not in DELIVERY_STATUSES:
+            raise ValueError(f"invalid delivery status {status!r}")
+        self.status = status
+        self.updated_at = time.time()
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"delivery_id": self.delivery_id,
+                "collection": self.collection, "file": self.file,
+                "status": self.status, "attempts": self.attempts,
+                "created_at": self.created_at,
+                "updated_at": self.updated_at}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Delivery":
+        return cls(**d)
+
+
+@dataclass
+class Subscription:
+    """One consumer's registration with the delivery plane."""
+    sub_id: str = field(default_factory=lambda: _new_id("sub"))
+    consumer: str = "anonymous"
+    # collection names or fnmatch patterns; empty list = every collection
+    collections: List[str] = field(default_factory=list)
+    created_at: float = field(default_factory=time.time)
+    # keyed by content_key(collection, file): at most one delivery per
+    # content per subscription, however often the output is re-announced
+    deliveries: Dict[str, Delivery] = field(default_factory=dict)
+
+    def matches(self, collection: Optional[str]) -> bool:
+        if not collection:
+            return False
+        if not self.collections:
+            return True
+        return any(fnmatch.fnmatchcase(collection, pat)
+                   for pat in self.collections)
+
+    def ensure_delivery(self, collection: str,
+                        file_name: str) -> Optional[Delivery]:
+        """Create the delivery for this content, or None if it already
+        exists (duplicate output announcement)."""
+        key = content_key(collection, file_name)
+        if key in self.deliveries:
+            return None
+        d = Delivery(delivery_id=_new_id("dlv"), collection=collection,
+                     file=file_name)
+        self.deliveries[key] = d
+        return d
+
+    def find_delivery(self, delivery_id: str) -> Optional[Delivery]:
+        # deliveries are keyed by content (for ensure_delivery dedup)
+        # but the public API addresses delivery_id: keep a lazy id
+        # index so batch acks are O(k), not O(k * deliveries).  The
+        # dict only ever grows, so a size check detects staleness.
+        idx = self.__dict__.get("_by_id")
+        if idx is None or len(idx) != len(self.deliveries):
+            idx = {d.delivery_id: d for d in self.deliveries.values()}
+            self.__dict__["_by_id"] = idx
+        return idx.get(delivery_id)
+
+    def counts(self) -> Dict[str, int]:
+        out = {s: 0 for s in DELIVERY_STATUSES}
+        for d in self.deliveries.values():
+            out[d.status] = out.get(d.status, 0) + 1
+        return out
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"sub_id": self.sub_id, "consumer": self.consumer,
+                "collections": list(self.collections),
+                "created_at": self.created_at,
+                "deliveries": {k: d.to_dict()
+                               for k, d in self.deliveries.items()}}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Subscription":
+        return cls(
+            sub_id=d["sub_id"], consumer=d.get("consumer", "anonymous"),
+            collections=list(d.get("collections", [])),
+            created_at=d.get("created_at", 0.0) or time.time(),
+            deliveries={k: Delivery.from_dict(v)
+                        for k, v in d.get("deliveries", {}).items()})
+
+    def summary(self) -> Dict[str, Any]:
+        """The REST-facing view: registration + delivery tallies (the
+        full delivery list has its own resource)."""
+        return {"sub_id": self.sub_id, "consumer": self.consumer,
+                "collections": list(self.collections),
+                "created_at": self.created_at,
+                "deliveries": self.counts()}

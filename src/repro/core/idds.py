@@ -25,11 +25,12 @@ from repro.core.commands import (CTRL_ABORTED, CTRL_SUSPENDED,
                                  CommandConflict)
 from repro.core.daemons import ALL_DAEMONS, Context, Transformer, WFMExecutor
 from repro.core.ddm import DDM, InMemoryDDM
+from repro.core.delivery import DELIVERY_STATUSES, Subscription, content_key
 from repro.core.requests import Request
 from repro.core.store import (InMemoryStore, Store,
                               VALID_REQUEST_STATUSES)
-from repro.core.workflow import (FileRef, Processing, ProcessingStatus,
-                                 Work, Workflow)
+from repro.core.workflow import (CONTENT_STATUSES, FileRef, Processing,
+                                 ProcessingStatus, Work, Workflow)
 
 
 class AuthError(Exception):
@@ -57,6 +58,12 @@ class IDDS:
             store=store if store is not None else InMemoryStore(),
         )
         wfm.attach(self.ctx)
+        # a bindable DDM (CarouselDDM) gets the head's bus + store, so
+        # its per-file staging transitions are announced to the
+        # Transformer AND journaled for crash recovery
+        bind = getattr(self.ctx.ddm, "bind", None)
+        if callable(bind):
+            bind(bus=self.ctx.bus, store=self.ctx.store)
         self.daemons = [cls(self.ctx) for cls in ALL_DAEMONS]
         self._tokens = tokens  # None -> auth disabled (dev mode)
         # shared with Context so the Marshaller can write request status
@@ -324,12 +331,12 @@ class IDDS:
     def wait_command(self, request_id: str, command_id: str,
                      timeout: float = 30.0) -> Dict[str, Any]:
         """Block until a command leaves ``pending`` (threaded mode)."""
-        deadline = time.time() + timeout
+        deadline = time.monotonic() + timeout
         while True:
             d = self.get_command(request_id, command_id)
             if d["status"] != "pending":
                 return d
-            if time.time() > deadline:
+            if time.monotonic() > deadline:
                 raise TimeoutError(
                     f"command {command_id} still pending after {timeout}s")
             time.sleep(0.01)
@@ -338,7 +345,175 @@ class IDDS:
         return self.ctx.ddm.get_collection(name).to_dict()
 
     def lookup_contents(self, name: str) -> List[Dict[str, Any]]:
-        return [f.to_dict() for f in self.ctx.ddm.get_collection(name).files]
+        return self.list_contents(name)["contents"]
+
+    def list_contents(self, name: str, *, status: Optional[str] = None,
+                      limit: Optional[int] = None,
+                      offset: int = 0) -> Dict[str, Any]:
+        """Per-file content catalog for one collection, with status
+        filtering and limit/offset pagination (GET
+        /v1/collections/<name>/contents)."""
+        if status is not None and status not in CONTENT_STATUSES:
+            raise ValueError(
+                f"invalid status filter {status!r}; expected one of "
+                f"{', '.join(CONTENT_STATUSES)}")
+        if limit is not None and (isinstance(limit, bool)
+                                  or not isinstance(limit, int)
+                                  or limit < 0):
+            raise ValueError("limit must be a non-negative integer")
+        if isinstance(offset, bool) or not isinstance(offset, int) \
+                or offset < 0:
+            raise ValueError("offset must be a non-negative integer")
+        rows = [f.to_dict() for f in self.ctx.ddm.get_collection(name).files
+                if status is None or f.status == status]
+        total = len(rows)
+        end = None if limit is None else offset + limit
+        return {"contents": rows[offset:end], "total": total,
+                "limit": limit, "offset": offset}
+
+    def list_collections(self) -> Dict[str, Any]:
+        """Collection catalog: per-collection content tallies (GET
+        /v1/collections)."""
+        out = []
+        for name in self.ctx.ddm.list_collections():
+            c = self.ctx.ddm.get_collection(name)
+            out.append({"name": c.name, "scope": c.scope,
+                        "files": len(c.files),
+                        "available": c.n_available,
+                        "processed": c.n_processed,
+                        "statuses": c.status_counts()})
+        return {"collections": out, "total": len(out)}
+
+    def content_stats(self) -> Dict[str, int]:
+        """Per-status content tallies across every collection (healthz)."""
+        out = {s: 0 for s in CONTENT_STATUSES}
+        for name in self.ctx.ddm.list_collections():
+            for s, n in self.ctx.ddm.get_collection(
+                    name).status_counts().items():
+                out[s] = out.get(s, 0) + n
+        return out
+
+    # ------------------------------------------------------ delivery plane
+    def subscribe(self, consumer: str,
+                  collections: Optional[List[str]] = None, *,
+                  sub_id: Optional[str] = None) -> Dict[str, Any]:
+        """Register a consumer subscription: the Conductor will match
+        every announced output content against it and track the
+        resulting deliveries.  ``collections`` are exact names or
+        fnmatch patterns (omit for all).  Idempotent on a
+        client-supplied ``sub_id`` (a retried POST returns the existing
+        registration instead of subscribing twice)."""
+        if not consumer or not isinstance(consumer, str):
+            raise ValueError("consumer (string) is required")
+        colls = list(collections or [])
+        if not all(isinstance(c, str) and c for c in colls):
+            raise ValueError("collections must be non-empty strings")
+        with self.ctx.lock:
+            if sub_id and sub_id in self.ctx.subscriptions:
+                return self.ctx.subscriptions[sub_id].summary()
+            sub = Subscription(consumer=consumer, collections=colls,
+                               **({"sub_id": sub_id} if sub_id else {}))
+            self.ctx.subscriptions[sub.sub_id] = sub
+            d = sub.to_dict()
+            summary = sub.summary()
+        self.ctx.store.save_subscription(d)
+        self.ctx.bump("subscriptions")
+        return summary
+
+    def list_subscriptions(self) -> Dict[str, Any]:
+        with self.ctx.lock:
+            subs = [s.summary() for s in self.ctx.subscriptions.values()]
+        return {"subscriptions": subs, "total": len(subs)}
+
+    def get_subscription(self, sub_id: str) -> Dict[str, Any]:
+        with self.ctx.lock:
+            sub = self.ctx.subscriptions.get(sub_id)
+            if sub is None:
+                raise KeyError(f"unknown subscription {sub_id!r}")
+            return sub.summary()
+
+    def list_deliveries(self, sub_id: str, *,
+                        status: Optional[str] = None) -> Dict[str, Any]:
+        """A subscription's tracked deliveries, optionally filtered by
+        status (notified/acked/failed)."""
+        if status is not None and status not in DELIVERY_STATUSES:
+            raise ValueError(
+                f"invalid status filter {status!r}; expected one of "
+                f"{', '.join(DELIVERY_STATUSES)}")
+        with self.ctx.lock:
+            sub = self.ctx.subscriptions.get(sub_id)
+            if sub is None:
+                raise KeyError(f"unknown subscription {sub_id!r}")
+            rows = [d.to_dict() for d in sub.deliveries.values()
+                    if status is None or d.status == status]
+        rows.sort(key=lambda d: (d["created_at"], d["delivery_id"]))
+        return {"deliveries": rows, "total": len(rows)}
+
+    def ack_delivery(self, sub_id: str,
+                     delivery_ids: List[str]) -> Dict[str, Any]:
+        """Consumer acknowledgement: mark deliveries received.  Once
+        every subscription covering a content has acked it, the content
+        itself turns ``delivered``.  Idempotent per delivery."""
+        acked_contents: List[tuple] = []
+        n = 0
+        with self.ctx.lock:
+            sub = self.ctx.subscriptions.get(sub_id)
+            if sub is None:
+                raise KeyError(f"unknown subscription {sub_id!r}")
+            # validate the WHOLE batch before mutating anything: a bad
+            # id must reject the request without leaving earlier
+            # deliveries half-acked (acked in memory, never journaled,
+            # and skipped by the idempotence check on a retry)
+            targets = []
+            for did in delivery_ids:
+                d = sub.find_delivery(did)
+                if d is None:
+                    raise KeyError(f"unknown delivery {did!r} for "
+                                   f"subscription {sub_id!r}")
+                targets.append(d)
+            for d in targets:
+                if d.status == "acked":
+                    continue
+                d.set_status("acked")
+                n += 1
+                acked_contents.append((d.collection, d.file))
+            snapshot = sub.to_dict()
+        self.ctx.store.save_subscription(snapshot)
+        if n:
+            self.ctx.bump("deliveries_acked", n)
+        for coll, fname in acked_contents:
+            self._maybe_content_delivered(coll, fname)
+        return {"sub_id": sub_id, "acked": n}
+
+    def _maybe_content_delivered(self, collection: str,
+                                 file_name: str) -> None:
+        """Flip an output content to ``delivered`` once every matching
+        subscription has acked its delivery."""
+        key = content_key(collection, file_name)
+        with self.ctx.lock:
+            subs = [s for s in self.ctx.subscriptions.values()
+                    if s.matches(collection)]
+            for s in subs:
+                d = s.deliveries.get(key)
+                if d is None or d.status != "acked":
+                    return
+        if not subs:
+            return
+        f = self.ctx.ddm.ensure_content(collection, file_name)
+        f.set_status("delivered")
+        self.ctx.store.save_contents(collection, [f.to_dict()])
+        self.ctx.bump("contents_delivered")
+
+    def delivery_stats(self) -> Dict[str, int]:
+        """Delivery-plane tallies for healthz/operators."""
+        out = {"subscriptions": 0}
+        out.update({s: 0 for s in DELIVERY_STATUSES})
+        with self.ctx.lock:
+            for sub in self.ctx.subscriptions.values():
+                out["subscriptions"] += 1
+                for s, c in sub.counts().items():
+                    out[s] = out.get(s, 0) + c
+        return out
 
     @property
     def stats(self) -> Dict[str, int]:
@@ -358,8 +533,9 @@ class IDDS:
         store = self.ctx.store
         counts = {"requests": 0, "workflows": 0, "works": 0,
                   "processings": 0, "collections": 0, "commands": 0,
-                  "requeued_processings": 0, "replayed_events": 0,
-                  "replayed_commands": 0, "orphaned_leases": 0}
+                  "subscriptions": 0, "requeued_processings": 0,
+                  "replayed_events": 0, "replayed_commands": 0,
+                  "orphaned_leases": 0}
         transformer = next(d for d in self.daemons
                            if isinstance(d, Transformer))
         new_wfs: List[Workflow] = []
@@ -388,6 +564,16 @@ class IDDS:
                     # restart until an operator resumes it
                     if r.get("status") in (CTRL_SUSPENDED, CTRL_ABORTED):
                         self.ctx.control[r["workflow_id"]] = r["status"]
+            # delivery plane: subscriptions (with their embedded
+            # delivery records) come back verbatim; a delivery
+            # journaled `notified` is re-notified by the Conductor's
+            # retry pass (its notification died with the old bus)
+            for s in store.load_subscriptions():
+                if s["sub_id"] in self.ctx.subscriptions:
+                    continue
+                self.ctx.subscriptions[s["sub_id"]] = \
+                    Subscription.from_dict(s)
+                counts["subscriptions"] += 1
             new_cmds: List[Command] = []
             for c in store.load_commands():
                 if c["command_id"] in self.ctx.commands:
@@ -493,11 +679,11 @@ class IDDS:
                    timeout: float = 60.0, interval: float = 0.0) -> None:
         """Pump until ``cond()`` — for incremental-availability scenarios
         where external events (staging) interleave with daemon cycles."""
-        deadline = time.time() + timeout
+        deadline = time.monotonic() + timeout
         while not cond():
             moved = sum(d.process_once() for d in self.daemons)
             if moved == 0:
-                if time.time() > deadline:
+                if time.monotonic() > deadline:
                     raise TimeoutError("pump_until timed out")
                 if interval:
                     time.sleep(interval)
@@ -519,16 +705,20 @@ class IDDS:
         self.ctx.wfm.shutdown()
 
     def close(self) -> None:
-        """Graceful teardown: stop the daemons, then close the store."""
+        """Graceful teardown: stop the daemons, stop any DDM staging
+        pools, then close the store."""
         if self._threads:
             self.stop()
+        shut = getattr(self.ctx.ddm, "shutdown", None)
+        if callable(shut):
+            shut()
         self.ctx.store.close()
 
     def wait_request(self, request_id: str, timeout: float = 60.0) -> Dict:
         """Block until a request's workflow reaches a terminal state —
         finished, or aborted by a command (threaded mode)."""
-        deadline = time.time() + timeout
-        while time.time() < deadline:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
             info = self.request_status(request_id)
             if info.get("status") in ("finished", "aborted"):
                 return info

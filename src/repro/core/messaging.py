@@ -55,11 +55,13 @@ class MessageBus:
 
     def wait(self, topic: str, timeout: float = 1.0) -> Optional[Message]:
         """Blocking consume: pop one message, waiting up to ``timeout``
-        for a publish (condition-based — no sleep-and-poll)."""
-        deadline = time.time() + timeout
+        for a publish (condition-based — no sleep-and-poll).  Deadlines
+        use the monotonic clock: an NTP step must neither stall nor
+        prematurely expire a daemon's idle-wait."""
+        deadline = time.monotonic() + timeout
         with self._cv:
             while not self._queues[topic]:
-                rem = deadline - time.time()
+                rem = deadline - time.monotonic()
                 if rem <= 0:
                     return None
                 self._cv.wait(rem)
@@ -70,10 +72,10 @@ class MessageBus:
         (True) or ``timeout`` elapses (False).  Consumes nothing — the
         daemon loops that idle on this then drain via ``poll``."""
         topics = tuple(topics)
-        deadline = time.time() + timeout
+        deadline = time.monotonic() + timeout
         with self._cv:
             while not any(self._queues[t] for t in topics):
-                rem = deadline - time.time()
+                rem = deadline - time.monotonic()
                 if rem <= 0:
                     return False
                 self._cv.wait(rem)

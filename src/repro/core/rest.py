@@ -22,8 +22,17 @@ details + deprecation table in docs/rest_api.md):
                                            resume / retry (202)
   GET  /v1/requests/<id>/commands          command journal
   GET  /v1/requests/<id>/commands/<cid>    one command's state
+  GET  /v1/collections                     collection catalog + tallies
   GET  /v1/collections/<name>              collection metadata
-  GET  /v1/collections/<name>/contents     per-file availability
+  GET  /v1/collections/<name>/contents     per-file content records
+                                           (status filter, limit/offset)
+  POST /v1/subscriptions                   register a consumer with the
+                                           delivery plane (201)
+  GET  /v1/subscriptions                   subscription registry
+  GET  /v1/subscriptions/<id>              one subscription + tallies
+  GET  /v1/subscriptions/<id>/deliveries   tracked deliveries (status
+                                           filter)
+  POST /v1/subscriptions/<id>/ack          acknowledge deliveries
   POST /v1/jobs/lease                      worker: lease the next job
   POST /v1/jobs/<id>/heartbeat             worker: renew a held lease
   POST /v1/jobs/<id>/complete              worker: report result/error
@@ -100,6 +109,12 @@ class RestGateway:
         self.started_at: Optional[float] = None
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
+        # healthz content/delivery tallies are O(catalog) to compute;
+        # cache them briefly so a tight monitoring loop cannot turn the
+        # liveness probe into a head-service load source
+        self._tally_ttl = 1.0
+        self._tally_cache: Tuple[float, Optional[Dict], Optional[Dict]] \
+            = (0.0, None, None)
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -268,12 +283,96 @@ class RestGateway:
         except KeyError:
             return 404, _err("NotFound", f"unknown collection {name!r}")
 
-    def handle_contents(self, name: str, token: str) -> Tuple[int, Any]:
+    def handle_collections(self, token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
+        return 200, self.idds.list_collections()
+
+    def handle_contents(self, name: str, query: Dict[str, List[str]],
+                        token: str) -> Tuple[int, Any]:
+        self.idds._auth(token)
+        status = query.get("status", [None])[0]
         try:
-            return 200, self.idds.lookup_contents(name)
+            limit_s = query.get("limit", [None])[0]
+            limit = None if limit_s is None else int(limit_s)
+            offset = int(query.get("offset", ["0"])[0])
+        except (TypeError, ValueError):
+            return 400, _err("BadRequest",
+                             "limit and offset must be integers")
+        try:
+            return 200, self.idds.list_contents(name, status=status,
+                                                limit=limit, offset=offset)
+        except ValueError as e:
+            return 400, _err("BadRequest", str(e))
         except KeyError:
             return 404, _err("NotFound", f"unknown collection {name!r}")
+
+    # -- delivery plane (consumer subscriptions) --------------------------
+    def handle_subscribe(self, body: bytes, token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        consumer = d.get("consumer")
+        if not consumer or not isinstance(consumer, str):
+            return 400, _err("BadRequest", "consumer (string) is required")
+        collections = d.get("collections")
+        if collections is not None and (
+                not isinstance(collections, list)
+                or not all(isinstance(c, str) and c for c in collections)):
+            return 400, _err("BadRequest",
+                             "collections must be a string list")
+        sub_id = d.get("sub_id")
+        if sub_id is not None and not isinstance(sub_id, str):
+            return 400, _err("BadRequest", "sub_id must be a string")
+        try:
+            sub = self.idds.subscribe(consumer, collections,
+                                      sub_id=sub_id)
+        except ValueError as e:
+            return 400, _err("BadRequest", str(e))
+        return 201, sub
+
+    def handle_subscriptions(self, token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        return 200, self.idds.list_subscriptions()
+
+    def handle_subscription(self, sub_id: str,
+                            token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.get_subscription(sub_id)
+        except KeyError:
+            return 404, _err("NotFound",
+                             f"unknown subscription {sub_id!r}")
+
+    def handle_deliveries(self, sub_id: str, query: Dict[str, List[str]],
+                          token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        status = query.get("status", [None])[0]
+        try:
+            return 200, self.idds.list_deliveries(sub_id, status=status)
+        except ValueError as e:
+            return 400, _err("BadRequest", str(e))
+        except KeyError:
+            return 404, _err("NotFound",
+                             f"unknown subscription {sub_id!r}")
+
+    def handle_ack(self, sub_id: str, body: bytes,
+                   token: str) -> Tuple[int, Dict]:
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        ids = d.get("delivery_ids")
+        if (not isinstance(ids, list) or not ids
+                or not all(isinstance(i, str) for i in ids)):
+            return 400, _err("BadRequest",
+                             "delivery_ids (non-empty string list) is "
+                             "required")
+        try:
+            return 200, self.idds.ack_delivery(sub_id, ids)
+        except KeyError as e:
+            return 404, _err("NotFound",
+                             e.args[0] if e.args else str(e))
 
     def handle_stats(self, token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
@@ -351,8 +450,18 @@ class RestGateway:
                      "distributed": True,
                      "queues": sched.queue_depths()}
 
+    def _delivery_tallies(self) -> Tuple[Dict, Dict]:
+        ts, contents, deliveries = self._tally_cache
+        now = time.monotonic()
+        if contents is None or now - ts > self._tally_ttl:
+            contents = self.idds.content_stats()
+            deliveries = self.idds.delivery_stats()
+            self._tally_cache = (now, contents, deliveries)
+        return contents, deliveries
+
     def handle_healthz(self) -> Tuple[int, Dict]:
         sched = self.idds.scheduler
+        contents, deliveries = self._delivery_tallies()
         return 200, {
             "status": "ok",
             "daemons": self.idds.daemon_liveness(),
@@ -364,6 +473,11 @@ class RestGateway:
             # growing pending_commands or an all-suspended queue
             "queues": (sched.queue_depths() if sched is not None else {}),
             "pending_commands": self.idds.pending_commands(),
+            # delivery plane at a glance: per-status content tallies
+            # across every collection + subscription/delivery counters
+            # (cached ~1s; see _delivery_tallies)
+            "contents": contents,
+            "deliveries": deliveries,
             "uptime_s": (round(time.time() - self.started_at, 3)
                          if self.started_at else 0.0),
         }
@@ -425,6 +539,15 @@ _ROUTE_SPECS = [
     ("GET", r"requests/(?P<request_id>[^/]+)/workflow/?",
      "handle_workflow", True),
     ("GET", r"requests/(?P<request_id>[^/]+)/?", "handle_status", True),
+    ("POST", r"subscriptions/?", "handle_subscribe", False),
+    ("POST", r"subscriptions/(?P<sub_id>[^/]+)/ack/?",
+     "handle_ack", False),
+    ("GET", r"subscriptions/(?P<sub_id>[^/]+)/deliveries/?",
+     "handle_deliveries", False),
+    ("GET", r"subscriptions/(?P<sub_id>[^/]+)/?",
+     "handle_subscription", False),
+    ("GET", r"subscriptions/?", "handle_subscriptions", False),
+    ("GET", r"collections/?", "handle_collections", False),
     ("GET", r"collections/(?P<name>.+)/contents/?",
      "handle_contents", True),
     ("GET", r"collections/(?P<name>.+?)/?", "handle_collection", True),
@@ -541,7 +664,11 @@ def _make_handler(gw: RestGateway):
         # handlers that consume the request body (all POST routes)
         _BODY_HANDLERS = frozenset({
             "handle_submit", "handle_lease", "handle_job_heartbeat",
-            "handle_job_complete", "handle_command_submit"})
+            "handle_job_complete", "handle_command_submit",
+            "handle_subscribe", "handle_ack"})
+        # handlers that read the query string (filters / pagination)
+        _QUERY_HANDLERS = frozenset({
+            "handle_list", "handle_contents", "handle_deliveries"})
 
         def _invoke(self, fn_name: str, match) -> Tuple[int, Any]:
             token = self._token()
@@ -562,10 +689,11 @@ def _make_handler(gw: RestGateway):
                                             **kwargs)
             if fn_name == "handle_stats":
                 return gw.handle_stats(token)
-            if fn_name == "handle_list":
+            if fn_name in self._QUERY_HANDLERS:
                 query = urllib.parse.parse_qs(
                     urllib.parse.urlsplit(self.path).query)
-                return gw.handle_list(query, token)
+                return getattr(gw, fn_name)(query=query, token=token,
+                                            **kwargs)
             return getattr(gw, fn_name)(**kwargs, token=token)
 
         # -- verbs -------------------------------------------------------
@@ -619,6 +747,21 @@ def main(argv=None) -> int:
                     help="SQLite file for durable state; requests in "
                          "flight at a crash are recovered on restart "
                          "(omit = in-memory, nothing survives)")
+    ap.add_argument("--carousel", action="store_true",
+                    help="mount a CarouselDDM (synthetic ColdStore + "
+                         "DiskCache) as the DDM backend and start "
+                         "staging the demo collection: file-backed "
+                         "fine-granularity works dispatch per-file as "
+                         "shards land")
+    ap.add_argument("--carousel-collection", default="tape",
+                    metavar="NAME",
+                    help="collection name the carousel registers and "
+                         "stages (--carousel)")
+    ap.add_argument("--carousel-shards", type=int, default=8,
+                    help="number of synthetic tape shards (--carousel)")
+    ap.add_argument("--carousel-latency", type=float, default=0.05,
+                    help="tape mount latency per shard read in seconds "
+                         "(--carousel)")
     ap.add_argument("--verbose", action="store_true",
                     help="log each HTTP request")
     args = ap.parse_args(argv)
@@ -631,14 +774,33 @@ def main(argv=None) -> int:
     store = SqliteStore(args.store) if args.store else None
     executor = (DistributedWFM(lease_ttl=args.lease_ttl)
                 if args.distributed else None)
+    ddm = None
+    if args.carousel:
+        # numpy-backed synthetic corpus; imported lazily so a plain
+        # head stays stdlib-only
+        from repro.carousel.ddm import CarouselDDM
+        from repro.carousel.storage import DiskCache
+        from repro.data.synthetic import build_cold_store
+        cold = build_cold_store(n_shards=args.carousel_shards, drives=2,
+                                mount_latency=args.carousel_latency)
+        ddm = CarouselDDM(cold, DiskCache(1 << 30))
     idds = IDDS(sync=not args.async_wfm, max_workers=args.max_workers,
-                tokens=tokens, store=store, executor=executor)
+                tokens=tokens, store=store, executor=executor, ddm=ddm)
     if store is not None:
         counts = idds.recover()
         recovered = {k: v for k, v in counts.items() if v}
         if recovered:
             print(f"idds-rest recovered state from {args.store}: "
                   f"{recovered}", flush=True)
+    if args.carousel:
+        # a recovered store may have re-registered the collection with
+        # its journaled per-file state; don't clobber it
+        if args.carousel_collection not in ddm.list_collections():
+            ddm.register_from_cold(args.carousel_collection)
+        coll = ddm.get_collection(args.carousel_collection)
+        ddm.stage_collection(args.carousel_collection)
+        print(f"carousel: staging {len(coll.files)} shards into "
+              f"collection {args.carousel_collection!r}", flush=True)
     gw = RestGateway(idds, host=args.host, port=args.port,
                      quiet=not args.verbose)
 

@@ -34,6 +34,25 @@ class StoreError(Exception):
 VALID_REQUEST_STATUSES = ("new", "accepted", "running", "suspended",
                           "finished", "failed", "aborted")
 
+# Content rows only ever advance through the state machine (new ->
+# staging -> available -> failed/delivered), but they are journaled from
+# several threads (stager pool, daemon threads) whose point-in-time
+# snapshots can commit out of order — a stager's "available" write
+# queued behind the write lock must not clobber the "delivered" row the
+# Transformer committed meanwhile.  Upserts therefore apply only when
+# the incoming row does not REGRESS the stored rank (lost-update guard).
+# "failed" ranks BELOW "available": failed -> available is the one legal
+# backward transition (a hedge landing after the original request
+# exhausted its attempts — live state takes the landing, so the journal
+# must too), while available -> failed cannot happen (set_failed no-ops
+# once a file is available).
+_CONTENT_RANK = {"new": 0, "staging": 1, "failed": 2, "available": 3,
+                 "delivered": 4}
+
+
+def _content_rank(status: Optional[str]) -> int:
+    return _CONTENT_RANK.get(status or "", 0)
+
 
 class Store:
     """Journal + catalog for head-service state.
@@ -128,6 +147,16 @@ class Store:
     def load_collections(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
 
+    # -- consumer subscriptions (delivery plane) ---------------------------
+    def save_subscription(self, sub: Dict[str, Any]) -> None:
+        """Upsert one subscription row keyed on ``sub_id``; the row
+        embeds the subscription's delivery records, so the Conductor
+        journals every delivery transition through this call."""
+        raise NotImplementedError
+
+    def load_subscriptions(self) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
         pass
@@ -152,6 +181,7 @@ class InMemoryStore(Store):
         self._collections: Dict[str, Dict[str, Any]] = {}
         self._leases: Dict[str, Dict[str, Any]] = {}
         self._commands: Dict[str, Dict[str, Any]] = {}
+        self._subscriptions: Dict[str, Dict[str, Any]] = {}
 
     def save_request(self, info: Dict[str, Any]) -> None:
         with self._lock:
@@ -223,9 +253,27 @@ class InMemoryStore(Store):
         with self._lock:
             return [dict(c) for c in self._commands.values()]
 
+    def _merge_contents(self, coll: Dict[str, Any],
+                        files: List[Dict[str, Any]]) -> None:
+        index = {f["name"]: i for i, f in enumerate(coll["files"])}
+        for f in files:
+            f = json.loads(json.dumps(f))
+            i = index.get(f["name"])
+            if i is None:
+                index[f["name"]] = len(coll["files"])
+                coll["files"].append(f)
+            elif (_content_rank(f.get("status"))
+                  >= _content_rank(coll["files"][i].get("status"))):
+                coll["files"][i] = f
+
     def save_collection(self, coll: Dict[str, Any]) -> None:
         with self._lock:
-            self._collections[coll["name"]] = json.loads(json.dumps(coll))
+            existing = self._collections.setdefault(
+                coll["name"], {"name": coll["name"],
+                               "scope": coll.get("scope", "idds"),
+                               "files": []})
+            existing["scope"] = coll.get("scope", "idds")
+            self._merge_contents(existing, coll.get("files", []))
 
     def save_contents(self, collection: str,
                       files: List[Dict[str, Any]]) -> None:
@@ -233,18 +281,21 @@ class InMemoryStore(Store):
             coll = self._collections.setdefault(
                 collection, {"name": collection, "scope": "idds",
                              "files": []})
-            index = {f["name"]: i for i, f in enumerate(coll["files"])}
-            for f in files:
-                f = dict(f)
-                if f["name"] in index:
-                    coll["files"][index[f["name"]]] = f
-                else:
-                    coll["files"].append(f)
+            self._merge_contents(coll, files)
 
     def load_collections(self) -> List[Dict[str, Any]]:
         with self._lock:
             return [json.loads(json.dumps(c))
                     for c in self._collections.values()]
+
+    def save_subscription(self, sub: Dict[str, Any]) -> None:
+        with self._lock:
+            self._subscriptions[sub["sub_id"]] = json.loads(json.dumps(sub))
+
+    def load_subscriptions(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [json.loads(json.dumps(s))
+                    for s in self._subscriptions.values()]
 
 
 # ---------------------------------------------------------------------------
@@ -308,9 +359,22 @@ CREATE TABLE IF NOT EXISTS contents (
     size       INTEGER,
     available  INTEGER,
     processed  INTEGER,
+    status     TEXT,
+    created_at REAL,
+    updated_at REAL,
     PRIMARY KEY (collection, name)
 );
+CREATE TABLE IF NOT EXISTS subscriptions (
+    sub_id   TEXT PRIMARY KEY,
+    consumer TEXT,
+    data     TEXT NOT NULL
+);
 """
+
+# columns added to `contents` after the table first shipped: pre-existing
+# store files are migrated in place on open (ALTER TABLE ADD COLUMN)
+_CONTENTS_MIGRATIONS = (("status", "TEXT"), ("created_at", "REAL"),
+                        ("updated_at", "REAL"))
 
 
 class SqliteStore(Store):
@@ -350,6 +414,15 @@ class SqliteStore(Store):
             conn.execute("PRAGMA journal_mode=WAL")
             conn.execute("PRAGMA synchronous=NORMAL")
             conn.executescript(_SCHEMA)
+            have = {r[1] for r in
+                    conn.execute("PRAGMA table_info(contents)")}
+            for col, decl in _CONTENTS_MIGRATIONS:
+                if col not in have:
+                    conn.execute(
+                        f"ALTER TABLE contents ADD COLUMN {col} {decl}")
+            # after the migration: the column exists on every schema
+            conn.execute("CREATE INDEX IF NOT EXISTS idx_contents_status"
+                         " ON contents (collection, status)")
         except sqlite3.DatabaseError as e:
             raise StoreError(
                 f"unusable store file {self.path!r}: {e}") from e
@@ -487,6 +560,28 @@ class SqliteStore(Store):
         return [json.loads(r[0]) for r in rows]
 
     # -- collections --------------------------------------------------------
+    _RANK_SQL = ("CASE IFNULL({col}, '') WHEN 'staging' THEN 1"
+                 " WHEN 'failed' THEN 2 WHEN 'available' THEN 3"
+                 " WHEN 'delivered' THEN 4 ELSE 0 END")
+    # the WHERE clause is the lost-update guard: see _CONTENT_RANK
+    _CONTENT_UPSERT = (
+        "INSERT INTO contents (collection, name, size, available,"
+        " processed, status, created_at, updated_at)"
+        " VALUES (?, ?, ?, ?, ?, ?, ?, ?)"
+        " ON CONFLICT(collection, name) DO UPDATE SET"
+        " size=excluded.size, available=excluded.available,"
+        " processed=excluded.processed, status=excluded.status,"
+        " created_at=excluded.created_at, updated_at=excluded.updated_at"
+        " WHERE " + _RANK_SQL.format(col="excluded.status")
+        + " >= " + _RANK_SQL.format(col="contents.status"))
+
+    @staticmethod
+    def _content_row(collection: str, f: Dict[str, Any]) -> Tuple:
+        return (collection, f["name"], f.get("size", 0),
+                int(bool(f.get("available"))),
+                int(bool(f.get("processed"))), f.get("status"),
+                f.get("created_at"), f.get("updated_at"))
+
     def save_collection(self, coll: Dict[str, Any]) -> None:
         conn = self._conn()
         conn.execute("BEGIN IMMEDIATE")
@@ -496,15 +591,8 @@ class SqliteStore(Store):
                 " ON CONFLICT(name) DO UPDATE SET scope=excluded.scope",
                 (coll["name"], coll.get("scope", "idds")))
             conn.executemany(
-                "INSERT INTO contents"
-                " (collection, name, size, available, processed)"
-                " VALUES (?, ?, ?, ?, ?)"
-                " ON CONFLICT(collection, name) DO UPDATE SET"
-                " size=excluded.size, available=excluded.available,"
-                " processed=excluded.processed",
-                [(coll["name"], f["name"], f.get("size", 0),
-                  int(bool(f.get("available"))),
-                  int(bool(f.get("processed"))))
+                self._CONTENT_UPSERT,
+                [self._content_row(coll["name"], f)
                  for f in coll.get("files", [])])
             conn.execute("COMMIT")
         except BaseException:
@@ -522,15 +610,8 @@ class SqliteStore(Store):
                 "INSERT OR IGNORE INTO collections (name, scope)"
                 " VALUES (?, 'idds')", (collection,))
             conn.executemany(
-                "INSERT INTO contents"
-                " (collection, name, size, available, processed)"
-                " VALUES (?, ?, ?, ?, ?)"
-                " ON CONFLICT(collection, name) DO UPDATE SET"
-                " size=excluded.size, available=excluded.available,"
-                " processed=excluded.processed",
-                [(collection, f["name"], f.get("size", 0),
-                  int(bool(f.get("available"))),
-                  int(bool(f.get("processed")))) for f in files])
+                self._CONTENT_UPSERT,
+                [self._content_row(collection, f) for f in files])
             conn.execute("COMMIT")
         except BaseException:
             conn.execute("ROLLBACK")
@@ -543,14 +624,31 @@ class SqliteStore(Store):
         out = []
         for name, scope in colls:
             files = conn.execute(
-                "SELECT name, size, available, processed FROM contents"
+                "SELECT name, size, available, processed, status,"
+                " created_at, updated_at FROM contents"
                 " WHERE collection = ? ORDER BY rowid", (name,)).fetchall()
             out.append({"name": name, "scope": scope,
                         "files": [{"name": f[0], "size": f[1],
                                    "available": bool(f[2]),
-                                   "processed": bool(f[3])}
+                                   "processed": bool(f[3]),
+                                   "status": f[4],
+                                   "created_at": f[5],
+                                   "updated_at": f[6]}
                                   for f in files]})
         return out
+
+    # -- subscriptions -------------------------------------------------------
+    def save_subscription(self, sub: Dict[str, Any]) -> None:
+        self._conn().execute(
+            "INSERT INTO subscriptions (sub_id, consumer, data)"
+            " VALUES (?, ?, ?) ON CONFLICT(sub_id) DO UPDATE SET"
+            " data=excluded.data",
+            (sub["sub_id"], sub.get("consumer"), json.dumps(sub)))
+
+    def load_subscriptions(self) -> List[Dict[str, Any]]:
+        rows = self._conn().execute(
+            "SELECT data FROM subscriptions ORDER BY rowid").fetchall()
+        return [json.loads(r[0]) for r in rows]
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:

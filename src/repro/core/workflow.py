@@ -58,19 +58,46 @@ class ProcessingStatus(str, enum.Enum):
 # ---------------------------------------------------------------------------
 
 
+# the content state machine (paper §2's Contents catalog): a file is
+# registered `new`, becomes `staging` once the DDM starts moving it,
+# `available` when it lands on disk, `delivered` once consumed (input:
+# its processing finished; output: every subscribed consumer acked the
+# notification), and `failed` when staging exhausts its attempts.
+CONTENT_STATUSES = ("new", "staging", "available", "delivered", "failed")
+
+
 @dataclass
 class FileRef:
-    """One file ('content') of a collection."""
+    """One file ('content') of a collection — the per-file Content
+    record the delivery plane journals and exposes over REST."""
     name: str
     size: int = 0
     available: bool = False
     processed: bool = False
+    status: str = ""
+    created_at: float = 0.0
+    updated_at: float = 0.0
+
+    def __post_init__(self):
+        if not self.status:
+            self.status = "available" if self.available else "new"
+        if not self.created_at:
+            self.created_at = time.time()
+        if not self.updated_at:
+            self.updated_at = self.created_at
+
+    def set_status(self, status: str) -> None:
+        if status not in CONTENT_STATUSES:
+            raise ValueError(f"invalid content status {status!r}")
+        self.status = status
+        self.updated_at = time.time()
 
     def to_dict(self):
         return asdict(self)
 
     @classmethod
     def from_dict(cls, d):
+        d = {k: v for k, v in d.items() if v is not None}
         return cls(**d)
 
 
@@ -87,6 +114,12 @@ class Collection:
     @property
     def n_processed(self) -> int:
         return sum(f.processed for f in self.files)
+
+    def status_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.files:
+            out[f.status] = out.get(f.status, 0) + 1
+        return out
 
     def to_dict(self):
         return {"name": self.name, "scope": self.scope,

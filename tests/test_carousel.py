@@ -66,6 +66,38 @@ def test_stager_retries_tape_faults():
     st.shutdown()
 
 
+def test_stager_no_backoff_sleep_after_final_attempt():
+    """A terminally failing file must be marked failed right after its
+    last attempt — not one full backoff interval later."""
+    import time
+    cold = ColdStore(drives=1, fault_rate=1.0, seed=0)
+    cold.add(TapeFile("f0", size=1, payload=b"x"))
+    cache = DiskCache(100)
+    st = Stager(cold, cache, workers=1, max_attempts=3, backoff=0.2)
+    t0 = time.monotonic()
+    st.submit("f0")
+    assert st.wait(timeout=5, hedge_interval=0.005)
+    elapsed = time.monotonic() - t0
+    # attempts sleep 0.2 + 0.4 between retries; the old code slept an
+    # extra 0.8 AFTER the final failure
+    assert elapsed < 1.0, elapsed
+    assert st.failed() == ["f0"]
+    st.shutdown()
+
+
+def test_stager_latency_window_bounded():
+    cold = ColdStore(drives=4)
+    n = 40
+    for i in range(n):
+        cold.add(TapeFile(f"f{i}", size=1, payload=i))
+    cache = DiskCache(10_000)
+    st = Stager(cold, cache, workers=4, latency_window=16)
+    st.submit_all([f"f{i}" for i in range(n)])
+    assert st.wait(timeout=10)
+    assert len(st._latencies) <= 16  # rolling window, not unbounded
+    st.shutdown()
+
+
 def test_stager_transform_applied():
     cold = ColdStore(drives=2)
     docs = synth_docs(0, 8, vocab_size=64, mean_len=20)
@@ -121,11 +153,35 @@ def test_delivery_fine_yields_batches():
     it = DeliveryIterator(st, cache, names, batch_rows=4)
     batches = list(it)
     assert batches, "no batches delivered"
-    for b in batches:
+    for b in batches[:-1]:
         assert b["tokens"].shape == (4, 16)
         assert set(b) == {"tokens", "labels", "loss_mask"}
+    # the final batch may be the partial tail; never empty, never over
+    assert 1 <= batches[-1]["tokens"].shape[0] <= 4
+    assert it.rows_delivered == sum(b["tokens"].shape[0] for b in batches)
     # prompt release: nothing left pinned in the cache
     assert cache.stats()["entries"] == 0
+    st.shutdown()
+
+
+def test_delivery_emits_final_partial_batch():
+    """Row conservation: delivered rows == dataset rows even when the
+    dataset is not a multiple of batch_rows (the tail batch used to be
+    silently dropped)."""
+    cold = ColdStore(drives=2)
+    rows_per_shard = 5
+    for i in range(3):  # 15 rows total, batch_rows=4 -> 4+4+4+3
+        cold.add(TapeFile(f"s{i}", size=10, payload={
+            "x": np.arange(rows_per_shard * 2).reshape(rows_per_shard, 2)}))
+    cache = DiskCache(1 << 20)
+    st = Stager(cold, cache, workers=2)
+    names = [f"s{i}" for i in range(3)]
+    st.submit_all(names)
+    it = DeliveryIterator(st, cache, names, batch_rows=4)
+    batches = list(it)
+    sizes = [b["x"].shape[0] for b in batches]
+    assert sizes == [4, 4, 4, 3]
+    assert sum(sizes) == 3 * rows_per_shard == it.rows_delivered
     st.shutdown()
 
 
@@ -135,6 +191,65 @@ def test_delivery_coarse_waits_then_yields():
     batches = list(it)
     assert batches
     assert it.first_batch_at is not None
+    assert it.failed_shards == 0
+    st.shutdown()
+
+
+def _mk_faulty(n_shards=4, fault_rate=1.0, seed=0):
+    """A pipeline whose tape reads fail (deterministically by seed)."""
+    cold = ColdStore(drives=2, fault_rate=fault_rate, seed=seed)
+    rows = 4
+    for i in range(n_shards):
+        cold.add(TapeFile(f"s{i}", size=10, payload={
+            "x": np.arange(rows * 2).reshape(rows, 2)}))
+    cache = DiskCache(1 << 20)
+    st = Stager(cold, cache, workers=2, max_attempts=2, backoff=0.001)
+    names = [f"s{i}" for i in range(n_shards)]
+    st.submit_all(names)
+    return st, cache, names
+
+
+@pytest.mark.parametrize("coarse", [False, True])
+def test_delivery_all_failed_shards_raise(coarse):
+    """Terminal staging failure of EVERY shard must raise, not silently
+    yield an empty iterator (both modes)."""
+    st, cache, names = _mk_faulty(fault_rate=1.0)
+    it = DeliveryIterator(st, cache, names, batch_rows=4, coarse=coarse,
+                          timeout=20)
+    with pytest.raises(RuntimeError, match="failed staging"):
+        list(it)
+    assert it.failed_shards == len(names)
+    st.shutdown()
+
+
+@pytest.mark.parametrize("coarse", [False, True])
+def test_delivery_partial_failure_is_recorded(coarse):
+    """Some shards fail terminally: the survivors are delivered and the
+    skips are surfaced (failed_shards + skipped_shards), both modes."""
+    cold = ColdStore(drives=2)
+    rows = 4
+    for i in range(4):
+        cold.add(TapeFile(f"s{i}", size=10, payload={
+            "x": np.arange(rows * 2).reshape(rows, 2)}))
+    cache = DiskCache(1 << 20)
+
+    real_read = cold.read
+
+    def read(name):  # s1/s3 are unreadable, the rest stage fine
+        if name in ("s1", "s3"):
+            raise IOError(f"tape read error on {name}")
+        return real_read(name)
+
+    cold.read = read
+    st = Stager(cold, cache, workers=2, max_attempts=2, backoff=0.001)
+    names = [f"s{i}" for i in range(4)]
+    st.submit_all(names)
+    it = DeliveryIterator(st, cache, names, batch_rows=4, coarse=coarse,
+                          timeout=20)
+    batches = list(it)
+    assert it.failed_shards == 2
+    assert it.skipped_shards == ["s1", "s3"]
+    assert sum(b["x"].shape[0] for b in batches) == 2 * rows
     st.shutdown()
 
 

@@ -1,0 +1,525 @@
+"""Content delivery plane: per-file Content records journaled on both
+store backends, the CarouselDDM mounted as the head's DDM (incremental
+per-file dispatch driven by Stager announcements), the Conductor's
+subscription/delivery tracking with retries + acks, the /v1 REST surface
+(collections, contents, subscriptions), and kill-and-recover semantics.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.carousel.ddm import CarouselDDM
+from repro.carousel.storage import ColdStore, DiskCache, TapeFile
+from repro.core import messaging as M
+from repro.core import payloads as reg
+from repro.core.client import IDDSClient, IDDSClientError
+from repro.core.daemons import Conductor
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+from repro.core.scheduler import DistributedWFM
+from repro.core.spec import WorkflowSpec
+from repro.core.store import InMemoryStore, SqliteStore
+from repro.core.workflow import FileRef
+from repro.worker import WorkerAgent
+
+
+@pytest.fixture(autouse=True)
+def _payloads():
+    reg.register_payload("dl_echo", lambda params, inputs: {
+        "inputs": list(inputs)})
+    yield
+
+
+def _mk_cold(n=4, rows=4):
+    cold = ColdStore(drives=2)
+    for i in range(n):
+        cold.add(TapeFile(f"f{i}", size=10, payload={
+            "x": np.arange(rows * 2).reshape(rows, 2)}))
+    return cold
+
+
+def _carousel_workflow(name="carousel", coll="tape", out="out.tape"):
+    spec = WorkflowSpec(name)
+    spec.work("proc", payload="dl_echo", input_collection=coll,
+              output_collection=out, granularity="fine", start={})
+    return spec.build()
+
+
+def _conductor(idds):
+    return next(d for d in idds.daemons if isinstance(d, Conductor))
+
+
+def _store_factory(kind, tmp_path):
+    if kind == "memory":
+        store = InMemoryStore()
+        return lambda: store  # same object survives the "crash"
+    path = str(tmp_path / "state.db")
+    return lambda: SqliteStore(path)
+
+
+# -------------------------------------------------- content state machine
+
+@pytest.mark.parametrize("kind", ["memory", "sqlite"])
+def test_content_state_machine_journaled(kind, tmp_path):
+    """new -> staging -> available -> delivered transitions (plus a
+    terminal failed) are journaled through the store as they happen."""
+    mk = _store_factory(kind, tmp_path)
+    cold = _mk_cold(3)
+    ddm = CarouselDDM(cold, DiskCache(1 << 20))
+    idds = IDDS(ddm=ddm, store=mk())
+    ddm.register_from_cold("tape")
+
+    def stored():
+        (coll,) = [c for c in idds.store.load_collections()
+                   if c["name"] == "tape"]
+        return {f["name"]: f["status"] for f in coll["files"]}
+
+    assert stored() == {"f0": "new", "f1": "new", "f2": "new"}
+    ddm.mark_staging("tape", "f0")
+    assert stored()["f0"] == "staging"
+    ddm.set_available("tape", "f0")
+    assert stored()["f0"] == "available"
+    ddm.set_failed("tape", "f1")
+    assert stored()["f1"] == "failed"
+    ddm.set_available("tape", "f2")
+    ddm.cache.put("f2", {"x": np.zeros((1, 1))}, 10, pin=False)
+    ddm.mark_processed("tape", "f2")
+    assert stored()["f2"] == "delivered"
+    # the rank guard: a stale lower-rank write cannot regress the row
+    idds.store.save_contents("tape", [
+        FileRef("f2", available=True, status="available").to_dict()])
+    assert stored()["f2"] == "delivered"
+    idds.close()
+
+
+def test_carousel_mounted_incremental_dispatch():
+    """The tentpole wiring, in-process: a file-backed collection staged
+    through a mounted CarouselDDM dispatches per-file processings as
+    shards land (Stager announcements -> Transformer), and every content
+    row ends delivered."""
+    cold = _mk_cold(4)
+    ddm = CarouselDDM(cold, DiskCache(1 << 20))
+    idds = IDDS(ddm=ddm)
+    ddm.register_from_cold("tape")
+    rid = idds.submit_workflow(_carousel_workflow())
+    idds.pump()
+    assert idds.stats.get("processings_created", 0) == 0  # nothing staged
+    st = ddm.stage_collection("tape", workers=2)
+    idds.pump_until(
+        lambda: idds.request_status(rid)["status"] == "finished",
+        timeout=30, interval=0.005)
+    procs = list(idds.ctx.processings.values())
+    assert len(procs) == 4  # one per file — fine granularity
+    assert sorted(f for p in procs for f in p.input_files) == [
+        "f0", "f1", "f2", "f3"]
+    assert all(len(p.input_files) == 1 for p in procs)
+    assert [f["status"] for f in idds.lookup_contents("tape")] == \
+        ["delivered"] * 4
+    # prompt release: the staged bytes were freed as files were consumed
+    assert ddm.cache.stats()["entries"] == 0
+    st.shutdown()
+    idds.close()
+
+
+def test_failed_staging_surfaces_as_subfinished():
+    """A shard whose staging fails terminally must not wedge the work:
+    it finalizes subfinished with the failed content row terminal."""
+    cold = _mk_cold(3)
+    real_read = cold.read
+    cold.read = lambda name: (_ for _ in ()).throw(
+        IOError("tape")) if name == "f1" else real_read(name)
+    ddm = CarouselDDM(cold, DiskCache(1 << 20))
+    idds = IDDS(ddm=ddm)
+    ddm.register_from_cold("tape")
+    rid = idds.submit_workflow(_carousel_workflow())
+    idds.pump()
+    st = ddm.stage_collection("tape", workers=2, max_attempts=2,
+                              backoff=0.001)
+    idds.pump_until(
+        lambda: idds.request_status(rid)["status"] == "finished",
+        timeout=30, interval=0.005)
+    assert idds.request_status(rid)["works"] == {"subfinished": 1}
+    statuses = {f["name"]: f["status"]
+                for f in idds.lookup_contents("tape")}
+    assert statuses == {"f0": "delivered", "f1": "failed",
+                        "f2": "delivered"}
+    st.shutdown()
+    idds.close()
+
+
+# ------------------------------------------------ Conductor delivery plane
+
+def test_conductor_matches_subscriptions_and_acks():
+    idds = IDDS()
+    sub = idds.subscribe("trainer", ["out.*"])
+    other = idds.subscribe("dashboard")          # match-all
+    rid = idds.submit_workflow(_carousel_workflow(coll=None or "tape",
+                                                  out="out.tape"))
+    idds.ctx.ddm.register_collection(
+        "tape", [FileRef("f0", size=1, available=True)])
+    idds.pump()
+    assert idds.request_status(rid)["status"] == "finished"
+    # one output content -> one delivery per matching subscription
+    dels = idds.list_deliveries(sub["sub_id"])
+    assert dels["total"] == 1
+    (d,) = dels["deliveries"]
+    assert d["status"] == "notified" and d["collection"] == "out.tape"
+    assert idds.list_deliveries(other["sub_id"])["total"] == 1
+    # output content registered + available in the DDM
+    (out,) = idds.lookup_contents("out.tape")
+    assert out["available"] and out["status"] == "available"
+    # ack from ONE subscription: content not yet delivered
+    r = idds.ack_delivery(sub["sub_id"], [d["delivery_id"]])
+    assert r["acked"] == 1
+    (out,) = idds.lookup_contents("out.tape")
+    assert out["status"] == "available"
+    # ack from the other: now every subscriber confirmed -> delivered
+    (d2,) = idds.list_deliveries(other["sub_id"])["deliveries"]
+    idds.ack_delivery(other["sub_id"], [d2["delivery_id"]])
+    (out,) = idds.lookup_contents("out.tape")
+    assert out["status"] == "delivered"
+    # acking again is idempotent
+    assert idds.ack_delivery(sub["sub_id"],
+                             [d["delivery_id"]])["acked"] == 0
+    stats = idds.delivery_stats()
+    assert stats["subscriptions"] == 2 and stats["acked"] == 2
+    idds.close()
+
+
+def test_conductor_retries_then_fails_unacked():
+    idds = IDDS()
+    cond = _conductor(idds)
+    cond.retry_interval = 0.0       # every pump round is "overdue"
+    cond.max_notify_attempts = 3
+    sub = idds.subscribe("slow-consumer", ["out.tape"])
+    idds.ctx.ddm.register_collection(
+        "tape", [FileRef("f0", size=1, available=True)])
+    idds.submit_workflow(_carousel_workflow())
+    idds.pump()   # quiesces only once the delivery went terminal
+    (d,) = idds.list_deliveries(sub["sub_id"])["deliveries"]
+    assert d["status"] == "failed"
+    assert d["attempts"] == 3
+    assert idds.stats["delivery_retries"] == 2
+    assert idds.stats["deliveries_failed"] == 1
+    # the failed delivery is journaled
+    (row,) = idds.store.load_subscriptions()
+    assert [v["status"] for v in row["deliveries"].values()] == ["failed"]
+    idds.close()
+
+
+def test_ack_batch_with_bad_id_mutates_nothing():
+    """A batch containing one unknown delivery id must 404 without
+    half-acking the valid ids — a corrected retry then acks them and
+    the content still turns delivered."""
+    idds = IDDS()
+    sub = idds.subscribe("trainer", ["out.tape"])
+    idds.ctx.ddm.register_collection(
+        "tape", [FileRef("f0", size=1, available=True)])
+    idds.submit_workflow(_carousel_workflow())
+    idds.pump()
+    (d,) = idds.list_deliveries(sub["sub_id"])["deliveries"]
+    with pytest.raises(KeyError):
+        idds.ack_delivery(sub["sub_id"], [d["delivery_id"], "dlv-nope"])
+    (d2,) = idds.list_deliveries(sub["sub_id"])["deliveries"]
+    assert d2["status"] == "notified"  # nothing half-applied
+    assert idds.ack_delivery(sub["sub_id"],
+                             [d["delivery_id"]])["acked"] == 1
+    (out,) = idds.lookup_contents("out.tape")
+    assert out["status"] == "delivered"
+    idds.close()
+
+
+def test_coarse_partial_staging_failure_dispatches_survivors():
+    """A coarse work whose collection has a terminally-failed shard must
+    dispatch the survivors once everything is terminal — subfinished,
+    not wedged forever."""
+    cold = _mk_cold(3)
+    real_read = cold.read
+    cold.read = lambda name: (_ for _ in ()).throw(
+        IOError("tape")) if name == "f1" else real_read(name)
+    ddm = CarouselDDM(cold, DiskCache(1 << 20))
+    idds = IDDS(ddm=ddm)
+    ddm.register_from_cold("tape")
+    spec = WorkflowSpec("coarse")
+    spec.work("proc", payload="dl_echo", input_collection="tape",
+              granularity="coarse", start={})
+    rid = idds.submit_workflow(spec.build())
+    idds.pump()
+    st = ddm.stage_collection("tape", workers=2, max_attempts=2,
+                              backoff=0.001)
+    idds.pump_until(
+        lambda: idds.request_status(rid)["status"] == "finished",
+        timeout=30, interval=0.005)
+    assert idds.request_status(rid)["works"] == {"subfinished": 1}
+    (proc,) = idds.ctx.processings.values()
+    assert sorted(proc.input_files) == ["f0", "f2"]
+    st.shutdown()
+    idds.close()
+
+
+def test_coarse_all_failed_staging_finalizes():
+    cold = _mk_cold(2)
+    cold.read = lambda name: (_ for _ in ()).throw(IOError("tape"))
+    ddm = CarouselDDM(cold, DiskCache(1 << 20))
+    idds = IDDS(ddm=ddm)
+    ddm.register_from_cold("tape")
+    spec = WorkflowSpec("coarse-dead")
+    spec.work("proc", payload="dl_echo", input_collection="tape",
+              granularity="coarse", start={})
+    rid = idds.submit_workflow(spec.build())
+    idds.pump()
+    st = ddm.stage_collection("tape", workers=2, max_attempts=2,
+                              backoff=0.001)
+    idds.pump_until(
+        lambda: idds.request_status(rid)["status"] == "finished",
+        timeout=30, interval=0.005)
+    assert idds.request_status(rid)["works"] == {"subfinished": 1}
+    assert len(idds.ctx.processings) == 0  # nothing left to process
+    st.shutdown()
+    idds.close()
+
+
+@pytest.mark.parametrize("kind", ["memory", "sqlite"])
+def test_rank_guard_allows_failed_to_available(kind, tmp_path):
+    """failed -> available is the one legal backward journal move (a
+    hedge landing after the original stage exhausted its attempts);
+    available -> failed stays blocked."""
+    store = _store_factory(kind, tmp_path)()
+    store.save_contents("c", [FileRef("f0", status="failed").to_dict()])
+    store.save_contents("c", [
+        FileRef("f0", available=True, status="available").to_dict()])
+    (coll,) = store.load_collections()
+    assert coll["files"][0]["status"] == "available"
+    # the reverse never applies: a stale failed snapshot loses
+    store.save_contents("c", [FileRef("f0", status="failed").to_dict()])
+    (coll,) = store.load_collections()
+    assert coll["files"][0]["status"] == "available"
+    store.close()
+
+
+def test_subscribe_idempotent_on_sub_id():
+    idds = IDDS()
+    a = idds.subscribe("c1", ["x"], sub_id="sub-fixed")
+    b = idds.subscribe("c1", ["x"], sub_id="sub-fixed")
+    assert a["sub_id"] == b["sub_id"] == "sub-fixed"
+    assert idds.list_subscriptions()["total"] == 1
+    idds.close()
+
+
+# ------------------------------------------------------------ REST surface
+
+@pytest.fixture
+def gateway():
+    gw = RestGateway(IDDS())
+    gw.start()
+    yield gw
+    gw.stop()
+
+
+def test_rest_collections_contents_filter_pagination(gateway):
+    client = IDDSClient(gateway.url)
+    gateway.idds.ctx.ddm.register_collection("data/raw", [
+        FileRef(f"f{i}", size=i, available=i % 2 == 0) for i in range(6)])
+    colls = client.list_collections()
+    assert colls["total"] == 1
+    (c,) = colls["collections"]
+    assert c["name"] == "data/raw" and c["files"] == 6
+    assert c["statuses"] == {"available": 3, "new": 3}
+    # status filter + pagination
+    page = client.list_contents("data/raw", status="available", limit=2,
+                                offset=1)
+    assert page["total"] == 3
+    assert [f["name"] for f in page["contents"]] == ["f2", "f4"]
+    assert page["limit"] == 2 and page["offset"] == 1
+    # back-compat list helper
+    assert len(client.lookup_contents("data/raw")) == 6
+    # invalid filter -> 400 envelope
+    with pytest.raises(IDDSClientError) as ei:
+        client.list_contents("data/raw", status="nope")
+    assert ei.value.status == 400
+    with pytest.raises(IDDSClientError) as ei:
+        client.list_contents("data/raw", limit=-1)
+    assert ei.value.status == 400
+
+
+def test_rest_subscription_lifecycle(gateway):
+    client = IDDSClient(gateway.url)
+    sub = client.subscribe("trainer", ["out.*"])
+    assert sub["consumer"] == "trainer"
+    assert client.list_subscriptions()["total"] == 1
+    got = client.get_subscription(sub["sub_id"])
+    assert got["collections"] == ["out.*"]
+    # drive one output through the pipeline over the wire
+    gateway.idds.ctx.ddm.register_collection(
+        "tape", [FileRef("f0", size=1, available=True)])
+    rid = client.submit_workflow(_carousel_workflow())
+    client.wait(rid, timeout=30)
+
+    deadline = time.monotonic() + 10
+    while client.list_deliveries(sub["sub_id"])["total"] == 0:
+        assert time.monotonic() < deadline
+        time.sleep(0.02)
+    (d,) = client.list_deliveries(sub["sub_id"],
+                                  status="notified")["deliveries"]
+    r = client.ack(sub["sub_id"], [d["delivery_id"]])
+    assert r["acked"] == 1
+    (d,) = client.list_deliveries(sub["sub_id"])["deliveries"]
+    assert d["status"] == "acked"
+    # healthz carries the content/delivery tallies
+    hz = client.healthz()
+    assert hz["deliveries"]["subscriptions"] == 1
+    assert hz["deliveries"]["acked"] == 1
+    assert hz["contents"]["delivered"] >= 1
+    # 404s
+    with pytest.raises(KeyError):
+        client.get_subscription("sub-nope")
+    with pytest.raises(KeyError):
+        client.ack(sub["sub_id"], ["dlv-nope"])
+    # bad ack body -> 400
+    with pytest.raises(IDDSClientError) as ei:
+        client.ack(sub["sub_id"], [])
+    assert ei.value.status == 400
+
+
+# --------------------------------------------- carousel -> workers (e2e)
+
+def test_carousel_to_live_workers_over_rest(tmp_path):
+    """The paper's flagship scenario as one flow: a file-backed
+    collection staged through CarouselDDM dispatches per-file
+    processings as shards land; pull-based workers complete them over
+    REST; content rows are journaled and /v1 reflects terminal states."""
+    cold = _mk_cold(4)
+    ddm = CarouselDDM(cold, DiskCache(1 << 20))
+    store = SqliteStore(str(tmp_path / "state.db"))
+    idds = IDDS(ddm=ddm, store=store,
+                executor=DistributedWFM(lease_ttl=5.0))
+    gw = RestGateway(idds)
+    gw.start()
+    stop = threading.Event()
+    agents = [WorkerAgent(gw.url, worker_id=f"cw-{i}",
+                          poll_interval=0.02) for i in range(2)]
+    threads = [threading.Thread(target=a.run, args=(stop,), daemon=True)
+               for a in agents]
+    st = None
+    try:
+        for t in threads:
+            t.start()
+        client = IDDSClient(gw.url)
+        sub = client.subscribe("trainer", ["out.tape"])
+        ddm.register_from_cold("tape")
+        wf = _carousel_workflow()
+        # worker payloads resolve locally; dl_echo is registered in this
+        # process, which is where the agents run
+        rid = client.submit_workflow(wf, requester="alice")
+        st = ddm.stage_collection("tape", workers=2)
+        info = client.wait(rid, timeout=60)
+        assert info["works"] == {"finished": 1}
+        page = client.list_contents("tape", status="delivered")
+        assert page["total"] == 4
+        # every processing carried exactly one input file
+        procs = client.list_processings(rid)["processings"]
+        assert len(procs) == 4
+        assert all(len(p["input_files"]) == 1 for p in procs)
+        assert sum(a.jobs_done for a in agents) == 4
+        # deliveries for the subscribed output collection
+        deadline = time.monotonic() + 10
+        while client.list_deliveries(sub["sub_id"])["total"] < 4:
+            assert time.monotonic() < deadline
+            time.sleep(0.02)
+        dels = client.list_deliveries(sub["sub_id"])["deliveries"]
+        client.ack(sub["sub_id"], [d["delivery_id"] for d in dels])
+        deadline = time.monotonic() + 10
+        while client.list_contents("out.tape",
+                                   status="delivered")["total"] < 4:
+            assert time.monotonic() < deadline
+            time.sleep(0.02)
+        # journaled on disk, not just live
+        names = {c["name"] for c in store.load_collections()}
+        assert {"tape", "out.tape"} <= names
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        if st is not None:
+            st.shutdown()
+        gw.stop()
+        idds.close()
+
+
+# --------------------------------------------------- kill-and-recover
+
+@pytest.mark.parametrize("kind", ["memory", "sqlite"])
+def test_kill_and_recover_preserves_content_and_delivery_state(
+        kind, tmp_path):
+    """Crash the head mid-campaign: recovery must rebuild per-file
+    content state (no file processed twice), the subscription registry,
+    and the un-acked deliveries (re-notified, then ackable)."""
+    mk = _store_factory(kind, tmp_path)
+    cold = _mk_cold(3)
+    ddm = CarouselDDM(cold, DiskCache(1 << 20))
+    idds = IDDS(ddm=ddm, store=mk())
+    sub = idds.subscribe("trainer", ["out.tape"])
+    ddm.register_from_cold("tape")
+    rid = idds.submit_workflow(_carousel_workflow())
+    idds.pump()
+    # two of three files staged + processed pre-crash
+    for n in ("f0", "f1"):
+        ddm.cache.put(n, cold.get(n).payload, 10, pin=False)
+        ddm.set_available("tape", n)
+        idds.ctx.bus.publish(M.T_COLLECTION_UPDATED,
+                             {"collection": "tape", "file": n})
+    idds.pump()
+    assert idds.request_status(rid)["status"] == "running"
+    assert idds.list_deliveries(sub["sub_id"])["total"] == 2
+    # simulated crash: instance dropped without stop()/close()
+    del idds
+
+    ddm2 = CarouselDDM(_mk_cold(3), DiskCache(1 << 20))
+    idds2 = IDDS(ddm=ddm2, store=mk())
+    counts = idds2.recover()
+    assert counts["subscriptions"] == 1
+    statuses = {f["name"]: f["status"]
+                for f in idds2.lookup_contents("tape")}
+    assert statuses == {"f0": "delivered", "f1": "delivered",
+                        "f2": "new"}
+    # un-acked deliveries survived and are re-notified by the retry pass
+    dels = idds2.list_deliveries(sub["sub_id"])
+    assert dels["total"] == 2
+    assert all(d["status"] == "notified" for d in dels["deliveries"])
+    idds2.pump()
+    # finish the campaign: stage the late file
+    ddm2.cache.put("f2", ddm2.cold.get("f2").payload, 10, pin=False)
+    ddm2.set_available("tape", "f2")
+    idds2.ctx.bus.publish(M.T_COLLECTION_UPDATED,
+                          {"collection": "tape", "file": "f2"})
+    idds2.pump()
+    assert idds2.request_status(rid)["status"] == "finished"
+    # each file processed exactly once across the crash
+    procs = idds2.store.load_processings()
+    assert sorted(f for p in procs for f in p["input_files"]) == [
+        "f0", "f1", "f2"]
+    # ack everything; contents go terminal on the recovered head
+    dels = idds2.list_deliveries(sub["sub_id"])["deliveries"]
+    idds2.ack_delivery(sub["sub_id"], [d["delivery_id"] for d in dels])
+    idds2.pump()
+    dels = idds2.list_deliveries(sub["sub_id"])["deliveries"]
+    assert {d["status"] for d in dels} <= {"acked", "notified"}
+    assert all(f["status"] == "delivered"
+               for f in idds2.lookup_contents("tape"))
+    idds2.close()
+
+
+# ------------------------------------------------- monotonic deadlines
+
+def test_bus_wait_immune_to_wall_clock_steps(monkeypatch):
+    """MessageBus deadlines must come from the monotonic clock: freeze
+    (or jump) time.time and the waits still expire on schedule."""
+    bus = M.MessageBus()
+    real = time.time
+    monkeypatch.setattr(time, "time", lambda: real() + 1e6)
+    t0 = time.monotonic()
+    assert bus.wait("t", timeout=0.05) is None
+    assert bus.wait_any(("t",), timeout=0.05) is False
+    assert time.monotonic() - t0 < 5.0
