@@ -108,8 +108,9 @@ def main(argv=None) -> int:
 
     _section("store (paper §2, persistence overhead)")
     from benchmarks import store_bench
-    results["store"] = store_bench.run(n=50 if smoke else
-                                       100 if quick else 300)
+    results["store"] = store_bench.run(
+        n=50 if smoke else 100 if quick else 300,
+        write_rows=500 if smoke else 1000 if quick else 2000)
     _print_rows(store_bench.KEYS, results["store"])
 
     if smoke:
@@ -146,8 +147,9 @@ def main(argv=None) -> int:
     _section("worker (distributed execution plane)")
     from benchmarks import worker_bench
     results["worker"] = worker_bench.run(
-        worker_counts=(1, 2, 4),
-        jobs=12 if smoke else 16 if quick else 32,
+        worker_counts=(1, 2, 4) if smoke else
+        (1, 2, 4, 8) if quick else (1, 2, 4, 8, 16),
+        jobs=12 if smoke else 24 if quick else 64,
         sleep_ms=20.0 if quick else 25.0,
         renewals=40 if quick else 100)
     _print_rows(worker_bench.KEYS, results["worker"])
@@ -161,6 +163,11 @@ def main(argv=None) -> int:
         roofline.main()
 
     wall = round(time.time() - t0, 1)
+    skipped = sorted(name for name, res in results.items()
+                     if isinstance(res, dict) and "skipped" in res)
+    if skipped:
+        print(f"\nWARNING: skipped benchmarks: {', '.join(skipped)} "
+              f"(rerun without --smoke for full coverage)", flush=True)
     print(f"\nall benchmarks done in {wall}s")
 
     if args.json_out:

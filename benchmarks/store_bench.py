@@ -7,6 +7,11 @@ and — for SQLite — how fast a fresh head service can ``recover()`` the
 whole catalog after a simulated crash.  This is the price of durability
 the ROADMAP's horizontally-scalable head service pays per request.
 
+Also measures the content-journal write path one row per transaction
+versus batched (``save_contents`` with many rows = one transaction via
+``save_many``): the ``bulk_speedup`` row is the acceptance number for
+the bulk hot-path work — SQLite bulk should be >=10x one-row.
+
     PYTHONPATH=src python -m benchmarks.store_bench [--smoke]
 """
 from __future__ import annotations
@@ -21,9 +26,11 @@ from repro.core.idds import IDDS
 from repro.core.requests import Request
 from repro.core.spec import WorkflowSpec
 from repro.core.store import InMemoryStore, SqliteStore
+from repro.core.workflow import FileRef
 
 KEYS = ["store", "submissions", "submit_wall_s", "submit_per_s",
-        "pump_wall_s", "e2e_per_s", "recover_s", "recovered_works"]
+        "pump_wall_s", "e2e_per_s", "recover_s", "recovered_works",
+        "write_rows", "write_wall_s", "rows_per_s", "bulk_speedup"]
 
 
 def _make_request_json() -> str:
@@ -73,18 +80,55 @@ def run_one(kind: str, n: int, workdir: str) -> Dict:
     }
 
 
-def run(n: int = 300) -> List[Dict]:
+def content_write_rates(n_rows: int, batch: int,
+                        workdir: str) -> List[Dict]:
+    """Content journal rows/s, one row per transaction vs batched
+    (``save_contents`` with ``batch`` rows = one ``save_many`` commit).
+    The ``bulk_speedup`` rows are the fsync-amortisation factor."""
+    files = [FileRef(f"f{i}", size=i, available=True).to_dict()
+             for i in range(n_rows)]
+    rows: List[Dict] = []
+    for kind in ("memory", "sqlite"):
+        rates: Dict[str, float] = {}
+        for mode in ("one-row", "bulk"):
+            path = os.path.join(workdir, f"wr-{kind}-{mode}.db")
+            store = (SqliteStore(path) if kind == "sqlite"
+                     else InMemoryStore())
+            t0 = time.perf_counter()
+            if mode == "bulk":
+                for i in range(0, n_rows, batch):
+                    store.save_contents("bench", files[i:i + batch])
+            else:
+                for f in files:
+                    store.save_contents("bench", [f])
+            wall = time.perf_counter() - t0
+            store.close()
+            rates[mode] = n_rows / wall
+            rows.append({"store": f"{kind}-{mode}",
+                         "write_rows": n_rows,
+                         "write_wall_s": round(wall, 3),
+                         "rows_per_s": round(n_rows / wall, 1)})
+        rows.append({"store": f"{kind}-bulk_speedup",
+                     "bulk_speedup": round(rates["bulk"]
+                                           / rates["one-row"], 2)})
+    return rows
+
+
+def run(n: int = 300, write_rows: int = 2000,
+        write_batch: int = 256) -> List[Dict]:
     rows = []
     with tempfile.TemporaryDirectory(prefix="idds-store-bench-") as d:
         for kind in ("memory", "sqlite"):
             rows.append(run_one(kind, n, d))
-    mem, sql = rows
-    rows.append({
-        "store": "ratio(memory/sqlite)",
-        "submit_per_s": round(mem["submit_per_s"]
-                              / max(sql["submit_per_s"], 1), 2),
-        "e2e_per_s": round(mem["e2e_per_s"] / max(sql["e2e_per_s"], 1), 2),
-    })
+        mem, sql = rows
+        rows.append({
+            "store": "ratio(memory/sqlite)",
+            "submit_per_s": round(mem["submit_per_s"]
+                                  / max(sql["submit_per_s"], 1), 2),
+            "e2e_per_s": round(mem["e2e_per_s"]
+                               / max(sql["e2e_per_s"], 1), 2),
+        })
+        rows.extend(content_write_rates(write_rows, write_batch, d))
     return rows
 
 
@@ -96,7 +140,7 @@ def main(argv=None):
                     help="submissions per store backend")
     args = ap.parse_args(argv)
     n = args.n if args.n is not None else (50 if args.smoke else 300)
-    rows = run(n)
+    rows = run(n, write_rows=500 if args.smoke else 2000)
     print(",".join(KEYS))
     for r in rows:
         print(",".join(str(r.get(k, "")) for k in KEYS))

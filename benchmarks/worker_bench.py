@@ -7,6 +7,11 @@ cost a worker pays while executing.  The jobs are fixed-duration
 ``sleep_ms`` payloads, so jobs/sec rising with worker count is the
 execution plane actually parallelizing, not a faster payload.
 
+Pools run in two wire modes: ``batch`` (one multi-lease + one batch
+heartbeat for the whole pool — the default) and ``per-slot`` (one
+lease/heartbeat loop per slot, the pre-bulk baseline); at 8-16 workers
+the batch rows should beat the per-slot rows.
+
     PYTHONPATH=src python -m benchmarks.worker_bench [--smoke]
 """
 from __future__ import annotations
@@ -24,7 +29,7 @@ from repro.core.spec import WorkflowSpec
 from repro.core.workflow import Processing, Workflow
 from repro.worker import WorkerPool
 
-KEYS = ["workers", "jobs", "sleep_ms", "wall_s", "jobs_per_s",
+KEYS = ["workers", "mode", "jobs", "sleep_ms", "wall_s", "jobs_per_s",
         "hb_p50_ms", "hb_p95_ms"]
 
 
@@ -36,25 +41,33 @@ def _workflow(n_jobs: int, sleep_ms: float) -> Workflow:
 
 
 def throughput(worker_counts=(1, 2, 4), jobs: int = 16,
-               sleep_ms: float = 25.0) -> List[Dict]:
+               sleep_ms: float = 25.0,
+               modes=("batch", "per-slot")) -> List[Dict]:
     rows = []
     for n in worker_counts:
-        with RestGateway(IDDS(executor=DistributedWFM(
-                lease_ttl=10.0))) as gw:
-            client = IDDSClient(gw.url)
-            with WorkerPool(gw.url, concurrency=n, poll_interval=0.01,
-                            worker_id=f"bench{n}"):
-                t0 = time.perf_counter()
-                rid = client.submit_workflow(_workflow(jobs, sleep_ms))
-                client.wait(rid, timeout=300, interval=0.01)
-                wall = time.perf_counter() - t0
-        rows.append({
-            "workers": n,
-            "jobs": jobs,
-            "sleep_ms": sleep_ms,
-            "wall_s": round(wall, 3),
-            "jobs_per_s": round(jobs / wall, 2),
-        })
+        for mode in modes:
+            if mode == "batch" and n == 1:
+                continue  # batching needs >1 slot to amortise anything
+            with RestGateway(IDDS(executor=DistributedWFM(
+                    lease_ttl=10.0))) as gw:
+                client = IDDSClient(gw.url)
+                with WorkerPool(gw.url, concurrency=n,
+                                poll_interval=0.01,
+                                batch=(mode == "batch"),
+                                worker_id=f"bench{n}"):
+                    t0 = time.perf_counter()
+                    rid = client.submit_workflow(
+                        _workflow(jobs, sleep_ms))
+                    client.wait(rid, timeout=300, interval=0.01)
+                    wall = time.perf_counter() - t0
+            rows.append({
+                "workers": n,
+                "mode": mode,
+                "jobs": jobs,
+                "sleep_ms": sleep_ms,
+                "wall_s": round(wall, 3),
+                "jobs_per_s": round(jobs / wall, 2),
+            })
     return rows
 
 
@@ -84,8 +97,8 @@ def heartbeat_overhead(renewals: int = 100) -> Dict:
     }
 
 
-def run(worker_counts=(1, 2, 4), jobs: int = 16, sleep_ms: float = 25.0,
-        renewals: int = 100) -> List[Dict]:
+def run(worker_counts=(1, 2, 4, 8, 16), jobs: int = 64,
+        sleep_ms: float = 25.0, renewals: int = 100) -> List[Dict]:
     rows = throughput(worker_counts, jobs, sleep_ms)
     rows.append(heartbeat_overhead(renewals))
     return rows
@@ -96,8 +109,8 @@ def main(argv=None):
     ap.add_argument("--smoke", "--quick", action="store_true",
                     dest="smoke", help="fewer jobs/renewals (CI)")
     args = ap.parse_args(argv)
-    rows = (run(jobs=12, sleep_ms=20.0, renewals=40) if args.smoke
-            else run())
+    rows = (run(worker_counts=(1, 2, 4), jobs=12, sleep_ms=20.0,
+                renewals=40) if args.smoke else run())
     print(",".join(KEYS))
     for r in rows:
         print(",".join(str(r.get(k, "")) for k in KEYS))

@@ -380,6 +380,58 @@ class IDDSClient:
         return self._post(f"{API_PREFIX}/jobs/lease", body,
                           idempotent=True)["job"]
 
+    def lease_jobs(self, worker_id: str, n: int, *,
+                   queues: Optional[List[str]] = None,
+                   ttl: Optional[float] = None) -> List[Dict[str, Any]]:
+        """Lease up to ``n`` jobs in one round trip and one scheduler
+        lock grab (POST /jobs/lease?n=); returns a possibly-empty list.
+        Retry-safe: the idempotency key replays the original grant."""
+        body: Dict[str, Any] = {
+            "worker_id": worker_id,
+            "idempotency_key": uuid.uuid4().hex,
+        }
+        if queues:
+            body["queues"] = list(queues)
+        if ttl is not None:
+            body["lease_ttl"] = ttl
+        return self._post(f"{API_PREFIX}/jobs/lease?n={int(n)}", body,
+                          idempotent=True)["jobs"]
+
+    def heartbeat_jobs(self, job_ids: List[str],
+                       worker_id: str) -> Dict[str, Any]:
+        """Renew many held leases in one round trip (POST
+        /jobs/heartbeat).  Always 200; per-item envelopes in
+        ``results`` carry status 200 or 409 — a stale lease shows up as
+        its item's 409, never as an exception."""
+        return self._post(
+            f"{API_PREFIX}/jobs/heartbeat",
+            {"worker_id": worker_id, "job_ids": list(job_ids)},
+            idempotent=True)
+
+    def complete_jobs(self, items: List[Dict[str, Any]],
+                      worker_id: str) -> Dict[str, Any]:
+        """Report many outcomes in one round trip (POST /jobs/complete).
+        Each item is ``{"job_id", "result"?, "error"?}``; per-item
+        envelopes as in :meth:`heartbeat_jobs`.  Retry-safe: the server
+        deduplicates per (job, worker)."""
+        return self._post(
+            f"{API_PREFIX}/jobs/complete",
+            {"worker_id": worker_id, "items": list(items)},
+            idempotent=True)
+
+    def transition_contents(self, name: str,
+                            transitions: List[Dict[str, Any]]
+                            ) -> Dict[str, Any]:
+        """Bulk content state changes (POST
+        /collections/<name>/contents:transition).  Each transition is
+        ``{"name", "status"}`` (+ optional ``size``); the response
+        carries per-item ``applied`` flags.  Retry-safe: the rank guard
+        makes replays no-ops."""
+        return self._post(
+            f"{API_PREFIX}/collections/"
+            f"{urllib.parse.quote(name, safe='')}/contents:transition",
+            {"transitions": list(transitions)}, idempotent=True)
+
     def heartbeat_job(self, job_id: str, worker_id: str) -> Dict[str, Any]:
         """Renew a held lease; raises ConflictError once it is lost."""
         return self._post(

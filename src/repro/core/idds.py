@@ -28,7 +28,7 @@ from repro.core.ddm import DDM, InMemoryDDM
 from repro.core.delivery import DELIVERY_STATUSES, Subscription, content_key
 from repro.core.requests import Request
 from repro.core.store import (InMemoryStore, Store,
-                              VALID_REQUEST_STATUSES)
+                              VALID_REQUEST_STATUSES, _content_rank)
 from repro.core.workflow import (CONTENT_STATUSES, FileRef, Processing,
                                  ProcessingStatus, Work, Workflow)
 
@@ -392,6 +392,70 @@ class IDDS:
                     name).status_counts().items():
                 out[s] = out.get(s, 0) + n
         return out
+
+    def transition_contents(self, name: str,
+                            transitions: List[Dict[str, Any]]
+                            ) -> Dict[str, Any]:
+        """Bulk content state changes for one collection (POST
+        /v1/collections/<name>/contents:transition — the Stager/
+        Conductor hot path).  Each transition is ``{"name", "status"}``
+        (plus optional ``size`` for rows registered on the fly).  The
+        whole batch is validated up front (ValueError on any bad item);
+        per item, the content rank guard decides ``applied``: a
+        transition that would REGRESS the live row is skipped and
+        reported, not errored.  Every applied row is journaled in ONE
+        bulk store commit, and newly available files are announced on
+        the bus so the Transformer's fine-grained dispatch sees them."""
+        if not isinstance(transitions, list) or not transitions:
+            raise ValueError("transitions (non-empty list) is required")
+        for i, t in enumerate(transitions):
+            if not isinstance(t, dict):
+                raise ValueError(f"transitions[{i}] must be an object")
+            if not t.get("name") or not isinstance(t["name"], str):
+                raise ValueError(
+                    f"transitions[{i}].name (string) is required")
+            if t.get("status") not in CONTENT_STATUSES:
+                raise ValueError(
+                    f"transitions[{i}].status must be one of "
+                    f"{', '.join(CONTENT_STATUSES)}")
+        coll = self.ctx.ddm.get_collection(name)  # KeyError -> 404
+        results: List[Dict[str, Any]] = []
+        changed: List[Dict[str, Any]] = []
+        became_available = False
+        with self.ctx.lock:
+            index = {f.name: f for f in coll.files}
+            for t in transitions:
+                fname, new_status = t["name"], t["status"]
+                f = index.get(fname)
+                if f is None:
+                    # register-on-the-fly, honoring the requested status
+                    f = FileRef(fname, size=int(t.get("size", 0) or 0),
+                                status=new_status)
+                    coll.files.append(f)
+                    index[fname] = f
+                if _content_rank(new_status) >= _content_rank(f.status):
+                    f.set_status(new_status)
+                    if new_status in ("available", "delivered"):
+                        if not f.available and new_status == "available":
+                            became_available = True
+                        f.available = True
+                    if new_status == "delivered":
+                        f.processed = True
+                    changed.append(f.to_dict())
+                    results.append({"name": fname, "applied": True,
+                                    "status": f.status})
+                else:
+                    results.append({"name": fname, "applied": False,
+                                    "status": f.status})
+        if changed:
+            self.ctx.store.save_contents(name, changed)  # one bulk commit
+            self.ctx.bump("contents_transitioned", len(changed))
+            if became_available:
+                self.ctx.bus.publish(M.T_COLLECTION_UPDATED,
+                                     {"collection": name})
+        return {"collection": name, "results": results,
+                "applied": len(changed),
+                "skipped": len(results) - len(changed)}
 
     # ------------------------------------------------------ delivery plane
     def subscribe(self, consumer: str,

@@ -33,7 +33,16 @@ details + deprecation table in docs/rest_api.md):
   GET  /v1/subscriptions/<id>/deliveries   tracked deliveries (status
                                            filter)
   POST /v1/subscriptions/<id>/ack          acknowledge deliveries
-  POST /v1/jobs/lease                      worker: lease the next job
+  POST /v1/collections/<name>/contents:transition
+                                           bulk content state changes
+                                           (per-item applied flags)
+  POST /v1/jobs/lease                      worker: lease the next job;
+                                           ?n= leases up to n jobs in
+                                           one scheduler lock grab
+  POST /v1/jobs/heartbeat                  worker: renew many leases
+                                           (per-item envelopes)
+  POST /v1/jobs/complete                   worker: report many outcomes
+                                           (per-item envelopes)
   POST /v1/jobs/<id>/heartbeat             worker: renew a held lease
   POST /v1/jobs/<id>/complete              worker: report result/error
   GET  /v1/workers                         worker registry
@@ -82,9 +91,12 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 from repro.core.commands import CommandConflict
 from repro.core.idds import IDDS, AuthError
 from repro.core.scheduler import DistributedWFM, SchedulerConflict
-from repro.core.store import SqliteStore
+from repro.core.store import BufferedStore, SqliteStore
 
 MAX_BODY_BYTES = 16 * 1024 * 1024  # refuse absurd submissions
+MAX_LEASE_BATCH = 64     # ?n= upper bound on POST /jobs/lease
+MAX_BATCH_ITEMS = 256    # job_ids/items upper bound on batch verbs
+MAX_TRANSITION_ITEMS = 4096  # transitions upper bound (stager sweeps)
 
 
 class RestGateway:
@@ -306,6 +318,31 @@ class RestGateway:
         except KeyError:
             return 404, _err("NotFound", f"unknown collection {name!r}")
 
+    def handle_contents_transition(self, name: str, body: bytes,
+                                   token: str) -> Tuple[int, Dict]:
+        """Bulk content state changes (Stager/Conductor sweeps): one
+        journal commit for the whole batch, per-item ``applied`` flags
+        (a rank-guard rejection is not an error — the row just already
+        moved further along)."""
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        transitions = d.get("transitions")
+        if not isinstance(transitions, list) or not transitions:
+            return 400, _err("BadRequest",
+                             "transitions (non-empty list) is required")
+        if len(transitions) > MAX_TRANSITION_ITEMS:
+            return 400, _err(
+                "BadRequest",
+                f"at most {MAX_TRANSITION_ITEMS} transitions per batch")
+        try:
+            return 200, self.idds.transition_contents(name, transitions)
+        except ValueError as e:
+            return 400, _err("BadRequest", str(e))
+        except KeyError:
+            return 404, _err("NotFound", f"unknown collection {name!r}")
+
     # -- delivery plane (consumer subscriptions) --------------------------
     def handle_subscribe(self, body: bytes, token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
@@ -387,7 +424,8 @@ class RestGateway:
                 "DistributedWFM executor (--distributed) to serve workers")
         return sched
 
-    def handle_lease(self, body: bytes, token: str) -> Tuple[int, Dict]:
+    def handle_lease(self, body: bytes, query: Dict[str, List[str]],
+                     token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
         d, err = _parse_json_object(body)
         if err is not None:
@@ -400,15 +438,89 @@ class RestGateway:
                 not isinstance(queues, list)
                 or not all(isinstance(q, str) for q in queues)):
             return 400, _err("BadRequest", "queues must be a string list")
+        # ?n= (or body "n") switches to the multi-lease form: up to n
+        # jobs in one scheduler lock grab, {"jobs": [...], "count": k}
+        n_raw = (query or {}).get("n", [d.get("n")])[0]
+        n = None
+        if n_raw is not None:
+            try:
+                n = int(n_raw)
+            except (TypeError, ValueError):
+                return 400, _err("BadRequest", "n must be an integer")
+            if isinstance(n_raw, bool) or not 1 <= n <= MAX_LEASE_BATCH:
+                return 400, _err(
+                    "BadRequest",
+                    f"n must be between 1 and {MAX_LEASE_BATCH}")
         try:
             ttl = (None if d.get("lease_ttl") is None
                    else float(d["lease_ttl"]))
-            job = self._scheduler().lease(
-                worker_id, queues=queues, ttl=ttl,
+            sched = self._scheduler()
+            if n is None:
+                job = sched.lease(
+                    worker_id, queues=queues, ttl=ttl,
+                    idempotency_key=d.get("idempotency_key"))
+                return 200, {"job": job}
+            jobs = sched.lease_many(
+                worker_id, n=n, queues=queues, ttl=ttl,
                 idempotency_key=d.get("idempotency_key"))
         except (TypeError, ValueError) as e:
             return 400, _err("BadRequest", f"malformed lease request: {e}")
-        return 200, {"job": job}
+        return 200, {"jobs": jobs, "count": len(jobs)}
+
+    def handle_jobs_heartbeat(self, body: bytes,
+                              token: str) -> Tuple[int, Dict]:
+        """Batch lease renewal: one 200 response with per-item status
+        envelopes, so one stale lease cannot poison the batch."""
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        worker_id = d.get("worker_id")
+        if not worker_id or not isinstance(worker_id, str):
+            return 400, _err("BadRequest", "worker_id (string) is required")
+        job_ids = d.get("job_ids")
+        if (not isinstance(job_ids, list) or not job_ids
+                or not all(isinstance(j, str) and j for j in job_ids)):
+            return 400, _err("BadRequest",
+                             "job_ids (non-empty string list) is required")
+        if len(job_ids) > MAX_BATCH_ITEMS:
+            return 400, _err("BadRequest",
+                             f"at most {MAX_BATCH_ITEMS} job_ids per batch")
+        results = self._scheduler().heartbeat_many(worker_id, job_ids)
+        return 200, _batch_envelope(results)
+
+    def handle_jobs_complete(self, body: bytes,
+                             token: str) -> Tuple[int, Dict]:
+        """Batch outcome reporting with per-item status envelopes."""
+        self.idds._auth(token)
+        d, err = _parse_json_object(body)
+        if err is not None:
+            return err
+        worker_id = d.get("worker_id")
+        if not worker_id or not isinstance(worker_id, str):
+            return 400, _err("BadRequest", "worker_id (string) is required")
+        items = d.get("items")
+        if not isinstance(items, list) or not items:
+            return 400, _err("BadRequest",
+                             "items (non-empty list) is required")
+        if len(items) > MAX_BATCH_ITEMS:
+            return 400, _err("BadRequest",
+                             f"at most {MAX_BATCH_ITEMS} items per batch")
+        triples = []
+        for it in items:
+            if not isinstance(it, dict) or not isinstance(
+                    it.get("job_id"), str) or not it.get("job_id"):
+                return 400, _err("BadRequest",
+                                 "each item needs a job_id (string)")
+            result = it.get("result")
+            if result is not None and not isinstance(result, dict):
+                return 400, _err("BadRequest", "result must be an object")
+            error = it.get("error")
+            if error is not None and not isinstance(error, str):
+                return 400, _err("BadRequest", "error must be a string")
+            triples.append((it["job_id"], result, error))
+        results = self._scheduler().complete_many(worker_id, triples)
+        return 200, _batch_envelope(results)
 
     def handle_job_heartbeat(self, job_id: str, body: bytes,
                              token: str) -> Tuple[int, Dict]:
@@ -487,6 +599,26 @@ def _err(type_: str, message: str) -> Dict[str, Dict[str, str]]:
     return {"error": {"type": type_, "message": message}}
 
 
+def _batch_envelope(results: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Wrap scheduler per-item results in the wire format: each item
+    carries its own ``status`` (200 or 409) and, on failure, the same
+    ``{"error": {"type", "message"}}`` shape as a top-level error."""
+    items = []
+    ok = 0
+    for r in results:
+        if r.get("ok"):
+            ok += 1
+            item = dict(r)
+            item["status"] = 200
+            items.append(item)
+        else:
+            items.append({"job_id": r["job_id"], "ok": False,
+                          "status": 409,
+                          "error": {"type": "Conflict",
+                                    "message": r["error"]}})
+    return {"results": items, "ok": ok, "failed": len(items) - ok}
+
+
 class _NotDistributed(Exception):
     """A /jobs call reached a head running the inline executor."""
 
@@ -521,6 +653,10 @@ _ROUTE_SPECS = [
     ("POST", r"requests/?", "handle_submit", True),
     ("GET", r"requests/?", "handle_list", True),
     ("POST", r"jobs/lease/?", "handle_lease", True),
+    # batch verbs first: "heartbeat"/"complete" must not be captured as
+    # a job_id by the per-job routes below
+    ("POST", r"jobs/heartbeat/?", "handle_jobs_heartbeat", False),
+    ("POST", r"jobs/complete/?", "handle_jobs_complete", False),
     ("POST", r"jobs/(?P<job_id>[^/]+)/heartbeat/?",
      "handle_job_heartbeat", True),
     ("POST", r"jobs/(?P<job_id>[^/]+)/complete/?",
@@ -548,6 +684,8 @@ _ROUTE_SPECS = [
      "handle_subscription", False),
     ("GET", r"subscriptions/?", "handle_subscriptions", False),
     ("GET", r"collections/?", "handle_collections", False),
+    ("POST", r"collections/(?P<name>.+)/contents:transition/?",
+     "handle_contents_transition", False),
     ("GET", r"collections/(?P<name>.+)/contents/?",
      "handle_contents", True),
     ("GET", r"collections/(?P<name>.+?)/?", "handle_collection", True),
@@ -664,11 +802,14 @@ def _make_handler(gw: RestGateway):
         # handlers that consume the request body (all POST routes)
         _BODY_HANDLERS = frozenset({
             "handle_submit", "handle_lease", "handle_job_heartbeat",
-            "handle_job_complete", "handle_command_submit",
-            "handle_subscribe", "handle_ack"})
-        # handlers that read the query string (filters / pagination)
+            "handle_job_complete", "handle_jobs_heartbeat",
+            "handle_jobs_complete", "handle_contents_transition",
+            "handle_command_submit", "handle_subscribe", "handle_ack"})
+        # handlers that read the query string (filters / pagination /
+        # the ?n= multi-lease switch); may overlap with _BODY_HANDLERS
         _QUERY_HANDLERS = frozenset({
-            "handle_list", "handle_contents", "handle_deliveries"})
+            "handle_list", "handle_contents", "handle_deliveries",
+            "handle_lease"})
 
         def _invoke(self, fn_name: str, match) -> Tuple[int, Any]:
             token = self._token()
@@ -676,6 +817,9 @@ def _make_handler(gw: RestGateway):
                 return gw.handle_healthz()
             kwargs = {k: urllib.parse.unquote(v)
                       for k, v in match.groupdict().items()}
+            if fn_name in self._QUERY_HANDLERS:
+                kwargs["query"] = urllib.parse.parse_qs(
+                    urllib.parse.urlsplit(self.path).query)
             if fn_name in self._BODY_HANDLERS:
                 length = int(self.headers.get("Content-Length", 0))
                 if length > MAX_BODY_BYTES:
@@ -689,11 +833,6 @@ def _make_handler(gw: RestGateway):
                                             **kwargs)
             if fn_name == "handle_stats":
                 return gw.handle_stats(token)
-            if fn_name in self._QUERY_HANDLERS:
-                query = urllib.parse.parse_qs(
-                    urllib.parse.urlsplit(self.path).query)
-                return getattr(gw, fn_name)(query=query, token=token,
-                                            **kwargs)
             return getattr(gw, fn_name)(**kwargs, token=token)
 
         # -- verbs -------------------------------------------------------
@@ -747,6 +886,16 @@ def main(argv=None) -> int:
                     help="SQLite file for durable state; requests in "
                          "flight at a crash are recovered on restart "
                          "(omit = in-memory, nothing survives)")
+    ap.add_argument("--store-flush-ms", type=float, default=None,
+                    metavar="MS",
+                    help="coalesce content/lease journal writes into "
+                         "batched commits flushed every MS milliseconds "
+                         "(bulk hot path; at most MS ms of those rows "
+                         "can be lost in a crash — see "
+                         "docs/architecture.md)")
+    ap.add_argument("--store-max-batch", type=int, default=256,
+                    help="flush the write-coalescing buffer early once "
+                         "it holds this many ops (--store-flush-ms)")
     ap.add_argument("--carousel", action="store_true",
                     help="mount a CarouselDDM (synthetic ColdStore + "
                          "DiskCache) as the DDM backend and start "
@@ -772,6 +921,9 @@ def main(argv=None) -> int:
     tokens = (set(t for t in args.tokens.split(",") if t)
               if args.tokens else None)
     store = SqliteStore(args.store) if args.store else None
+    if store is not None and args.store_flush_ms is not None:
+        store = BufferedStore(store, flush_interval_ms=args.store_flush_ms,
+                              max_batch=args.store_max_batch)
     executor = (DistributedWFM(lease_ttl=args.lease_ttl)
                 if args.distributed else None)
     ddm = None

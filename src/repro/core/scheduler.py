@@ -102,7 +102,8 @@ class JobScheduler:
         self._deadlines: List[Tuple[float, str, str]] = []  # (dl, lease, job)
         self._queue_active: Dict[str, int] = {}
         self._workers: Dict[str, Dict[str, Any]] = {}
-        self._lease_keys: Dict[str, str] = {}       # idempotency key -> job
+        # idempotency key -> job_ids leased under it (n>1 for multi-lease)
+        self._lease_keys: Dict[str, List[str]] = {}
         self._done_ring: deque = deque()
         self._retain_done = retain_done
         self._next_worker_prune = self._clock() + worker_ttl
@@ -123,10 +124,9 @@ class JobScheduler:
         if self._on_stat is not None:
             self._on_stat(key, n)
 
-    def _journal_lease(self, job: _Job) -> None:
-        if self._store is None or job.lease is None:
-            return
-        self._store.save_lease({
+    @staticmethod
+    def _lease_journal_row(job: _Job) -> Dict[str, Any]:
+        return {
             "job_id": job.proc.proc_id,
             "lease_id": job.lease.lease_id,
             "worker_id": job.lease.worker_id,
@@ -137,7 +137,21 @@ class JobScheduler:
             # values, and recovery treats every journaled lease as
             # orphaned anyway — this is operator-facing metadata
             "expires_at": time.time() + job.lease.ttl,
-        })
+        }
+
+    def _journal_lease(self, job: _Job) -> None:
+        if self._store is None or job.lease is None:
+            return
+        self._store.save_lease(self._lease_journal_row(job))
+
+    def _journal_leases(self, jobs: List[_Job]) -> None:
+        """One journal commit for a whole batch of grants/renewals."""
+        if self._store is None:
+            return
+        rows = [self._lease_journal_row(j) for j in jobs
+                if j.lease is not None]
+        if rows:
+            self._store.save_leases_bulk(rows)
 
     def _drop_lease_row(self, job_id: str) -> None:
         if self._store is not None:
@@ -188,8 +202,24 @@ class JobScheduler:
         client retry safe: a repeated key while the resulting lease is
         still held returns the same job instead of leasing a second
         one."""
+        jobs = self.lease_many(worker_id, n=1, queues=queues, ttl=ttl,
+                               idempotency_key=idempotency_key)
+        return jobs[0] if jobs else None
+
+    def lease_many(self, worker_id: str, *, n: int = 1,
+                   queues: Optional[List[str]] = None,
+                   ttl: Optional[float] = None,
+                   idempotency_key: Optional[str] = None) -> List[Dict]:
+        """Lease up to ``n`` jobs in ONE lock acquisition and ONE journal
+        commit (`POST /jobs/lease?n=`).  Returns [] when nothing is
+        dispatchable; fewer than ``n`` when the queues run dry.  A
+        repeated ``idempotency_key`` replays the payloads of the jobs
+        from the original grant that this worker still holds."""
         if not worker_id:
             raise ValueError("worker_id is required")
+        n = int(n)
+        if n < 1:
+            raise ValueError("n must be >= 1")
         ttl = self.default_ttl if ttl is None else min(float(ttl),
                                                        self.max_ttl)
         if ttl <= 0:
@@ -199,32 +229,43 @@ class JobScheduler:
             self._expire_locked(now)
             self._touch_worker(worker_id)
             if self._draining:
-                return None
+                return []
             if idempotency_key:
-                jid = self._lease_keys.get(idempotency_key)
-                if jid is not None:
-                    job = self._jobs.get(jid)
-                    if (job is not None and job.state == _LEASED
-                            and job.lease.worker_id == worker_id):
-                        return self._job_payload(job)  # replayed response
-            job = self._pop_best(queues)
-            if job is None:
-                return None
-            job.state = _LEASED
-            job.lease = _Lease(worker_id, now + ttl, ttl)
-            job.proc.status = ProcessingStatus.RUNNING
-            self._queue_active[job.queue] = (
-                self._queue_active.get(job.queue, 0) + 1)
-            heapq.heappush(self._deadlines,
-                           (job.lease.deadline, job.lease.lease_id,
-                            job.proc.proc_id))
+                jids = self._lease_keys.get(idempotency_key)
+                if jids is not None:
+                    replay = []
+                    for jid in jids:
+                        job = self._jobs.get(jid)
+                        if (job is not None and job.state == _LEASED
+                                and job.lease.worker_id == worker_id):
+                            replay.append(self._job_payload(job))
+                    if replay:
+                        return replay  # replayed (possibly partial) grant
+            leased: List[_Job] = []
+            while len(leased) < n:
+                job = self._pop_best(queues)
+                if job is None:
+                    break
+                job.state = _LEASED
+                job.lease = _Lease(worker_id, now + ttl, ttl)
+                job.proc.status = ProcessingStatus.RUNNING
+                self._queue_active[job.queue] = (
+                    self._queue_active.get(job.queue, 0) + 1)
+                heapq.heappush(self._deadlines,
+                               (job.lease.deadline, job.lease.lease_id,
+                                job.proc.proc_id))
+                self._workers[worker_id]["active_leases"] += 1
+                leased.append(job)
+            if not leased:
+                return []
             if idempotency_key:
-                self._lease_keys[idempotency_key] = job.proc.proc_id
-                job.lease_key = idempotency_key
-            self._workers[worker_id]["active_leases"] += 1
-            self._journal_lease(job)
-            self._bump("jobs_leased")
-            return self._job_payload(job)
+                self._lease_keys[idempotency_key] = [
+                    j.proc.proc_id for j in leased]
+                for job in leased:
+                    job.lease_key = idempotency_key
+            self._journal_leases(leased)
+            self._bump("jobs_leased", len(leased))
+            return [self._job_payload(j) for j in leased]
 
     def _pop_best(self, queues: Optional[List[str]]) -> Optional[_Job]:
         allowed = list(queues) if queues else list(self._heaps)
@@ -281,18 +322,42 @@ class JobScheduler:
     def heartbeat(self, job_id: str, worker_id: str) -> Dict[str, Any]:
         """Renew the lease on ``job_id``; raises SchedulerConflict if the
         worker no longer holds it (expired → requeued, or reassigned)."""
+        out = self.heartbeat_many(worker_id, [job_id])[0]
+        if not out["ok"]:
+            raise SchedulerConflict(out["error"])
+        return {"ok": True, "lease_id": out["lease_id"],
+                "deadline_in": out["deadline_in"]}
+
+    def heartbeat_many(self, worker_id: str,
+                       job_ids: List[str]) -> List[Dict[str, Any]]:
+        """Renew many leases in ONE lock acquisition and ONE journal
+        commit.  Per-item results — ``{"job_id", "ok": True, "lease_id",
+        "deadline_in"}`` or ``{"job_id", "ok": False, "error"}`` — so one
+        stale lease cannot poison the rest of the batch."""
         now = self._clock()
+        results: List[Dict[str, Any]] = []
         with self._lock:
             self._expire_locked(now)
             self._touch_worker(worker_id)
-            job = self._require_holder(job_id, worker_id, "heartbeat")
-            job.lease.deadline = now + job.lease.ttl
-            heapq.heappush(self._deadlines,
-                           (job.lease.deadline, job.lease.lease_id,
-                            job_id))
-            self._journal_lease(job)
-            return {"ok": True, "lease_id": job.lease.lease_id,
-                    "deadline_in": job.lease.ttl}
+            renewed: List[_Job] = []
+            for job_id in job_ids:
+                try:
+                    job = self._require_holder(job_id, worker_id,
+                                               "heartbeat")
+                except SchedulerConflict as e:
+                    results.append({"job_id": job_id, "ok": False,
+                                    "error": str(e)})
+                    continue
+                job.lease.deadline = now + job.lease.ttl
+                heapq.heappush(self._deadlines,
+                               (job.lease.deadline, job.lease.lease_id,
+                                job_id))
+                renewed.append(job)
+                results.append({"job_id": job_id, "ok": True,
+                                "lease_id": job.lease.lease_id,
+                                "deadline_in": job.lease.ttl})
+            self._journal_leases(renewed)
+        return results
 
     # ----------------------------------------------------------- complete
     def complete(self, job_id: str, worker_id: str, *,
@@ -302,26 +367,51 @@ class JobScheduler:
         holds (or already completed) the job; any other reporter — e.g.
         a stale worker whose lease expired and whose job was requeued —
         gets a SchedulerConflict and causes no state change."""
+        out = self.complete_many(worker_id, [(job_id, result, error)])[0]
+        if not out["ok"]:
+            raise SchedulerConflict(out["error"])
+        return {"ok": True, "duplicate": out["duplicate"]}
+
+    def complete_many(
+            self, worker_id: str,
+            items: List[Tuple[str, Optional[Dict[str, Any]],
+                              Optional[str]]]) -> List[Dict[str, Any]]:
+        """Record many outcomes — ``(job_id, result, error)`` triples —
+        in ONE lock acquisition.  Per-item results mirror ``complete``:
+        ``{"job_id", "ok": True, "duplicate"}`` on success, ``{"job_id",
+        "ok": False, "error"}`` for per-item conflicts."""
         now = self._clock()
+        results: List[Dict[str, Any]] = []
         with self._lock:
             self._expire_locked(now)
             self._touch_worker(worker_id)
-            job = self._jobs.get(job_id)
-            if (job is not None and job.state == _DONE
-                    and job.completed_by == worker_id):
-                return {"ok": True, "duplicate": True}  # idempotent retry
-            job = self._require_holder(job_id, worker_id, "completion")
-            status = "failed" if error else "finished"
-            job.outcome = (status, result, error, job.attempt)
-            job.completed_by = worker_id
-            self._release_lease(job)  # decrements the holder's lease count
-            job.state = _DONE
-            self._retire(job)
-            w = self._workers[worker_id]
-            w["jobs_failed" if error else "jobs_completed"] += 1
-            self._bump("jobs_failed_by_worker" if error
-                       else "jobs_completed_by_worker")
-            return {"ok": True, "duplicate": False}
+            for job_id, result, error in items:
+                job = self._jobs.get(job_id)
+                if (job is not None and job.state == _DONE
+                        and job.completed_by == worker_id):
+                    results.append({"job_id": job_id, "ok": True,
+                                    "duplicate": True})  # idempotent retry
+                    continue
+                try:
+                    job = self._require_holder(job_id, worker_id,
+                                               "completion")
+                except SchedulerConflict as e:
+                    results.append({"job_id": job_id, "ok": False,
+                                    "error": str(e)})
+                    continue
+                status = "failed" if error else "finished"
+                job.outcome = (status, result, error, job.attempt)
+                job.completed_by = worker_id
+                self._release_lease(job)  # drops the holder's lease count
+                job.state = _DONE
+                self._retire(job)
+                w = self._workers[worker_id]
+                w["jobs_failed" if error else "jobs_completed"] += 1
+                self._bump("jobs_failed_by_worker" if error
+                           else "jobs_completed_by_worker")
+                results.append({"job_id": job_id, "ok": True,
+                                "duplicate": False})
+        return results
 
     def _require_holder(self, job_id: str, worker_id: str,
                         verb: str) -> _Job:
@@ -349,9 +439,17 @@ class JobScheduler:
             0, self._queue_active.get(job.queue, 0) - 1)
         job.lease = None
         # the idempotency key only replays while the lease is held, so
-        # release is also the key's end of life (bounds the key map)
+        # release ends the key's life for this job (the key itself dies
+        # with its last outstanding job, bounding the key map)
         if job.lease_key is not None:
-            self._lease_keys.pop(job.lease_key, None)
+            jids = self._lease_keys.get(job.lease_key)
+            if jids is not None:
+                try:
+                    jids.remove(job.proc.proc_id)
+                except ValueError:
+                    pass
+                if not jids:
+                    self._lease_keys.pop(job.lease_key, None)
             job.lease_key = None
         self._drop_lease_row(job.proc.proc_id)
 

@@ -115,6 +115,13 @@ class Store:
         audited and the lease requeued by ``recover()``)."""
         raise NotImplementedError
 
+    def save_leases_bulk(self, leases: List[Dict[str, Any]]) -> None:
+        """Upsert many lease rows in one journal commit (the scheduler's
+        multi-lease and batch-heartbeat paths).  The default loops over
+        :meth:`save_lease`; backends override with a single transaction."""
+        for lease in leases:
+            self.save_lease(lease)
+
     def delete_lease(self, job_id: str) -> None:
         raise NotImplementedError
 
@@ -144,6 +151,16 @@ class Store:
         time)."""
         raise NotImplementedError
 
+    def save_contents_bulk(
+            self, batches: List[Tuple[str, List[Dict[str, Any]]]]) -> None:
+        """Upsert content rows for many collections in one journal
+        commit.  Each batch is ``(collection, files)``; the per-row rank
+        guard of :meth:`save_contents` applies unchanged.  The default
+        loops; backends override with a single transaction."""
+        for collection, files in batches:
+            if files:
+                self.save_contents(collection, files)
+
     def load_collections(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
 
@@ -156,6 +173,45 @@ class Store:
 
     def load_subscriptions(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
+
+    # -- generic batched journaling ----------------------------------------
+    # ``save_many`` applies an ordered list of journal operations; SQLite
+    # coalesces the whole list into ONE transaction (one fsync-eligible
+    # commit instead of len(ops)).  Op shapes:
+    #   ("request", info)            ("workflow", wf)
+    #   ("works", (workflow_id, works))   ("processing", proc)
+    #   ("lease", lease)             ("delete_lease", job_id)
+    #   ("command", cmd)             ("collection", coll)
+    #   ("contents", (collection, files)) ("subscription", sub)
+    def _apply_op(self, kind: str, payload: Any) -> None:
+        if kind == "contents":
+            self.save_contents(payload[0], payload[1])
+        elif kind == "lease":
+            self.save_lease(payload)
+        elif kind == "delete_lease":
+            self.delete_lease(payload)
+        elif kind == "processing":
+            self.save_processing(payload)
+        elif kind == "collection":
+            self.save_collection(payload)
+        elif kind == "subscription":
+            self.save_subscription(payload)
+        elif kind == "request":
+            self.save_request(payload)
+        elif kind == "workflow":
+            self.save_workflow(payload)
+        elif kind == "works":
+            self.save_works(payload[0], payload[1])
+        elif kind == "command":
+            self.save_command(payload)
+        else:
+            raise ValueError(f"unknown store op kind {kind!r}")
+
+    def save_many(self, ops: List[Tuple[str, Any]]) -> None:
+        """Apply journal ops in order, coalesced into one commit where
+        the backend supports it.  The default applies them one by one."""
+        for kind, payload in ops:
+            self._apply_op(kind, payload)
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
@@ -237,6 +293,11 @@ class InMemoryStore(Store):
         with self._lock:
             self._leases[lease["job_id"]] = dict(lease)
 
+    def save_leases_bulk(self, leases: List[Dict[str, Any]]) -> None:
+        with self._lock:  # one acquisition for the whole batch
+            for lease in leases:
+                self._leases[lease["job_id"]] = dict(lease)
+
     def delete_lease(self, job_id: str) -> None:
         with self._lock:
             self._leases.pop(job_id, None)
@@ -282,6 +343,18 @@ class InMemoryStore(Store):
                 collection, {"name": collection, "scope": "idds",
                              "files": []})
             self._merge_contents(coll, files)
+
+    def save_contents_bulk(
+            self, batches: List[Tuple[str, List[Dict[str, Any]]]]) -> None:
+        with self._lock:  # one acquisition for the whole batch
+            for collection, files in batches:
+                if files:
+                    self.save_contents(collection, files)
+
+    def save_many(self, ops: List[Tuple[str, Any]]) -> None:
+        with self._lock:  # RLock: nested save_* reacquisitions are free
+            for kind, payload in ops:
+                self._apply_op(kind, payload)
 
     def load_collections(self) -> List[Dict[str, Any]]:
         with self._lock:
@@ -432,16 +505,21 @@ class SqliteStore(Store):
         return conn
 
     # -- requests ---------------------------------------------------------
+    _REQUEST_UPSERT = (
+        "INSERT INTO requests (request_id, workflow_id, requester,"
+        " status, submitted_at, data, seq) VALUES (?, ?, ?, ?, ?, ?,"
+        " (SELECT COALESCE(MAX(seq), 0) + 1 FROM requests))"
+        " ON CONFLICT(request_id) DO UPDATE SET"
+        " status=excluded.status, data=excluded.data")
+
+    @staticmethod
+    def _request_row(info: Dict[str, Any]) -> Tuple:
+        return (info["request_id"], info.get("workflow_id"),
+                info.get("requester"), info.get("status"),
+                info.get("submitted_at"), json.dumps(info))
+
     def save_request(self, info: Dict[str, Any]) -> None:
-        self._conn().execute(
-            "INSERT INTO requests (request_id, workflow_id, requester,"
-            " status, submitted_at, data, seq) VALUES (?, ?, ?, ?, ?, ?,"
-            " (SELECT COALESCE(MAX(seq), 0) + 1 FROM requests))"
-            " ON CONFLICT(request_id) DO UPDATE SET"
-            " status=excluded.status, data=excluded.data",
-            (info["request_id"], info.get("workflow_id"),
-             info.get("requester"), info.get("status"),
-             info.get("submitted_at"), json.dumps(info)))
+        self._conn().execute(self._REQUEST_UPSERT, self._request_row(info))
 
     def get_request(self, request_id: str) -> Optional[Dict[str, Any]]:
         row = self._conn().execute(
@@ -474,11 +552,14 @@ class SqliteStore(Store):
         return int(row[0])
 
     # -- workflows ---------------------------------------------------------
+    _WORKFLOW_UPSERT = (
+        "INSERT INTO workflows (workflow_id, name, data)"
+        " VALUES (?, ?, ?) ON CONFLICT(workflow_id) DO UPDATE SET"
+        " data=excluded.data")
+
     def save_workflow(self, wf: Dict[str, Any]) -> None:
         self._conn().execute(
-            "INSERT INTO workflows (workflow_id, name, data)"
-            " VALUES (?, ?, ?) ON CONFLICT(workflow_id) DO UPDATE SET"
-            " data=excluded.data",
+            self._WORKFLOW_UPSERT,
             (wf["workflow_id"], wf.get("name"), json.dumps(wf)))
 
     def load_workflows(self) -> List[Dict[str, Any]]:
@@ -487,23 +568,16 @@ class SqliteStore(Store):
         return [json.loads(r[0]) for r in rows]
 
     # -- works -------------------------------------------------------------
+    _WORK_UPSERT = (
+        "INSERT INTO works (work_id, workflow_id, status, data)"
+        " VALUES (?, ?, ?, ?) ON CONFLICT(work_id) DO UPDATE SET"
+        " status=excluded.status, data=excluded.data")
+
     def save_works(self, workflow_id: str,
                    works: List[Dict[str, Any]]) -> None:
         if not works:
             return
-        conn = self._conn()
-        conn.execute("BEGIN IMMEDIATE")
-        try:
-            conn.executemany(
-                "INSERT INTO works (work_id, workflow_id, status, data)"
-                " VALUES (?, ?, ?, ?) ON CONFLICT(work_id) DO UPDATE SET"
-                " status=excluded.status, data=excluded.data",
-                [(w["work_id"], workflow_id, w.get("status"),
-                  json.dumps(w)) for w in works])
-            conn.execute("COMMIT")
-        except BaseException:
-            conn.execute("ROLLBACK")
-            raise
+        self.save_many([("works", (workflow_id, works))])
 
     def load_works(self) -> List[Tuple[str, Dict[str, Any]]]:
         rows = self._conn().execute(
@@ -511,11 +585,14 @@ class SqliteStore(Store):
         return [(r[0], json.loads(r[1])) for r in rows]
 
     # -- processings --------------------------------------------------------
+    _PROC_UPSERT = (
+        "INSERT INTO processings (proc_id, work_id, status, data)"
+        " VALUES (?, ?, ?, ?) ON CONFLICT(proc_id) DO UPDATE SET"
+        " status=excluded.status, data=excluded.data")
+
     def save_processing(self, proc: Dict[str, Any]) -> None:
         self._conn().execute(
-            "INSERT INTO processings (proc_id, work_id, status, data)"
-            " VALUES (?, ?, ?, ?) ON CONFLICT(proc_id) DO UPDATE SET"
-            " status=excluded.status, data=excluded.data",
+            self._PROC_UPSERT,
             (proc["proc_id"], proc.get("work_id"), proc.get("status"),
              json.dumps(proc)))
 
@@ -525,15 +602,26 @@ class SqliteStore(Store):
         return [json.loads(r[0]) for r in rows]
 
     # -- leases --------------------------------------------------------------
+    _LEASE_UPSERT = (
+        "INSERT INTO leases (job_id, worker_id, queue, expires_at,"
+        " data) VALUES (?, ?, ?, ?, ?)"
+        " ON CONFLICT(job_id) DO UPDATE SET"
+        " worker_id=excluded.worker_id, expires_at=excluded.expires_at,"
+        " data=excluded.data")
+
+    @staticmethod
+    def _lease_row(lease: Dict[str, Any]) -> Tuple:
+        return (lease["job_id"], lease.get("worker_id"),
+                lease.get("queue"), lease.get("expires_at"),
+                json.dumps(lease))
+
     def save_lease(self, lease: Dict[str, Any]) -> None:
-        self._conn().execute(
-            "INSERT INTO leases (job_id, worker_id, queue, expires_at,"
-            " data) VALUES (?, ?, ?, ?, ?)"
-            " ON CONFLICT(job_id) DO UPDATE SET"
-            " worker_id=excluded.worker_id, expires_at=excluded.expires_at,"
-            " data=excluded.data",
-            (lease["job_id"], lease.get("worker_id"), lease.get("queue"),
-             lease.get("expires_at"), json.dumps(lease)))
+        self._conn().execute(self._LEASE_UPSERT, self._lease_row(lease))
+
+    def save_leases_bulk(self, leases: List[Dict[str, Any]]) -> None:
+        if not leases:
+            return
+        self.save_many([("lease", le) for le in leases])
 
     def delete_lease(self, job_id: str) -> None:
         self._conn().execute("DELETE FROM leases WHERE job_id = ?",
@@ -545,12 +633,15 @@ class SqliteStore(Store):
         return [json.loads(r[0]) for r in rows]
 
     # -- commands ------------------------------------------------------------
+    _COMMAND_UPSERT = (
+        "INSERT INTO commands (command_id, request_id, action,"
+        " status, created_at, data) VALUES (?, ?, ?, ?, ?, ?)"
+        " ON CONFLICT(command_id) DO UPDATE SET"
+        " status=excluded.status, data=excluded.data")
+
     def save_command(self, cmd: Dict[str, Any]) -> None:
         self._conn().execute(
-            "INSERT INTO commands (command_id, request_id, action,"
-            " status, created_at, data) VALUES (?, ?, ?, ?, ?, ?)"
-            " ON CONFLICT(command_id) DO UPDATE SET"
-            " status=excluded.status, data=excluded.data",
+            self._COMMAND_UPSERT,
             (cmd["command_id"], cmd.get("request_id"), cmd.get("action"),
              cmd.get("status"), cmd.get("created_at"), json.dumps(cmd)))
 
@@ -582,40 +673,27 @@ class SqliteStore(Store):
                 int(bool(f.get("processed"))), f.get("status"),
                 f.get("created_at"), f.get("updated_at"))
 
+    _COLLECTION_UPSERT = (
+        "INSERT INTO collections (name, scope) VALUES (?, ?)"
+        " ON CONFLICT(name) DO UPDATE SET scope=excluded.scope")
+    _COLLECTION_ENSURE = (
+        "INSERT OR IGNORE INTO collections (name, scope)"
+        " VALUES (?, 'idds')")
+
     def save_collection(self, coll: Dict[str, Any]) -> None:
-        conn = self._conn()
-        conn.execute("BEGIN IMMEDIATE")
-        try:
-            conn.execute(
-                "INSERT INTO collections (name, scope) VALUES (?, ?)"
-                " ON CONFLICT(name) DO UPDATE SET scope=excluded.scope",
-                (coll["name"], coll.get("scope", "idds")))
-            conn.executemany(
-                self._CONTENT_UPSERT,
-                [self._content_row(coll["name"], f)
-                 for f in coll.get("files", [])])
-            conn.execute("COMMIT")
-        except BaseException:
-            conn.execute("ROLLBACK")
-            raise
+        self.save_many([("collection", coll)])
 
     def save_contents(self, collection: str,
                       files: List[Dict[str, Any]]) -> None:
         if not files:
             return
-        conn = self._conn()
-        conn.execute("BEGIN IMMEDIATE")
-        try:
-            conn.execute(
-                "INSERT OR IGNORE INTO collections (name, scope)"
-                " VALUES (?, 'idds')", (collection,))
-            conn.executemany(
-                self._CONTENT_UPSERT,
-                [self._content_row(collection, f) for f in files])
-            conn.execute("COMMIT")
-        except BaseException:
-            conn.execute("ROLLBACK")
-            raise
+        self.save_many([("contents", (collection, files))])
+
+    def save_contents_bulk(
+            self, batches: List[Tuple[str, List[Dict[str, Any]]]]) -> None:
+        ops = [("contents", (c, fs)) for c, fs in batches if fs]
+        if ops:
+            self.save_many(ops)
 
     def load_collections(self) -> List[Dict[str, Any]]:
         conn = self._conn()
@@ -638,17 +716,90 @@ class SqliteStore(Store):
         return out
 
     # -- subscriptions -------------------------------------------------------
+    _SUB_UPSERT = (
+        "INSERT INTO subscriptions (sub_id, consumer, data)"
+        " VALUES (?, ?, ?) ON CONFLICT(sub_id) DO UPDATE SET"
+        " data=excluded.data")
+
     def save_subscription(self, sub: Dict[str, Any]) -> None:
         self._conn().execute(
-            "INSERT INTO subscriptions (sub_id, consumer, data)"
-            " VALUES (?, ?, ?) ON CONFLICT(sub_id) DO UPDATE SET"
-            " data=excluded.data",
+            self._SUB_UPSERT,
             (sub["sub_id"], sub.get("consumer"), json.dumps(sub)))
 
     def load_subscriptions(self) -> List[Dict[str, Any]]:
         rows = self._conn().execute(
             "SELECT data FROM subscriptions ORDER BY rowid").fetchall()
         return [json.loads(r[0]) for r in rows]
+
+    # -- generic batched journaling ----------------------------------------
+    def _apply_op_conn(self, conn: sqlite3.Connection, kind: str,
+                       payload: Any) -> None:
+        """One op's statements, no transaction management (the caller
+        owns the enclosing BEGIN/COMMIT)."""
+        if kind == "contents":
+            collection, files = payload
+            conn.execute(self._COLLECTION_ENSURE, (collection,))
+            conn.executemany(
+                self._CONTENT_UPSERT,
+                [self._content_row(collection, f) for f in files])
+        elif kind == "lease":
+            conn.execute(self._LEASE_UPSERT, self._lease_row(payload))
+        elif kind == "delete_lease":
+            conn.execute("DELETE FROM leases WHERE job_id = ?", (payload,))
+        elif kind == "processing":
+            conn.execute(
+                self._PROC_UPSERT,
+                (payload["proc_id"], payload.get("work_id"),
+                 payload.get("status"), json.dumps(payload)))
+        elif kind == "collection":
+            conn.execute(self._COLLECTION_UPSERT,
+                         (payload["name"], payload.get("scope", "idds")))
+            conn.executemany(
+                self._CONTENT_UPSERT,
+                [self._content_row(payload["name"], f)
+                 for f in payload.get("files", [])])
+        elif kind == "subscription":
+            conn.execute(
+                self._SUB_UPSERT,
+                (payload["sub_id"], payload.get("consumer"),
+                 json.dumps(payload)))
+        elif kind == "request":
+            conn.execute(self._REQUEST_UPSERT, self._request_row(payload))
+        elif kind == "workflow":
+            conn.execute(
+                self._WORKFLOW_UPSERT,
+                (payload["workflow_id"], payload.get("name"),
+                 json.dumps(payload)))
+        elif kind == "works":
+            workflow_id, works = payload
+            conn.executemany(
+                self._WORK_UPSERT,
+                [(w["work_id"], workflow_id, w.get("status"),
+                  json.dumps(w)) for w in works])
+        elif kind == "command":
+            conn.execute(
+                self._COMMAND_UPSERT,
+                (payload["command_id"], payload.get("request_id"),
+                 payload.get("action"), payload.get("status"),
+                 payload.get("created_at"), json.dumps(payload)))
+        else:
+            raise ValueError(f"unknown store op kind {kind!r}")
+
+    def save_many(self, ops: List[Tuple[str, Any]]) -> None:
+        """All ops in ONE transaction: one write-lock grab and one
+        fsync-eligible commit, which is where the SQLite bulk speedup
+        comes from.  Atomic: a crash persists all ops or none."""
+        if not ops:
+            return
+        conn = self._conn()
+        conn.execute("BEGIN IMMEDIATE")
+        try:
+            for kind, payload in ops:
+                self._apply_op_conn(conn, kind, payload)
+            conn.execute("COMMIT")
+        except BaseException:
+            conn.execute("ROLLBACK")
+            raise
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
@@ -660,3 +811,204 @@ class SqliteStore(Store):
             except sqlite3.Error:  # pragma: no cover - best effort
                 pass
         self._local = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# Write-coalescing buffer (optional decorator on either backend)
+# ---------------------------------------------------------------------------
+
+
+class BufferedStore(Store):
+    """Coalesces the hot journal writes of an inner store into batched
+    ``save_many`` commits.
+
+    Only the ops that are safe to lose in a crash window are buffered —
+    content upserts (rank-guarded, so replaying them in any order or not
+    at all never corrupts state) and lease save/delete (``recover()``
+    drops every journaled lease as an orphan anyway).  Requests,
+    workflows, works, processings, commands and subscriptions pass
+    straight through: losing one of those rows would break the
+    exactly-once recovery invariants, so they are never delayed.
+
+    A buffered op becomes durable at the next flush, which happens when
+
+      * the buffer reaches ``max_batch`` ops (flushed inline), or
+      * the background flusher ticks (every ``flush_interval_ms``), or
+      * any read (``load_*``/``get_*``/``list_*``/``count_*``) runs —
+        read-your-writes, or
+      * ``close()`` is called.
+
+    Crash semantics: at most the last ``flush_interval_ms`` of content/
+    lease journal traffic is lost — the same loss class the SQLite
+    backend already accepts with ``synchronous=NORMAL`` — and a failed
+    flush re-queues its ops in order, so transient store errors delay
+    rather than drop them.  See docs/architecture.md.
+    """
+
+    _BUFFERED_KINDS = frozenset({"contents", "lease", "delete_lease"})
+
+    def __init__(self, inner: Store, *, flush_interval_ms: float = 25.0,
+                 max_batch: int = 256):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if flush_interval_ms <= 0:
+            raise ValueError("flush_interval_ms must be > 0")
+        self.inner = inner
+        self.flush_interval_ms = float(flush_interval_ms)
+        self.max_batch = int(max_batch)
+        self._ops: List[Tuple[str, Any]] = []
+        self._lock = threading.Lock()       # guards the op buffer
+        self._flush_lock = threading.Lock()  # serializes flushes (order!)
+        self._stop = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
+        # counters (stats/healthz introspection; tests assert coalescing)
+        self.flushes = 0
+        self.coalesced_ops = 0
+
+    # ------------------------------------------------------------ flushing
+    def _flush_loop(self) -> None:
+        while not self._stop.wait(self.flush_interval_ms / 1000.0):
+            try:
+                self.flush()
+            except Exception:  # pragma: no cover — retried next tick
+                pass
+
+    def _buffer(self, kind: str, payload: Any) -> None:
+        with self._lock:
+            self._ops.append((kind, payload))
+            n = len(self._ops)
+            if self._flusher is None:  # lazy: no thread until first write
+                self._flusher = threading.Thread(
+                    target=self._flush_loop, daemon=True,
+                    name="store-flusher")
+                self._flusher.start()
+        if n >= self.max_batch:
+            self.flush()
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._ops)
+
+    def flush(self) -> int:
+        """Drain the buffer into one ``save_many`` commit; returns the
+        number of ops flushed.  On failure the ops are re-queued at the
+        front so ordering is preserved for the retry."""
+        with self._flush_lock:
+            with self._lock:
+                ops, self._ops = self._ops, []
+            if not ops:
+                return 0
+            try:
+                self.inner.save_many(ops)
+            except BaseException:
+                with self._lock:
+                    self._ops[:0] = ops
+                raise
+            self.flushes += 1
+            self.coalesced_ops += len(ops)
+            return len(ops)
+
+    # ----------------------------------------------------- buffered writes
+    def save_contents(self, collection: str,
+                      files: List[Dict[str, Any]]) -> None:
+        if files:  # copy: callers may mutate their dicts before the flush
+            self._buffer("contents", (collection, [dict(f) for f in files]))
+
+    def save_contents_bulk(
+            self, batches: List[Tuple[str, List[Dict[str, Any]]]]) -> None:
+        for collection, files in batches:
+            self.save_contents(collection, files)
+
+    def save_lease(self, lease: Dict[str, Any]) -> None:
+        self._buffer("lease", dict(lease))
+
+    def save_leases_bulk(self, leases: List[Dict[str, Any]]) -> None:
+        for lease in leases:
+            self.save_lease(lease)
+
+    def delete_lease(self, job_id: str) -> None:
+        self._buffer("delete_lease", job_id)
+
+    # ------------------------------------------- pass-through writes
+    # (never delayed: recovery depends on these rows being durable the
+    # moment the daemon's journal call returns)
+    def save_request(self, info: Dict[str, Any]) -> None:
+        self.inner.save_request(info)
+
+    def save_workflow(self, wf: Dict[str, Any]) -> None:
+        self.inner.save_workflow(wf)
+
+    def save_works(self, workflow_id: str,
+                   works: List[Dict[str, Any]]) -> None:
+        self.inner.save_works(workflow_id, works)
+
+    def save_processing(self, proc: Dict[str, Any]) -> None:
+        self.inner.save_processing(proc)
+
+    def save_command(self, cmd: Dict[str, Any]) -> None:
+        self.inner.save_command(cmd)
+
+    def save_collection(self, coll: Dict[str, Any]) -> None:
+        self.inner.save_collection(coll)
+
+    def save_subscription(self, sub: Dict[str, Any]) -> None:
+        self.inner.save_subscription(sub)
+
+    def save_many(self, ops: List[Tuple[str, Any]]) -> None:
+        # mixed batches keep strict ordering: drain the buffer first,
+        # then commit the caller's ops in one inner transaction
+        self.flush()
+        self.inner.save_many(ops)
+
+    # ------------------------------------------------- reads (flush first)
+    def get_request(self, request_id: str) -> Optional[Dict[str, Any]]:
+        self.flush()
+        return self.inner.get_request(request_id)
+
+    def list_requests(self, *, status: Optional[str] = None,
+                      limit: Optional[int] = None,
+                      offset: int = 0) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.list_requests(status=status, limit=limit,
+                                        offset=offset)
+
+    def count_requests(self, *, status: Optional[str] = None) -> int:
+        self.flush()
+        return self.inner.count_requests(status=status)
+
+    def load_workflows(self) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_workflows()
+
+    def load_works(self) -> List[Tuple[str, Dict[str, Any]]]:
+        self.flush()
+        return self.inner.load_works()
+
+    def load_processings(self) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_processings()
+
+    def load_leases(self) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_leases()
+
+    def load_commands(self) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_commands()
+
+    def load_collections(self) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_collections()
+
+    def load_subscriptions(self) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_subscriptions()
+
+    # ----------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        self._stop.set()
+        flusher = self._flusher
+        if flusher is not None:
+            flusher.join(timeout=2.0)
+        self.flush()
+        self.inner.close()

@@ -7,10 +7,12 @@ the head never pushes work to a site it cannot reach.
 
   * :class:`~repro.worker.agent.WorkerAgent` — one lease → execute →
     report loop with background heartbeat renewal;
-  * :class:`~repro.worker.pool.WorkerPool`   — N agents in one process;
+  * :class:`~repro.worker.agent.BatchWorkerAgent` — N payload slots
+    multiplexed over the bulk verbs (multi-lease + batch heartbeat);
+  * :class:`~repro.worker.pool.WorkerPool`   — N slots in one process;
   * ``python -m repro.worker``               — the worker CLI.
 """
-from repro.worker.agent import WorkerAgent
+from repro.worker.agent import BatchWorkerAgent, WorkerAgent
 from repro.worker.pool import WorkerPool
 
-__all__ = ["WorkerAgent", "WorkerPool"]
+__all__ = ["BatchWorkerAgent", "WorkerAgent", "WorkerPool"]

@@ -40,6 +40,9 @@ def main(argv=None) -> int:
     ap.add_argument("--worker-id", default=None,
                     help="worker id base (default: host-pid); agents "
                          "append -w<i>")
+    ap.add_argument("--no-batch", action="store_true",
+                    help="use one lease/heartbeat loop per slot instead "
+                         "of the bulk verbs (pre-bulk wire protocol)")
     ap.add_argument("--payloads", action="append", default=[],
                     help="importable module that registers payloads "
                          "(repeatable)")
@@ -55,6 +58,7 @@ def main(argv=None) -> int:
     base = args.worker_id or default_worker_id()
     pool = WorkerPool(args.url, concurrency=args.concurrency,
                       worker_id=base, token=args.token, queues=queues,
+                      batch=False if args.no_batch else None,
                       lease_ttl=args.lease_ttl,
                       poll_interval=args.poll_interval,
                       verbose=args.verbose)

@@ -15,6 +15,7 @@ params, never code.
 from __future__ import annotations
 
 import os
+import queue
 import socket
 import threading
 import traceback
@@ -155,3 +156,196 @@ class WorkerAgent:
                 "jobs_failed": self.jobs_failed,
                 "leases_lost": self.leases_lost,
                 "transport_errors": self.transport_errors}
+
+
+class BatchWorkerAgent:
+    """N payload slots behind one worker identity on the bulk protocol.
+
+    Where a pool of :class:`WorkerAgent` runs one lease loop and one
+    heartbeat thread *per slot*, the batch agent amortises the wire
+    protocol: a single leaser grabs up to ``idle slots`` jobs per
+    ``POST /jobs/lease?n=`` (one scheduler lock grab, one journal
+    commit), and a single heartbeat thread renews every running lease
+    with one ``POST /jobs/heartbeat`` per interval.  Per-item 409s in a
+    batch response mark only that lease lost — the affected executor
+    drops its job without reporting, exactly like the single-job agent,
+    while the rest of the batch keeps running.
+    """
+
+    def __init__(self, url: str, *, concurrency: int = 2, token: str = "",
+                 worker_id: Optional[str] = None,
+                 queues: Optional[List[str]] = None,
+                 lease_ttl: float = 30.0, poll_interval: float = 0.25,
+                 client: Optional[IDDSClient] = None,
+                 verbose: bool = False):
+        if concurrency < 1:
+            raise ValueError("concurrency must be >= 1")
+        self.worker_id = worker_id or default_worker_id()
+        self.concurrency = int(concurrency)
+        self.client = client if client is not None else \
+            IDDSClient(url, token=token)
+        self.queues = list(queues) if queues else None
+        self.lease_ttl = lease_ttl
+        self.poll_interval = poll_interval
+        self.verbose = verbose
+        self.jobs_done = 0
+        self.jobs_failed = 0
+        self.leases_lost = 0
+        self.transport_errors = 0
+        self._lock = threading.Lock()
+        self._queue: "queue.Queue[Dict[str, Any]]" = queue.Queue()
+        self._inflight = 0  # leased jobs queued or executing
+        self._running: Dict[str, threading.Event] = {}  # job_id -> lost
+        self._halt = threading.Event()  # internal stop (auth failure)
+
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(f"[{self.worker_id}] {msg}", flush=True)
+
+    _execute = WorkerAgent._execute
+
+    # ----------------------------------------------------------- executors
+    def _process(self, job: Dict[str, Any]) -> bool:
+        job_id = job["job_id"]
+        lost = threading.Event()
+        with self._lock:
+            self._running[job_id] = lost
+        try:
+            result, error = self._execute(job)
+        finally:
+            with self._lock:
+                self._running.pop(job_id, None)
+        if lost.is_set():
+            with self._lock:
+                self.leases_lost += 1
+            self._log(f"lease lost mid-run for {job_id} (requeued by head)")
+            return False
+        try:
+            self.client.complete_job(job_id, self.worker_id,
+                                     result=result, error=error)
+        except ConflictError:
+            with self._lock:
+                self.leases_lost += 1
+            self._log(f"completion rejected for {job_id} (stale lease)")
+            return False
+        except (IDDSClientError, AuthError, OSError) as e:
+            # the lease will expire and the head requeues; nothing more
+            # this slot can do for the job
+            with self._lock:
+                self.transport_errors += 1
+            self._log(f"completion failed for {job_id}: {e}")
+            return False
+        with self._lock:
+            if error:
+                self.jobs_failed += 1
+            else:
+                self.jobs_done += 1
+        self._log(f"job {job_id} {'failed: ' + error if error else 'done'}")
+        return True
+
+    def _executor_loop(self, stop: threading.Event) -> None:
+        # keeps draining already-leased jobs after stop so a graceful
+        # shutdown completes what it holds instead of letting it expire
+        while True:
+            try:
+                job = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                if stop.is_set() or self._halt.is_set():
+                    return
+                continue
+            try:
+                self._process(job)
+            except Exception:  # pragma: no cover — executor resilience
+                traceback.print_exc()
+            finally:
+                with self._lock:
+                    self._inflight -= 1
+
+    # ----------------------------------------------------------- heartbeat
+    def _heartbeat_loop(self, stop: threading.Event) -> None:
+        interval = max(self.lease_ttl / 3.0, 0.02)
+        while not self._halt.is_set():
+            if stop.wait(interval):
+                return
+            with self._lock:
+                snapshot = dict(self._running)
+            if not snapshot:
+                continue
+            try:
+                out = self.client.heartbeat_jobs(list(snapshot),
+                                                 self.worker_id)
+            except (IDDSClientError, AuthError, OSError) as e:
+                # transient transport trouble: the leases may still be
+                # live on the head — keep trying until they expire
+                with self._lock:
+                    self.transport_errors += 1
+                self._log(f"batch heartbeat failed: {e}")
+                continue
+            for item in out.get("results", []):
+                if not item.get("ok"):
+                    ev = snapshot.get(item.get("job_id"))
+                    if ev is not None:
+                        ev.set()
+
+    # ---------------------------------------------------------------- loop
+    def run(self, stop: threading.Event) -> None:
+        """Lease-in-batches until ``stop`` is set, then drain.  Transport
+        errors back off and retry; auth failures stop the agent loudly
+        (a bad token cannot heal by retrying)."""
+        self._halt.clear()
+        executors = [
+            threading.Thread(target=self._executor_loop, args=(stop,),
+                             name=f"{self.worker_id}-x{i}", daemon=True)
+            for i in range(self.concurrency)
+        ]
+        for t in executors:
+            t.start()
+        hb = threading.Thread(target=self._heartbeat_loop, args=(stop,),
+                              name=f"hb-{self.worker_id}", daemon=True)
+        hb.start()
+        idle_wait = self.poll_interval
+        try:
+            while not stop.is_set():
+                with self._lock:
+                    want = self.concurrency - self._inflight
+                if want <= 0:
+                    stop.wait(0.02)
+                    continue
+                try:
+                    jobs = self.client.lease_jobs(
+                        self.worker_id, want, queues=self.queues,
+                        ttl=self.lease_ttl)
+                    idle_wait = self.poll_interval
+                except AuthError as e:
+                    print(f"[{self.worker_id}] auth rejected by head, "
+                          f"stopping: {e}", flush=True)
+                    return
+                except (IDDSClientError, OSError) as e:
+                    with self._lock:
+                        self.transport_errors += 1
+                    self._log(f"transport error: {e}")
+                    jobs = []
+                    idle_wait = min(max(idle_wait * 2, self.poll_interval),
+                                    5.0)
+                except Exception:  # pragma: no cover — agent resilience
+                    traceback.print_exc()
+                    jobs = []
+                if jobs:
+                    with self._lock:
+                        self._inflight += len(jobs)
+                    for job in jobs:
+                        self._queue.put(job)
+                else:
+                    stop.wait(idle_wait)
+        finally:
+            self._halt.set()
+            for t in executors:
+                t.join(timeout=10.0)
+            hb.join(timeout=2.0)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"jobs_done": self.jobs_done,
+                    "jobs_failed": self.jobs_failed,
+                    "leases_lost": self.leases_lost,
+                    "transport_errors": self.transport_errors}

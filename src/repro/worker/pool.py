@@ -1,28 +1,47 @@
-"""Multi-agent worker pool: N concurrent lease loops in one process.
+"""Multi-agent worker pool: N concurrent payload slots in one process.
 
-Each agent gets its own worker_id (``<base>-w<i>``) so the head's
-worker registry and lease table see them as distinct pilots; payload
-execution happens on the agent threads, so ``concurrency`` bounds how
-many payloads this process runs at once.
+Two wire strategies, selected by ``batch``:
+
+* **batch** (default whenever ``concurrency > 1``): one
+  :class:`~repro.worker.agent.BatchWorkerAgent` under a single
+  worker_id multiplexes all slots over the bulk verbs — one
+  multi-lease call feeds every idle slot and one heartbeat call renews
+  every running lease, so head-side lock grabs and journal commits
+  stay O(1) per interval instead of O(slots).
+* **per-slot** (``batch=False`` or ``concurrency == 1``): one
+  :class:`~repro.worker.agent.WorkerAgent` per slot, each with its own
+  worker_id (``<base>-w<i>``) and its own lease/heartbeat loop — the
+  pre-bulk protocol, kept for heterogeneous debugging and as the
+  benchmark baseline.
+
+Either way ``concurrency`` bounds how many payloads this process runs
+at once and :meth:`WorkerPool.stats` aggregates the same counters.
 """
 from __future__ import annotations
 
 import threading
 from typing import Dict, List, Optional
 
-from repro.worker.agent import WorkerAgent, default_worker_id
+from repro.worker.agent import (BatchWorkerAgent, WorkerAgent,
+                                default_worker_id)
 
 
 class WorkerPool:
     def __init__(self, url: str, *, concurrency: int = 2,
-                 worker_id: Optional[str] = None, **agent_kwargs):
+                 worker_id: Optional[str] = None,
+                 batch: Optional[bool] = None, **agent_kwargs):
         if concurrency < 1:
             raise ValueError("concurrency must be >= 1")
         base = worker_id or default_worker_id()
-        self.agents: List[WorkerAgent] = [
-            WorkerAgent(url, worker_id=f"{base}-w{i}", **agent_kwargs)
-            for i in range(concurrency)
-        ]
+        self.batch = (concurrency > 1) if batch is None else bool(batch)
+        if self.batch:
+            self.agents = [BatchWorkerAgent(url, concurrency=concurrency,
+                                            worker_id=base, **agent_kwargs)]
+        else:
+            self.agents = [
+                WorkerAgent(url, worker_id=f"{base}-w{i}", **agent_kwargs)
+                for i in range(concurrency)
+            ]
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
 

@@ -230,6 +230,83 @@ def test_unregistered_predicate_does_not_wedge_status(gateway):
     assert info["works"] == {"finished": 1}  # condition eval failed -> no b
 
 
+# ------------------------------------------------- bulk content transition
+
+def test_contents_transition_over_wire(gateway):
+    gateway.idds.ctx.ddm.register_collection(
+        "data/bulk", [FileRef("f0", size=10),
+                      FileRef("f1", size=20, available=True)])
+    client = IDDSClient(gateway.url)
+    out = client.transition_contents("data/bulk", [
+        {"name": "f0", "status": "staging"},
+        {"name": "f1", "status": "delivered"},
+        {"name": "f2", "status": "new", "size": 5},  # register-on-the-fly
+    ])
+    assert out["applied"] == 3 and out["skipped"] == 0
+    assert all(r["applied"] for r in out["results"])
+    contents = client.lookup_contents("data/bulk")
+    by_name = {f["name"]: f for f in contents}
+    assert by_name["f0"]["status"] == "staging"
+    assert by_name["f1"]["status"] == "delivered"
+    assert by_name["f1"]["processed"] is True
+    assert by_name["f2"]["size"] == 5 and by_name["f2"]["status"] == "new"
+
+
+def test_contents_transition_rank_guard_reports_skips(gateway):
+    """A backward transition is skipped (not an error) and the response
+    reports the file's live status, so a replayed batch is a no-op."""
+    gateway.idds.ctx.ddm.register_collection(
+        "data/guard", [FileRef("g0", size=1, available=True)])
+    client = IDDSClient(gateway.url)
+    out = client.transition_contents(
+        "data/guard", [{"name": "g0", "status": "staging"}])
+    assert out["applied"] == 0 and out["skipped"] == 1
+    (r,) = out["results"]
+    assert r["applied"] is False and r["status"] == "available"
+    # forward transitions still apply after the skip
+    out = client.transition_contents(
+        "data/guard", [{"name": "g0", "status": "delivered"}])
+    assert out["applied"] == 1
+
+
+def test_contents_transition_validation_envelopes(gateway):
+    conn = http.client.HTTPConnection(gateway.host, gateway.port,
+                                      timeout=5)
+
+    def post(path, body):
+        conn.request("POST", path, body=json.dumps(body).encode())
+        r = conn.getresponse()
+        return r.status, json.loads(r.read())
+
+    path = "/v1/collections/data%2Fx/contents:transition"
+    for body in ({}, {"transitions": []},
+                 {"transitions": [{"name": "f"}]},
+                 {"transitions": [{"name": "f", "status": "bogus"}]},
+                 {"transitions": ["not-a-dict"]}):
+        status, env = post(path, body)
+        assert status == 400, body
+        assert env["error"]["type"] == "BadRequest", body
+    conn.close()
+
+
+def test_contents_transition_unknown_collection_404(gateway):
+    """With a DDM that does not auto-create collections, transitioning
+    an unknown collection is a 404 envelope."""
+    real_get = gateway.idds.ctx.ddm.get_collection
+
+    def strict_get(name):
+        raise KeyError(name)
+
+    gateway.idds.ctx.ddm.get_collection = strict_get
+    try:
+        client = IDDSClient(gateway.url)
+        with pytest.raises(KeyError):
+            client.transition_contents(
+                "no/such", [{"name": "f", "status": "new"}])
+    finally:
+        gateway.idds.ctx.ddm.get_collection = real_get
+
+
 # ------------------------------------------------------------ concurrency
 
 def test_concurrent_submissions(gateway):

@@ -1,13 +1,17 @@
 """Durable state store + crash recovery (paper §2's database-backed
 catalogs): entity round trips on both backends, catalog pagination,
 corrupt-file handling, kill-and-restart recovery with no duplicated
-processings, idempotent recover(), and the REST listing endpoint's
-edge cases.
+processings, idempotent recover(), the REST listing endpoint's edge
+cases, a property/stress layer for the rank-guarded content upsert
+(threaded shuffles, bulk vs one-row convergence), and a randomized
+crash-recovery fuzz over the write-coalescing journal buffer.
 """
 import os
+import random
 import signal
 import subprocess
 import sys
+import threading
 
 import pytest
 
@@ -16,7 +20,9 @@ from repro.core import payloads as reg
 from repro.core.client import IDDSClient, IDDSClientError
 from repro.core.idds import IDDS
 from repro.core.rest import RestGateway
-from repro.core.store import InMemoryStore, SqliteStore, StoreError
+from repro.core.scheduler import DistributedWFM
+from repro.core.store import (BufferedStore, InMemoryStore, SqliteStore,
+                              StoreError, _content_rank)
 from repro.core.workflow import (Branch, Condition, FileRef, Workflow,
                                  WorkTemplate)
 
@@ -338,6 +344,215 @@ def test_rest_survives_restart_on_same_store(tmp_path):
             info = client2.wait(rid, timeout=30)
             assert info["works"] == {"finished": 2}
         assert client2.list_requests(status="finished")["total"] == 3
+    idds2.close()
+
+
+# --------------------------------------- rank-guard property + stress
+
+_STATUSES = ["new", "staging", "failed", "available", "delivered"]
+
+
+def _content(name, status, size=1):
+    """A content row whose flags are a pure function of its status, so
+    any two write paths that accept the same status sequence must
+    converge on byte-identical rows."""
+    return {"name": name, "size": size,
+            "available": status in ("available", "delivered"),
+            "processed": status == "delivered",
+            "status": status}
+
+
+def _final_contents(store, collection):
+    (coll,) = [c for c in store.load_collections()
+               if c["name"] == collection]
+    return {f["name"]: (f["status"], f["available"], f["processed"],
+                        f["size"])
+            for f in coll["files"]}
+
+
+def test_rank_guard_property_threaded_shuffle(store):
+    """Property: however N threads interleave an out-of-order stream of
+    per-file transitions, each file ends at its max-rank status — the
+    rank guard makes content journaling order-insensitive, which is
+    what licenses the write-coalescing buffer to batch it."""
+    rng = random.Random(0xC0FFEE)
+    n_files, writes_per_file, n_threads = 30, 6, 6
+    seqs = {f"f{i}": [rng.choice(_STATUSES)
+                      for _ in range(writes_per_file)]
+            for i in range(n_files)}
+    expected = {name: max(seq, key=_content_rank)
+                for name, seq in seqs.items()}
+    ops = [(name, st) for name, seq in seqs.items() for st in seq]
+    rng.shuffle(ops)
+
+    errors = []
+
+    def writer(chunk):
+        try:
+            for name, st in chunk:
+                store.save_contents("prop", [_content(name, st)])
+        except Exception as e:  # pragma: no cover — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(ops[i::n_threads],))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    final = _final_contents(store, "prop")
+    assert set(final) == set(seqs)
+    for name, st in expected.items():
+        assert final[name] == (st, st in ("available", "delivered"),
+                               st == "delivered", 1), name
+
+
+@pytest.mark.parametrize("kind", ["memory", "sqlite"])
+def test_bulk_and_one_row_content_paths_converge(kind, tmp_path):
+    """The batched write path (save_contents with many rows /
+    save_contents_bulk) must land the exact same final catalog as the
+    one-row-per-call path for the same transition stream."""
+    rng = random.Random(20260807)
+    seqs = {f"f{i}": [rng.choice(_STATUSES) for _ in range(5)]
+            for i in range(40)}
+    ops = [(name, st) for name, seq in seqs.items() for st in seq]
+    rng.shuffle(ops)
+
+    def make(tag):
+        return (InMemoryStore() if kind == "memory"
+                else SqliteStore(str(tmp_path / f"{tag}.db")))
+
+    one, bulk = make("one"), make("bulk")
+    for name, st in ops:
+        one.save_contents("c", [_content(name, st)])
+    for i in range(0, len(ops), 16):  # same stream, 16-row batches
+        bulk.save_contents_bulk(
+            [("c", [_content(n, s) for n, s in ops[i:i + 16]])])
+    assert _final_contents(one, "c") == _final_contents(bulk, "c")
+    for name, seq in seqs.items():
+        assert _final_contents(one, "c")[name][0] == \
+            max(seq, key=_content_rank)
+    one.close()
+    bulk.close()
+
+
+def test_buffered_store_coalesces_and_flushes_on_read(tmp_path):
+    inner = SqliteStore(str(tmp_path / "buf.db"))
+    buf = BufferedStore(inner, flush_interval_ms=10_000, max_batch=8)
+    for i in range(7):  # below max_batch: nothing reaches the inner yet
+        buf.save_contents("c", [_content(f"f{i}", "available")])
+    assert buf.pending() == 7
+    assert inner.load_collections() == []
+    # reads see the writer's own buffered state (read-your-writes)
+    assert len(_final_contents(buf, "c")) == 7
+    assert buf.pending() == 0
+    for i in range(8):  # 8 buffered ops == max_batch: flushed inline
+        buf.save_contents("c", [_content(f"g{i}", "new")])
+    assert buf.pending() == 0
+    assert buf.flushes == 2 and buf.coalesced_ops == 15
+    buf.close()
+
+
+def test_buffered_store_validates_knobs(tmp_path):
+    inner = InMemoryStore()
+    with pytest.raises(ValueError):
+        BufferedStore(inner, max_batch=0)
+    with pytest.raises(ValueError):
+        BufferedStore(inner, flush_interval_ms=0)
+
+
+# ------------------------------------------ crash-recovery fuzz (bulk)
+
+def _fuzz_workflow(payload, n_jobs):
+    wf = Workflow(name="fuzz")
+    wf.add_template(WorkTemplate(name="t", payload=payload))
+    for i in range(n_jobs):
+        wf.add_initial("t", {"i": i})
+    return wf
+
+
+@pytest.mark.parametrize("kind", ["memory", "sqlite"])
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_crash_recovery_fuzz_bulk_journal(tmp_path, kind, seed):
+    """Kill the head at a random point of a bulk-batched run (journal
+    writes ride a BufferedStore, so the crash also drops whatever the
+    coalescing buffer had not flushed) and recover: jobs completed
+    before the crash must NOT re-execute (exactly-once), every job
+    still finishes, and no journaled lease survives recovery."""
+    rng = random.Random(7000 + seed)
+    executions = {}
+    exec_lock = threading.Lock()
+    payload_name = f"fuzz_count_{kind}_{seed}"
+
+    def counting(params, inputs):
+        with exec_lock:
+            executions[params["i"]] = executions.get(params["i"], 0) + 1
+        return {"i": params["i"]}
+
+    reg.register_payload(payload_name, counting)
+
+    path = str(tmp_path / "fuzz.db")
+    inner = SqliteStore(path) if kind == "sqlite" else InMemoryStore()
+    buf = BufferedStore(inner, flush_interval_ms=10_000,
+                        max_batch=rng.choice([2, 3, 5]))
+    idds = IDDS(store=buf, executor=DistributedWFM(lease_ttl=30.0))
+    n_jobs = rng.randint(4, 8)
+    rid = idds.submit_workflow(_fuzz_workflow(payload_name, n_jobs))
+    idds.pump()
+
+    sched = idds.scheduler
+    held = []
+    for _ in range(rng.randint(1, 3 * n_jobs)):  # random journal point
+        action = rng.random()
+        if action < 0.5:
+            job = sched.lease("fuzz-w")
+            if job is not None:
+                held.append(job)
+        elif held and action < 0.85:
+            job = held.pop(rng.randrange(len(held)))
+            fn = reg.get_payload(job["payload"])
+            sched.complete(job["job_id"], "fuzz-w",
+                           result=fn(job["params"], job["input_files"]))
+        else:
+            sum(d.process_once() for d in idds.daemons)
+    # simulated crash: buffer contents (unflushed lease/content ops) are
+    # lost with the process; only the inner store's state survives
+    del idds, buf
+
+    store2 = SqliteStore(path) if kind == "sqlite" else inner
+    # a completion is exactly-once from the moment the Carrier journals
+    # its processing as finished; anything still in flight at the crash
+    # is at-least-once by design (the lease is requeued)
+    durable_pre_crash = {p["params"]["i"]
+                         for p in store2.load_processings()
+                         if p["status"] == "finished"}
+    idds2 = IDDS(store=store2, executor=DistributedWFM(lease_ttl=30.0))
+    idds2.recover()
+    assert idds2.store.load_leases() == []  # no orphaned leases survive
+    idds2.pump()
+    for _ in range(4 * n_jobs):
+        if idds2.request_status(rid)["status"] == "finished":
+            break
+        job = idds2.scheduler.lease("survivor")
+        if job is not None:
+            fn = reg.get_payload(job["payload"])
+            idds2.scheduler.complete(
+                job["job_id"], "survivor",
+                result=fn(job["params"], job["input_files"]))
+        idds2.pump()
+    info = idds2.request_status(rid)
+    assert info["status"] == "finished", (seed, info)
+    assert info["works"] == {"finished": n_jobs}
+    # exactly-once: a job whose completion was journaled pre-crash is
+    # never re-executed, whatever the buffer lost
+    for i in durable_pre_crash:
+        assert executions[i] == 1, (i, executions)
+    assert set(executions) == set(range(n_jobs))
+    # one processing per work, all finished, across the crash
+    procs = idds2.store.load_processings()
+    assert len(procs) == n_jobs
+    assert all(p["status"] == "finished" for p in procs)
     idds2.close()
 
 

@@ -18,7 +18,7 @@ from repro.core.idds import IDDS
 from repro.core.rest import RestGateway
 from repro.core.scheduler import DistributedWFM
 from repro.core.workflow import Workflow, WorkTemplate
-from repro.worker import WorkerAgent, WorkerPool
+from repro.worker import BatchWorkerAgent, WorkerAgent, WorkerPool
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -179,6 +179,184 @@ def test_healthz_reports_execution_plane(dist_gateway):
                             "carrier": True, "conductor": True}
     client.lease_job("probe")  # empty lease still registers the worker
     assert client.healthz()["workers_connected"] == 1
+
+
+# ------------------------------------------------------ bulk REST verbs
+
+def _lease_many_with_retry(client, worker_id, n, timeout=10.0, **kw):
+    deadline = time.time() + timeout
+    jobs = []
+    while time.time() < deadline and len(jobs) < n:
+        jobs += client.lease_jobs(worker_id, n - len(jobs), **kw)
+        if len(jobs) < n:
+            time.sleep(0.02)
+    assert len(jobs) == n, f"leased {len(jobs)}/{n}"
+    return jobs
+
+
+def test_multi_lease_batch_lifecycle(dist_gateway):
+    """One multi-lease grabs the whole batch; batch heartbeat and batch
+    complete return all-ok envelopes; the workflow finishes."""
+    client = IDDSClient(dist_gateway.url)
+    rid = client.submit_workflow(_sleep_workflow(5, ms=1))
+    jobs = _lease_many_with_retry(client, "bulk-w", 5)
+    assert len({j["job_id"] for j in jobs}) == 5
+    hb = client.heartbeat_jobs([j["job_id"] for j in jobs], "bulk-w")
+    assert hb["ok"] == 5 and hb["failed"] == 0
+    assert all(r["ok"] and r["status"] == 200 for r in hb["results"])
+    out = client.complete_jobs(
+        [{"job_id": j["job_id"], "result": {"ok": True}} for j in jobs],
+        "bulk-w")
+    assert out["ok"] == 5 and out["failed"] == 0
+    assert all(r["duplicate"] is False for r in out["results"])
+    info = client.wait(rid, timeout=30)
+    assert info["works"] == {"finished": 5}
+
+
+def test_batch_partial_conflict_envelopes(dist_gateway):
+    """A stale lease inside a batch yields a per-item 409 envelope; the
+    other items still succeed — one bad job never poisons the batch."""
+    client = IDDSClient(dist_gateway.url)
+    client.submit_workflow(_sleep_workflow(2, ms=1))
+    stale = _lease_with_retry(client, "mixed-w", ttl=0.2)
+    live = _lease_with_retry(client, "mixed-w", ttl=30.0)
+    time.sleep(0.4)  # first lease expires; head requeues its job
+    hb = client.heartbeat_jobs([stale["job_id"], live["job_id"]],
+                               "mixed-w")
+    assert hb["ok"] == 1 and hb["failed"] == 1
+    by_id = {r["job_id"]: r for r in hb["results"]}
+    assert by_id[live["job_id"]]["ok"] is True
+    bad = by_id[stale["job_id"]]
+    assert bad["ok"] is False and bad["status"] == 409
+    assert bad["error"]["type"] == "Conflict"
+    out = client.complete_jobs(
+        [{"job_id": stale["job_id"], "result": {}},
+         {"job_id": live["job_id"], "result": {}}], "mixed-w")
+    assert out["ok"] == 1 and out["failed"] == 1
+    # completing again is a per-item duplicate, not an error
+    again = client.complete_jobs(
+        [{"job_id": live["job_id"], "result": {}}], "mixed-w")
+    assert again["ok"] == 1
+    assert again["results"][0]["duplicate"] is True
+
+
+def test_bulk_verb_validation_envelopes(dist_gateway):
+    conn = http.client.HTTPConnection(dist_gateway.host,
+                                      dist_gateway.port, timeout=5)
+
+    def post(path, body):
+        conn.request("POST", path, body=json.dumps(body).encode())
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read())
+
+    # n= bounds: 0, over the cap, and non-integers are 400 envelopes
+    for q in ("n=0", "n=-3", "n=65", "n=abc"):
+        status, env = post(f"/v1/jobs/lease?{q}", {"worker_id": "w"})
+        assert status == 400, q
+        assert env["error"]["type"] == "BadRequest", q
+    # empty batches are rejected up front (nothing to do is a caller bug)
+    status, env = post("/v1/jobs/heartbeat",
+                       {"worker_id": "w", "job_ids": []})
+    assert status == 400 and env["error"]["type"] == "BadRequest"
+    status, env = post("/v1/jobs/complete",
+                       {"worker_id": "w", "items": []})
+    assert status == 400 and env["error"]["type"] == "BadRequest"
+    # oversized batches are bounded, not silently truncated
+    status, env = post("/v1/jobs/heartbeat",
+                       {"worker_id": "w",
+                        "job_ids": [f"j{i}" for i in range(257)]})
+    assert status == 400 and env["error"]["type"] == "BadRequest"
+    # item shape is validated per element
+    status, env = post("/v1/jobs/complete",
+                       {"worker_id": "w", "items": [{"result": {}}]})
+    assert status == 400 and env["error"]["type"] == "BadRequest"
+    # the batch verbs are v1-only: no unversioned legacy alias
+    status, _ = post("/jobs/heartbeat",
+                     {"worker_id": "w", "job_ids": ["j1"]})
+    assert status == 404
+    conn.close()
+
+
+def test_multi_lease_idempotency_replay(dist_gateway):
+    """Retrying a multi-lease with the same idempotency key replays the
+    original grant; after some of those jobs complete, the replay
+    returns only the still-held subset."""
+    client = IDDSClient(dist_gateway.url)
+    client.submit_workflow(_sleep_workflow(3, ms=1))
+    deadline = time.time() + 10
+    while client.list_workers()["queues"].get(
+            "default", {}).get("pending", 0) < 3:
+        assert time.time() < deadline
+        time.sleep(0.02)
+
+    conn = http.client.HTTPConnection(dist_gateway.host,
+                                      dist_gateway.port, timeout=5)
+    body = json.dumps({"worker_id": "replay-w",
+                       "idempotency_key": "fixed-key-1"}).encode()
+
+    def lease_again():
+        conn.request("POST", "/v1/jobs/lease?n=3", body=body)
+        resp = conn.getresponse()
+        assert resp.status == 200
+        return json.loads(resp.read())["jobs"]
+
+    first = lease_again()
+    assert len(first) == 3
+    replay = lease_again()  # e.g. the response to `first` was lost
+    assert [j["job_id"] for j in replay] == [j["job_id"] for j in first]
+    client.complete_job(first[0]["job_id"], "replay-w", result={})
+    partial = lease_again()  # only the still-held leases replay
+    assert [j["job_id"] for j in partial] == \
+        [j["job_id"] for j in first[1:]]
+    conn.close()
+
+
+def test_batch_worker_agent_drives_workflow(dist_gateway):
+    client = IDDSClient(dist_gateway.url)
+    rid = client.submit_workflow(_sleep_workflow(6, ms=5))
+    agent = BatchWorkerAgent(dist_gateway.url, concurrency=3,
+                             worker_id="batch-agent", lease_ttl=5.0,
+                             poll_interval=0.02)
+    stop = threading.Event()
+    t = threading.Thread(target=agent.run, args=(stop,), daemon=True)
+    t.start()
+    try:
+        info = client.wait(rid, timeout=30)
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    assert info["works"] == {"finished": 6}
+    assert agent.stats()["jobs_done"] == 6
+    assert agent.stats()["jobs_failed"] == 0
+    # one identity on the head, not one per slot
+    ids = [w["worker_id"] for w in client.list_workers()["workers"]]
+    assert ids == ["batch-agent"]
+
+
+def test_batch_agent_drops_lost_lease_from_batch(dist_gateway):
+    """When the head revokes one lease out of a running batch (expiry
+    here), the batch heartbeat's per-item 409 marks just that job lost:
+    the agent skips its completion and finishes the rest."""
+    client = IDDSClient(dist_gateway.url)
+    client.submit_workflow(_sleep_workflow(2, ms=1))
+    agent = BatchWorkerAgent(dist_gateway.url, concurrency=2,
+                             worker_id="loser", lease_ttl=0.3)
+    jobs = _lease_many_with_retry(client, "loser", 2, ttl=0.2)
+    time.sleep(0.4)  # both leases expire while "executing"
+    for j in jobs:
+        with agent._lock:
+            agent._running[j["job_id"]] = threading.Event()
+    stop = threading.Event()
+    t = threading.Thread(target=agent._heartbeat_loop, args=(stop,),
+                         daemon=True)
+    t.start()
+    deadline = time.time() + 5
+    while time.time() < deadline and not all(
+            ev.is_set() for ev in agent._running.values()):
+        time.sleep(0.02)
+    stop.set()
+    t.join(timeout=5)
+    assert all(ev.is_set() for ev in agent._running.values())
 
 
 def test_priority_orders_lease_dispatch(dist_gateway):
