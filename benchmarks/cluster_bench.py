@@ -1,0 +1,118 @@
+"""Benchmark: aggregate head-service throughput at 1 vs 2+ heads.
+
+The multi-head deployment exists so the service scales horizontally:
+several ``repro.core.rest`` heads pump ONE shared catalog over the
+store-polling bus, partitioning work through the workflow-claim CAS.
+This bench boots N in-process heads on one shared store, splits a
+client fleet across them, and measures aggregate submissions/sec plus
+the drain to every workflow finishing — the cluster must not lose or
+double-process anything while it scales.
+
+    PYTHONPATH=src python -m benchmarks.cluster_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import Dict, List
+
+from repro.core.client import IDDSClient
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+from repro.core.store import InMemoryStore
+
+KEYS = ["heads", "clients", "submissions", "sub_wall_s",
+        "agg_sub_per_s", "drain_wall_s", "finished"]
+
+
+def _make_request_json() -> str:
+    from repro.core.requests import Request
+    from repro.core.spec import WorkflowSpec
+    spec = WorkflowSpec("cluster-bench")
+    spec.work("n", payload="noop", start={})
+    return Request(workflow=spec.build()).to_json()
+
+
+def run_one(n_heads: int, *, clients_per_head: int = 4,
+            per_client: int = 10) -> Dict:
+    """N heads on one shared catalog; clients pinned per head submit
+    concurrently; then the cluster drains every workflow to finished."""
+    store = InMemoryStore()
+    heads = [IDDS(store=store, bus="store",
+                  head_id=f"bench-head-{k}", claim_ttl=5.0)
+             for k in range(n_heads)]
+    gws = [RestGateway(h) for h in heads]
+    for gw in gws:
+        gw.start()
+    try:
+        n_clients = n_heads * clients_per_head
+        rids: List[List[str]] = [[] for _ in range(n_clients)]
+        errors: List[Exception] = []
+        barrier = threading.Barrier(n_clients)
+
+        def submitter(i: int):
+            try:
+                client = IDDSClient(gws[i % n_heads].url)
+                barrier.wait()
+                for _ in range(per_client):
+                    rids[i].append(client.submit(_make_request_json()))
+            except Exception as e:  # noqa: BLE001 — surfaced below
+                errors.append(e)
+
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(n_clients)]
+        t0 = time.time()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        sub_wall = time.time() - t0
+        assert not errors, errors
+
+        # drain: every workflow must finish somewhere in the cluster;
+        # any head answers status polls (catalog fallback for
+        # workflows a peer owns)
+        client = IDDSClient(gws[0].url)
+        t1 = time.time()
+        finished = 0
+        for per in rids:
+            for rid in per:
+                if client.wait(rid, timeout=120)["status"] == "finished":
+                    finished += 1
+        drain_wall = time.time() - t1
+        n_sub = n_clients * per_client
+        return {
+            "heads": n_heads,
+            "clients": n_clients,
+            "submissions": n_sub,
+            "sub_wall_s": round(sub_wall, 3),
+            "agg_sub_per_s": round(n_sub / sub_wall),
+            "drain_wall_s": round(drain_wall, 3),
+            "finished": finished,
+        }
+    finally:
+        for gw in gws:
+            gw.stop()
+        store.close()
+
+
+def run(head_counts=(1, 2), *, clients_per_head: int = 4,
+        per_client: int = 10) -> List[Dict]:
+    return [run_one(n, clients_per_head=clients_per_head,
+                    per_client=per_client) for n in head_counts]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", "--smoke", action="store_true",
+                    dest="quick", help="fewer submissions per client (CI)")
+    args = ap.parse_args(argv)
+    rows = run(per_client=5 if args.quick else 10)
+    print(",".join(KEYS))
+    for r in rows:
+        print(",".join(str(r[k]) for k in KEYS))
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,8 @@ Sections:
   store      §2        persistence overhead: in-memory vs SQLite catalogs
   train      §3.1      carousel-fed training micro-run (loss goes down)
   rest       §2        REST gateway submission throughput + poll latency
+  cluster    §2        multi-head horizontal scaling: aggregate
+                       submissions/sec at 1 vs 2 heads on one catalog
   command    §2        steering plane: lifecycle-command round-trip
                        latency (suspend/resume over the wire)
   worker     §2        distributed execution plane: jobs/sec vs worker
@@ -136,6 +138,14 @@ def main(argv=None) -> int:
         client_counts=(1, 4) if smoke else (1, 4, 8),
         per_client=5 if smoke else 10 if quick else 25)
     _print_rows(rest_bench.KEYS, results["rest"])
+
+    _section("cluster (multi-head: 1 vs 2 heads, one catalog)")
+    from benchmarks import cluster_bench
+    results["cluster"] = cluster_bench.run(
+        head_counts=(1, 2),
+        clients_per_head=2 if smoke else 4,
+        per_client=5 if smoke else 10 if quick else 25)
+    _print_rows(cluster_bench.KEYS, results["cluster"])
 
     _section("command (steering plane round-trip latency)")
     from benchmarks import command_bench

@@ -1,0 +1,135 @@
+"""Cluster failover smoke: two REST heads, one SQLite catalog, SIGKILL.
+
+Boots two ``python -m repro.core.rest`` processes sharing one SQLite
+store over the store-polling bus, submits a batch of in-flight
+workflows to head 1, SIGKILLs head 1 mid-run (no cleanup, no claim
+release), and asserts that head 2 adopts the orphaned workflows and
+drives EVERY request to ``finished`` — no request lost, none stuck.
+Also checks /v1/cluster flips head 1 to dead while head 2 stays alive.
+
+Run from CI (cluster-smoke job) or by hand:
+
+    PYTHONPATH=src python scripts/cluster_smoke.py
+"""
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.core.client import IDDSClient  # noqa: E402
+from repro.core.spec import WorkflowSpec  # noqa: E402
+
+N_REQUESTS = 8
+CLAIM_TTL = 1.0
+
+
+def boot_head(db: str, head_id: str) -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.core.rest", "--port", "0",
+         "--store", db, "--bus", "store", "--head-id", head_id,
+         "--claim-ttl", str(CLAIM_TTL), "--legacy-routes", "off"],
+        env=env, stdout=subprocess.PIPE, text=True)
+
+
+def serving_url(p: subprocess.Popen, deadline_s: float = 30.0) -> str:
+    t0 = time.time()
+    while time.time() - t0 < deadline_s:
+        line = p.stdout.readline()
+        if not line:
+            raise RuntimeError("head exited before serving")
+        print(f"  [head] {line.rstrip()}")
+        if "serving on " in line:
+            return line.split("serving on ", 1)[1].split()[0]
+    raise RuntimeError("head did not report its URL in time")
+
+
+def build_workflow(i: int):
+    # slow enough that the SIGKILL lands mid-run (inline execution in
+    # head 1's Carrier thread)
+    spec = WorkflowSpec(f"smoke-{i}")
+    spec.work("crunch", payload="sleep_ms", defaults={"ms": 120},
+              start=[{}, {}])
+    return spec.build()
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="cluster-smoke-")
+    db = os.path.join(tmp, "cluster.db")
+    print(f"catalog: {db}")
+    h1 = boot_head(db, "head-1")
+    url1 = serving_url(h1)
+    h2 = boot_head(db, "head-2")
+    url2 = serving_url(h2)
+    try:
+        c1 = IDDSClient(url1)
+        c2 = IDDSClient(url2)
+        rids = [c1.submit_workflow(build_workflow(i),
+                                   requester="cluster-smoke")
+                for i in range(N_REQUESTS)]
+        print(f"submitted {len(rids)} requests to head 1")
+
+        # wait until head 1 actually owns in-flight work...
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            heads = {h["head_id"]: h
+                     for h in c2.cluster()["heads"]}
+            if heads.get("head-1", {}).get("claims", 0) > 0:
+                break
+            time.sleep(0.05)
+        else:
+            raise RuntimeError("head 1 never claimed any workflow")
+        print(f"head 1 claims mid-run: {heads['head-1']['claims']} "
+              f"-> SIGKILL")
+        # ...then kill it dead: no claim release, no bus drain
+        os.kill(h1.pid, signal.SIGKILL)
+        h1.wait(timeout=10)
+
+        # the survivor must adopt and finish EVERY request
+        deadline = time.time() + 120
+        pending = set(rids)
+        while pending and time.time() < deadline:
+            for rid in sorted(pending):
+                if c2.status(rid)["status"] == "finished":
+                    pending.discard(rid)
+            time.sleep(0.2)
+        if pending:
+            raise RuntimeError(
+                f"{len(pending)} requests never finished on the "
+                f"survivor: {sorted(pending)}")
+        print(f"survivor finished all {len(rids)} requests")
+
+        # the health plane must show the dead head as dead
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            heads = {h["head_id"]: h
+                     for h in c2.cluster()["heads"]}
+            if (not heads["head-1"]["alive"]
+                    and heads["head-2"]["alive"]):
+                break
+            time.sleep(0.2)
+        else:
+            raise RuntimeError(f"cluster view never converged: {heads}")
+        print("cluster view: head-1 dead, head-2 alive")
+        print("CLUSTER SMOKE PASSED")
+        return 0
+    finally:
+        for p in (h1, h2):
+            if p.poll() is None:
+                p.send_signal(signal.SIGTERM)
+        for p in (h1, h2):
+            try:
+                p.wait(timeout=15)
+            except subprocess.TimeoutExpired:
+                p.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,9 +9,11 @@ prints the JSON response, so output composes with ``jq`` and scripts.
 
 Verbs:
 
-  health                      GET /v1/healthz (queue depths, pending
-                              commands, daemon liveness, content +
-                              delivery tallies)
+  health                      GET /v1/healthz (head identity, queue
+                              depths, pending commands, daemon
+                              liveness, content + delivery tallies)
+  cluster                     GET /v1/cluster (head registry:
+                              heartbeat ages, live claim counts)
   stats                       GET /v1/stats
   list [--status S] [--limit N] [--offset N]
   status REQUEST_ID           status + work counts + suspended flag
@@ -64,6 +66,7 @@ def build_parser() -> argparse.ArgumentParser:
     sub = ap.add_subparsers(dest="verb", required=True)
 
     sub.add_parser("health")
+    sub.add_parser("cluster")
     sub.add_parser("stats")
     sub.add_parser("workers")
 
@@ -121,6 +124,8 @@ def main(argv=None) -> int:
     try:
         if args.verb == "health":
             _print(client.healthz())
+        elif args.verb == "cluster":
+            _print(client.cluster())
         elif args.verb == "stats":
             _print(client.stats())
         elif args.verb == "workers":

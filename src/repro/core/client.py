@@ -68,6 +68,48 @@ class ConflictError(IDDSClientError):
 API_PREFIX = "/v1"
 
 
+class BatchResult(dict):
+    """Typed view of the unified batch envelope every batch verb
+    returns (``jobs/heartbeat``, ``jobs/complete``,
+    ``contents:transition`` — see ``repro.core.rest.batch_envelope``).
+
+    A ``dict`` subclass: existing callers that index the raw envelope
+    (``out["results"]``, ``out.get("ok")``) keep working unchanged,
+    while new code gets attributes and per-item partitions."""
+
+    @property
+    def results(self) -> List[Dict[str, Any]]:
+        return self.get("results", [])
+
+    @property
+    def ok_count(self) -> int:
+        return int(self.get("ok", 0))
+
+    @property
+    def failed_count(self) -> int:
+        return int(self.get("failed", 0))
+
+    def succeeded(self, ok_key: str = "ok") -> List[Dict[str, Any]]:
+        """Items whose per-item success flag is set (``ok`` for job
+        verbs, ``applied`` for content transitions)."""
+        return [r for r in self.results if r.get(ok_key)]
+
+    def failures(self, ok_key: str = "ok") -> List[Dict[str, Any]]:
+        """Items that did not succeed; job-verb items carry their own
+        409 ``error`` envelope, transition items the live status the
+        rank guard kept."""
+        return [r for r in self.results if not r.get(ok_key)]
+
+    def raise_for_failures(self, ok_key: str = "ok") -> "BatchResult":
+        """Strict mode: raise ConflictError if any item failed."""
+        bad = self.failures(ok_key)
+        if bad:
+            raise ConflictError(
+                f"{len(bad)}/{len(self.results)} batch items failed "
+                f"(first: {bad[0]})")
+        return self
+
+
 class IDDSClient:
     def __init__(self, base_url: str, *, token: str = "",
                  timeout: float = 10.0, retries: int = 3,
@@ -361,6 +403,12 @@ class IDDSClient:
     def healthz(self) -> Dict[str, Any]:
         return self._get(f"{API_PREFIX}/healthz")
 
+    def cluster(self) -> Dict[str, Any]:
+        """Head registry for the ownership plane (GET /v1/cluster):
+        every head with a heartbeat in the shared store, its heartbeat
+        age, liveness verdict and live workflow-claim count."""
+        return self._get(f"{API_PREFIX}/cluster")
+
     # ----------------------------------------------- execution plane (jobs)
     def lease_job(self, worker_id: str, *,
                   queues: Optional[List[str]] = None,
@@ -398,39 +446,39 @@ class IDDSClient:
                           idempotent=True)["jobs"]
 
     def heartbeat_jobs(self, job_ids: List[str],
-                       worker_id: str) -> Dict[str, Any]:
+                       worker_id: str) -> "BatchResult":
         """Renew many held leases in one round trip (POST
         /jobs/heartbeat).  Always 200; per-item envelopes in
         ``results`` carry status 200 or 409 — a stale lease shows up as
         its item's 409, never as an exception."""
-        return self._post(
+        return BatchResult(self._post(
             f"{API_PREFIX}/jobs/heartbeat",
             {"worker_id": worker_id, "job_ids": list(job_ids)},
-            idempotent=True)
+            idempotent=True))
 
     def complete_jobs(self, items: List[Dict[str, Any]],
-                      worker_id: str) -> Dict[str, Any]:
+                      worker_id: str) -> "BatchResult":
         """Report many outcomes in one round trip (POST /jobs/complete).
         Each item is ``{"job_id", "result"?, "error"?}``; per-item
         envelopes as in :meth:`heartbeat_jobs`.  Retry-safe: the server
         deduplicates per (job, worker)."""
-        return self._post(
+        return BatchResult(self._post(
             f"{API_PREFIX}/jobs/complete",
             {"worker_id": worker_id, "items": list(items)},
-            idempotent=True)
+            idempotent=True))
 
     def transition_contents(self, name: str,
                             transitions: List[Dict[str, Any]]
-                            ) -> Dict[str, Any]:
+                            ) -> "BatchResult":
         """Bulk content state changes (POST
         /collections/<name>/contents:transition).  Each transition is
         ``{"name", "status"}`` (+ optional ``size``); the response
         carries per-item ``applied`` flags.  Retry-safe: the rank guard
         makes replays no-ops."""
-        return self._post(
+        return BatchResult(self._post(
             f"{API_PREFIX}/collections/"
             f"{urllib.parse.quote(name, safe='')}/contents:transition",
-            {"transitions": list(transitions)}, idempotent=True)
+            {"transitions": list(transitions)}, idempotent=True))
 
     def heartbeat_job(self, job_id: str, worker_id: str) -> Dict[str, Any]:
         """Renew a held lease; raises ConflictError once it is lost."""

@@ -1,4 +1,4 @@
-"""The six iDDS daemons (paper Fig. 1 + the steering plane) + the
+"""The seven iDDS daemons (paper Fig. 1 + the steering plane) + the
 WFM-system boundary.
 
   Clerk       requests -> Workflow objects
@@ -8,16 +8,28 @@ WFM-system boundary.
   Transformer input/output association; Work -> Processing(s); DDM calls
   Carrier     Processing -> WFM submit / poll / retry (job attempts)
   Conductor   output availability -> consumer notifications (messaging)
+  Watchdog    cluster coordination: health heartbeats, claim renewal,
+              and adoption of workflows whose head died (the paper's
+              Health table + clean_locking)
 
 Every daemon exposes ``process_once() -> int`` (number of messages
 handled) so the head service can pump deterministically (tests) or spin
 daemon threads (production mode).
+
+Multi-head mode: several head processes run these daemons against ONE
+store and a store-backed bus (messaging.StorePollingBus).  Every
+workflow is owned by exactly one head at a time through the store's
+claim table; each daemon claim-gates the messages it consumes and
+requeues messages for workflows another live head owns.  With the
+default in-process LocalBus the gate degenerates to an always-succeed
+claim against the local store, so single-head behavior is unchanged.
 """
 from __future__ import annotations
 
 import threading
 import time
 import traceback
+import uuid
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
@@ -173,6 +185,16 @@ class Context:
     # still grow new Works, so it must not be reported "finished" even if
     # every existing Work is terminal (threaded-mode status race).
     inflight: Dict[str, int] = field(default_factory=dict)
+    # multi-head ownership plane (the paper's TransformLocking): this
+    # head's stable identity, the wall-clock claim TTL, and a local
+    # cache of the workflow claims this head believes it holds
+    # (workflow_id -> claimed_until).  ``try_own`` hits the store only
+    # once a cached claim has burned half its TTL, so the single-head
+    # fast path costs one dict lookup per gated message.
+    head_id: str = field(
+        default_factory=lambda: f"head-{uuid.uuid4().hex[:8]}")
+    claim_ttl: float = 5.0
+    claimed: Dict[str, float] = field(default_factory=dict)
     lock: threading.RLock = field(default_factory=threading.RLock)
 
     def bump(self, key: str, n: int = 1) -> None:
@@ -187,6 +209,34 @@ class Context:
         with self.lock:
             return self.inflight.get(workflow_id, 0) == 0
 
+    def try_own(self, workflow_id: str) -> bool:
+        """Claim (or confirm) this head's ownership of a workflow.
+
+        The store's compare-and-claim is authoritative; the cache only
+        short-circuits while a claim has more than half its TTL left,
+        so a head that lost its claim (it stopped renewing for > TTL)
+        re-discovers that within half a TTL, before acting on it."""
+        now = time.time()
+        with self.lock:
+            if self.claimed.get(workflow_id, 0.0) - now \
+                    > self.claim_ttl / 2:
+                return True
+        ok = self.store.try_claim("workflow", workflow_id, self.head_id,
+                                  self.claim_ttl, now=now)
+        with self.lock:
+            if ok:
+                self.claimed[workflow_id] = now + self.claim_ttl
+            else:
+                self.claimed.pop(workflow_id, None)
+        return ok
+
+    def disown(self, workflow_id: str) -> None:
+        """Release a workflow claim (its request turned terminal), so
+        cluster claim counts reflect live work only."""
+        with self.lock:
+            self.claimed.pop(workflow_id, None)
+        self.store.release_claim("workflow", workflow_id, self.head_id)
+
 
 class Daemon:
     name = "daemon"
@@ -200,6 +250,23 @@ class Daemon:
 
     def process_once(self) -> int:
         raise NotImplementedError
+
+    def _owned(self, m: M.Message,
+               workflow_id: Optional[str]) -> bool:
+        """Claim-gate one consumed message: True means this head owns
+        the workflow AND has it hydrated, so the message is processed
+        here.  Otherwise the message is requeued — either another live
+        head owns the workflow, or ownership just landed here and the
+        Watchdog's adoption sweep still has to hydrate the object graph
+        from the store.  ``workflow_id`` None (a producer with no
+        routing info, e.g. an external T_OUTPUT_AVAILABLE) passes."""
+        if workflow_id is None:
+            return True
+        if (self.ctx.try_own(workflow_id)
+                and workflow_id in self.ctx.workflows):
+            return True
+        self.ctx.bus.requeue(m)
+        return False
 
     def _idle_wait(self, interval: float) -> None:
         if self.topics:
@@ -228,23 +295,39 @@ class Clerk(Daemon):
     topics = (M.T_NEW_REQUESTS,)
 
     def process_once(self) -> int:
-        msgs = self.ctx.bus.poll(M.T_NEW_REQUESTS)
-        for m in msgs:
+        n = 0
+        for m in self.ctx.bus.poll(M.T_NEW_REQUESTS):
             wf = Workflow.from_json(m.body["workflow"])
+            # claim BEFORE instantiating: in a cluster only the claiming
+            # head may start the workflow; a loser requeues for whoever
+            # owns it.  The message carries the full workflow, so any
+            # head can clerk it — no hydration wait here.
+            if not self.ctx.try_own(wf.workflow_id):
+                self.ctx.bus.requeue(m)
+                continue
+            n += 1
+            rid = m.body.get("request_id")
             with self.ctx.lock:
                 # keep the live object on duplicate delivery (a client
                 # resubmit after recovery): its works are already running
                 if wf.workflow_id not in self.ctx.workflows:
                     self.ctx.workflows[wf.workflow_id] = wf
-                if m.body.get("request_id"):
-                    self.ctx.request_of[wf.workflow_id] = \
-                        m.body["request_id"]
+                if rid:
+                    self.ctx.request_of[wf.workflow_id] = rid
+            if rid is not None and rid not in self.ctx.requests:
+                # submitted through ANOTHER head: its REST layer seeded
+                # its own request mirror; this head must learn the
+                # catalog row or status write-through would skip it
+                info = self.ctx.store.get_request(rid)
+                if info is not None:
+                    with self.ctx.lock:
+                        self.ctx.requests.setdefault(rid, dict(info))
             self.ctx.bump("requests")
             self.ctx.bus.publish(M.T_NEW_WORKFLOWS, {
                 "workflow_id": wf.workflow_id,
-                "request_id": m.body.get("request_id"),
+                "request_id": rid,
             })
-        return len(msgs)
+        return n
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +382,8 @@ class Marshaller(Daemon):
             info["status"] = status
             snapshot = dict(info)
         self.ctx.store.save_request(snapshot)
+        if status == "finished":
+            self.ctx.disown(wf.workflow_id)
 
     def process_once(self) -> int:
         # wf.works mutations happen under ctx.lock so status polls can
@@ -307,6 +392,8 @@ class Marshaller(Daemon):
         # so publishing while holding ctx.lock could deadlock).
         n = 0
         for m in self.ctx.bus.poll(M.T_NEW_WORKFLOWS):
+            if not self._owned(m, m.body.get("workflow_id")):
+                continue
             n += 1
             try:
                 wf = self.ctx.workflows[m.body["workflow_id"]]
@@ -326,15 +413,29 @@ class Marshaller(Daemon):
                 self.ctx.bump("marshaller_errors")
                 traceback.print_exc()
         for m in self.ctx.bus.poll(M.T_WORK_DONE):
+            ent = self.ctx.works.get(m.body["work_id"])
+            wf_hint = m.body.get("workflow_id") or (ent and ent[0])
+            if not self._owned(m, wf_hint):
+                continue
+            if ent is None:
+                # ownership landed here before the adoption sweep
+                # hydrated the work: retry once the graph exists
+                self.ctx.bus.requeue(m)
+                continue
             n += 1
             # per-message isolation: poll() already drained the queue, so
             # an exception that escaped this loop would silently discard
             # every later message in the batch (their workflows would
             # report "running" forever)
             try:
-                wf_id, work = self.ctx.works[m.body["work_id"]]
+                wf_id, work = ent
                 wf = self.ctx.workflows[wf_id]
                 with self.ctx.lock:
+                    if work.condition_evaluated:
+                        # duplicate delivery: the store bus can carry
+                        # both the dead head's original announcement and
+                        # this head's adoption replay of the same event
+                        continue
                     # decrement in the same locked section that
                     # instantiates the successors: a poll never sees
                     # quiescent + all-works terminal while successors are
@@ -390,6 +491,7 @@ class Transformer(Daemon):
 
     # -- helpers ----------------------------------------------------------
     def _make_processing(self, work: Work, files: List[str]) -> Processing:
+        wf_id, _ = self.ctx.works[work.work_id]
         proc = Processing(
             proc_id=_new_id("proc"),
             work_id=work.work_id,
@@ -407,7 +509,9 @@ class Transformer(Daemon):
             self._open_procs.get(work.work_id, 0) + 1)
         self.ctx.store.save_processing(proc.to_dict())
         self.ctx.bump("processings_created")
-        self.ctx.bus.publish(M.T_NEW_PROCESSINGS, {"proc_id": proc.proc_id})
+        self.ctx.bus.publish(M.T_NEW_PROCESSINGS,
+                             {"proc_id": proc.proc_id,
+                              "workflow_id": wf_id})
         return proc
 
     def _try_dispatch(self, work: Work) -> int:
@@ -549,7 +653,9 @@ class Transformer(Daemon):
         self.ctx.store.save_work(wf_id, d)
         self.ctx.bump("works_finished")
         if announce:
-            self.ctx.bus.publish(M.T_WORK_DONE, {"work_id": work.work_id})
+            self.ctx.bus.publish(M.T_WORK_DONE,
+                                 {"work_id": work.work_id,
+                                  "workflow_id": wf_id})
 
     # -- steering (Commander -> Transformer) -------------------------------
     def _handle_control(self, m: M.Message) -> None:
@@ -601,17 +707,26 @@ class Transformer(Daemon):
                 for p in procs:
                     if p.status == ProcessingStatus.NEW:
                         self.ctx.bus.publish(M.T_NEW_PROCESSINGS,
-                                             {"proc_id": p.proc_id})
+                                             {"proc_id": p.proc_id,
+                                              "workflow_id": wf_id})
 
     # -- main loop ---------------------------------------------------------
     def process_once(self) -> int:
         n = 0
         for m in self.ctx.bus.poll(M.T_CMD_TRANSFORMER):
+            if not self._owned(m, m.body.get("workflow_id")):
+                continue
             n += 1
             self._handle_control(m)
         for m in self.ctx.bus.poll(M.T_NEW_WORKS):
+            if not self._owned(m, m.body.get("workflow_id")):
+                continue
+            ent = self.ctx.works.get(m.body["work_id"])
+            if ent is None:
+                self.ctx.bus.requeue(m)  # owned but not hydrated yet
+                continue
             n += 1
-            _, work = self.ctx.works[m.body["work_id"]]
+            _, work = ent
             if work.status.terminated:
                 continue  # cancelled by an abort before activation
             work.status = WorkStatus.ACTIVATED
@@ -637,8 +752,15 @@ class Transformer(Daemon):
                     self._finalize(work)
 
         for m in self.ctx.bus.poll(M.T_PROCESSING_DONE):
+            proc = self.ctx.processings.get(m.body["proc_id"])
+            wf_hint = m.body.get("workflow_id") or (
+                proc and self.ctx.works[proc.work_id][0])
+            if not self._owned(m, wf_hint):
+                continue
+            if proc is None:
+                self.ctx.bus.requeue(m)  # owned but not hydrated yet
+                continue
             n += 1
-            proc = self.ctx.processings[m.body["proc_id"]]
             _, work = self.ctx.works[proc.work_id]
             self._open_procs[work.work_id] = max(
                 0, self._open_procs.get(work.work_id, 1) - 1)
@@ -654,6 +776,7 @@ class Transformer(Daemon):
                 for out in proc.output_files:
                     self.ctx.bus.publish(M.T_OUTPUT_AVAILABLE, {
                         "work_id": work.work_id,
+                        "workflow_id": self.ctx.works[work.work_id][0],
                         "collection": work.output_collection,
                         "file": out,
                         "result": proc.result,
@@ -753,6 +876,8 @@ class Carrier(Daemon):
     def process_once(self) -> int:
         n = 0
         for m in self.ctx.bus.poll(M.T_CMD_CARRIER):
+            if not self._owned(m, m.body.get("workflow_id")):
+                continue
             n += 1
             wf_id, action = m.body["workflow_id"], m.body["action"]
             if action == "resume":
@@ -764,8 +889,23 @@ class Carrier(Daemon):
                             if self._wf_of(p) == wf_id]:
                     del self._running[pid]
         for m in self.ctx.bus.poll(M.T_NEW_PROCESSINGS):
+            proc = self.ctx.processings.get(m.body["proc_id"])
+            wf_hint = m.body.get("workflow_id") or (
+                proc and self._wf_of(proc))
+            if not self._owned(m, wf_hint):
+                continue
+            if proc is None:
+                self.ctx.bus.requeue(m)  # owned but not hydrated yet
+                continue
+            if (proc.proc_id in self._running
+                    or proc.status != ProcessingStatus.NEW):
+                # duplicate delivery: every announcement is published
+                # with the processing at NEW, so anything else means a
+                # dead head's original message arrived after this
+                # head's adoption replay already (re)submitted it
+                n += 1
+                continue
             n += 1
-            proc = self.ctx.processings[m.body["proc_id"]]
             ctrl = self.ctx.control.get(self._wf_of(proc))
             if ctrl == CTRL_ABORTED:
                 continue  # cancelled by command; nothing to run
@@ -916,6 +1056,12 @@ class Conductor(Daemon):
     def process_once(self) -> int:
         n = 0
         for m in self.ctx.bus.poll(M.T_OUTPUT_AVAILABLE):
+            # outputs route to the workflow's owner: its head holds the
+            # authoritative delivery bookkeeping (subscriptions from
+            # other heads are hydrated by the Watchdog).  Outputs with
+            # no workflow routing (external producers) process anywhere.
+            if not self._owned(m, m.body.get("workflow_id")):
+                continue
             n += 1
             self._handle_output(m)
         n += self._retry_pass()
@@ -940,10 +1086,27 @@ class Commander(Daemon):
     name = "commander"
     topics = (M.T_NEW_COMMANDS,)
 
+    def _hydrate_command(self, command_id: str) -> Optional[Command]:
+        """Load a command journaled through ANOTHER head's REST layer
+        (this head owns the target workflow, so it must apply it)."""
+        for c in self.ctx.store.load_commands():
+            if c["command_id"] != command_id:
+                continue
+            with self.ctx.lock:
+                if command_id not in self.ctx.commands:
+                    self.ctx.register_command(Command.from_dict(c))
+                return self.ctx.commands[command_id]
+        return None
+
     def process_once(self) -> int:
-        msgs = self.ctx.bus.poll(M.T_NEW_COMMANDS)
-        for m in msgs:
+        n = 0
+        for m in self.ctx.bus.poll(M.T_NEW_COMMANDS):
+            if not self._owned(m, m.body.get("workflow_id")):
+                continue
+            n += 1
             cmd = self.ctx.commands.get(m.body["command_id"])
+            if cmd is None:
+                cmd = self._hydrate_command(m.body["command_id"])
             if cmd is None or not cmd.pending:
                 continue  # duplicate delivery / already applied
             try:
@@ -960,7 +1123,7 @@ class Commander(Daemon):
             cmd.processed_at = time.time()
             self.ctx.store.save_command(cmd.to_dict())
             self.ctx.bump(f"commands_{cmd.status}")
-        return len(msgs)
+        return n
 
     # -- helpers -----------------------------------------------------------
     def _set_request_status(self, cmd: Command, status: str) -> None:
@@ -1026,6 +1189,7 @@ class Commander(Daemon):
                              {"workflow_id": wf_id, "action": "abort"})
         self.ctx.bus.publish(M.T_CMD_CARRIER,
                              {"workflow_id": wf_id, "action": "abort"})
+        self.ctx.disown(wf_id)  # terminal: stop renewing the claim
         return {"works_cancelled": len(works),
                 "processings_cancelled": len(procs)}
 
@@ -1124,5 +1288,159 @@ class Commander(Daemon):
                 "processings_retried": len(retried_procs)}
 
 
+# ---------------------------------------------------------------------------
+# Watchdog: cluster coordination (health heartbeats + claim sweeping)
+# ---------------------------------------------------------------------------
+
+
+class Watchdog(Daemon):
+    """The cluster-coordination daemon (the paper's ``Health`` table +
+    ``clean_locking``).  Each head's Watchdog
+
+      * heartbeats this head's row in the store's health table and
+        renews every workflow claim the head holds;
+      * sweeps for non-terminal requests whose claim is absent or
+        expired — their head died without releasing — and adopts them
+        through the ``adopt`` callback IDDS wires in (claim-aware
+        scoped recovery), and releases claims this head still holds on
+        terminal requests;
+      * hydrates consumer subscriptions registered through other heads
+        (and absorbs their journaled acks), so this head's Conductor
+        can match outputs against them;
+      * prunes bus messages past the retention window (store bus only).
+
+    Heartbeats, renewals, and pruning return 0 from ``process_once`` so
+    a pump can quiesce; only adoptions and hydrations count as
+    progress.
+    """
+    name = "watchdog"
+    topics = ()
+    bus_retention_s = 300.0
+
+    def __init__(self, ctx: Context, *, heartbeat_interval: float = 1.0,
+                 sweep_interval: Optional[float] = None):
+        super().__init__(ctx)
+        self.heartbeat_interval = heartbeat_interval
+        self.sweep_interval = (sweep_interval if sweep_interval is not None
+                               else max(ctx.claim_ttl / 2.0,
+                                        heartbeat_interval))
+        self.started_at = time.time()
+        # monotonic due-times; everything fires on the first cycle
+        self._hb_due = 0.0
+        self._sweep_due = 0.0
+        self._prune_due = 0.0
+        # IDDS wires its claim-aware recovery here: adopt(workflow_id)
+        # hydrates that workflow's object graph from the store and
+        # replays its in-flight events; returns #entities restored
+        self.adopt: Optional[Callable[[str], int]] = None
+
+    def process_once(self) -> int:
+        now = time.monotonic()
+        moved = 0
+        if now >= self._hb_due:
+            self._hb_due = now + self.heartbeat_interval
+            self._heartbeat()
+        if now >= self._sweep_due:
+            self._sweep_due = now + self.sweep_interval
+            moved += self._sweep()
+        if now >= self._prune_due:
+            self._prune_due = now + self.bus_retention_s / 4
+            prune = getattr(self.ctx.bus, "prune", None)
+            if callable(prune):
+                prune(self.bus_retention_s)
+        return moved
+
+    def _heartbeat(self) -> None:
+        ctx = self.ctx
+        with ctx.lock:
+            owned = list(ctx.claimed)
+        now = time.time()
+        if owned:
+            renewed = ctx.store.renew_claims("workflow", owned,
+                                             ctx.head_id, ctx.claim_ttl,
+                                             now=now)
+            if renewed == len(owned):
+                with ctx.lock:
+                    for wf_id in owned:
+                        ctx.claimed[wf_id] = now + ctx.claim_ttl
+            else:
+                # a claim expired and was stolen (e.g. this head stalled
+                # past the TTL): trust only what the store confirms
+                held = {c["entity_id"]
+                        for c in ctx.store.list_claims("workflow")
+                        if c["owner_id"] == ctx.head_id}
+                with ctx.lock:
+                    for wf_id in owned:
+                        if wf_id in held:
+                            ctx.claimed[wf_id] = now + ctx.claim_ttl
+                        else:
+                            ctx.claimed.pop(wf_id, None)
+        with ctx.lock:
+            n_claims = len(ctx.claimed)
+        ctx.store.save_health({
+            "head_id": ctx.head_id,
+            "started_at": self.started_at,
+            "last_heartbeat": time.time(),
+            "data": {"bus": getattr(ctx.bus, "name", "local"),
+                     "claims": n_claims},
+        })
+
+    def _sweep(self) -> int:
+        ctx = self.ctx
+        now = time.time()
+        claims = {c["entity_id"]: c
+                  for c in ctx.store.list_claims("workflow")}
+        moved = 0
+        for info in ctx.store.list_requests():
+            wf_id = info.get("workflow_id")
+            if not wf_id:
+                continue
+            if info.get("status") in ("finished", "aborted"):
+                # housekeeping: a straggler message consumed after the
+                # request turned terminal can have re-claimed it; stop
+                # renewing (released claims don't count toward 'moved'
+                # or a pump would never quiesce)
+                c = claims.get(wf_id)
+                if c is not None and c["owner_id"] == ctx.head_id:
+                    ctx.disown(wf_id)
+                continue
+            c = claims.get(wf_id)
+            if (c is not None and c["owner_id"] != ctx.head_id
+                    and c["claimed_until"] >= now):
+                continue  # another live head owns it
+            if (wf_id in ctx.workflows and c is not None
+                    and c["owner_id"] == ctx.head_id):
+                continue  # already ours and hydrated
+            if not ctx.try_own(wf_id):
+                continue  # lost the adoption race
+            if self.adopt is not None:
+                moved += self.adopt(wf_id)
+        moved += self._refresh_subscriptions()
+        return moved
+
+    def _refresh_subscriptions(self) -> int:
+        """Hydrate subscriptions registered through other heads, and
+        absorb acks they journaled, so this head's Conductor matches
+        outputs against them and stops re-notifying deliveries acked
+        elsewhere.  Cross-head delivery stays at-least-once: two heads
+        may each notify a delivery before the journaled ack lands."""
+        changed = 0
+        for sd in self.ctx.store.load_subscriptions():
+            with self.ctx.lock:
+                sub = self.ctx.subscriptions.get(sd["sub_id"])
+                if sub is None:
+                    self.ctx.subscriptions[sd["sub_id"]] = \
+                        Subscription.from_dict(sd)
+                    changed += 1
+                    continue
+                for key, dd in (sd.get("deliveries") or {}).items():
+                    local = sub.deliveries.get(key)
+                    if (local is not None and dd.get("status") == "acked"
+                            and local.status != "acked"):
+                        local.set_status("acked")
+                        changed += 1
+        return changed
+
+
 ALL_DAEMONS = (Clerk, Marshaller, Commander, Transformer, Carrier,
-               Conductor)
+               Conductor, Watchdog)

@@ -17,13 +17,15 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Set
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Set, Union
 
 from repro.core import messaging as M
 from repro.core.commands import (CTRL_ABORTED, CTRL_SUSPENDED,
                                  VALID_COMMAND_ACTIONS, Command,
                                  CommandConflict)
-from repro.core.daemons import ALL_DAEMONS, Context, Transformer, WFMExecutor
+from repro.core.daemons import (ALL_DAEMONS, Context, Transformer, Watchdog,
+                                WFMExecutor)
 from repro.core.ddm import DDM, InMemoryDDM
 from repro.core.delivery import DELIVERY_STATUSES, Subscription, content_key
 from repro.core.requests import Request
@@ -43,8 +45,18 @@ class IDDS:
                  fault_hook: Optional[Callable] = None,
                  tokens: Optional[Set[str]] = None,
                  store: Optional[Store] = None,
-                 executor: Optional[WFMExecutor] = None):
-        bus = M.MessageBus()
+                 executor: Optional[WFMExecutor] = None,
+                 bus: Union[str, M.BusBackend] = "local",
+                 head_id: Optional[str] = None,
+                 claim_ttl: float = 5.0):
+        store = store if store is not None else InMemoryStore()
+        head_id = head_id or f"head-{uuid.uuid4().hex[:8]}"
+        # bus= selects the backend: "local" (in-process, single head),
+        # "store" (journal events through the store so peer heads' daemons
+        # wake on this head's announcements), or a pre-built BusBackend
+        # (tests sharing one bus across two in-process heads)
+        if isinstance(bus, str):
+            bus = M.make_bus(bus, store=store, head_id=head_id)
         # executor= overrides the inline WFM: pass a DistributedWFM
         # (repro.core.scheduler) to dispatch Processings to pull-based
         # remote workers instead of executing them in-process
@@ -55,7 +67,9 @@ class IDDS:
             bus=bus,
             ddm=ddm if ddm is not None else InMemoryDDM(),
             wfm=wfm,
-            store=store if store is not None else InMemoryStore(),
+            store=store,
+            head_id=head_id,
+            claim_ttl=claim_ttl,
         )
         wfm.attach(self.ctx)
         # a bindable DDM (CarouselDDM) gets the head's bus + store, so
@@ -65,6 +79,11 @@ class IDDS:
         if callable(bind):
             bind(bus=self.ctx.bus, store=self.ctx.store)
         self.daemons = [cls(self.ctx) for cls in ALL_DAEMONS]
+        # the Watchdog adopts workflows whose head died through this
+        # head's claim-aware scoped recovery
+        self.watchdog = next(d for d in self.daemons
+                             if isinstance(d, Watchdog))
+        self.watchdog.adopt = self._adopt_workflow
         self._tokens = tokens  # None -> auth disabled (dev mode)
         # shared with Context so the Marshaller can write request status
         # transitions through to the catalog as they happen
@@ -142,15 +161,35 @@ class IDDS:
                                    token=token).to_json())
 
     def request_status(self, request_id: str) -> Dict[str, Any]:
-        shared = self._requests[request_id]
+        shared = self._requests.get(request_id)
+        if shared is None:
+            # not in this head's mirror: the request was submitted
+            # through another head.  Serve the journaled catalog row
+            # (KeyError -> 404 when the store has no row either).
+            row = self.ctx.store.get_request(request_id)
+            if row is None:
+                raise KeyError(request_id)
+            with self.ctx.lock:
+                shared = self._requests.setdefault(request_id, dict(row))
         info = dict(shared)
         wf = self.ctx.workflows.get(info["workflow_id"])
+        if wf is None:
+            # another head owns this workflow: refresh from the catalog
+            # per poll — the owner writes status transitions through as
+            # they happen, and this head must not serve its stale seed
+            row = self.ctx.store.get_request(request_id)
+            if row is not None:
+                with self.ctx.lock:
+                    shared.update(row)
+                info = dict(shared)
         with self.ctx.lock:
             ctrl = self.ctx.control.get(info["workflow_id"])
             cmds = list(self.ctx.commands_by_request.get(request_id, ()))
         # pollers distinguish "suspended" from "stuck": the flag plus the
-        # command tally ride on every status response
-        info["suspended"] = ctrl == CTRL_SUSPENDED
+        # command tally ride on every status response (the catalog row's
+        # flag stands in when another head owns the workflow)
+        info["suspended"] = (ctrl == CTRL_SUSPENDED if wf is not None
+                             else bool(info.get("suspended")))
         info["commands"] = {"total": len(cmds),
                             "pending": sum(1 for c in cmds if c.pending)}
         if wf is not None:
@@ -248,6 +287,14 @@ class IDDS:
             raise ValueError(
                 f"invalid action {action!r}; expected one of "
                 f"{', '.join(VALID_COMMAND_ACTIONS)}")
+        if request_id not in self._requests:
+            # submitted through another head: learn the catalog row
+            # (KeyError -> 404 when the store has no row either)
+            row = self.ctx.store.get_request(request_id)
+            if row is None:
+                raise KeyError(request_id)
+            with self.ctx.lock:
+                self._requests.setdefault(request_id, dict(row))
         with self.ctx.lock:
             info = self._requests[request_id]  # KeyError -> 404
             if command_id and command_id in self.ctx.commands:
@@ -291,7 +338,9 @@ class IDDS:
         # store would be lost by a crash; the reverse is replayed
         self.ctx.store.save_command(d)
         self.ctx.bus.publish(M.T_NEW_COMMANDS,
-                             {"command_id": cmd.command_id})
+                             {"command_id": cmd.command_id,
+                              "request_id": request_id,
+                              "workflow_id": wf_id})
         return d
 
     def abort(self, request_id: str, **kw) -> Dict[str, Any]:
@@ -584,7 +633,8 @@ class IDDS:
         return dict(self.ctx.stats)
 
     # ------------------------------------------------------------- recovery
-    def recover(self) -> Dict[str, int]:
+    def recover(self, *, workflow_ids: Optional[Set[str]] = None
+                ) -> Dict[str, int]:
         """Reload persisted state from the store and re-enqueue whatever
         was in flight when the previous head service died.
 
@@ -593,6 +643,13 @@ class IDDS:
         drain.  Idempotent: entities already known to this instance are
         skipped, so running it twice cannot duplicate works or
         processings.  Returns per-entity recovery counts.
+
+        ``workflow_ids`` scopes the pass to those workflows (the
+        Watchdog's adoption path: hydrate ONE dead head's workflow
+        without touching live peers' state).  A scoped pass skips the
+        cluster-shared planes — subscriptions (the Watchdog hydrates
+        them separately) and lease orphan-dropping (peer heads' leases
+        are alive, not orphans).
         """
         store = self.ctx.store
         counts = {"requests": 0, "workflows": 0, "works": 0,
@@ -617,6 +674,9 @@ class IDDS:
                     [FileRef.from_dict(f) for f in coll["files"]])
                 counts["collections"] += 1
             for r in store.list_requests():
+                if (workflow_ids is not None
+                        and r.get("workflow_id") not in workflow_ids):
+                    continue
                 if r["request_id"] not in self._requests:
                     self._requests[r["request_id"]] = dict(r)
                     counts["requests"] += 1
@@ -632,14 +692,18 @@ class IDDS:
             # delivery records) come back verbatim; a delivery
             # journaled `notified` is re-notified by the Conductor's
             # retry pass (its notification died with the old bus)
-            for s in store.load_subscriptions():
-                if s["sub_id"] in self.ctx.subscriptions:
-                    continue
-                self.ctx.subscriptions[s["sub_id"]] = \
-                    Subscription.from_dict(s)
-                counts["subscriptions"] += 1
+            if workflow_ids is None:
+                for s in store.load_subscriptions():
+                    if s["sub_id"] in self.ctx.subscriptions:
+                        continue
+                    self.ctx.subscriptions[s["sub_id"]] = \
+                        Subscription.from_dict(s)
+                    counts["subscriptions"] += 1
             new_cmds: List[Command] = []
             for c in store.load_commands():
+                if (workflow_ids is not None
+                        and c.get("workflow_id") not in workflow_ids):
+                    continue
                 if c["command_id"] in self.ctx.commands:
                     continue
                 cmd = Command.from_dict(c)
@@ -647,6 +711,9 @@ class IDDS:
                 new_cmds.append(cmd)
                 counts["commands"] += 1
             for d in store.load_workflows():
+                if (workflow_ids is not None
+                        and d["workflow_id"] not in workflow_ids):
+                    continue
                 if d["workflow_id"] in self.ctx.workflows:
                     continue
                 wf = Workflow.from_dict(d)
@@ -663,6 +730,10 @@ class IDDS:
                 new_works.append((wf_id, w))
                 counts["works"] += 1
             for pd in store.load_processings():
+                if pd["work_id"] not in self.ctx.works:
+                    # a peer head's processing (scoped pass), or a row
+                    # with no journaled work — never requeue those here
+                    continue
                 if pd["proc_id"] in self.ctx.processings:
                     p = self.ctx.processings[pd["proc_id"]]
                 else:
@@ -676,6 +747,20 @@ class IDDS:
             for wf in new_wfs:
                 if wf.works:
                     self.ctx.started_workflows.add(wf.workflow_id)
+        if workflow_ids is None:
+            # full recovery asserts this head is THE head now: claims
+            # held by the dead predecessor are stale by definition, so
+            # take them over without waiting out their TTL.  (A scoped
+            # adoption pass never does this — the Watchdog only adopts
+            # claims that already expired.)
+            stale = {c["entity_id"]: c
+                     for c in store.list_claims("workflow")}
+            for wf in new_wfs:
+                c = stale.get(wf.workflow_id)
+                if c is not None and c["owner_id"] != self.ctx.head_id:
+                    store.release_claim("workflow", wf.workflow_id,
+                                        c["owner_id"])
+                self.ctx.try_own(wf.workflow_id)
         # publishes happen outside ctx.lock (bus subscribers may take it)
         for wf in new_wfs:
             if not wf.works:
@@ -691,7 +776,8 @@ class IDDS:
                     # then evaluates conditions exactly once)
                     self.ctx.inflight_add(wf_id, 1)
                     self.ctx.bus.publish(M.T_WORK_DONE,
-                                         {"work_id": w.work_id})
+                                         {"work_id": w.work_id,
+                                          "workflow_id": wf_id})
                     counts["replayed_events"] += 1
             else:
                 transformer.restore(w, procs_by_work.get(w.work_id, []))
@@ -709,16 +795,20 @@ class IDDS:
             p.error = None
             store.save_processing(p.to_dict())
             self.ctx.bus.publish(M.T_NEW_PROCESSINGS,
-                                 {"proc_id": p.proc_id})
+                                 {"proc_id": p.proc_id,
+                                  "workflow_id":
+                                      self.ctx.works[p.work_id][0]})
             counts["requeued_processings"] += 1
         # leases journaled by the old head's scheduler are orphans: the
         # jobs they covered were requeued above (non-terminal processings
         # are re-announced), the new scheduler starts with an empty lease
         # table, and a stale worker reporting against the dead lease gets
-        # a 409 — so dropping the rows is the whole requeue
-        for row in store.load_leases():
-            store.delete_lease(row["job_id"])
-            counts["orphaned_leases"] += 1
+        # a 409 — so dropping the rows is the whole requeue.  Scoped
+        # adoption must NOT do this: peer heads' leases are live.
+        if workflow_ids is None:
+            for row in store.load_leases():
+                store.delete_lease(row["job_id"])
+                counts["orphaned_leases"] += 1
         # commands journaled pending but never applied (or applied but
         # not journaled done) died with the old Commander: replay them.
         # Applying is idempotent against already-reflected state, so the
@@ -726,9 +816,54 @@ class IDDS:
         for cmd in new_cmds:
             if cmd.pending:
                 self.ctx.bus.publish(M.T_NEW_COMMANDS,
-                                     {"command_id": cmd.command_id})
+                                     {"command_id": cmd.command_id,
+                                      "request_id": cmd.request_id,
+                                      "workflow_id": cmd.workflow_id})
                 counts["replayed_commands"] += 1
         return counts
+
+    def _adopt_workflow(self, workflow_id: str) -> int:
+        """Watchdog adoption callback: claim-aware scoped recovery of
+        one workflow whose previous head died.  Returns how many
+        entities/events were restored (0 when everything was already
+        live, so a pump can quiesce)."""
+        counts = self.recover(workflow_ids={workflow_id})
+        n = sum(counts.values())
+        if n:
+            self.ctx.bump("workflows_adopted")
+        return n
+
+    # -------------------------------------------------------------- cluster
+    def cluster_info(self) -> Dict[str, Any]:
+        """The cluster as observed through the shared store: every head
+        that heartbeated the health table, its heartbeat age, and the
+        live (unexpired) workflow claims per head (GET /v1/cluster).
+        A head is reported alive while its heartbeat is younger than
+        the claim TTL — the horizon after which its claims become
+        stealable anyway."""
+        now = time.time()
+        by_owner: Dict[str, int] = {}
+        for c in self.ctx.store.list_claims("workflow"):
+            if c["claimed_until"] >= now:
+                by_owner[c["owner_id"]] = by_owner.get(c["owner_id"], 0) + 1
+        heads = []
+        for h in self.ctx.store.load_health():
+            age = max(0.0, now - h["last_heartbeat"])
+            heads.append({
+                "head_id": h["head_id"],
+                "started_at": h["started_at"],
+                "last_heartbeat": h["last_heartbeat"],
+                "heartbeat_age_s": round(age, 3),
+                "alive": age < self.ctx.claim_ttl,
+                "claims": by_owner.get(h["head_id"], 0),
+                "data": h.get("data") or {},
+            })
+        heads.sort(key=lambda h: h["head_id"])
+        return {"head_id": self.ctx.head_id,
+                "bus": getattr(self.ctx.bus, "name", "local"),
+                "claim_ttl": self.ctx.claim_ttl,
+                "heads": heads, "total": len(heads),
+                "claims": sum(by_owner.values())}
 
     # --------------------------------------------------------------- execution
     def pump(self, max_rounds: int = 100_000) -> int:
@@ -769,10 +904,16 @@ class IDDS:
         self.ctx.wfm.shutdown()
 
     def close(self) -> None:
-        """Graceful teardown: stop the daemons, stop any DDM staging
-        pools, then close the store."""
+        """Graceful teardown: stop the daemons, release this head's
+        workflow claims (a peer head can adopt immediately instead of
+        waiting out the TTL), stop any DDM staging pools, then close
+        the store."""
         if self._threads:
             self.stop()
+        with self.ctx.lock:
+            owned = list(self.ctx.claimed)
+        for wf_id in owned:
+            self.ctx.disown(wf_id)
         shut = getattr(self.ctx.ddm, "shutdown", None)
         if callable(shut):
             shut()

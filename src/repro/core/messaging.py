@@ -1,10 +1,29 @@
-"""In-process message bus (the paper's ActiveMQ boundary).
+"""Pluggable message bus (the paper's ActiveMQ boundary).
 
-Daemons never call each other directly — everything crosses the bus, so a
-real deployment swaps this class for an AMQP/STOMP client without touching
-daemon logic.  Thread-safe; supports both queue semantics (each message
-consumed once, round-robin across consumers of a topic) and broadcast
-subscriptions (Conductor -> consumer notifications).
+Daemons never call each other directly — everything crosses the bus, so
+a real deployment swaps the backend for an AMQP/STOMP client without
+touching daemon logic.  Two backends ship here, selected via
+``IDDS(bus=...)`` / ``repro.core.rest --bus``:
+
+  * :class:`LocalBus`        — in-process deques + a condition variable;
+                               zero overhead, single head only.  This is
+                               the pre-multi-head ``MessageBus`` (the old
+                               name stays importable).
+  * :class:`StorePollingBus` — journals every message through the
+                               store's ``bus_messages`` table, so a
+                               second head's daemons wake on the first
+                               head's announcements.  Work-queue topics
+                               are consumed exactly once cluster-wide
+                               (atomic per-row compare-and-set);
+                               broadcast topics (collection updates,
+                               consumer notifications) are cursor-read
+                               by every head independently.
+
+Both are thread-safe and expose the same surface: queue semantics
+(publish/poll/wait/wait_any/depth), broadcast subscriptions
+(Conductor -> consumer notifications), and ``requeue`` — redelivery of
+a message a daemon consumed but cannot process because another live
+head owns its workflow (see daemons.Context.try_own).
 """
 from __future__ import annotations
 
@@ -24,7 +43,45 @@ class Message:
     ts: float
 
 
-class MessageBus:
+class BusBackend:
+    """The surface daemons program against.  ``poll``/``wait`` consume;
+    ``wait_any`` only detects; ``subscribe`` registers a broadcast
+    callback fired once per message (on the publishing head for local
+    publishes, on the first fetching head for cross-head traffic)."""
+
+    #: backend identifier surfaced in /v1/healthz and /v1/cluster
+    name = "abstract"
+
+    def publish(self, topic: str, body: Dict[str, Any]) -> Message:
+        raise NotImplementedError
+
+    def requeue(self, msg: Message) -> None:
+        """Put a consumed message back for redelivery (possibly to
+        another head).  Not counted in ``published``; never re-fires
+        broadcast subscribers."""
+        raise NotImplementedError
+
+    def poll(self, topic: str, max_n: int = 0) -> List[Message]:
+        raise NotImplementedError
+
+    def wait(self, topic: str, timeout: float = 1.0) -> Optional[Message]:
+        raise NotImplementedError
+
+    def wait_any(self, topics: Iterable[str],
+                 timeout: float = 1.0) -> bool:
+        raise NotImplementedError
+
+    def depth(self, topic: str) -> int:
+        raise NotImplementedError
+
+    def subscribe(self, topic: str,
+                  callback: Callable[[Message], None]) -> None:
+        raise NotImplementedError
+
+
+class LocalBus(BusBackend):
+    name = "local"
+
     def __init__(self) -> None:
         self._lock = threading.RLock()
         self._queues: Dict[str, Deque[Message]] = collections.defaultdict(
@@ -45,6 +102,13 @@ class MessageBus:
                 cb(msg)
             self._cv.notify_all()
             return msg
+
+    def requeue(self, msg: Message) -> None:
+        # single-process: the only consumers are this head's daemons, so
+        # a plain re-append suffices (no backoff, no subscriber re-fire)
+        with self._cv:
+            self._queues[msg.topic].append(msg)
+            self._cv.notify_all()
 
     def poll(self, topic: str, max_n: int = 0) -> List[Message]:
         """Consume up to max_n messages (0 = drain)."""
@@ -92,6 +156,163 @@ class MessageBus:
             self._subs[topic].append(callback)
 
 
+# the pre-multi-head name; external code may still instantiate it
+MessageBus = LocalBus
+
+
+class StorePollingBus(BusBackend):
+    """Store-backed bus: publishes journal into ``bus_messages`` and
+    consumption is a poll against the shared store, so every head in
+    the cluster sees every announcement.
+
+    Delivery is at-least-once per topic class: queue topics are taken
+    exactly once cluster-wide (per-row compare-and-set in the store);
+    broadcast topics advance a per-head in-memory cursor initialised at
+    the journal's high-water mark on boot — a freshly started head does
+    not replay historical broadcasts, because ``recover()`` already
+    rebuilds that state from the catalogs.
+
+    ``wait``/``wait_any`` are sleep-polls at ``poll_interval`` (there is
+    no cross-process condition variable over SQLite); the interval
+    bounds cross-head wake latency.
+    """
+
+    name = "store"
+
+    def __init__(self, store: Any, head_id: str, *,
+                 poll_interval: float = 0.02,
+                 requeue_delay: float = 0.05) -> None:
+        self.store = store
+        self.head_id = head_id
+        self.poll_interval = float(poll_interval)
+        self.requeue_delay = float(requeue_delay)
+        self._lock = threading.RLock()
+        self._subs: Dict[str, List[Callable[[Message], None]]] = (
+            collections.defaultdict(list))
+        self._cursors: Dict[str, int] = dict.fromkeys(
+            BROADCAST_TOPICS, store.bus_max_id())
+        self.published = 0
+
+    # -- queue semantics ----------------------------------------------------
+    def publish(self, topic: str, body: Dict[str, Any]) -> Message:
+        msg_id = self.store.bus_publish(topic, dict(body),
+                                        origin=self.head_id)
+        msg = Message(topic, dict(body), msg_id, time.time())
+        self.published += 1
+        # local subscribers fire at publish time (LocalBus parity);
+        # other heads fire theirs when they first fetch the row —
+        # origin-keyed so nobody fires twice
+        with self._lock:
+            subs = tuple(self._subs.get(topic, ()))
+        for cb in subs:
+            cb(msg)
+        return msg
+
+    def requeue(self, msg: Message) -> None:
+        # not_before pushes redelivery past the next poll tick so the
+        # requeueing head does not busy-spin re-consuming a message it
+        # already knows it cannot process
+        self.store.bus_publish(msg.topic, dict(msg.body),
+                               origin=self.head_id,
+                               not_before=time.time()
+                               + self.requeue_delay)
+
+    def _to_messages(self, rows: List[Dict[str, Any]],
+                     topic: str) -> List[Message]:
+        msgs = []
+        with self._lock:
+            subs = tuple(self._subs.get(topic, ()))
+        for r in rows:
+            m = Message(r["topic"], r["body"], r["msg_id"], time.time())
+            msgs.append(m)
+            if subs and r.get("origin") != self.head_id:
+                for cb in subs:
+                    cb(m)
+        return msgs
+
+    def poll(self, topic: str, max_n: int = 0) -> List[Message]:
+        if topic in BROADCAST_TOPICS:
+            with self._lock:
+                cursor = self._cursors.get(topic, 0)
+                rows = self.store.bus_fetch_after([topic], cursor,
+                                                  max_n=max_n)
+                if rows:
+                    self._cursors[topic] = rows[-1]["msg_id"]
+        else:
+            rows = self.store.bus_consume([topic], self.head_id,
+                                          max_n=max_n)
+        return self._to_messages(rows, topic)
+
+    def wait(self, topic: str, timeout: float = 1.0) -> Optional[Message]:
+        deadline = time.monotonic() + timeout
+        while True:
+            msgs = self.poll(topic, max_n=1)
+            if msgs:
+                return msgs[0]
+            rem = deadline - time.monotonic()
+            if rem <= 0:
+                return None
+            time.sleep(min(self.poll_interval, rem))
+
+    def _available(self, topics: Iterable[str]) -> bool:
+        queue_topics = []
+        for t in topics:
+            if t in BROADCAST_TOPICS:
+                with self._lock:
+                    cursor = self._cursors.get(t, 0)
+                if self.store.bus_fetch_after([t], cursor, max_n=1):
+                    return True
+            else:
+                queue_topics.append(t)
+        return bool(queue_topics
+                    and self.store.bus_depth(queue_topics) > 0)
+
+    def wait_any(self, topics: Iterable[str],
+                 timeout: float = 1.0) -> bool:
+        topics = tuple(topics)
+        deadline = time.monotonic() + timeout
+        while True:
+            if self._available(topics):
+                return True
+            rem = deadline - time.monotonic()
+            if rem <= 0:
+                return False
+            time.sleep(min(self.poll_interval, rem))
+
+    def depth(self, topic: str) -> int:
+        if topic in BROADCAST_TOPICS:
+            with self._lock:
+                cursor = self._cursors.get(topic, 0)
+            return len(self.store.bus_fetch_after([topic], cursor))
+        return self.store.bus_depth([topic])
+
+    # -- broadcast semantics --------------------------------------------------
+    def subscribe(self, topic: str,
+                  callback: Callable[[Message], None]) -> None:
+        with self._lock:
+            self._subs[topic].append(callback)
+
+    # -- maintenance ---------------------------------------------------------
+    def prune(self, retention_s: float = 300.0) -> int:
+        """Drop journal rows older than ``retention_s`` (consumed or
+        broadcast-read; the Watchdog calls this periodically so the
+        table does not grow without bound)."""
+        return self.store.bus_prune(time.time() - retention_s)
+
+
+def make_bus(kind: str, *, store: Any = None,
+             head_id: str = "head") -> BusBackend:
+    """Factory behind ``--bus local|store`` / ``IDDS(bus=...)``."""
+    if kind == "local":
+        return LocalBus()
+    if kind == "store":
+        if store is None:
+            raise ValueError("bus 'store' requires a store")
+        return StorePollingBus(store, head_id)
+    raise ValueError(f"unknown bus backend {kind!r}"
+                     " (expected 'local' or 'store')")
+
+
 # Canonical topic names (Fig. 1 arrows)
 T_NEW_REQUESTS = "idds.requests.new"          # client -> Clerk
 T_NEW_WORKFLOWS = "idds.workflows.new"        # Clerk -> Marshaller
@@ -106,3 +327,9 @@ T_COLLECTION_UPDATED = "ddm.collections.updated"  # DDM -> Transformer
 T_NEW_COMMANDS = "idds.commands.new"              # client -> Commander
 T_CMD_TRANSFORMER = "idds.commands.transformer"   # Commander -> Transformer
 T_CMD_CARRIER = "idds.commands.carrier"           # Commander -> Carrier
+
+# Topics every head must observe rather than any one head consume: a
+# collection-availability event or consumer notification is relevant to
+# whichever head owns the interested workflow (or to an external
+# consumer), so queue semantics would let the wrong head swallow it.
+BROADCAST_TOPICS = frozenset({T_COLLECTION_UPDATED, T_CONSUMER_NOTIFY})

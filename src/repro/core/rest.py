@@ -47,15 +47,23 @@ details + deprecation table in docs/rest_api.md):
   POST /v1/jobs/<id>/complete              worker: report result/error
   GET  /v1/workers                         worker registry
   GET  /v1/stats                           daemon counters
-  GET  /v1/healthz                         liveness + store backend +
+  GET  /v1/cluster                         head registry: heartbeat
+                                           ages, live-claim counts
+  GET  /v1/healthz                         liveness + head identity +
+                                           bus backend + store backend +
                                            scheduler queue depths +
                                            pending-command count
                                            (never requires auth)
 
-Every pre-v1 unversioned path is kept as a **deprecated alias**: same
-handler, same semantics, plus a ``Deprecation: true`` response header
-and a ``Link: </v1/...>; rel="successor-version"`` pointer.  The v1-only
-resources (transforms/processings/commands) have no unversioned alias.
+Legacy (pre-v1, unversioned) paths are governed by ``legacy_routes``:
+in ``"warn"`` mode (default) they answer normally plus a
+``Deprecation: true`` response header and a
+``Link: </v1/...>; rel="successor-version"`` pointer; in ``"off"``
+mode they return **410 Gone** with a JSON envelope whose
+``error.successor`` names the /v1 replacement.  ``/healthz`` is exempt
+(liveness probes predate versioning and must keep answering).  The
+v1-only resources (transforms/processings/commands/cluster) have no
+unversioned alias in either mode.
 
 The /jobs endpoints are the pull-based execution plane (paper's pilot
 model): they 400 with type ``NotDistributed`` unless the head runs a
@@ -110,10 +118,14 @@ class RestGateway:
     def __init__(self, idds: Optional[IDDS] = None, *,
                  host: str = "127.0.0.1", port: int = 0,
                  tokens: Optional[Set[str]] = None,
-                 manage_idds: bool = True, quiet: bool = True):
+                 manage_idds: bool = True, quiet: bool = True,
+                 legacy_routes: str = "warn"):
         self.idds = idds if idds is not None else IDDS(tokens=tokens)
         if tokens is not None and idds is not None:
             self.idds._tokens = set(tokens)
+        if legacy_routes not in ("warn", "off"):
+            raise ValueError("legacy_routes must be 'warn' or 'off'")
+        self.legacy_routes = legacy_routes
         self.host = host
         self._requested_port = port
         self.manage_idds = manage_idds
@@ -337,11 +349,15 @@ class RestGateway:
                 "BadRequest",
                 f"at most {MAX_TRANSITION_ITEMS} transitions per batch")
         try:
-            return 200, self.idds.transition_contents(name, transitions)
+            out = self.idds.transition_contents(name, transitions)
         except ValueError as e:
             return 400, _err("BadRequest", str(e))
         except KeyError:
             return 404, _err("NotFound", f"unknown collection {name!r}")
+        return 200, batch_envelope(out["results"], ok_key="applied",
+                                   collection=out["collection"],
+                                   applied=out["applied"],
+                                   skipped=out["skipped"])
 
     # -- delivery plane (consumer subscriptions) --------------------------
     def handle_subscribe(self, body: bytes, token: str) -> Tuple[int, Dict]:
@@ -415,6 +431,13 @@ class RestGateway:
         self.idds._auth(token)
         return 200, self.idds.stats
 
+    def handle_cluster(self, token: str) -> Tuple[int, Dict]:
+        """Head registry for the ownership plane: every head that has
+        heartbeated into the store's health table, with heartbeat age,
+        liveness verdict and live workflow-claim count."""
+        self.idds._auth(token)
+        return 200, self.idds.cluster_info()
+
     # -- execution plane (pull-based workers) ----------------------------
     def _scheduler(self):
         sched = self.idds.scheduler
@@ -487,7 +510,7 @@ class RestGateway:
             return 400, _err("BadRequest",
                              f"at most {MAX_BATCH_ITEMS} job_ids per batch")
         results = self._scheduler().heartbeat_many(worker_id, job_ids)
-        return 200, _batch_envelope(results)
+        return 200, batch_envelope(_job_batch_items(results))
 
     def handle_jobs_complete(self, body: bytes,
                              token: str) -> Tuple[int, Dict]:
@@ -520,7 +543,7 @@ class RestGateway:
                 return 400, _err("BadRequest", "error must be a string")
             triples.append((it["job_id"], result, error))
         results = self._scheduler().complete_many(worker_id, triples)
-        return 200, _batch_envelope(results)
+        return 200, batch_envelope(_job_batch_items(results))
 
     def handle_job_heartbeat(self, job_id: str, body: bytes,
                              token: str) -> Tuple[int, Dict]:
@@ -576,6 +599,10 @@ class RestGateway:
         contents, deliveries = self._delivery_tallies()
         return 200, {
             "status": "ok",
+            # head identity: which cluster member answered this probe,
+            # and over which bus backend it coordinates with its peers
+            "head_id": self.idds.ctx.head_id,
+            "bus": getattr(self.idds.ctx.bus, "name", "local"),
             "daemons": self.idds.daemon_liveness(),
             "store": type(self.idds.store).__name__,
             "distributed": sched is not None,
@@ -599,15 +626,31 @@ def _err(type_: str, message: str) -> Dict[str, Dict[str, str]]:
     return {"error": {"type": type_, "message": message}}
 
 
-def _batch_envelope(results: List[Dict[str, Any]]) -> Dict[str, Any]:
-    """Wrap scheduler per-item results in the wire format: each item
-    carries its own ``status`` (200 or 409) and, on failure, the same
+def batch_envelope(results: List[Dict[str, Any]], *,
+                   ok_key: str = "ok",
+                   **extra: Any) -> Dict[str, Any]:
+    """The ONE wire shape for every batch verb (``jobs/heartbeat``,
+    ``jobs/complete``, ``contents:transition``): per-item envelopes
+    under ``results`` plus top-level ``ok``/``failed`` tallies, so a
+    single bad item can never poison the batch.  ``ok_key`` names the
+    per-item success flag (``"ok"`` for scheduler verbs, ``"applied"``
+    for content transitions); ``extra`` carries verb-specific totals
+    (e.g. ``applied``/``skipped``) into the top level.  Mirrored
+    client-side by :class:`repro.core.client.BatchResult`."""
+    ok = sum(1 for r in results if r.get(ok_key))
+    env: Dict[str, Any] = {"results": results, "ok": ok,
+                           "failed": len(results) - ok}
+    env.update(extra)
+    return env
+
+
+def _job_batch_items(results: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Scheduler per-item results -> wire items: each carries its own
+    ``status`` (200 or 409) and, on failure, the same
     ``{"error": {"type", "message"}}`` shape as a top-level error."""
     items = []
-    ok = 0
     for r in results:
         if r.get("ok"):
-            ok += 1
             item = dict(r)
             item["status"] = 200
             items.append(item)
@@ -616,7 +659,7 @@ def _batch_envelope(results: List[Dict[str, Any]]) -> Dict[str, Any]:
                           "status": 409,
                           "error": {"type": "Conflict",
                                     "message": r["error"]}})
-    return {"results": items, "ok": ok, "failed": len(items) - ok}
+    return items
 
 
 class _NotDistributed(Exception):
@@ -690,6 +733,7 @@ _ROUTE_SPECS = [
      "handle_contents", True),
     ("GET", r"collections/(?P<name>.+?)/?", "handle_collection", True),
     ("GET", r"stats/?", "handle_stats", True),
+    ("GET", r"cluster/?", "handle_cluster", False),
     ("GET", r"healthz/?", "handle_healthz", True),
 ]
 
@@ -772,11 +816,28 @@ def _make_handler(gw: RestGateway):
                     continue
                 headers: List[Tuple[str, str]] = []
                 if deprecated:
-                    # pre-v1 alias: same behaviour, but tell clients
+                    successor = f"{API_PREFIX}{path}"
+                    if (gw.legacy_routes == "off"
+                            and fn_name != "handle_healthz"):
+                        # cutover mode: the unversioned surface is
+                        # retired — 410 (not 404: the route existed)
+                        # with a machine-readable pointer to /v1.
+                        # /healthz stays answering: liveness probes in
+                        # deployment manifests predate versioning.
+                        body = _err(
+                            "Gone",
+                            f"unversioned route removed; use "
+                            f"{successor}")
+                        body["error"]["successor"] = successor
+                        self._reply(410, body, [
+                            ("Link", f'<{successor}>; '
+                                     f'rel="successor-version"')])
+                        return
+                    # warn mode: same behaviour, but tell clients
                     # where the stable surface lives
                     headers.append(("Deprecation", "true"))
                     headers.append(("Link",
-                                    f'<{API_PREFIX}{path}>; '
+                                    f'<{successor}>; '
                                     f'rel="successor-version"'))
                 try:
                     status, body = self._invoke(fn_name, match)
@@ -896,6 +957,26 @@ def main(argv=None) -> int:
     ap.add_argument("--store-max-batch", type=int, default=256,
                     help="flush the write-coalescing buffer early once "
                          "it holds this many ops (--store-flush-ms)")
+    ap.add_argument("--bus", choices=("local", "store"), default="local",
+                    help="message bus backend: 'local' is the "
+                         "in-process queue (single head); 'store' "
+                         "polls a bus table in the shared store so "
+                         "several heads can pump one catalog "
+                         "(multi-head; pair with --store)")
+    ap.add_argument("--head-id", default=None, metavar="ID",
+                    help="stable identity of this head in the "
+                         "ownership plane (omit = random head-<hex>)")
+    ap.add_argument("--claim-ttl", type=float, default=5.0,
+                    metavar="SECONDS",
+                    help="workflow-claim lease: a head that misses "
+                         "renewals for this long loses its claims to "
+                         "a peer's watchdog sweep")
+    ap.add_argument("--legacy-routes", choices=("warn", "off"),
+                    default="warn",
+                    help="pre-v1 unversioned paths: 'warn' serves them "
+                         "with Deprecation/Link headers; 'off' retires "
+                         "them with 410 Gone pointing at /v1 "
+                         "(/healthz stays as a probe alias)")
     ap.add_argument("--carousel", action="store_true",
                     help="mount a CarouselDDM (synthetic ColdStore + "
                          "DiskCache) as the DDM backend and start "
@@ -937,13 +1018,24 @@ def main(argv=None) -> int:
                                 mount_latency=args.carousel_latency)
         ddm = CarouselDDM(cold, DiskCache(1 << 30))
     idds = IDDS(sync=not args.async_wfm, max_workers=args.max_workers,
-                tokens=tokens, store=store, executor=executor, ddm=ddm)
-    if store is not None:
+                tokens=tokens, store=store, executor=executor, ddm=ddm,
+                bus=args.bus, head_id=args.head_id,
+                claim_ttl=args.claim_ttl)
+    if store is not None and args.bus != "store":
         counts = idds.recover()
         recovered = {k: v for k, v in counts.items() if v}
         if recovered:
             print(f"idds-rest recovered state from {args.store}: "
                   f"{recovered}", flush=True)
+    elif store is not None:
+        # multi-head join: a full recover() is TAKEOVER semantics (it
+        # steals live claims), which would hijack a running peer's
+        # work.  A joining head instead lets its watchdog sweep adopt
+        # whatever claims expire — the single-head-restart case heals
+        # the same way, one claim TTL after the old head died.
+        print(f"idds-rest joining cluster on {args.store} as "
+              f"{idds.ctx.head_id} (watchdog adopts orphaned work)",
+              flush=True)
     if args.carousel:
         # a recovered store may have re-registered the collection with
         # its journaled per-file state; don't clobber it
@@ -954,7 +1046,8 @@ def main(argv=None) -> int:
         print(f"carousel: staging {len(coll.files)} shards into "
               f"collection {args.carousel_collection!r}", flush=True)
     gw = RestGateway(idds, host=args.host, port=args.port,
-                     quiet=not args.verbose)
+                     quiet=not args.verbose,
+                     legacy_routes=args.legacy_routes)
 
     # SIGINT/SIGTERM flip an event instead of killing the process
     # mid-write: the daemons drain, the HTTP server closes, and the
@@ -973,7 +1066,8 @@ def main(argv=None) -> int:
     print(f"idds-rest serving on {gw.url} "
           f"(auth={'on' if tokens else 'off'}, "
           f"wfm={wfm_mode}, "
-          f"store={args.store or 'memory'})", flush=True)
+          f"store={args.store or 'memory'}, "
+          f"bus={args.bus}, head={idds.ctx.head_id})", flush=True)
     try:
         stop_evt.wait()
         print("signal received: shutting down", flush=True)

@@ -22,7 +22,8 @@ from __future__ import annotations
 import json
 import sqlite3
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 
 class StoreError(Exception):
@@ -174,6 +175,96 @@ class Store:
     def load_subscriptions(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
 
+    # -- ownership claims (multi-head coordination) ------------------------
+    # Claims are how N head processes share one catalog without stepping
+    # on each other (the paper's row-level locking: TransformLocking /
+    # clean_locking).  A claim row is (kind, entity_id) -> (owner_id,
+    # claimed_until); ``try_claim`` is an atomic compare-and-claim that
+    # succeeds iff the row is absent, expired, or already owned by the
+    # caller (renewal).  ``claimed_until`` is WALL-clock time — it must
+    # be comparable across processes, so ``time.monotonic`` cannot be
+    # used here.
+
+    def try_claim(self, kind: str, entity_id: str, owner_id: str,
+                  ttl_s: float, now: Optional[float] = None) -> bool:
+        """Atomically claim (or renew) an entity; True on success."""
+        raise NotImplementedError
+
+    def release_claim(self, kind: str, entity_id: str,
+                      owner_id: str) -> bool:
+        """Drop a claim iff still held by ``owner_id``; True if dropped."""
+        raise NotImplementedError
+
+    def renew_claims(self, kind: str, entity_ids: Iterable[str],
+                     owner_id: str, ttl_s: float,
+                     now: Optional[float] = None) -> int:
+        """Extend ``claimed_until`` on every listed entity still owned
+        by ``owner_id``; returns how many were renewed."""
+        raise NotImplementedError
+
+    def get_claim(self, kind: str,
+                  entity_id: str) -> Optional[Dict[str, Any]]:
+        raise NotImplementedError
+
+    def list_claims(self, kind: Optional[str] = None
+                    ) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    # -- head health (heartbeat table) -------------------------------------
+    def save_health(self, info: Dict[str, Any]) -> None:
+        """Upsert one head's heartbeat row keyed on ``head_id``."""
+        raise NotImplementedError
+
+    def load_health(self) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    # -- store-backed message queue (StorePollingBus) ----------------------
+    # A durable bus_messages journal lets a second head's daemons wake on
+    # the first head's announcements.  Two delivery modes, chosen by the
+    # bus layer per topic: ``bus_consume`` is consumed-once cluster-wide
+    # (work-queue topics), ``bus_fetch_after`` is a cursor read every
+    # head performs independently (broadcast topics — fetch never marks
+    # rows consumed).
+
+    def bus_publish(self, topic: str, body: Dict[str, Any],
+                    now: Optional[float] = None,
+                    origin: Optional[str] = None,
+                    not_before: Optional[float] = None) -> int:
+        """Append one message; returns its monotonically increasing id.
+        ``origin`` records the publishing head (consumers use it to skip
+        re-firing their own broadcast callbacks); ``not_before`` delays
+        redelivery of a requeued message so the requeueing head does not
+        busy-spin re-consuming it before the owner's next poll."""
+        raise NotImplementedError
+
+    def bus_consume(self, topics: Iterable[str], consumer: str,
+                    max_n: int = 0, now: Optional[float] = None
+                    ) -> List[Dict[str, Any]]:
+        """Atomically take ripe unconsumed messages on ``topics`` (each
+        row goes to exactly one caller cluster-wide); ``max_n`` 0 =
+        all.  A message with ``not_before`` in the future is invisible
+        until it ripens."""
+        raise NotImplementedError
+
+    def bus_fetch_after(self, topics: Iterable[str], after_id: int,
+                        max_n: int = 0) -> List[Dict[str, Any]]:
+        """Read messages with id > ``after_id`` without consuming them."""
+        raise NotImplementedError
+
+    def bus_max_id(self) -> int:
+        raise NotImplementedError
+
+    def bus_depth(self, topics: Optional[Iterable[str]] = None,
+                  now: Optional[float] = None) -> int:
+        """Ripe unconsumed message count (optionally per topics)."""
+        raise NotImplementedError
+
+    def bus_prune(self, older_than: float) -> int:
+        """Delete messages created before ``older_than`` (wall clock),
+        consumed or not — a retention window, not a consumption check
+        (broadcast rows are never marked consumed)."""
+        raise NotImplementedError
+
     # -- generic batched journaling ----------------------------------------
     # ``save_many`` applies an ordered list of journal operations; SQLite
     # coalesces the whole list into ONE transaction (one fsync-eligible
@@ -238,6 +329,10 @@ class InMemoryStore(Store):
         self._leases: Dict[str, Dict[str, Any]] = {}
         self._commands: Dict[str, Dict[str, Any]] = {}
         self._subscriptions: Dict[str, Dict[str, Any]] = {}
+        self._claims: Dict[Tuple[str, str], Dict[str, Any]] = {}
+        self._health: Dict[str, Dict[str, Any]] = {}
+        self._bus_msgs: List[Dict[str, Any]] = []
+        self._bus_next_id = 1
 
     def save_request(self, info: Dict[str, Any]) -> None:
         with self._lock:
@@ -370,6 +465,140 @@ class InMemoryStore(Store):
             return [json.loads(json.dumps(s))
                     for s in self._subscriptions.values()]
 
+    # -- ownership claims ---------------------------------------------------
+    def try_claim(self, kind: str, entity_id: str, owner_id: str,
+                  ttl_s: float, now: Optional[float] = None) -> bool:
+        now = time.time() if now is None else now
+        with self._lock:
+            c = self._claims.get((kind, entity_id))
+            if (c is not None and c["owner_id"] != owner_id
+                    and c["claimed_until"] >= now):
+                return False  # live claim held by another owner
+            self._claims[(kind, entity_id)] = {
+                "kind": kind, "entity_id": entity_id,
+                "owner_id": owner_id, "claimed_until": now + ttl_s}
+            return True
+
+    def release_claim(self, kind: str, entity_id: str,
+                      owner_id: str) -> bool:
+        with self._lock:
+            c = self._claims.get((kind, entity_id))
+            if c is None or c["owner_id"] != owner_id:
+                return False
+            del self._claims[(kind, entity_id)]
+            return True
+
+    def renew_claims(self, kind: str, entity_ids: Iterable[str],
+                     owner_id: str, ttl_s: float,
+                     now: Optional[float] = None) -> int:
+        now = time.time() if now is None else now
+        renewed = 0
+        with self._lock:
+            for entity_id in entity_ids:
+                c = self._claims.get((kind, entity_id))
+                if c is not None and c["owner_id"] == owner_id:
+                    c["claimed_until"] = now + ttl_s
+                    renewed += 1
+        return renewed
+
+    def get_claim(self, kind: str,
+                  entity_id: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            c = self._claims.get((kind, entity_id))
+            return dict(c) if c is not None else None
+
+    def list_claims(self, kind: Optional[str] = None
+                    ) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [dict(c) for c in self._claims.values()
+                    if kind is None or c["kind"] == kind]
+
+    # -- head health --------------------------------------------------------
+    def save_health(self, info: Dict[str, Any]) -> None:
+        with self._lock:
+            self._health[info["head_id"]] = dict(info)
+
+    def load_health(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [dict(h) for h in self._health.values()]
+
+    # -- store-backed message queue -----------------------------------------
+    # bodies are stored as JSON text for copy semantics (and parity with
+    # the SQLite backend): a consumer mutating its dict must not mutate
+    # the journaled message
+    def bus_publish(self, topic: str, body: Dict[str, Any],
+                    now: Optional[float] = None,
+                    origin: Optional[str] = None,
+                    not_before: Optional[float] = None) -> int:
+        now = time.time() if now is None else now
+        with self._lock:
+            msg_id = self._bus_next_id
+            self._bus_next_id += 1
+            self._bus_msgs.append({
+                "msg_id": msg_id, "topic": topic,
+                "body": json.dumps(body), "created_at": now,
+                "origin": origin, "not_before": not_before,
+                "consumed_by": None, "consumed_at": None})
+            return msg_id
+
+    def bus_consume(self, topics: Iterable[str], consumer: str,
+                    max_n: int = 0, now: Optional[float] = None
+                    ) -> List[Dict[str, Any]]:
+        now = time.time() if now is None else now
+        tset = set(topics)
+        out: List[Dict[str, Any]] = []
+        with self._lock:
+            for m in self._bus_msgs:
+                if (m["consumed_by"] is None and m["topic"] in tset
+                        and (m["not_before"] is None
+                             or m["not_before"] <= now)):
+                    m["consumed_by"] = consumer
+                    m["consumed_at"] = now
+                    out.append({"msg_id": m["msg_id"],
+                                "topic": m["topic"],
+                                "body": json.loads(m["body"]),
+                                "origin": m["origin"]})
+                    if max_n and len(out) >= max_n:
+                        break
+        return out
+
+    def bus_fetch_after(self, topics: Iterable[str], after_id: int,
+                        max_n: int = 0) -> List[Dict[str, Any]]:
+        tset = set(topics)
+        out: List[Dict[str, Any]] = []
+        with self._lock:
+            for m in self._bus_msgs:
+                if m["msg_id"] > after_id and m["topic"] in tset:
+                    out.append({"msg_id": m["msg_id"],
+                                "topic": m["topic"],
+                                "body": json.loads(m["body"]),
+                                "origin": m["origin"]})
+                    if max_n and len(out) >= max_n:
+                        break
+        return out
+
+    def bus_max_id(self) -> int:
+        with self._lock:
+            return self._bus_next_id - 1
+
+    def bus_depth(self, topics: Optional[Iterable[str]] = None,
+                  now: Optional[float] = None) -> int:
+        now = time.time() if now is None else now
+        tset = None if topics is None else set(topics)
+        with self._lock:
+            return sum(1 for m in self._bus_msgs
+                       if m["consumed_by"] is None
+                       and (tset is None or m["topic"] in tset)
+                       and (m["not_before"] is None
+                            or m["not_before"] <= now))
+
+    def bus_prune(self, older_than: float) -> int:
+        with self._lock:
+            before = len(self._bus_msgs)
+            self._bus_msgs = [m for m in self._bus_msgs
+                              if m["created_at"] >= older_than]
+            return before - len(self._bus_msgs)
+
 
 # ---------------------------------------------------------------------------
 # SQLite (WAL mode, one connection per thread)
@@ -442,6 +671,32 @@ CREATE TABLE IF NOT EXISTS subscriptions (
     consumer TEXT,
     data     TEXT NOT NULL
 );
+CREATE TABLE IF NOT EXISTS claims (
+    kind          TEXT,
+    entity_id     TEXT,
+    owner_id      TEXT,
+    claimed_until REAL,
+    PRIMARY KEY (kind, entity_id)
+);
+CREATE INDEX IF NOT EXISTS idx_claims_owner ON claims (owner_id);
+CREATE TABLE IF NOT EXISTS health (
+    head_id        TEXT PRIMARY KEY,
+    started_at     REAL,
+    last_heartbeat REAL,
+    data           TEXT NOT NULL
+);
+CREATE TABLE IF NOT EXISTS bus_messages (
+    msg_id      INTEGER PRIMARY KEY AUTOINCREMENT,
+    topic       TEXT,
+    body        TEXT NOT NULL,
+    created_at  REAL,
+    origin      TEXT,
+    not_before  REAL,
+    consumed_by TEXT,
+    consumed_at REAL
+);
+CREATE INDEX IF NOT EXISTS idx_bus_unconsumed
+    ON bus_messages (topic) WHERE consumed_by IS NULL;
 """
 
 # columns added to `contents` after the table first shipped: pre-existing
@@ -731,6 +986,179 @@ class SqliteStore(Store):
             "SELECT data FROM subscriptions ORDER BY rowid").fetchall()
         return [json.loads(r[0]) for r in rows]
 
+    # -- ownership claims ---------------------------------------------------
+    # The WHERE clause makes the upsert a compare-and-claim: the UPDATE
+    # half applies only when the caller already owns the row (renewal)
+    # or the existing claim has expired.  sqlite3 reports rowcount 0
+    # when the WHERE excludes the update, which is the "another head
+    # holds a live claim" answer — one statement, atomic under SQLite's
+    # write lock, no read-then-write race between heads.
+    _CLAIM_UPSERT = (
+        "INSERT INTO claims (kind, entity_id, owner_id, claimed_until)"
+        " VALUES (?, ?, ?, ?)"
+        " ON CONFLICT(kind, entity_id) DO UPDATE SET"
+        " owner_id=excluded.owner_id,"
+        " claimed_until=excluded.claimed_until"
+        " WHERE claims.owner_id = excluded.owner_id"
+        " OR claims.claimed_until < ?")
+
+    def try_claim(self, kind: str, entity_id: str, owner_id: str,
+                  ttl_s: float, now: Optional[float] = None) -> bool:
+        now = time.time() if now is None else now
+        cur = self._conn().execute(
+            self._CLAIM_UPSERT,
+            (kind, entity_id, owner_id, now + ttl_s, now))
+        return cur.rowcount > 0
+
+    def release_claim(self, kind: str, entity_id: str,
+                      owner_id: str) -> bool:
+        cur = self._conn().execute(
+            "DELETE FROM claims WHERE kind = ? AND entity_id = ?"
+            " AND owner_id = ?", (kind, entity_id, owner_id))
+        return cur.rowcount > 0
+
+    def renew_claims(self, kind: str, entity_ids: Iterable[str],
+                     owner_id: str, ttl_s: float,
+                     now: Optional[float] = None) -> int:
+        ids = list(entity_ids)
+        if not ids:
+            return 0
+        now = time.time() if now is None else now
+        qs = ",".join("?" * len(ids))
+        cur = self._conn().execute(
+            f"UPDATE claims SET claimed_until = ? WHERE kind = ?"
+            f" AND owner_id = ? AND entity_id IN ({qs})",
+            [now + ttl_s, kind, owner_id, *ids])
+        return cur.rowcount
+
+    def get_claim(self, kind: str,
+                  entity_id: str) -> Optional[Dict[str, Any]]:
+        row = self._conn().execute(
+            "SELECT owner_id, claimed_until FROM claims"
+            " WHERE kind = ? AND entity_id = ?",
+            (kind, entity_id)).fetchone()
+        if row is None:
+            return None
+        return {"kind": kind, "entity_id": entity_id,
+                "owner_id": row[0], "claimed_until": row[1]}
+
+    def list_claims(self, kind: Optional[str] = None
+                    ) -> List[Dict[str, Any]]:
+        sql = ("SELECT kind, entity_id, owner_id, claimed_until"
+               " FROM claims")
+        args: List[Any] = []
+        if kind is not None:
+            sql += " WHERE kind = ?"
+            args.append(kind)
+        rows = self._conn().execute(sql, args).fetchall()
+        return [{"kind": r[0], "entity_id": r[1], "owner_id": r[2],
+                 "claimed_until": r[3]} for r in rows]
+
+    # -- head health --------------------------------------------------------
+    _HEALTH_UPSERT = (
+        "INSERT INTO health (head_id, started_at, last_heartbeat, data)"
+        " VALUES (?, ?, ?, ?) ON CONFLICT(head_id) DO UPDATE SET"
+        " started_at=excluded.started_at,"
+        " last_heartbeat=excluded.last_heartbeat, data=excluded.data")
+
+    def save_health(self, info: Dict[str, Any]) -> None:
+        self._conn().execute(
+            self._HEALTH_UPSERT,
+            (info["head_id"], info.get("started_at"),
+             info.get("last_heartbeat"), json.dumps(info)))
+
+    def load_health(self) -> List[Dict[str, Any]]:
+        rows = self._conn().execute(
+            "SELECT data FROM health ORDER BY rowid").fetchall()
+        return [json.loads(r[0]) for r in rows]
+
+    # -- store-backed message queue -----------------------------------------
+    def bus_publish(self, topic: str, body: Dict[str, Any],
+                    now: Optional[float] = None,
+                    origin: Optional[str] = None,
+                    not_before: Optional[float] = None) -> int:
+        now = time.time() if now is None else now
+        cur = self._conn().execute(
+            "INSERT INTO bus_messages (topic, body, created_at, origin,"
+            " not_before) VALUES (?, ?, ?, ?, ?)",
+            (topic, json.dumps(body), now, origin, not_before))
+        return int(cur.lastrowid)
+
+    def bus_consume(self, topics: Iterable[str], consumer: str,
+                    max_n: int = 0, now: Optional[float] = None
+                    ) -> List[Dict[str, Any]]:
+        topics = list(topics)
+        if not topics:
+            return []
+        now = time.time() if now is None else now
+        conn = self._conn()
+        qs = ",".join("?" * len(topics))
+        rows = conn.execute(
+            f"SELECT msg_id, topic, body, origin FROM bus_messages"
+            f" WHERE consumed_by IS NULL AND topic IN ({qs})"
+            f" AND (not_before IS NULL OR not_before <= ?)"
+            f" ORDER BY msg_id LIMIT ?",
+            [*topics, now, max_n if max_n else -1]).fetchall()
+        out: List[Dict[str, Any]] = []
+        for msg_id, topic, body, origin in rows:
+            # per-row compare-and-set: rowcount 0 means another head won
+            # the race between our SELECT and this UPDATE — skip the row
+            cur = conn.execute(
+                "UPDATE bus_messages SET consumed_by = ?,"
+                " consumed_at = ? WHERE msg_id = ?"
+                " AND consumed_by IS NULL", (consumer, now, msg_id))
+            if cur.rowcount:
+                out.append({"msg_id": msg_id, "topic": topic,
+                            "body": json.loads(body), "origin": origin})
+        return out
+
+    def bus_fetch_after(self, topics: Iterable[str], after_id: int,
+                        max_n: int = 0) -> List[Dict[str, Any]]:
+        topics = list(topics)
+        if not topics:
+            return []
+        qs = ",".join("?" * len(topics))
+        rows = self._conn().execute(
+            f"SELECT msg_id, topic, body, origin FROM bus_messages"
+            f" WHERE msg_id > ? AND topic IN ({qs})"
+            f" ORDER BY msg_id LIMIT ?",
+            [after_id, *topics, max_n if max_n else -1]).fetchall()
+        return [{"msg_id": r[0], "topic": r[1],
+                 "body": json.loads(r[2]), "origin": r[3]} for r in rows]
+
+    def bus_max_id(self) -> int:
+        row = self._conn().execute(
+            "SELECT COALESCE(MAX(msg_id), 0) FROM bus_messages"
+        ).fetchone()
+        return int(row[0])
+
+    def bus_depth(self, topics: Optional[Iterable[str]] = None,
+                  now: Optional[float] = None) -> int:
+        now = time.time() if now is None else now
+        if topics is None:
+            row = self._conn().execute(
+                "SELECT count(*) FROM bus_messages"
+                " WHERE consumed_by IS NULL"
+                " AND (not_before IS NULL OR not_before <= ?)",
+                (now,)).fetchone()
+        else:
+            topics = list(topics)
+            if not topics:
+                return 0
+            qs = ",".join("?" * len(topics))
+            row = self._conn().execute(
+                f"SELECT count(*) FROM bus_messages"
+                f" WHERE consumed_by IS NULL AND topic IN ({qs})"
+                f" AND (not_before IS NULL OR not_before <= ?)",
+                [*topics, now]).fetchone()
+        return int(row[0])
+
+    def bus_prune(self, older_than: float) -> int:
+        cur = self._conn().execute(
+            "DELETE FROM bus_messages WHERE created_at < ?",
+            (older_than,))
+        return cur.rowcount
+
     # -- generic batched journaling ----------------------------------------
     def _apply_op_conn(self, conn: sqlite3.Connection, kind: str,
                        payload: Any) -> None:
@@ -953,6 +1381,67 @@ class BufferedStore(Store):
 
     def save_subscription(self, sub: Dict[str, Any]) -> None:
         self.inner.save_subscription(sub)
+
+    # ----------------------- multi-head plane (never buffered)
+    # Claims, health heartbeats and bus messages exist to coordinate
+    # OTHER processes; holding them in a local buffer would make another
+    # head observe stale ownership, so every call goes straight through.
+    def try_claim(self, kind: str, entity_id: str, owner_id: str,
+                  ttl_s: float, now: Optional[float] = None) -> bool:
+        return self.inner.try_claim(kind, entity_id, owner_id, ttl_s,
+                                    now=now)
+
+    def release_claim(self, kind: str, entity_id: str,
+                      owner_id: str) -> bool:
+        return self.inner.release_claim(kind, entity_id, owner_id)
+
+    def renew_claims(self, kind: str, entity_ids: Iterable[str],
+                     owner_id: str, ttl_s: float,
+                     now: Optional[float] = None) -> int:
+        return self.inner.renew_claims(kind, entity_ids, owner_id,
+                                       ttl_s, now=now)
+
+    def get_claim(self, kind: str,
+                  entity_id: str) -> Optional[Dict[str, Any]]:
+        return self.inner.get_claim(kind, entity_id)
+
+    def list_claims(self, kind: Optional[str] = None
+                    ) -> List[Dict[str, Any]]:
+        return self.inner.list_claims(kind)
+
+    def save_health(self, info: Dict[str, Any]) -> None:
+        self.inner.save_health(info)
+
+    def load_health(self) -> List[Dict[str, Any]]:
+        return self.inner.load_health()
+
+    def bus_publish(self, topic: str, body: Dict[str, Any],
+                    now: Optional[float] = None,
+                    origin: Optional[str] = None,
+                    not_before: Optional[float] = None) -> int:
+        return self.inner.bus_publish(topic, body, now=now,
+                                      origin=origin,
+                                      not_before=not_before)
+
+    def bus_consume(self, topics: Iterable[str], consumer: str,
+                    max_n: int = 0, now: Optional[float] = None
+                    ) -> List[Dict[str, Any]]:
+        return self.inner.bus_consume(topics, consumer, max_n=max_n,
+                                      now=now)
+
+    def bus_fetch_after(self, topics: Iterable[str], after_id: int,
+                        max_n: int = 0) -> List[Dict[str, Any]]:
+        return self.inner.bus_fetch_after(topics, after_id, max_n=max_n)
+
+    def bus_max_id(self) -> int:
+        return self.inner.bus_max_id()
+
+    def bus_depth(self, topics: Optional[Iterable[str]] = None,
+                  now: Optional[float] = None) -> int:
+        return self.inner.bus_depth(topics, now=now)
+
+    def bus_prune(self, older_than: float) -> int:
+        return self.inner.bus_prune(older_than)
 
     def save_many(self, ops: List[Tuple[str, Any]]) -> None:
         # mixed batches keep strict ordering: drain the buffer first,

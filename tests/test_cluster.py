@@ -1,0 +1,283 @@
+"""Multi-head service: several IDDS heads pumping ONE catalog through
+the store-claimed ownership plane — claim lifecycle, watchdog adoption
+after a head dies mid-workflow, the pluggable bus backends, the
+/v1/cluster health surface, and the /v1-only legacy-route cutover.
+"""
+import http.client
+import json
+import time
+
+import pytest
+
+from repro.core import messaging as M
+from repro.core import payloads as reg
+from repro.core.client import IDDSClient
+from repro.core.idds import IDDS
+from repro.core.rest import RestGateway
+from repro.core.spec import WorkflowSpec
+from repro.core.store import InMemoryStore, SqliteStore
+
+reg.register_payload("cluster_double",
+                     lambda params, inputs: {"x": params["x"] * 2})
+
+
+def _chain_workflow(x=3):
+    spec = WorkflowSpec("cluster-chain")
+    a = spec.work("a", payload="cluster_double", start={"x": x})
+    a.then(spec.work("b", payload="cluster_double"))
+    return spec.build()
+
+
+@pytest.fixture(params=["memory", "sqlite"])
+def shared_store(request, tmp_path):
+    """Factory yielding fresh handles on ONE shared catalog, so two
+    heads coordinate the way two processes would (memory shares the
+    instance, sqlite the WAL file)."""
+    if request.param == "memory":
+        s = InMemoryStore()
+        yield lambda: s
+    else:
+        path = str(tmp_path / "cluster.db")
+        handles = []
+
+        def make():
+            h = SqliteStore(path)
+            handles.append(h)
+            return h
+
+        yield make
+        for h in handles:
+            h.close()
+
+
+# ------------------------------------------------- the tentpole scenario
+
+def test_two_heads_kill_one_survivor_finishes_all(shared_store):
+    """Two heads share one catalog over the store bus; head 1 claims
+    all in-flight work and dies without releasing anything.  Once the
+    claims expire, head 2's watchdog must adopt and finish every
+    workflow — no request lost, none double-completed."""
+    ttl = 0.5
+    h1 = IDDS(store=shared_store(), bus="store", head_id="head-1",
+              claim_ttl=ttl)
+    h2 = IDDS(store=shared_store(), bus="store", head_id="head-2",
+              claim_ttl=ttl)
+    rids = [h1.submit_workflow(_chain_workflow(x=i)) for i in range(8)]
+    # head 1 starts the work — one daemon cycle claims the workflows
+    # and begins processing without finishing anything...
+    sum(d.process_once() for d in h1.daemons)
+    # ...then it is gone.  A SIGKILLed head releases nothing: the only
+    # path to progress is claim EXPIRY + the peer's adoption sweep.
+    time.sleep(ttl * 1.2)
+
+    def all_done():
+        return all(h2.request_status(r)["status"] == "finished"
+                   for r in rids)
+
+    h2.pump_until(all_done, timeout=60.0, interval=0.01)
+    for rid in rids:
+        info = h2.request_status(rid)
+        assert info["status"] == "finished"
+        # exactly one completion per work: a duplicated adoption replay
+        # would overshoot the per-status tally
+        assert info["works"] == {"finished": 2}, (rid, info)
+    assert h2.stats.get("workflows_adopted", 0) == len(rids)
+    # ownership converged: every surviving claim (if any) is head 2's
+    for c in h2.store.list_claims("workflow"):
+        assert c["owner_id"] == "head-2"
+
+
+def test_two_heads_split_load_no_double_processing(shared_store):
+    """Both heads pump concurrently from submission: the claim CAS
+    partitions the workflows — every request finishes exactly once no
+    matter which head won each claim."""
+    h1 = IDDS(store=shared_store(), bus="store", head_id="head-1")
+    h2 = IDDS(store=shared_store(), bus="store", head_id="head-2")
+    rids = [h1.submit_workflow(_chain_workflow(x=i)) for i in range(6)]
+
+    def all_done():
+        return all(h1.request_status(r)["status"] == "finished"
+                   for r in rids)
+
+    deadline = time.monotonic() + 60.0
+    while not all_done():
+        moved = sum(d.process_once() for d in h1.daemons)
+        moved += sum(d.process_once() for d in h2.daemons)
+        if moved == 0:
+            assert time.monotonic() < deadline, "cluster wedged"
+            time.sleep(0.005)
+    for rid in rids:
+        # both heads agree on the catalog truth...
+        assert {h.request_status(rid)["status"]
+                for h in (h1, h2)} == {"finished"}
+        # ...and whichever head(s) hydrated the DG show exactly one
+        # completion per work (a double-processed work would overshoot)
+        tallies = [h.request_status(rid)["works"] for h in (h1, h2)
+                   if "works" in h.request_status(rid)]
+        assert tallies, rid
+        assert all(t == {"finished": 2} for t in tallies), (rid, tallies)
+
+
+def test_clean_close_hands_claims_to_peer_immediately(shared_store):
+    """idds.close() releases the head's claims, so a peer adopts the
+    work on its next sweep without waiting out the TTL."""
+    h1 = IDDS(store=shared_store(), bus="store", head_id="head-1",
+              claim_ttl=30.0)  # TTL far beyond the test budget
+    h2 = IDDS(store=shared_store(), bus="store", head_id="head-2",
+              claim_ttl=30.0)
+    rid = h1.submit_workflow(_chain_workflow())
+    sum(d.process_once() for d in h1.daemons)
+    assert any(c["owner_id"] == "head-1"
+               for c in h2.store.list_claims("workflow"))
+    h1.stop()
+    # graceful shutdown: release claims only (don't close the shared
+    # memory store under head 2)
+    for wf_id in list(h1.ctx.claimed):
+        h1.ctx.disown(wf_id)
+    h2.pump_until(
+        lambda: h2.request_status(rid)["status"] == "finished",
+        timeout=60.0, interval=0.01)
+    assert h2.request_status(rid)["works"] == {"finished": 2}
+
+
+# --------------------------------------------------- health + ownership
+
+def test_cluster_info_reports_heads_and_claims(shared_store):
+    h1 = IDDS(store=shared_store(), bus="store", head_id="head-1")
+    h2 = IDDS(store=shared_store(), bus="store", head_id="head-2")
+    h1.submit_workflow(_chain_workflow())
+    sum(d.process_once() for d in h1.daemons)  # heartbeat + claim
+    sum(d.process_once() for d in h2.daemons)  # heartbeat only
+    info = h2.cluster_info()
+    assert info["head_id"] == "head-2" and info["bus"] == "store"
+    heads = {h["head_id"]: h for h in info["heads"]}
+    assert set(heads) == {"head-1", "head-2"}
+    assert all(h["alive"] for h in heads.values())
+    assert heads["head-1"]["claims"] >= 1
+    assert heads["head-2"]["claims"] == 0
+    assert info["claims"] >= 1
+    # both heads observe the same registry
+    peers = {h["head_id"] for h in h1.cluster_info()["heads"]}
+    assert peers == {"head-1", "head-2"}
+
+
+def test_cluster_endpoint_over_wire():
+    idds = IDDS(store=InMemoryStore(), bus="store", head_id="head-rest")
+    with RestGateway(idds) as gw:
+        client = IDDSClient(gw.url)
+        rid = client.submit_workflow(_chain_workflow())
+        client.wait(rid, timeout=30)
+        info = client.cluster()
+        assert info["head_id"] == "head-rest"
+        assert info["bus"] == "store"
+        heads = {h["head_id"]: h for h in info["heads"]}
+        assert heads["head-rest"]["alive"] is True
+        assert heads["head-rest"]["data"].get("bus") == "store"
+        # the liveness probe names the answering head + bus backend
+        h = client.healthz()
+        assert h["head_id"] == "head-rest" and h["bus"] == "store"
+        assert h["daemons"].get("watchdog") is True
+
+
+# ------------------------------------------------------- bus backends
+
+def test_make_bus_factory_and_names():
+    assert M.make_bus("local").name == "local"
+    store = InMemoryStore()
+    assert M.make_bus("store", store=store, head_id="h").name == "store"
+    with pytest.raises(ValueError):
+        M.make_bus("store")  # store backend needs a store
+    with pytest.raises(ValueError):
+        M.make_bus("carrier-pigeon")
+
+
+def test_store_bus_queue_topic_consumed_once_cluster_wide():
+    store = InMemoryStore()
+    a = M.make_bus("store", store=store, head_id="A")
+    b = M.make_bus("store", store=store, head_id="B")
+    for i in range(4):
+        a.publish(M.T_NEW_REQUESTS, {"i": i})
+    got_a = a.poll(M.T_NEW_REQUESTS)
+    got_b = b.poll(M.T_NEW_REQUESTS)
+    # work-queue semantics: the cluster sees each message exactly once
+    assert len(got_a) + len(got_b) == 4
+    assert a.poll(M.T_NEW_REQUESTS) == []
+    assert b.poll(M.T_NEW_REQUESTS) == []
+
+
+def test_store_bus_broadcast_topic_reaches_every_head():
+    store = InMemoryStore()
+    a = M.make_bus("store", store=store, head_id="A")
+    b = M.make_bus("store", store=store, head_id="B")
+    a.publish(M.T_COLLECTION_UPDATED, {"collection": "c"})
+    got_a = a.poll(M.T_COLLECTION_UPDATED)
+    got_b = b.poll(M.T_COLLECTION_UPDATED)
+    # broadcast semantics: every head observes the announcement once
+    assert [m.body["collection"] for m in got_a] == ["c"]
+    assert [m.body["collection"] for m in got_b] == ["c"]
+    assert a.poll(M.T_COLLECTION_UPDATED) == []  # cursor advanced
+
+
+def test_store_bus_requeue_backoff_then_redelivery():
+    store = InMemoryStore()
+    bus = M.make_bus("store", store=store, head_id="A")
+    bus.publish(M.T_NEW_WORKS, {"k": 1})
+    (m,) = bus.poll(M.T_NEW_WORKS)
+    bus.requeue(m)
+    # the requeued row hides behind not_before (no busy-spin) ...
+    deadline = time.monotonic() + 5.0
+    redelivered = []
+    while not redelivered and time.monotonic() < deadline:
+        redelivered = bus.poll(M.T_NEW_WORKS)
+        time.sleep(0.01)
+    # ... then comes back exactly once
+    assert [m2.body for m2 in redelivered] == [{"k": 1}]
+    assert bus.poll(M.T_NEW_WORKS) == []
+
+
+# ------------------------------------------------- /v1-only API cutover
+
+def test_legacy_routes_off_410_with_successor_pointer():
+    with RestGateway(IDDS(), legacy_routes="off") as gw:
+        conn = http.client.HTTPConnection(gw.host, gw.port, timeout=5)
+
+        def get(path):
+            conn.request("GET", path)
+            r = conn.getresponse()
+            return r, json.loads(r.read())
+
+        r, body = get("/stats")
+        assert r.status == 410
+        assert body["error"]["type"] == "Gone"
+        assert body["error"]["successor"] == "/v1/stats"
+        assert 'rel="successor-version"' in r.getheader("Link", "")
+        # POST aliases are retired too
+        conn.request("POST", "/requests", body=b"{}")
+        r = conn.getresponse()
+        assert r.status == 410
+        assert json.loads(r.read())["error"]["successor"] \
+            == "/v1/requests"
+        # /healthz is a probe endpoint: exempt from the cutover
+        r, body = get("/healthz")
+        assert r.status == 200 and body["status"] == "ok"
+        # the canonical surface is untouched
+        r, body = get("/v1/stats")
+        assert r.status == 200
+        conn.close()
+
+
+def test_legacy_routes_warn_is_default_and_still_serves():
+    with RestGateway(IDDS()) as gw:
+        assert gw.legacy_routes == "warn"
+        conn = http.client.HTTPConnection(gw.host, gw.port, timeout=5)
+        conn.request("GET", "/stats")
+        r = conn.getresponse()
+        assert r.status == 200
+        assert r.getheader("Deprecation") == "true"
+        json.loads(r.read())
+        conn.close()
+
+
+def test_rest_gateway_rejects_bad_legacy_mode():
+    with pytest.raises(ValueError):
+        RestGateway(IDDS(), legacy_routes="maybe")

@@ -51,7 +51,28 @@ def test_healthz_no_auth(auth_gateway):
     h = client.healthz()
     assert h["status"] == "ok"
     assert set(h["daemons"]) == {"clerk", "marshaller", "commander",
-                                 "transformer", "carrier", "conductor"}
+                                 "transformer", "carrier", "conductor",
+                                 "watchdog"}
+    # head identity + bus backend: which cluster member answered
+    assert h["head_id"] == auth_gateway.idds.ctx.head_id
+    assert h["bus"] == "local"
+
+
+def test_healthz_alias_parity(auth_gateway):
+    """/healthz is a thin alias of the canonical /v1/healthz: same
+    handler, so the payloads agree key-for-key (uptime may tick)."""
+    conn = http.client.HTTPConnection(auth_gateway.host,
+                                      auth_gateway.port, timeout=5)
+
+    def get(path):
+        conn.request("GET", path)
+        r = conn.getresponse()
+        return json.loads(r.read())
+
+    canon, alias = get("/v1/healthz"), get("/healthz")
+    conn.close()
+    canon.pop("uptime_s"), alias.pop("uptime_s")
+    assert canon == alias
 
 
 def test_end_to_end_workflow(gateway):

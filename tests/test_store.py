@@ -12,6 +12,7 @@ import signal
 import subprocess
 import sys
 import threading
+import time
 
 import pytest
 
@@ -462,6 +463,38 @@ def test_buffered_store_validates_knobs(tmp_path):
         BufferedStore(inner, flush_interval_ms=0)
 
 
+def test_buffered_store_claims_visible_to_peer_handle(tmp_path):
+    """The ownership plane must NOT ride the write-coalescing buffer: a
+    claim head A takes through a BufferedStore has to be durable and
+    peer-visible IMMEDIATELY, or head B could claim the same workflow
+    during the buffer's flush window and both would process it."""
+    path = str(tmp_path / "claims.db")
+    inner = SqliteStore(path)
+    head_a = BufferedStore(inner, flush_interval_ms=10_000, max_batch=64)
+    head_b = SqliteStore(path)  # a second process's handle
+    try:
+        # pile up unflushed content ops so a buffered claim would hide
+        head_a.save_contents("c", [_content("f0", "new")])
+        assert head_a.pending() > 0
+        assert head_a.try_claim("workflow", "wf-1", "head-A", ttl_s=5.0)
+        # inside the TTL the peer handle must see (and lose) the CAS
+        assert head_b.try_claim("workflow", "wf-1", "head-B",
+                                ttl_s=5.0) is False
+        (c,) = head_b.list_claims("workflow")
+        assert c["owner_id"] == "head-A"
+        # release is synchronous too: the peer wins immediately after
+        assert head_a.release_claim("workflow", "wf-1", "head-A")
+        assert head_b.try_claim("workflow", "wf-1", "head-B", ttl_s=5.0)
+        # expiry hands over without any cooperation from head A
+        assert head_b.try_claim("workflow", "wf-2", "head-B",
+                                ttl_s=0.05)
+        time.sleep(0.08)
+        assert head_a.try_claim("workflow", "wf-2", "head-A", ttl_s=5.0)
+    finally:
+        head_a.close()
+        head_b.close()
+
+
 # ------------------------------------------ crash-recovery fuzz (bulk)
 
 def _fuzz_workflow(payload, n_jobs):
@@ -500,6 +533,19 @@ def test_crash_recovery_fuzz_bulk_journal(tmp_path, kind, seed):
     n_jobs = rng.randint(4, 8)
     rid = idds.submit_workflow(_fuzz_workflow(payload_name, n_jobs))
     idds.pump()
+
+    # multi-head guard: the head's workflow claim went through the
+    # BufferedStore, but a peer's handle on the same state must still
+    # lose the CAS inside claimed_until — a claim parked in the
+    # coalescing buffer would let two heads process the same workflow
+    peer = SqliteStore(path) if kind == "sqlite" else inner
+    wf_claims = peer.list_claims("workflow")
+    assert wf_claims, "pumping head should hold its workflow claim"
+    for c in wf_claims:
+        assert peer.try_claim("workflow", c["entity_id"], "peer-head",
+                              5.0) is False, c
+    if kind == "sqlite":
+        peer.close()
 
     sched = idds.scheduler
     held = []
