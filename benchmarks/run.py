@@ -11,6 +11,8 @@ Sections:
   delivery   §3.1      content delivery plane: time-to-first-delivery
                        fine vs coarse + content-journal rows/s
   store      §2        persistence overhead: in-memory vs SQLite catalogs
+  obs        §2        telemetry overhead: metrics/tracing on vs off
+                       (the <=5% always-on gate)
   train      §3.1      carousel-fed training micro-run (loss goes down)
   rest       §2        REST gateway submission throughput + poll latency
   cluster    §2        multi-head horizontal scaling: aggregate
@@ -31,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -115,6 +118,15 @@ def main(argv=None) -> int:
         write_rows=500 if smoke else 1000 if quick else 2000)
     _print_rows(store_bench.KEYS, results["store"])
 
+    _section("obs (telemetry overhead: metrics/tracing on vs off)")
+    from benchmarks import obs_bench
+    results["obs"] = obs_bench.run(
+        n=30 if smoke else 50,
+        write_rows=500 if smoke else 1000 if quick else 2000,
+        pairs=12 if smoke else 16 if quick else 40,
+        instrument_ops=50_000 if quick else 200_000)
+    _print_rows(obs_bench.KEYS, results["obs"])
+
     if smoke:
         _section("train (skipped in --smoke: needs jax)")
         results["train"] = {"skipped": "smoke mode (jax compile cost)"}
@@ -184,9 +196,33 @@ def main(argv=None) -> int:
         mode = "smoke" if smoke else "quick" if quick else "full"
         with open(args.json_out, "w") as f:
             json.dump({"mode": mode, "wall_s": wall,
+                       "git_rev": _git_rev(),
+                       "generated_at": _utc_now(),
                        "sections": results}, f, indent=2, sort_keys=True)
         print(f"results written to {args.json_out}")
     return 0
+
+
+def _git_rev() -> str:
+    """The commit the numbers were measured at (provenance for the
+    committed BENCH_*.json artifacts and the CI bench artifact)."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except Exception:  # noqa: BLE001 — provenance is best-effort
+        pass
+    return "unknown"
+
+
+def _utc_now() -> str:
+    import datetime
+    return datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds")
 
 
 if __name__ == "__main__":

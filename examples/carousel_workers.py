@@ -120,6 +120,22 @@ def main():
             print(f"healthz tallies: contents={hz['contents']} "
                   f"deliveries={hz['deliveries']}")
             assert hz["deliveries"]["acked"] == N_SHARDS
+
+            # the journaled lifecycle timeline covers the whole run:
+            # staging (tape -> disk), execute (lease -> completion),
+            # and delivery (notify -> ack) spans, all with real
+            # durations
+            tr = client.trace(rid)
+            names = {s["span"] for s in tr["spans"]}
+            assert {"staging", "execute", "delivery"} <= names, names
+            assert all(s["duration_s"] >= 0.0 for s in tr["spans"]), \
+                tr["spans"]
+            assert sum(1 for s in tr["spans"]
+                       if s["span"] == "staging") == N_SHARDS
+            longest = max(tr["spans"], key=lambda s: s["duration_s"])
+            print(f"trace {tr['trace_id']}: {len(tr['spans'])} spans "
+                  f"over {tr['duration_s']:.2f}s (longest: "
+                  f"{longest['span']} {longest['duration_s']:.3f}s)")
         finally:
             for p in workers:
                 p.send_signal(signal.SIGTERM)

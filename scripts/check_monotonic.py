@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""AST lint: no ``time.time()`` for deadlines/durations in the core.
+
+Wall-clock time jumps (NTP slews, suspend/resume, operators fixing the
+date); a deadline or a duration computed from it silently corrupts —
+leases expire early, hedges fire spuriously, daemon intervals stall.
+Every hot-loop clock read in ``src/repro/core`` (and the carousel's
+timing paths) must use ``time.monotonic()``.
+
+Wall clock is still CORRECT for anything journaled or compared across
+processes: catalog timestamps (``submitted_at``, ``created_at``,
+``processed_at``), health heartbeats and claim expiries that peer heads
+read from the shared store, bus publish timestamps (cross-process lag),
+and trace-event timestamps.  Those call sites are allowlisted below by
+``(file, enclosing qualname)`` — stable against line drift, and a new
+``time.time()`` anywhere else fails CI until a human decides which
+clock the new code actually needs.  Stale entries (the call site moved
+or vanished) fail too, so the list keeps documenting real code.
+
+    PYTHONPATH=src python scripts/check_monotonic.py
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Set, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src/repro/core", "src/repro/carousel", "src/repro/worker")
+
+# (file relative to src/repro, enclosing qualname) -> why wall clock is
+# right there.  "<module>" covers module-level calls.
+ALLOWLIST: Dict[Tuple[str, str], str] = {
+    # journaled catalog timestamps (operators read these as dates)
+    ("core/commands.py", "Command.from_dict"): "created_at journal field",
+    ("core/requests.py", "Request.from_json"): "created_at journal field",
+    ("core/workflow.py", "FileRef.__post_init__"): "created_at field",
+    ("core/workflow.py", "FileRef.set_status"): "updated_at field",
+    ("core/delivery.py", "Delivery.set_status"): "updated_at field",
+    ("core/delivery.py", "Subscription.from_dict"):
+        "created_at journal field",
+    ("core/daemons.py", "Transformer._finalize"):
+        "terminated_at journal field",
+    ("core/daemons.py", "Commander.process_once"):
+        "processed_at journal field",
+    ("core/daemons.py", "Commander._apply_abort"):
+        "processed_at journal field",
+    ("core/idds.py", "IDDS.submit"): "submitted_at journal field",
+    # cross-process comparisons through the shared store: peer heads
+    # compare against THEIR wall clocks, monotonic is not comparable
+    ("core/daemons.py", "Context.try_own"): "claim expiry vs peers",
+    ("core/daemons.py", "Watchdog.__init__"): "started_at health field",
+    ("core/daemons.py", "Watchdog._heartbeat"):
+        "health heartbeat vs peers",
+    ("core/daemons.py", "Watchdog._sweep"): "claim expiry vs peers",
+    ("core/idds.py", "IDDS.cluster_info"): "heartbeat age vs peers",
+    ("core/idds.py", "IDDS.metrics_text"): "heartbeat age vs peers",
+    ("core/idds.py", "IDDS.ack_delivery"):
+        "notify-to-ack latency across heads",
+    ("core/store.py", "InMemoryStore.try_claim"): "claim expiry",
+    ("core/store.py", "InMemoryStore.renew_claims"): "claim expiry",
+    ("core/store.py", "SqliteStore.try_claim"): "claim expiry",
+    ("core/store.py", "SqliteStore.renew_claims"): "claim expiry",
+    ("core/scheduler.py", "JobScheduler._lease_journal_row"):
+        "journaled lease expiry read by peers",
+    # bus rows travel between processes: created_at/not_before and the
+    # publish->consume lag are wall-clock by design
+    ("core/messaging.py", "LocalBus.publish"): "message timestamp",
+    ("core/messaging.py", "StorePollingBus.publish"): "message timestamp",
+    ("core/messaging.py", "StorePollingBus.requeue"):
+        "redelivery not_before",
+    ("core/messaging.py", "StorePollingBus._to_messages"):
+        "fallback message timestamp",
+    ("core/messaging.py", "StorePollingBus.prune"): "retention horizon",
+    ("core/messaging.py", "BusBackend._observe_lag"):
+        "cross-process publish-to-consume lag",
+    ("core/store.py", "InMemoryStore.bus_publish"): "message timestamp",
+    ("core/store.py", "InMemoryStore.bus_consume"): "not_before gate",
+    ("core/store.py", "InMemoryStore.bus_depth"): "not_before gate",
+    ("core/store.py", "SqliteStore.bus_publish"): "message timestamp",
+    ("core/store.py", "SqliteStore.bus_consume"): "not_before gate",
+    ("core/store.py", "SqliteStore.bus_depth"): "not_before gate",
+    # telemetry: trace events are journaled and merged across heads
+    ("core/obs.py", "Tracer.emit"): "trace-event timestamp",
+    # operator-facing wall-clock readouts (not deadlines)
+    ("core/rest.py", "RestGateway.start"): "started_at readout",
+    ("core/rest.py", "RestGateway.handle_healthz"): "uptime readout",
+    ("core/dag.py", "DAGScheduler.run_sync"):
+        "wall_s report field (single pass, not a deadline)",
+}
+
+
+def wall_clock_sites(path: pathlib.Path) -> List[Tuple[int, str]]:
+    """Every ``time.time()`` call in the file as (line, qualname)."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    stack: List[str] = []
+    sites: List[Tuple[int, str]] = []
+
+    class Visitor(ast.NodeVisitor):
+        def visit_FunctionDef(self, node):
+            stack.append(node.name)
+            self.generic_visit(node)
+            stack.pop()
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_ClassDef(self, node):
+            stack.append(node.name)
+            self.generic_visit(node)
+            stack.pop()
+
+        def visit_Call(self, node):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr == "time"
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "time"):
+                sites.append((node.lineno, ".".join(stack) or "<module>"))
+            self.generic_visit(node)
+
+    Visitor().visit(tree)
+    return sites
+
+
+def main() -> int:
+    errors: List[str] = []
+    present: Set[Tuple[str, str]] = set()
+    n_files = 0
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).glob("*.py")):
+            n_files += 1
+            rel = str(path.relative_to(ROOT / "src/repro"))
+            for lineno, qualname in wall_clock_sites(path):
+                key = (rel, qualname)
+                present.add(key)
+                if key not in ALLOWLIST:
+                    errors.append(
+                        f"{path}:{lineno}: time.time() in {qualname} — "
+                        f"use time.monotonic() for deadlines/durations; "
+                        f"if this is a journaled wall-clock field, "
+                        f"allowlist {key!r} in "
+                        f"scripts/check_monotonic.py")
+    for key in sorted(ALLOWLIST):
+        if key not in present:
+            errors.append(f"stale allowlist entry {key!r}: no "
+                          f"time.time() there any more — remove it")
+    if errors:
+        print("\n".join(errors))
+        print(f"\ncheck_monotonic: {len(errors)} problem(s)")
+        return 1
+    print(f"check_monotonic: OK ({n_files} files scanned, "
+          f"{len(ALLOWLIST)} allowlisted wall-clock sites)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

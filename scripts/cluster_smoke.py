@@ -5,7 +5,9 @@ store over the store-polling bus, submits a batch of in-flight
 workflows to head 1, SIGKILLs head 1 mid-run (no cleanup, no claim
 release), and asserts that head 2 adopts the orphaned workflows and
 drives EVERY request to ``finished`` — no request lost, none stuck.
-Also checks /v1/cluster flips head 1 to dead while head 2 stays alive.
+Also checks /v1/cluster flips head 1 to dead while head 2 stays alive,
+then scrapes /v1/metrics from the survivor and fails if the key
+telemetry series are absent or zero.
 
 Run from CI (cluster-smoke job) or by hand:
 
@@ -22,6 +24,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 
 from repro.core.client import IDDSClient  # noqa: E402
+from repro.core.obs import parse_exposition  # noqa: E402
 from repro.core.spec import WorkflowSpec  # noqa: E402
 
 N_REQUESTS = 8
@@ -118,6 +121,49 @@ def main() -> int:
         else:
             raise RuntimeError(f"cluster view never converged: {heads}")
         print("cluster view: head-1 dead, head-2 alive")
+
+        # the survivor's exposition must carry the key series with
+        # nonzero samples.  (Lease latency only exists under
+        # --distributed heads — the execution plane here is inline —
+        # so scheduler series are asserted in tests/test_obs.py.)
+        series = parse_exposition(c2.metrics())
+        for name in ("idds_rest_requests_total",
+                     "idds_daemon_loop_seconds_count",
+                     "idds_bus_lag_seconds_count"):
+            total = sum((series.get(name) or {}).values())
+            if total <= 0:
+                raise RuntimeError(
+                    f"survivor /v1/metrics missing or zero: {name} "
+                    f"(got {total})")
+            print(f"  metrics: {name} = {total:g}")
+        # ?cluster=1 must parse too and tag the survivor's series with
+        # its head label (head-1's last snapshot is stale by now and
+        # correctly dropped)
+        clustered = parse_exposition(c2.metrics(cluster=True))
+        heads_seen = {dict(key).get("head")
+                      for key in clustered.get(
+                          "idds_rest_requests_total", {})}
+        if "head-2" not in heads_seen:
+            raise RuntimeError(
+                f"clustered exposition lacks head-2 series: "
+                f"{heads_seen}")
+        print(f"  clustered metrics heads: {sorted(h for h in heads_seen if h)}")
+
+        # the adopted workflows' traces must stitch spans across BOTH
+        # heads: submitted on head-1, finished on head-2
+        tr = c2.trace(rids[0])
+        if not tr["spans"]:
+            raise RuntimeError(f"trace for {rids[0]} has no spans: {tr}")
+        bad = [s for s in tr["spans"] if s["duration_s"] < 0]
+        if bad:
+            raise RuntimeError(f"negative-duration spans: {bad}")
+        trace_heads = set(tr["heads"])
+        if not {"head-1", "head-2"} <= trace_heads:
+            raise RuntimeError(
+                f"trace should carry events from both heads, got "
+                f"{sorted(trace_heads)}")
+        print(f"  trace {tr['trace_id']}: {len(tr['spans'])} spans "
+              f"across heads {sorted(trace_heads)}")
         print("CLUSTER SMOKE PASSED")
         return 0
     finally:

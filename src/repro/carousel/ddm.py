@@ -31,6 +31,8 @@ class CarouselDDM:
         self.prompt_release = prompt_release
         self.bus: Optional[M.MessageBus] = None
         self.store: Optional[Store] = None
+        self.metrics = None
+        self.tracer = None
         self._lock = threading.RLock()
         self._collections: Dict[str, Collection] = {}
         self._stagers: Dict[str, Stager] = {}
@@ -49,6 +51,18 @@ class CarouselDDM:
             if st.bus is None:
                 st.bus = bus
 
+    def bind_telemetry(self, metrics=None, tracer=None) -> None:
+        """Late-bind the head's metrics registry + tracer (``IDDS``
+        calls this right after :meth:`bind`); already-attached stagers
+        pick them up too."""
+        self.metrics = metrics
+        self.tracer = tracer
+        with self._lock:
+            stagers = list(self._stagers.items())
+        for _name, st in stagers:
+            if metrics is not None:
+                st.bind_telemetry(metrics, tracer)
+
     def _journal(self, collection: str, f: FileRef) -> None:
         if self.store is not None:
             self.store.save_contents(collection, [f.to_dict()])
@@ -64,6 +78,8 @@ class CarouselDDM:
         stager.collection = collection
         if stager.bus is None:
             stager.bus = self.bus
+        if self.metrics is not None:
+            stager.bind_telemetry(self.metrics, self.tracer)
         stager.on_submitted = lambda name: self.mark_staging(collection,
                                                              name)
         stager.on_available = lambda name: self.set_available(collection,

@@ -31,6 +31,9 @@ from typing import Any, Callable, Deque, Dict, List, Optional
 
 from repro.carousel.storage import ColdStore, DiskCache
 from repro.core import messaging as M
+from repro.core.obs import get_logger
+
+_log = get_logger("stager")
 
 
 @dataclass
@@ -44,6 +47,12 @@ class StageRecord:
 
 
 class Stager:
+    # telemetry is optional: unbound, each hook costs one attribute
+    # lookup against these class defaults
+    _obs_stage_hist = None
+    _obs_failures = None
+    tracer = None
+
     def __init__(self, cold: ColdStore, cache: DiskCache,
                  bus: Optional[M.MessageBus] = None, *,
                  collection: str = "carousel",
@@ -79,6 +88,16 @@ class Stager:
         self.hedges_issued = 0
 
     # ------------------------------------------------------------------
+    def bind_telemetry(self, registry, tracer=None) -> None:
+        """Wire metrics/tracing (CarouselDDM forwards the head's)."""
+        self._obs_stage_hist = registry.histogram(
+            "stager_stage_seconds", "cold-to-cache staging latency",
+            labels=("collection",)).labels(collection=self.collection)
+        self._obs_failures = registry.counter(
+            "stager_failures_total", "terminal staging failures",
+            labels=("collection",)).labels(collection=self.collection)
+        self.tracer = tracer
+
     def _median_latency(self) -> Optional[float]:
         with self._lock:
             if len(self._latencies) < self.hedge_min_samples:
@@ -95,12 +114,21 @@ class Stager:
             rec = self.records[name]
             rec.finished = time.monotonic()
             rec.ok = True
-            self._latencies.append(rec.finished - rec.submitted)
+            dt = rec.finished - rec.submitted
+            attempts, hedged = rec.attempts, rec.hedged
+            self._latencies.append(dt)
+        if self._obs_stage_hist is not None:
+            self._obs_stage_hist.observe(dt)
         self.cache.put(name, data, size, pin=False)
         # DDM state first, bus second: a consumer woken by the
         # announcement must observe the availability it announces
         if self.on_available is not None:
             self.on_available(name)
+        if self.tracer is not None:
+            self.tracer.emit("content_available",
+                             collection=self.collection, entity=name,
+                             data={"attempts": attempts, "hedged": hedged,
+                                   "stage_s": round(dt, 6)})
         if self.bus is not None:
             self.bus.publish(M.T_COLLECTION_UPDATED,
                              {"collection": self.collection, "file": name})
@@ -131,6 +159,10 @@ class Stager:
                 return
             rec.finished = time.monotonic()
             rec.ok = False
+        _log.warning("staging failed terminally: %s/%s after %d attempts",
+                     self.collection, name, rec.attempts)
+        if self._obs_failures is not None:
+            self._obs_failures.inc()
         if self.on_failed is not None:
             self.on_failed(name)
         if self.bus is not None:
@@ -147,6 +179,9 @@ class Stager:
             self.records[name] = StageRecord(name, time.monotonic())
         if self.on_submitted is not None:
             self.on_submitted(name)
+        if self.tracer is not None:
+            self.tracer.emit("content_staging",
+                             collection=self.collection, entity=name)
         self._futures.append(self._pool.submit(self._stage_once, name))
 
     def submit_all(self, names: List[str]) -> None:

@@ -107,10 +107,12 @@ class DiskCache:
         self.peak_bytes = 0
         self.evictions = 0
         self._residence_acc = 0.0      # integral of used bytes over time
-        self._last_t = time.time()
+        # monotonic: a wall-clock step (NTP slew) must not corrupt the
+        # byte-seconds integral
+        self._last_t = time.monotonic()
 
     def _tick(self) -> None:
-        now = time.time()
+        now = time.monotonic()
         self._residence_acc += self.used * (now - self._last_t)
         self._last_t = now
 

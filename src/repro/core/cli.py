@@ -38,6 +38,11 @@ Verbs:
   deliveries SUB_ID [--status S]
                               a subscription's tracked deliveries
   ack SUB_ID DELIVERY_ID...   acknowledge deliveries
+  metrics [--cluster]         GET /v1/metrics — Prometheus text
+                              exposition (raw, not JSON); --cluster
+                              merges every live head's series
+  trace REQUEST_ID            GET /v1/requests/<id>/trace — the
+                              request's lifecycle span timeline
 """
 from __future__ import annotations
 
@@ -115,6 +120,15 @@ def build_parser() -> argparse.ArgumentParser:
     p = sub.add_parser("ack")
     p.add_argument("sub_id")
     p.add_argument("delivery_ids", nargs="+")
+
+    p = sub.add_parser("metrics")
+    p.add_argument("--cluster", action="store_true",
+                   help="aggregate every live head's series (each "
+                        "tagged with a 'head' label) instead of just "
+                        "the answering head's")
+
+    p = sub.add_parser("trace")
+    p.add_argument("request_id")
     return ap
 
 
@@ -175,6 +189,11 @@ def main(argv=None) -> int:
                                           status=args.status))
         elif args.verb == "ack":
             _print(client.ack(args.sub_id, args.delivery_ids))
+        elif args.verb == "metrics":
+            # Prometheus exposition is already text — print verbatim
+            sys.stdout.write(client.metrics(cluster=args.cluster))
+        elif args.verb == "trace":
+            _print(client.trace(args.request_id))
     except KeyError as e:
         print(json.dumps({"error": {"type": "NotFound",
                                     "message": str(e)}}), file=sys.stderr)

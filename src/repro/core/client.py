@@ -123,7 +123,8 @@ class IDDSClient:
     # ------------------------------------------------------------- transport
     def _request(self, method: str, path: str,
                  body: Optional[bytes] = None, *,
-                 idempotent: Optional[bool] = None) -> Any:
+                 idempotent: Optional[bool] = None,
+                 raw: bool = False) -> Any:
         """One HTTP call with the retry policy.  ``idempotent=None``
         derives it from the verb (GET yes, POST no); non-idempotent
         calls are never retried — a 5xx or dropped connection leaves the
@@ -140,7 +141,8 @@ class IDDSClient:
                 req.add_header("Authorization", f"Bearer {self.token}")
             try:
                 with urllib.request.urlopen(req, timeout=self.timeout) as r:
-                    return json.loads(r.read().decode("utf-8"))
+                    text = r.read().decode("utf-8")
+                    return text if raw else json.loads(text)
             except urllib.error.HTTPError as e:
                 status = e.code
                 try:
@@ -399,6 +401,21 @@ class IDDSClient:
 
     def stats(self) -> Dict[str, int]:
         return self._get(f"{API_PREFIX}/stats")
+
+    def metrics(self, *, cluster: bool = False) -> str:
+        """Prometheus text exposition (GET /v1/metrics); ``cluster=True``
+        merges in the snapshots of every live peer head, each series
+        tagged with a ``head`` label."""
+        qs = "?cluster=1" if cluster else ""
+        return self._request("GET", f"{API_PREFIX}/metrics{qs}", raw=True)
+
+    def trace(self, request_id: str) -> Dict[str, Any]:
+        """A request's reconstructed lifecycle timeline (GET
+        /v1/requests/<id>/trace): journaled trace events plus paired
+        spans with durations and per-head attribution."""
+        return self._get(
+            f"{API_PREFIX}/requests/"
+            f"{urllib.parse.quote(request_id)}/trace")
 
     def healthz(self) -> Dict[str, Any]:
         return self._get(f"{API_PREFIX}/healthz")

@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import threading
 import time
-import traceback
 import uuid
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -40,6 +39,7 @@ from repro.core.commands import (CTRL_ABORTED, CTRL_SUSPENDED, Command,
                                  CommandConflict)
 from repro.core.ddm import DDM
 from repro.core.delivery import Subscription
+from repro.core.obs import SLOW_OP_THRESHOLD_S, get_logger
 from repro.core.store import InMemoryStore, Store
 from repro.core.workflow import (Processing, ProcessingStatus, Work,
                                  WorkStatus, Workflow, _new_id)
@@ -196,10 +196,29 @@ class Context:
     claim_ttl: float = 5.0
     claimed: Dict[str, float] = field(default_factory=dict)
     lock: threading.RLock = field(default_factory=threading.RLock)
+    # telemetry plane (obs.py), wired by IDDS: the head's metrics
+    # registry, the lifecycle-event tracer, the scheduler trace hook,
+    # and the workflow_id -> trace_id map that lets daemons stamp bus
+    # publishes / trace events without threading ids through each call
+    metrics: Optional[Any] = None
+    tracer: Optional[Any] = None
+    sched_event: Optional[Callable[..., None]] = None
+    trace_ids: Dict[str, str] = field(default_factory=dict)
 
     def bump(self, key: str, n: int = 1) -> None:
         with self.lock:
             self.stats[key] = self.stats.get(key, 0) + n
+
+    def trace(self, event: str, **kw: Any) -> None:
+        """Emit a lifecycle trace event (no-op without a tracer)."""
+        if self.tracer is not None:
+            self.tracer.emit(event, **kw)
+
+    def trace_id_of(self, workflow_id: Optional[str]) -> Optional[str]:
+        if workflow_id is None:
+            return None
+        with self.lock:
+            return self.trace_ids.get(workflow_id)
 
     def inflight_add(self, workflow_id: str, n: int) -> None:
         with self.lock:
@@ -247,6 +266,7 @@ class Daemon:
 
     def __init__(self, ctx: Context):
         self.ctx = ctx
+        self.log = get_logger(f"daemon.{self.name}")
 
     def process_once(self) -> int:
         raise NotImplementedError
@@ -275,12 +295,31 @@ class Daemon:
             time.sleep(interval)
 
     def run_forever(self, stop: threading.Event, interval: float = 0.05):
+        m = self.ctx.metrics
+        loop_h = (m.histogram("daemon_loop_seconds",
+                              "one process_once round",
+                              labels=("daemon",)).labels(daemon=self.name)
+                  if m is not None else None)
+        msgs_c = (m.counter("daemon_messages_total", "messages handled",
+                            labels=("daemon",)).labels(daemon=self.name)
+                  if m is not None else None)
         while not stop.is_set():
+            t0 = time.monotonic()
             try:
                 n = self.process_once()
             except Exception:  # pragma: no cover - daemon resilience
-                traceback.print_exc()
+                self.log.exception("daemon round failed")
                 n = 0
+            dt = time.monotonic() - t0
+            if loop_h is not None:
+                loop_h.observe(dt)
+                if n:
+                    msgs_c.inc(n)
+            if dt > SLOW_OP_THRESHOLD_S:
+                self.log.warning(
+                    "slow daemon round: %.3fs (%d messages)", dt, n,
+                    extra={"daemon": self.name,
+                           "duration_s": round(dt, 3)})
             if n == 0:
                 self._idle_wait(interval)
 
@@ -307,6 +346,7 @@ class Clerk(Daemon):
                 continue
             n += 1
             rid = m.body.get("request_id")
+            tid = m.trace_id
             with self.ctx.lock:
                 # keep the live object on duplicate delivery (a client
                 # resubmit after recovery): its works are already running
@@ -314,6 +354,8 @@ class Clerk(Daemon):
                     self.ctx.workflows[wf.workflow_id] = wf
                 if rid:
                     self.ctx.request_of[wf.workflow_id] = rid
+                if tid:
+                    self.ctx.trace_ids.setdefault(wf.workflow_id, tid)
             if rid is not None and rid not in self.ctx.requests:
                 # submitted through ANOTHER head: its REST layer seeded
                 # its own request mirror; this head must learn the
@@ -322,11 +364,17 @@ class Clerk(Daemon):
                 if info is not None:
                     with self.ctx.lock:
                         self.ctx.requests.setdefault(rid, dict(info))
+                        if not tid and info.get("trace_id"):
+                            tid = info["trace_id"]
+                            self.ctx.trace_ids.setdefault(
+                                wf.workflow_id, tid)
             self.ctx.bump("requests")
+            self.ctx.trace("workflow_started", request_id=rid,
+                           trace_id=tid)
             self.ctx.bus.publish(M.T_NEW_WORKFLOWS, {
                 "workflow_id": wf.workflow_id,
                 "request_id": rid,
-            })
+            }, trace_id=tid)
         return n
 
 
@@ -356,9 +404,11 @@ class Marshaller(Daemon):
             self.ctx.store.save_works(wf.workflow_id, dicts)
         if works:
             self.ctx.bump("works_created", len(works))
+        tid = self.ctx.trace_id_of(wf.workflow_id)
         for w in works:
             self.ctx.bus.publish(M.T_NEW_WORKS, {
-                "workflow_id": wf.workflow_id, "work_id": w.work_id})
+                "workflow_id": wf.workflow_id, "work_id": w.work_id},
+                trace_id=tid)
 
     def _refresh_request(self, wf: Workflow) -> None:
         """Write the owning request's status transition through to the
@@ -411,7 +461,8 @@ class Marshaller(Daemon):
                 self._refresh_request(wf)
             except Exception:  # one bad workflow must not drop the batch
                 self.ctx.bump("marshaller_errors")
-                traceback.print_exc()
+                self.log.exception("workflow start failed for %s",
+                                   m.body.get("workflow_id"))
         for m in self.ctx.bus.poll(M.T_WORK_DONE):
             ent = self.ctx.works.get(m.body["work_id"])
             wf_hint = m.body.get("workflow_id") or (ent and ent[0])
@@ -455,7 +506,8 @@ class Marshaller(Daemon):
                 self._refresh_request(wf)
             except Exception:
                 self.ctx.bump("marshaller_errors")
-                traceback.print_exc()
+                self.log.exception("condition evaluation failed for "
+                                   "work %s", m.body.get("work_id"))
         return n
 
 
@@ -511,7 +563,8 @@ class Transformer(Daemon):
         self.ctx.bump("processings_created")
         self.ctx.bus.publish(M.T_NEW_PROCESSINGS,
                              {"proc_id": proc.proc_id,
-                              "workflow_id": wf_id})
+                              "workflow_id": wf_id},
+                             trace_id=self.ctx.trace_id_of(wf_id))
         return proc
 
     def _try_dispatch(self, work: Work) -> int:
@@ -652,10 +705,16 @@ class Transformer(Daemon):
         # terminal, unevaluated work and replays the T_WORK_DONE event
         self.ctx.store.save_work(wf_id, d)
         self.ctx.bump("works_finished")
+        tid = self.ctx.trace_id_of(wf_id)
+        self.ctx.trace("work_done",
+                       request_id=self.ctx.request_of.get(wf_id),
+                       trace_id=tid, entity=work.work_id,
+                       data={"status": getattr(work.status, "value",
+                                               str(work.status))})
         if announce:
             self.ctx.bus.publish(M.T_WORK_DONE,
                                  {"work_id": work.work_id,
-                                  "workflow_id": wf_id})
+                                  "workflow_id": wf_id}, trace_id=tid)
 
     # -- steering (Commander -> Transformer) -------------------------------
     def _handle_control(self, m: M.Message) -> None:
@@ -726,10 +785,15 @@ class Transformer(Daemon):
                 self.ctx.bus.requeue(m)  # owned but not hydrated yet
                 continue
             n += 1
-            _, work = ent
+            wf_id, work = ent
             if work.status.terminated:
                 continue  # cancelled by an abort before activation
             work.status = WorkStatus.ACTIVATED
+            self.ctx.trace("work_transforming",
+                           request_id=self.ctx.request_of.get(wf_id),
+                           trace_id=m.trace_id
+                           or self.ctx.trace_id_of(wf_id),
+                           entity=work.work_id)
             self._pending[work.work_id] = work
             self._try_dispatch(work)
             self._journal_dispatch(work)
@@ -774,13 +838,15 @@ class Transformer(Daemon):
                             pass
                     self._journal_collection(work.input_collection)
                 for out in proc.output_files:
+                    wf_id = self.ctx.works[work.work_id][0]
                     self.ctx.bus.publish(M.T_OUTPUT_AVAILABLE, {
                         "work_id": work.work_id,
-                        "workflow_id": self.ctx.works[work.work_id][0],
+                        "workflow_id": wf_id,
                         "collection": work.output_collection,
                         "file": out,
                         "result": proc.result,
-                    })
+                    }, trace_id=m.trace_id
+                        or self.ctx.trace_id_of(wf_id))
             if self._work_complete(work) and not work.status.terminated:
                 # terminated guard: a work cancelled by an abort command
                 # must not be resurrected by a late processing outcome
@@ -864,6 +930,12 @@ class Carrier(Daemon):
 
     def _submit(self, proc: Processing) -> None:
         self.ctx.bump("job_attempts")
+        wf_id = self._wf_of(proc)
+        self.ctx.trace("processing_submitted",
+                       request_id=self.ctx.request_of.get(wf_id),
+                       trace_id=self.ctx.trace_id_of(wf_id),
+                       entity=proc.proc_id,
+                       data={"attempt": proc.attempt})
         self.ctx.wfm.submit(proc)
         self._running[proc.proc_id] = proc
         # sync WFM executes inline, so this records the final status;
@@ -935,8 +1007,10 @@ class Carrier(Daemon):
                 if not self.ctx.wfm.sync:  # sync journaled at submit
                     self.ctx.store.save_processing(proc.to_dict())
                 self.ctx.bump("processings_finished")
-                self.ctx.bus.publish(M.T_PROCESSING_DONE,
-                                     {"proc_id": proc.proc_id})
+                self._trace_done(proc, failed=False)
+                self.ctx.bus.publish(
+                    M.T_PROCESSING_DONE, {"proc_id": proc.proc_id},
+                    trace_id=self.ctx.trace_id_of(self._wf_of(proc)))
             elif proc.status == ProcessingStatus.FAILED:
                 n += 1
                 if proc.attempt < proc.max_attempts:
@@ -949,9 +1023,24 @@ class Carrier(Daemon):
                     if not self.ctx.wfm.sync:
                         self.ctx.store.save_processing(proc.to_dict())
                     self.ctx.bump("processings_failed")
-                    self.ctx.bus.publish(M.T_PROCESSING_DONE,
-                                         {"proc_id": proc.proc_id})
+                    self.log.warning(
+                        "processing %s failed terminally after %d "
+                        "attempts: %s", proc.proc_id, proc.attempt,
+                        proc.error)
+                    self._trace_done(proc, failed=True)
+                    self.ctx.bus.publish(
+                        M.T_PROCESSING_DONE, {"proc_id": proc.proc_id},
+                        trace_id=self.ctx.trace_id_of(self._wf_of(proc)))
         return n
+
+    def _trace_done(self, proc: Processing, *, failed: bool) -> None:
+        wf_id = self._wf_of(proc)
+        self.ctx.trace("processing_done",
+                       request_id=self.ctx.request_of.get(wf_id),
+                       trace_id=self.ctx.trace_id_of(wf_id),
+                       entity=proc.proc_id,
+                       data={"failed": failed,
+                             "attempt": proc.attempt})
 
 
 # ---------------------------------------------------------------------------
@@ -994,21 +1083,29 @@ class Conductor(Daemon):
         f = self.ctx.ddm.ensure_content(collection, file_name)
         self.ctx.store.save_contents(collection, [f.to_dict()])
 
-    def _notify(self, sub: Subscription, d, result=None) -> None:
+    def _notify(self, sub: Subscription, d, result=None,
+                trace_id: Optional[str] = None) -> None:
         self._next_retry[d.delivery_id] = (time.monotonic()
                                            + self.retry_interval)
         self.ctx.bump("deliveries_notified")
+        if d.attempts <= 1:  # first notification opens the span
+            self.ctx.trace("delivery_notified", collection=d.collection,
+                           trace_id=trace_id, entity=d.delivery_id,
+                           data={"consumer": sub.consumer,
+                                 "file": d.file})
         body = {"sub_id": sub.sub_id, "consumer": sub.consumer,
                 "delivery_id": d.delivery_id, "collection": d.collection,
                 "file": d.file, "attempt": d.attempts}
         if result is not None:
             body["result"] = result
-        self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, body)
+        self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, body,
+                             trace_id=trace_id)
 
     def _handle_output(self, m: M.Message) -> None:
         self.ctx.bump("notifications")
         # legacy broadcast: in-process consumers subscribed to the topic
-        self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, dict(m.body))
+        self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, dict(m.body),
+                             trace_id=m.trace_id)
         coll, fname = m.body.get("collection"), m.body.get("file")
         if not coll or not fname:
             return  # anonymous output: nothing to track per-file
@@ -1022,7 +1119,8 @@ class Conductor(Daemon):
                 if d is not None:
                     created.append((sub, d))
         for sub, d in created:
-            self._notify(sub, d, m.body.get("result"))
+            self._notify(sub, d, m.body.get("result"),
+                         trace_id=m.trace_id)
             self._journal_sub(sub)
 
     def _retry_pass(self) -> int:
@@ -1119,7 +1217,8 @@ class Commander(Daemon):
                 cmd.status = "failed"
                 cmd.error = f"{type(e).__name__}: {e}"
                 self.ctx.bump("commander_errors")
-                traceback.print_exc()
+                self.log.exception("command %s (%s) failed",
+                                   cmd.command_id, cmd.action)
             cmd.processed_at = time.time()
             self.ctx.store.save_command(cmd.to_dict())
             self.ctx.bump(f"commands_{cmd.status}")
@@ -1377,12 +1476,26 @@ class Watchdog(Daemon):
                             ctx.claimed.pop(wf_id, None)
         with ctx.lock:
             n_claims = len(ctx.claimed)
+        data: Dict[str, Any] = {"bus": getattr(ctx.bus, "name", "local"),
+                                "claims": n_claims}
+        if ctx.metrics is not None:
+            sched = getattr(ctx.wfm, "scheduler", None)
+            depths = getattr(sched, "queue_depths", None)
+            if callable(depths):
+                gauge = ctx.metrics.gauge(
+                    "scheduler_queue_depth", "jobs per queue by state",
+                    labels=("queue", "state"))
+                for queue, states in depths().items():
+                    for state, n in states.items():
+                        gauge.labels(queue=queue, state=state).set(n)
+            # publish this head's full metrics snapshot into the health
+            # table so any peer can serve cluster-wide aggregation
+            data["metrics"] = ctx.metrics.snapshot()
         ctx.store.save_health({
             "head_id": ctx.head_id,
             "started_at": self.started_at,
             "last_heartbeat": time.time(),
-            "data": {"bus": getattr(ctx.bus, "name", "local"),
-                     "claims": n_claims},
+            "data": data,
         })
 
     def _sweep(self) -> int:

@@ -28,6 +28,8 @@ from repro.core.daemons import (ALL_DAEMONS, Context, Transformer, Watchdog,
                                 WFMExecutor)
 from repro.core.ddm import DDM, InMemoryDDM
 from repro.core.delivery import DELIVERY_STATUSES, Subscription, content_key
+from repro.core.obs import (MetricsRegistry, Tracer, build_trace,
+                            new_trace_id, render_snapshots)
 from repro.core.requests import Request
 from repro.core.store import (InMemoryStore, Store,
                               VALID_REQUEST_STATUSES, _content_rank)
@@ -48,7 +50,8 @@ class IDDS:
                  executor: Optional[WFMExecutor] = None,
                  bus: Union[str, M.BusBackend] = "local",
                  head_id: Optional[str] = None,
-                 claim_ttl: float = 5.0):
+                 claim_ttl: float = 5.0,
+                 telemetry: bool = True):
         store = store if store is not None else InMemoryStore()
         head_id = head_id or f"head-{uuid.uuid4().hex[:8]}"
         # bus= selects the backend: "local" (in-process, single head),
@@ -71,6 +74,26 @@ class IDDS:
             head_id=head_id,
             claim_ttl=claim_ttl,
         )
+        # telemetry plane: one registry + tracer per head, threaded
+        # through the Context so daemons/store/bus/scheduler all report
+        # into the same exposition (set BEFORE wfm.attach — the
+        # distributed executor binds scheduler metrics from ctx there).
+        # telemetry=False hands out no-op instruments and an inert
+        # tracer — the obs_bench overhead arm's baseline
+        self.metrics = MetricsRegistry(head_id=head_id, enabled=telemetry)
+        self.tracer = Tracer(
+            store, head_id, enabled=telemetry,
+            on_fault=lambda _e: self.ctx.bump("trace_faults"))
+        self.ctx.metrics = self.metrics
+        self.ctx.tracer = self.tracer
+        self.ctx.sched_event = self._sched_event
+        store.bind_metrics(self.metrics)
+        bind_bus = getattr(bus, "bind_metrics", None)
+        if callable(bind_bus):
+            bind_bus(self.metrics)
+        self._ack_hist = self.metrics.histogram(
+            "conductor_ack_seconds",
+            "delivery notify-to-ack latency").labels()
         wfm.attach(self.ctx)
         # a bindable DDM (CarouselDDM) gets the head's bus + store, so
         # its per-file staging transitions are announced to the
@@ -78,6 +101,9 @@ class IDDS:
         bind = getattr(self.ctx.ddm, "bind", None)
         if callable(bind):
             bind(bus=self.ctx.bus, store=self.ctx.store)
+        bind_tel = getattr(self.ctx.ddm, "bind_telemetry", None)
+        if callable(bind_tel):
+            bind_tel(self.metrics, self.tracer)
         self.daemons = [cls(self.ctx) for cls in ALL_DAEMONS]
         # the Watchdog adopts workflows whose head died through this
         # head's claim-aware scoped recovery
@@ -117,6 +143,22 @@ class IDDS:
         if self._tokens is not None and token not in self._tokens:
             raise AuthError("invalid token")
 
+    # ------------------------------------------------------------ telemetry
+    def _sched_event(self, event: str, proc_id: str,
+                     data: Dict[str, Any]) -> None:
+        """Scheduler → tracer adapter: the scheduler only knows job
+        ids (proc ids for WFM-dispatched jobs); resolve the owning
+        request so lease/completion events land on its timeline."""
+        rid = tid = None
+        with self.ctx.lock:
+            p = self.ctx.processings.get(proc_id)
+            if p is not None and p.work_id in self.ctx.works:
+                wf_id = self.ctx.works[p.work_id][0]
+                rid = self.ctx.request_of.get(wf_id)
+                tid = self.ctx.trace_ids.get(wf_id)
+        self.ctx.trace(event, request_id=rid, trace_id=tid,
+                       entity=proc_id, data=data)
+
     # -------------------------------------------------------------- client API
     def submit(self, request_json: str) -> str:
         """Accept a serialized Request; returns the request_id.
@@ -127,18 +169,21 @@ class IDDS:
         """
         req = Request.from_json(request_json)
         self._auth(req.token)
+        trace_id = new_trace_id()
         info = {
             "request_id": req.request_id,
             "workflow_id": req.workflow.workflow_id,
             "requester": req.requester,
             "status": "accepted",
             "submitted_at": time.time(),
+            "trace_id": trace_id,
         }
         with self.ctx.lock:
             if req.request_id in self._requests:
                 return req.request_id
             self._requests[req.request_id] = info
             self.ctx.request_of[req.workflow.workflow_id] = req.request_id
+            self.ctx.trace_ids[req.workflow.workflow_id] = trace_id
         # journal workflow structure before the request row: recovery can
         # always re-run a journaled workflow, while a request without its
         # workflow would be stuck at "accepted" forever
@@ -149,10 +194,14 @@ class IDDS:
             self.ctx.store.save_works(req.workflow.workflow_id,
                                       list(works.values()))
         self.ctx.store.save_request(info)
+        self.ctx.trace("submitted", request_id=req.request_id,
+                       trace_id=trace_id,
+                       data={"requester": req.requester,
+                             "workflow_id": req.workflow.workflow_id})
         self.ctx.bus.publish(M.T_NEW_REQUESTS, {
             "request_id": req.request_id,
             "workflow": req.workflow.to_json(),
-        })
+        }, trace_id=trace_id)
         return req.request_id
 
     def submit_workflow(self, wf: Workflow, requester: str = "anonymous",
@@ -589,12 +638,19 @@ class IDDS:
                     continue
                 d.set_status("acked")
                 n += 1
-                acked_contents.append((d.collection, d.file))
+                acked_contents.append(
+                    (d.collection, d.file, d.delivery_id, d.created_at))
             snapshot = sub.to_dict()
         self.ctx.store.save_subscription(snapshot)
         if n:
             self.ctx.bump("deliveries_acked", n)
-        for coll, fname in acked_contents:
+        now = time.time()
+        for coll, fname, did, created_at in acked_contents:
+            # wall-clock span: created_at was stamped by whichever head
+            # first notified the consumer, possibly not this one
+            self._ack_hist.observe(max(now - created_at, 0.0))
+            self.ctx.trace("delivery_acked", collection=coll,
+                           entity=did, data={"file": fname})
             self._maybe_content_delivered(coll, fname)
         return {"sub_id": sub_id, "acked": n}
 
@@ -683,6 +739,9 @@ class IDDS:
                 if r.get("workflow_id"):
                     self.ctx.request_of.setdefault(r["workflow_id"],
                                                    r["request_id"])
+                    if r.get("trace_id"):
+                        self.ctx.trace_ids.setdefault(r["workflow_id"],
+                                                      r["trace_id"])
                     # rebuild the steering state the daemons gate on: a
                     # suspended/aborted request stays fenced across the
                     # restart until an operator resumes it
@@ -831,7 +890,54 @@ class IDDS:
         n = sum(counts.values())
         if n:
             self.ctx.bump("workflows_adopted")
+            self.ctx.trace("workflow_adopted",
+                           request_id=self.ctx.request_of.get(workflow_id),
+                           trace_id=self.ctx.trace_id_of(workflow_id),
+                           data={"restored": n})
         return n
+
+    # ---------------------------------------------------------- observability
+    def trace(self, request_id: str) -> Dict[str, Any]:
+        """Reconstruct a request's lifecycle timeline from journaled
+        trace events (GET /v1/requests/<id>/trace).  Events keyed by
+        the request's works' input/output collections (staging and
+        delivery hops) are joined in, so the timeline spans every head
+        that touched the request."""
+        info = self.request_status(request_id)  # KeyError -> 404
+        colls: Set[str] = set()
+        wf = self.ctx.workflows.get(info["workflow_id"])
+        if wf is not None:
+            with self.ctx.lock:
+                for w in wf.works.values():
+                    if w.input_collection:
+                        colls.add(w.input_collection)
+                    if w.output_collection:
+                        colls.add(w.output_collection)
+        events = self.ctx.store.load_trace_events(
+            request_id=request_id,
+            collections=sorted(colls) or None)
+        out = build_trace(events)
+        out["request_id"] = request_id
+        out["status"] = info.get("status")
+        return out
+
+    def metrics_text(self, *, cluster: bool = False) -> str:
+        """Prometheus text exposition (GET /v1/metrics).  With
+        ``cluster=True``, merge in the metrics snapshots live peer
+        heads heartbeat into the health table, each series tagged with
+        its ``head`` label."""
+        snaps = [self.metrics.snapshot()]
+        if cluster:
+            now = time.time()
+            for h in self.ctx.store.load_health():
+                if h["head_id"] == self.ctx.head_id:
+                    continue  # serve our own registry live, not a snapshot
+                if now - h["last_heartbeat"] >= self.ctx.claim_ttl:
+                    continue  # dead head: its snapshot is stale
+                snap = (h.get("data") or {}).get("metrics")
+                if snap:
+                    snaps.append(snap)
+        return render_snapshots(snaps)
 
     # -------------------------------------------------------------- cluster
     def cluster_info(self) -> Dict[str, Any]:
@@ -849,6 +955,10 @@ class IDDS:
         heads = []
         for h in self.ctx.store.load_health():
             age = max(0.0, now - h["last_heartbeat"])
+            data = dict(h.get("data") or {})
+            # the embedded metrics snapshot is for /v1/metrics?cluster=1;
+            # it would dwarf the membership view served here
+            data.pop("metrics", None)
             heads.append({
                 "head_id": h["head_id"],
                 "started_at": h["started_at"],
@@ -856,7 +966,7 @@ class IDDS:
                 "heartbeat_age_s": round(age, 3),
                 "alive": age < self.ctx.claim_ttl,
                 "claims": by_owner.get(h["head_id"], 0),
-                "data": h.get("data") or {},
+                "data": data,
             })
         heads.sort(key=lambda h: h["head_id"])
         return {"head_id": self.ctx.head_id,

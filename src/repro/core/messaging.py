@@ -41,6 +41,9 @@ class Message:
     body: Dict[str, Any]
     msg_id: int
     ts: float
+    #: request-lifecycle correlation id (obs.new_trace_id); rides the
+    #: bus so cross-head hops stitch into one trace
+    trace_id: Optional[str] = None
 
 
 class BusBackend:
@@ -52,7 +55,46 @@ class BusBackend:
     #: backend identifier surfaced in /v1/healthz and /v1/cluster
     name = "abstract"
 
-    def publish(self, topic: str, body: Dict[str, Any]) -> Message:
+    # -- telemetry (class attrs: unbound costs one attribute lookup) ----
+    _obs_lag = None
+    _obs_pub = None
+
+    def bind_metrics(self, registry: Any) -> None:
+        """Attach an ``obs.MetricsRegistry``: per-topic publish counts
+        and publish->consume lag.  Lag is a wall-clock delta by design
+        — the publisher may be another process (StorePollingBus), so
+        monotonic clocks are not comparable.  Children are cached per
+        topic so the publish hot path pays one dict lookup, not a
+        ``labels()`` key build (worst case a racing first use resolves
+        the same child twice — the family dedupes under its lock)."""
+        self._obs_lag = registry.histogram(
+            "bus_lag_seconds", "publish->consume lag", labels=("topic",))
+        self._obs_pub = registry.counter(
+            "bus_published_total", "messages published",
+            labels=("topic",))
+        self._lag_children: Dict[str, Any] = {}
+        self._pub_children: Dict[str, Any] = {}
+
+    def _pub_child(self, topic: str):
+        child = self._pub_children.get(topic)
+        if child is None:
+            child = self._pub_children[topic] = self._obs_pub.labels(
+                topic=topic)
+        return child
+
+    def _observe_lag(self, topic: str, msgs: List[Message]) -> None:
+        if self._obs_lag is None or not msgs:
+            return
+        child = self._lag_children.get(topic)
+        if child is None:
+            child = self._lag_children[topic] = self._obs_lag.labels(
+                topic=topic)
+        now = time.time()
+        for m in msgs:
+            child.observe(max(now - m.ts, 0.0))
+
+    def publish(self, topic: str, body: Dict[str, Any],
+                trace_id: Optional[str] = None) -> Message:
         raise NotImplementedError
 
     def requeue(self, msg: Message) -> None:
@@ -93,11 +135,15 @@ class LocalBus(BusBackend):
         self.published = 0
 
     # -- queue semantics ----------------------------------------------------
-    def publish(self, topic: str, body: Dict[str, Any]) -> Message:
+    def publish(self, topic: str, body: Dict[str, Any],
+                trace_id: Optional[str] = None) -> Message:
         with self._cv:
-            msg = Message(topic, dict(body), next(self._ids), time.time())
+            msg = Message(topic, dict(body), next(self._ids), time.time(),
+                          trace_id)
             self._queues[topic].append(msg)
             self.published += 1
+            if self._obs_pub is not None:
+                self._pub_child(topic).inc()
             for cb in self._subs.get(topic, ()):  # broadcast listeners
                 cb(msg)
             self._cv.notify_all()
@@ -115,7 +161,9 @@ class LocalBus(BusBackend):
         with self._lock:
             q = self._queues[topic]
             n = len(q) if max_n <= 0 else min(max_n, len(q))
-            return [q.popleft() for _ in range(n)]
+            msgs = [q.popleft() for _ in range(n)]
+        self._observe_lag(topic, msgs)
+        return msgs
 
     def wait(self, topic: str, timeout: float = 1.0) -> Optional[Message]:
         """Blocking consume: pop one message, waiting up to ``timeout``
@@ -129,7 +177,9 @@ class LocalBus(BusBackend):
                 if rem <= 0:
                     return None
                 self._cv.wait(rem)
-            return self._queues[topic].popleft()
+            msg = self._queues[topic].popleft()
+        self._observe_lag(topic, [msg])
+        return msg
 
     def wait_any(self, topics: Iterable[str], timeout: float = 1.0) -> bool:
         """Block until at least one of ``topics`` has a queued message
@@ -194,11 +244,26 @@ class StorePollingBus(BusBackend):
         self.published = 0
 
     # -- queue semantics ----------------------------------------------------
-    def publish(self, topic: str, body: Dict[str, Any]) -> Message:
-        msg_id = self.store.bus_publish(topic, dict(body),
+    # The store's fetch verbs return only (msg_id, topic, body, origin),
+    # so publish metadata that must survive the journal hop — the
+    # publish wall-time (lag measurement) and the trace_id — rides
+    # INSIDE the body under reserved keys, stripped again on fetch.
+    _PUB_TS_KEY = "_pub_ts"
+    _TRACE_KEY = "_trace_id"
+
+    def publish(self, topic: str, body: Dict[str, Any],
+                trace_id: Optional[str] = None) -> Message:
+        now = time.time()
+        journaled = dict(body)
+        journaled[self._PUB_TS_KEY] = now
+        if trace_id is not None:
+            journaled[self._TRACE_KEY] = trace_id
+        msg_id = self.store.bus_publish(topic, journaled,
                                         origin=self.head_id)
-        msg = Message(topic, dict(body), msg_id, time.time())
+        msg = Message(topic, dict(body), msg_id, now, trace_id)
         self.published += 1
+        if self._obs_pub is not None:
+            self._pub_child(topic).inc()
         # local subscribers fire at publish time (LocalBus parity);
         # other heads fire theirs when they first fetch the row —
         # origin-keyed so nobody fires twice
@@ -211,8 +276,13 @@ class StorePollingBus(BusBackend):
     def requeue(self, msg: Message) -> None:
         # not_before pushes redelivery past the next poll tick so the
         # requeueing head does not busy-spin re-consuming a message it
-        # already knows it cannot process
-        self.store.bus_publish(msg.topic, dict(msg.body),
+        # already knows it cannot process.  Original publish time and
+        # trace_id are preserved: redelivery extends the same hop.
+        journaled = dict(msg.body)
+        journaled[self._PUB_TS_KEY] = msg.ts
+        if msg.trace_id is not None:
+            journaled[self._TRACE_KEY] = msg.trace_id
+        self.store.bus_publish(msg.topic, journaled,
                                origin=self.head_id,
                                not_before=time.time()
                                + self.requeue_delay)
@@ -223,11 +293,17 @@ class StorePollingBus(BusBackend):
         with self._lock:
             subs = tuple(self._subs.get(topic, ()))
         for r in rows:
-            m = Message(r["topic"], r["body"], r["msg_id"], time.time())
+            body = r["body"]
+            pub_ts = body.pop(self._PUB_TS_KEY, None)
+            trace_id = body.pop(self._TRACE_KEY, None)
+            m = Message(r["topic"], body, r["msg_id"],
+                        pub_ts if pub_ts is not None else time.time(),
+                        trace_id)
             msgs.append(m)
             if subs and r.get("origin") != self.head_id:
                 for cb in subs:
                     cb(m)
+        self._observe_lag(topic, msgs)
         return msgs
 
     def poll(self, topic: str, max_n: int = 0) -> List[Message]:

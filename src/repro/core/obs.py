@@ -1,0 +1,635 @@
+"""Telemetry plane: metrics registry, lifecycle tracing, logging.
+
+The paper positions iDDS as the orchestrator that steers workflows from
+*observed* behaviour; Rucio and the Event Streaming Service precursor
+both treat per-subsystem metrics and end-to-end delivery monitoring as
+load-bearing infrastructure.  This module is that layer for the
+reproduction — dependency-free (stdlib only) and cheap enough to stay
+on in every hot path:
+
+  * :class:`MetricsRegistry` — Counter / Gauge / Histogram families
+    with labeled series.  Histograms use fixed log-scale buckets (the
+    1-2.5-5 decade ladder) so p50/p95/p99 can be estimated without
+    storing samples.  ``render()`` emits Prometheus text exposition
+    (``text/plain; version=0.0.4``); ``snapshot()`` emits a JSON-able
+    dict a peer head can merge (``render_snapshots``) for the
+    cluster-wide ``/v1/metrics?cluster=1`` view.  Every series carries
+    a constant ``head`` label so multi-head aggregation never collides.
+    ``enabled=False`` turns every instrument into a no-op child — the
+    obs_bench overhead arm measures exactly this delta.
+  * :class:`Tracer` — journals timestamped request-lifecycle events
+    (``submitted``, ``workflow_started``, ``work_transforming``,
+    ``job_leased`` ... ``delivery_acked``) through the
+    :class:`~repro.core.store.Store` with head attribution, so
+    ``GET /v1/requests/<id>/trace`` can reconstruct where a request
+    spent its time even when the hops ran on different heads.  A
+    ``trace_id`` minted at submit rides REST bodies and bus
+    :class:`~repro.core.messaging.Message` metadata to stitch
+    cross-head spans.
+  * :func:`build_trace` — pure function pairing start/end events into
+    named spans with durations (the trace endpoint's response body).
+  * :func:`setup_logging` / :func:`get_logger` — stdlib ``logging``
+    configuration with head_id-tagged records and an optional JSON
+    formatter (``--log-json`` on the rest/worker CLIs).
+
+Locking: one small lock per child series (an uncontended acquire is
+~100ns); family/registry locks are taken only at series creation.
+Timestamps: metric durations use the monotonic clock; trace events are
+journaled with wall-clock ``ts`` so heads can compare them
+cross-process (see scripts/check_monotonic.py for the enforced split).
+"""
+from __future__ import annotations
+
+import json
+import logging
+import sys
+import threading
+import time
+import uuid
+from bisect import bisect_left
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+# daemon rounds or store flushes slower than this log a warning
+SLOW_OP_THRESHOLD_S = 1.0
+
+# fixed log-scale bucket ladder (seconds): 100us .. 2min, then +Inf.
+# Fixed (not per-histogram) so cluster-wide merges can sum bucket-wise.
+BUCKETS: Tuple[float, ...] = (
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 120.0)
+
+
+# ---------------------------------------------------------------------------
+# Children (one labeled series each)
+# ---------------------------------------------------------------------------
+
+
+class _CounterChild:
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self.value += n
+
+
+class _GaugeChild:
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self.value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self.value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        with self._lock:
+            self.value -= n
+
+
+class _HistogramChild:
+    __slots__ = ("_lock", "counts", "sum", "count")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counts = [0] * (len(BUCKETS) + 1)  # +1: the +Inf bucket
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        # first bucket with bound >= v (C-speed; this is the hottest
+        # instrument call in the tree)
+        i = bisect_left(BUCKETS, v)
+        with self._lock:
+            self.counts[i] += 1
+            self.sum += v
+            self.count += 1
+
+    def observe_many(self, vs: Iterable[float]) -> None:
+        """Record a batch under ONE lock acquisition — the bulk verbs
+        (complete_many and friends) accumulate per-item durations and
+        flush them here, amortizing the lock and dispatch cost."""
+        with self._lock:
+            counts = self.counts
+            s = 0.0
+            n = 0
+            for v in vs:
+                counts[bisect_left(BUCKETS, v)] += 1
+                s += v
+                n += 1
+            self.sum += s
+            self.count += n
+
+    def time(self) -> "_Timer":
+        return _Timer(self)
+
+    def percentile(self, q: float) -> float:
+        """Estimate the q-th percentile (0..100) from the buckets by
+        linear interpolation; the +Inf bucket clamps to the last finite
+        bound."""
+        with self._lock:
+            counts = list(self.counts)
+            total = self.count
+        if total == 0:
+            return 0.0
+        rank = q / 100.0 * total
+        cum = 0
+        lo = 0.0
+        for i, c in enumerate(counts):
+            if cum + c >= rank:
+                if i >= len(BUCKETS):
+                    return BUCKETS[-1]
+                hi = BUCKETS[i]
+                frac = (rank - cum) / c if c else 0.0
+                return lo + (hi - lo) * frac
+            cum += c
+            if i < len(BUCKETS):
+                lo = BUCKETS[i]
+        return BUCKETS[-1]
+
+    def percentiles(self, qs: Iterable[float] = (50, 95, 99)
+                    ) -> Dict[str, float]:
+        return {f"p{int(q)}": self.percentile(q) for q in qs}
+
+
+class _Timer:
+    __slots__ = ("_child", "_t0")
+
+    def __init__(self, child):
+        self._child = child
+
+    def __enter__(self) -> "_Timer":
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._child.observe(time.monotonic() - self._t0)
+
+
+class _NoopChild:
+    """Every instrument method as a no-op: what ``enabled=False`` hands
+    out, and the baseline the obs_bench overhead arm compares against."""
+
+    __slots__ = ()
+
+    def inc(self, n: float = 1.0) -> None:
+        pass
+
+    def dec(self, n: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def observe_many(self, vs) -> None:
+        pass
+
+    def time(self) -> "_NoopTimer":
+        return _NOOP_TIMER
+
+    def percentile(self, q: float) -> float:
+        return 0.0
+
+    def percentiles(self, qs=(50, 95, 99)) -> Dict[str, float]:
+        return {f"p{int(q)}": 0.0 for q in qs}
+
+
+class _NoopTimer:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        pass
+
+
+_NOOP_CHILD = _NoopChild()
+_NOOP_TIMER = _NoopTimer()
+
+
+# ---------------------------------------------------------------------------
+# Families (one metric name, many labeled series)
+# ---------------------------------------------------------------------------
+
+_CHILD_CLS = {"counter": _CounterChild, "gauge": _GaugeChild,
+              "histogram": _HistogramChild}
+
+
+class _Family:
+    def __init__(self, name: str, kind: str, help_: str,
+                 label_names: Tuple[str, ...], enabled: bool):
+        self.name = name
+        self.kind = kind
+        self.help = help_
+        self.label_names = label_names
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._children: Dict[Tuple[str, ...], Any] = {}
+
+    def labels(self, **kv: str):
+        """The child series for these label values (created on first
+        use).  Label *names* are fixed at family creation."""
+        if not self.enabled:
+            return _NOOP_CHILD
+        key = tuple(str(kv.get(ln, "")) for ln in self.label_names)
+        child = self._children.get(key)
+        if child is None:
+            with self._lock:
+                child = self._children.setdefault(
+                    key, _CHILD_CLS[self.kind]())
+        return child
+
+    # label-less convenience: family proxies to the () series
+    def inc(self, n: float = 1.0) -> None:
+        self.labels().inc(n)
+
+    def dec(self, n: float = 1.0) -> None:
+        self.labels().dec(n)
+
+    def set(self, v: float) -> None:
+        self.labels().set(v)
+
+    def observe(self, v: float) -> None:
+        self.labels().observe(v)
+
+    def observe_many(self, vs: Iterable[float]) -> None:
+        self.labels().observe_many(vs)
+
+    def time(self):
+        return self.labels().time()
+
+    def series(self) -> List[Tuple[Tuple[str, ...], Any]]:
+        with self._lock:
+            return list(self._children.items())
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def _fmt_labels(pairs: List[Tuple[str, str]]) -> str:
+    if not pairs:
+        return ""
+    esc = [(k, v.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n")) for k, v in pairs]
+    return "{" + ",".join(f'{k}="{v}"' for k, v in esc) + "}"
+
+
+def _fmt_num(v: float) -> str:
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
+
+
+class MetricsRegistry:
+    """Process-wide metric families with Prometheus text exposition.
+
+    One registry per head service (``IDDS.metrics``); everything that
+    instruments a hot path gets its family handles once (at bind time)
+    and pays only a child-dict lookup + one small lock per event.
+    """
+
+    def __init__(self, head_id: str = "", prefix: str = "idds",
+                 enabled: bool = True):
+        self.head_id = head_id
+        self.prefix = prefix
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._families: Dict[str, _Family] = {}
+
+    # ------------------------------------------------------------ factories
+    def _family(self, name: str, kind: str, help_: str,
+                labels: Iterable[str]) -> _Family:
+        full = f"{self.prefix}_{name}" if self.prefix else name
+        with self._lock:
+            fam = self._families.get(full)
+            if fam is None:
+                fam = _Family(full, kind, help_, tuple(labels),
+                              self.enabled)
+                self._families[full] = fam
+            elif fam.kind != kind:
+                raise ValueError(
+                    f"metric {full!r} already registered as {fam.kind}")
+            return fam
+
+    def counter(self, name: str, help: str = "",  # noqa: A002
+                labels: Iterable[str] = ()) -> _Family:
+        return self._family(name, "counter", help, labels)
+
+    def gauge(self, name: str, help: str = "",  # noqa: A002
+              labels: Iterable[str] = ()) -> _Family:
+        return self._family(name, "gauge", help, labels)
+
+    def histogram(self, name: str, help: str = "",  # noqa: A002
+                  labels: Iterable[str] = ()) -> _Family:
+        return self._family(name, "histogram", help, labels)
+
+    # ------------------------------------------------------------ exposition
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-able dump of every series — what the Watchdog publishes
+        into the health table for cluster-wide aggregation."""
+        fams = []
+        with self._lock:
+            families = list(self._families.values())
+        for fam in families:
+            series = []
+            for key, child in fam.series():
+                if fam.kind == "histogram":
+                    with child._lock:
+                        series.append({"l": list(key),
+                                       "buckets": list(child.counts),
+                                       "sum": child.sum,
+                                       "count": child.count})
+                else:
+                    series.append({"l": list(key), "v": child.value})
+            fams.append({"name": fam.name, "kind": fam.kind,
+                         "help": fam.help,
+                         "labels": list(fam.label_names),
+                         "series": series})
+        return {"head": self.head_id, "families": fams}
+
+    def render(self) -> str:
+        """This head's metrics as Prometheus text exposition."""
+        return render_snapshots([self.snapshot()])
+
+
+def render_snapshots(snapshots: List[Dict[str, Any]]) -> str:
+    """Merge one or more :meth:`MetricsRegistry.snapshot` dicts into
+    one Prometheus text document.  Every series carries a ``head``
+    label from its snapshot, so two heads' series never collide — this
+    is the ``/v1/metrics?cluster=1`` aggregation path (snapshots come
+    from the health table the Watchdog heartbeats into)."""
+    # family name -> (kind, help, [(head, label_names, series), ...])
+    merged: Dict[str, Tuple[str, str, List]] = {}
+    order: List[str] = []
+    for snap in snapshots:
+        head = snap.get("head", "")
+        for fam in snap.get("families", []):
+            name = fam["name"]
+            if name not in merged:
+                merged[name] = (fam["kind"], fam.get("help", ""), [])
+                order.append(name)
+            merged[name][2].append((head, fam.get("labels", []),
+                                    fam.get("series", [])))
+    out: List[str] = []
+    for name in order:
+        kind, help_, groups = merged[name]
+        if help_:
+            out.append(f"# HELP {name} {help_}")
+        out.append(f"# TYPE {name} {kind}")
+        for head, label_names, series in groups:
+            base = [("head", head)] if head else []
+            for s in series:
+                pairs = base + [(ln, lv) for ln, lv
+                                in zip(label_names, s.get("l", []))]
+                if kind == "histogram":
+                    cum = 0
+                    counts = s.get("buckets", [])
+                    for i, b in enumerate(BUCKETS):
+                        cum += counts[i] if i < len(counts) else 0
+                        bp = pairs + [("le", _fmt_num(b))]
+                        out.append(f"{name}_bucket{_fmt_labels(bp)} "
+                                   f"{cum}")
+                    total = s.get("count", 0)
+                    bp = pairs + [("le", "+Inf")]
+                    out.append(f"{name}_bucket{_fmt_labels(bp)} {total}")
+                    out.append(f"{name}_sum{_fmt_labels(pairs)} "
+                               f"{_fmt_num(s.get('sum', 0.0))}")
+                    out.append(f"{name}_count{_fmt_labels(pairs)} "
+                               f"{total}")
+                else:
+                    out.append(f"{name}{_fmt_labels(pairs)} "
+                               f"{_fmt_num(s.get('v', 0.0))}")
+    return "\n".join(out) + ("\n" if out else "")
+
+
+def parse_exposition(text: str) -> Dict[str, Dict[Tuple, float]]:
+    """Tiny parser for the text format (tests + the cluster-smoke
+    scrape): ``{metric_name: {((label, value), ...): sample}}``."""
+    out: Dict[str, Dict[Tuple, float]] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        body, _, value = line.rpartition(" ")
+        if "{" in body:
+            name, _, rest = body.partition("{")
+            rest = rest.rstrip("}")
+            labels = []
+            for part in _split_labels(rest):
+                k, _, v = part.partition("=")
+                labels.append((k, v.strip('"')))
+            key = tuple(labels)
+        else:
+            name, key = body, ()
+        out.setdefault(name, {})[key] = float(value)
+    return out
+
+
+def _split_labels(s: str) -> List[str]:
+    parts, cur, in_q = [], [], False
+    for ch in s:
+        if ch == '"' and (not cur or cur[-1] != "\\"):
+            in_q = not in_q
+        if ch == "," and not in_q:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle tracing
+# ---------------------------------------------------------------------------
+
+
+def new_trace_id() -> str:
+    return f"tr-{uuid.uuid4().hex[:16]}"
+
+
+class Tracer:
+    """Journals request-lifecycle events through the store.
+
+    Events are keyed by ``request_id`` (direct lifecycle hops) or by
+    ``collection`` (content staging/availability — joined to requests
+    through the works' input/output collections at read time).  Every
+    event carries ``head_id`` so a cross-head trace attributes each hop
+    to the head that performed it.  Emission must never break the hot
+    path: store faults are counted and logged, not raised."""
+
+    def __init__(self, store=None, head_id: str = "",
+                 enabled: bool = True,
+                 on_fault: Optional[Callable[[str], None]] = None):
+        self.store = store
+        self.head_id = head_id
+        self.enabled = enabled
+        self.on_fault = on_fault
+        self._log = get_logger("tracer")
+
+    def emit(self, event: str, *, request_id: Optional[str] = None,
+             trace_id: Optional[str] = None,
+             collection: Optional[str] = None,
+             entity: Optional[str] = None,
+             data: Optional[Dict[str, Any]] = None) -> None:
+        if not self.enabled or self.store is None:
+            return
+        row = {
+            "event_id": f"ev-{uuid.uuid4().hex[:16]}",
+            "trace_id": trace_id,
+            "request_id": request_id,
+            "collection": collection,
+            "event": event,
+            "entity": entity,
+            "head_id": self.head_id,
+            # wall clock by design: peers journal into one table and
+            # their monotonic clocks are not comparable
+            "ts": time.time(),
+            "data": data or {},
+        }
+        try:
+            self.store.save_trace_events([row])
+        except Exception as e:  # noqa: BLE001 — tracing is best-effort
+            self._log.warning("trace emit failed for %s: %s", event, e)
+            if self.on_fault is not None:
+                self.on_fault(event)
+
+
+# span name -> (start event, end event); paired per entity (entity or
+# collection field, falling back to the request itself)
+_SPAN_PAIRS = [
+    ("marshal", "submitted", "workflow_started"),
+    ("transform", "work_transforming", "work_done"),
+    ("dispatch", "processing_submitted", "processing_done"),
+    ("execute", "job_leased", "job_completed"),
+    ("staging", "content_staging", "content_available"),
+    ("delivery", "delivery_notified", "delivery_acked"),
+]
+
+
+def build_trace(events: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Reconstruct the span timeline from journaled trace events.
+
+    Returns the ``GET /v1/requests/<id>/trace`` body: the raw events
+    (sorted, with ``dt_s`` offsets from the first), named spans with
+    positive durations paired per entity, and the set of heads that
+    contributed (two heads after a mid-run adoption)."""
+    evs = sorted(events, key=lambda e: (e.get("ts") or 0.0))
+    t0 = evs[0]["ts"] if evs else 0.0
+    for e in evs:
+        e["dt_s"] = round((e.get("ts") or t0) - t0, 6)
+    spans: List[Dict[str, Any]] = []
+    for name, start_ev, end_ev in _SPAN_PAIRS:
+        starts: Dict[Any, Dict] = {}
+        for e in evs:
+            key = e.get("entity") or e.get("collection") or ""
+            if e["event"] == start_ev and key not in starts:
+                starts[key] = e
+            elif e["event"] == end_ev and key in starts:
+                s = starts.pop(key)
+                spans.append({
+                    "span": name,
+                    "entity": key or None,
+                    "start_dt_s": s["dt_s"],
+                    "end_dt_s": e["dt_s"],
+                    "duration_s": round(max(e["ts"] - s["ts"], 0.0), 6),
+                    "head_start": s.get("head_id"),
+                    "head_end": e.get("head_id"),
+                })
+    spans.sort(key=lambda s: (s["start_dt_s"], s["span"]))
+    heads = sorted({e.get("head_id") for e in evs if e.get("head_id")})
+    trace_ids = [e.get("trace_id") for e in evs if e.get("trace_id")]
+    return {
+        "trace_id": trace_ids[0] if trace_ids else None,
+        "events": evs,
+        "spans": spans,
+        "heads": heads,
+        "duration_s": round(evs[-1]["ts"] - t0, 6) if evs else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Logging
+# ---------------------------------------------------------------------------
+
+_LOG_ROOT = "repro"
+
+
+class _JsonFormatter(logging.Formatter):
+    """One JSON object per line: machine-ingestable structured logs
+    (``--log-json``).  Known extras (head, daemon) are promoted to
+    top-level keys."""
+
+    def __init__(self, head_id: str = ""):
+        super().__init__()
+        self.head_id = head_id
+
+    def format(self, record: logging.LogRecord) -> str:
+        d: Dict[str, Any] = {
+            "ts": round(record.created, 6),
+            "level": record.levelname,
+            "logger": record.name,
+            "msg": record.getMessage(),
+        }
+        head = getattr(record, "head", None) or self.head_id
+        if head:
+            d["head"] = head
+        for k in ("daemon", "duration_s", "event"):
+            v = getattr(record, k, None)
+            if v is not None:
+                d[k] = v
+        if record.exc_info:
+            d["exc"] = self.formatException(record.exc_info)
+        return json.dumps(d, sort_keys=True)
+
+
+class _TextFormatter(logging.Formatter):
+    def __init__(self, head_id: str = ""):
+        super().__init__("%(asctime)s %(levelname)s %(name)s: "
+                         "%(message)s")
+        self.head_id = head_id
+
+    def format(self, record: logging.LogRecord) -> str:
+        base = super().format(record)
+        head = getattr(record, "head", None) or self.head_id
+        return f"[{head}] {base}" if head else base
+
+
+def setup_logging(level: str = "INFO", json_mode: bool = False,
+                  head_id: str = "") -> logging.Logger:
+    """Configure the ``repro`` logger tree: one stderr handler with a
+    head_id-tagged text or JSON formatter.  Idempotent — a second call
+    replaces the handler (the rest CLI calls it once at boot)."""
+    root = logging.getLogger(_LOG_ROOT)
+    root.setLevel(getattr(logging, str(level).upper(), logging.INFO))
+    handler = logging.StreamHandler(sys.stderr)
+    handler.setFormatter(_JsonFormatter(head_id) if json_mode
+                         else _TextFormatter(head_id))
+    for h in list(root.handlers):
+        root.removeHandler(h)
+    root.addHandler(handler)
+    root.propagate = False
+    return root
+
+
+def get_logger(name: str) -> logging.Logger:
+    """A child of the ``repro`` logger tree.  Without
+    :func:`setup_logging` these fall through to Python's last-resort
+    handler (WARNING+ to stderr), so library use stays quiet."""
+    return logging.getLogger(f"{_LOG_ROOT}.{name}")

@@ -98,6 +98,7 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.commands import CommandConflict
 from repro.core.idds import IDDS, AuthError
+from repro.core.obs import setup_logging
 from repro.core.scheduler import DistributedWFM, SchedulerConflict
 from repro.core.store import BufferedStore, SqliteStore
 
@@ -139,6 +140,14 @@ class RestGateway:
         self._tally_ttl = 1.0
         self._tally_cache: Tuple[float, Optional[Dict], Optional[Dict]] \
             = (0.0, None, None)
+        # per-route telemetry families (children resolved per request)
+        reg = self.idds.metrics
+        self._obs_req_hist = reg.histogram(
+            "rest_request_seconds", "per-route request latency",
+            labels=("route",))
+        self._obs_req_count = reg.counter(
+            "rest_requests_total", "requests served, by route and status",
+            labels=("route", "status"))
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -431,6 +440,27 @@ class RestGateway:
         self.idds._auth(token)
         return 200, self.idds.stats
 
+    # -- telemetry plane --------------------------------------------------
+    def handle_metrics(self, query: Dict[str, List[str]],
+                       token: str) -> Tuple[int, Any]:
+        """Prometheus text exposition; ``?cluster=1`` merges in the
+        snapshots live peer heads heartbeat into the health table."""
+        self.idds._auth(token)
+        cluster = (query or {}).get("cluster", ["0"])[0]
+        text = self.idds.metrics_text(
+            cluster=cluster not in ("", "0", "false", "no"))
+        return 200, PlainText(text)
+
+    def handle_trace(self, request_id: str, token: str) -> Tuple[int, Dict]:
+        """A request's reconstructed lifecycle timeline: journaled
+        trace events + paired spans with durations and per-head
+        attribution."""
+        self.idds._auth(token)
+        try:
+            return 200, self.idds.trace(request_id)
+        except KeyError:
+            return 404, _err("NotFound", f"unknown request {request_id!r}")
+
     def handle_cluster(self, token: str) -> Tuple[int, Dict]:
         """Head registry for the ownership plane: every head that has
         heartbeated into the store's health table, with heartbeat age,
@@ -622,6 +652,17 @@ class RestGateway:
         }
 
 
+class PlainText:
+    """Marks a handler body as pre-rendered text (Prometheus
+    exposition): ``_reply`` sends it verbatim instead of JSON."""
+    __slots__ = ("text", "content_type")
+
+    def __init__(self, text: str,
+                 content_type: str = "text/plain; version=0.0.4"):
+        self.text = text
+        self.content_type = content_type
+
+
 def _err(type_: str, message: str) -> Dict[str, Dict[str, str]]:
     return {"error": {"type": type_, "message": message}}
 
@@ -717,6 +758,8 @@ _ROUTE_SPECS = [
      "handle_processings", False),
     ("GET", r"requests/(?P<request_id>[^/]+)/workflow/?",
      "handle_workflow", True),
+    ("GET", r"requests/(?P<request_id>[^/]+)/trace/?",
+     "handle_trace", False),
     ("GET", r"requests/(?P<request_id>[^/]+)/?", "handle_status", True),
     ("POST", r"subscriptions/?", "handle_subscribe", False),
     ("POST", r"subscriptions/(?P<sub_id>[^/]+)/ack/?",
@@ -733,6 +776,7 @@ _ROUTE_SPECS = [
      "handle_contents", True),
     ("GET", r"collections/(?P<name>.+?)/?", "handle_collection", True),
     ("GET", r"stats/?", "handle_stats", True),
+    ("GET", r"metrics/?", "handle_metrics", False),
     ("GET", r"cluster/?", "handle_cluster", False),
     ("GET", r"healthz/?", "handle_healthz", True),
 ]
@@ -786,9 +830,14 @@ def _make_handler(gw: RestGateway):
         def _reply(self, status: int, body: Any,
                    headers: Optional[List[Tuple[str, str]]] = None) -> None:
             self._drain_body()
-            payload = json.dumps(body).encode("utf-8")
+            if isinstance(body, PlainText):
+                payload = body.text.encode("utf-8")
+                content_type = body.content_type
+            else:
+                payload = json.dumps(body).encode("utf-8")
+                content_type = "application/json"
             self.send_response(status)
-            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Type", content_type)
             self.send_header("Content-Length", str(len(payload)))
             for k, v in headers or ():
                 self.send_header(k, v)
@@ -839,6 +888,7 @@ def _make_handler(gw: RestGateway):
                     headers.append(("Link",
                                     f'<{successor}>; '
                                     f'rel="successor-version"'))
+                t0 = time.monotonic()
                 try:
                     status, body = self._invoke(fn_name, match)
                 except AuthError as e:
@@ -849,6 +899,11 @@ def _make_handler(gw: RestGateway):
                     status, body = 400, _err("NotDistributed", str(e))
                 except Exception as e:  # noqa: BLE001 — envelope, not trace
                     status, body = 500, _err(type(e).__name__, str(e))
+                route = fn_name[7:]  # strip "handle_"
+                gw._obs_req_hist.labels(route=route).observe(
+                    time.monotonic() - t0)
+                gw._obs_req_count.labels(route=route,
+                                         status=str(status)).inc()
                 self._reply(status, body, headers)
                 return
             if allowed:
@@ -870,7 +925,7 @@ def _make_handler(gw: RestGateway):
         # the ?n= multi-lease switch); may overlap with _BODY_HANDLERS
         _QUERY_HANDLERS = frozenset({
             "handle_list", "handle_contents", "handle_deliveries",
-            "handle_lease"})
+            "handle_lease", "handle_metrics"})
 
         def _invoke(self, fn_name: str, match) -> Tuple[int, Any]:
             token = self._token()
@@ -994,6 +1049,13 @@ def main(argv=None) -> int:
                          "(--carousel)")
     ap.add_argument("--verbose", action="store_true",
                     help="log each HTTP request")
+    ap.add_argument("--log-level", default="INFO",
+                    choices=("DEBUG", "INFO", "WARNING", "ERROR"),
+                    help="threshold for the structured core logs "
+                         "(daemon faults, slow-op warnings)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit core logs as one JSON object per line "
+                         "(for log shippers) instead of text")
     args = ap.parse_args(argv)
 
     for mod in args.payloads:
@@ -1021,6 +1083,7 @@ def main(argv=None) -> int:
                 tokens=tokens, store=store, executor=executor, ddm=ddm,
                 bus=args.bus, head_id=args.head_id,
                 claim_ttl=args.claim_ttl)
+    setup_logging(args.log_level, args.log_json, idds.ctx.head_id)
     if store is not None and args.bus != "store":
         counts = idds.recover()
         recovered = {k: v for k, v in counts.items() if v}

@@ -49,13 +49,15 @@ class SchedulerConflict(Exception):
 
 
 class _Lease:
-    __slots__ = ("lease_id", "worker_id", "deadline", "ttl")
+    __slots__ = ("lease_id", "worker_id", "deadline", "ttl", "granted")
 
-    def __init__(self, worker_id: str, deadline: float, ttl: float):
+    def __init__(self, worker_id: str, deadline: float, ttl: float,
+                 granted: float = 0.0):
         self.lease_id = f"lease-{uuid.uuid4().hex[:12]}"
         self.worker_id = worker_id
         self.deadline = deadline
         self.ttl = ttl
+        self.granted = granted  # scheduler clock: job-duration metric
 
 
 class _Job:
@@ -112,13 +114,40 @@ class JobScheduler:
         self._store: Optional[Store] = None
         self._on_stat: Optional[Callable[[str, int], None]] = None
 
+    # -- telemetry (class attrs: unbound costs one attribute lookup;
+    # per-verb children cached at attach so the hot verbs skip the
+    # labels() key build) -----
+    _obs_op = None
+    _obs_lease = None
+    _obs_heartbeat = None
+    _obs_complete = None
+    _obs_job_dur = None
+    _on_event = None
+
     # ------------------------------------------------------------- wiring
     def attach(self, store: Store,
-               on_stat: Optional[Callable[..., None]] = None) -> None:
-        """Bind the head service's store (lease journaling) and stats
-        hook; called by ``DistributedWFM.attach`` from ``IDDS``."""
+               on_stat: Optional[Callable[..., None]] = None,
+               metrics: Any = None,
+               on_event: Optional[Callable[..., None]] = None) -> None:
+        """Bind the head service's store (lease journaling), stats hook,
+        metrics registry and trace-event hook; called by
+        ``DistributedWFM.attach`` from ``IDDS``.  ``on_event(event,
+        proc_id, data)`` fires outside the scheduler lock for
+        ``job_leased`` / ``job_completed``."""
         self._store = store
         self._on_stat = on_stat
+        self._on_event = on_event
+        if metrics is not None:
+            self._obs_op = metrics.histogram(
+                "scheduler_op_seconds", "scheduler verb latency",
+                labels=("op",))
+            self._obs_lease = self._obs_op.labels(op="lease")
+            self._obs_heartbeat = self._obs_op.labels(op="heartbeat")
+            self._obs_complete = self._obs_op.labels(op="complete")
+            self._obs_job_dur = metrics.histogram(
+                "scheduler_job_seconds",
+                "job duration, lease grant to completion "
+                "report").labels()
 
     def _bump(self, key: str, n: int = 1) -> None:
         if self._on_stat is not None:
@@ -215,6 +244,26 @@ class JobScheduler:
         dispatchable; fewer than ``n`` when the queues run dry.  A
         repeated ``idempotency_key`` replays the payloads of the jobs
         from the original grant that this worker still holds."""
+        obs = self._obs_lease
+        t0 = time.monotonic() if obs is not None else 0.0
+        out = self._lease_many_impl(worker_id, n=n, queues=queues,
+                                    ttl=ttl,
+                                    idempotency_key=idempotency_key)
+        if obs is not None:
+            obs.observe(time.monotonic() - t0)
+        if self._on_event is not None:
+            for p in out:
+                self._on_event("job_leased", p["job_id"],
+                               {"worker_id": worker_id,
+                                "queue": p["queue"],
+                                "attempt": p["attempt"]})
+        return out
+
+    def _lease_many_impl(self, worker_id: str, *, n: int = 1,
+                         queues: Optional[List[str]] = None,
+                         ttl: Optional[float] = None,
+                         idempotency_key: Optional[str] = None
+                         ) -> List[Dict]:
         if not worker_id:
             raise ValueError("worker_id is required")
         n = int(n)
@@ -247,7 +296,8 @@ class JobScheduler:
                 if job is None:
                     break
                 job.state = _LEASED
-                job.lease = _Lease(worker_id, now + ttl, ttl)
+                job.lease = _Lease(worker_id, now + ttl, ttl,
+                                   granted=now)
                 job.proc.status = ProcessingStatus.RUNNING
                 self._queue_active[job.queue] = (
                     self._queue_active.get(job.queue, 0) + 1)
@@ -334,6 +384,8 @@ class JobScheduler:
         commit.  Per-item results — ``{"job_id", "ok": True, "lease_id",
         "deadline_in"}`` or ``{"job_id", "ok": False, "error"}`` — so one
         stale lease cannot poison the rest of the batch."""
+        obs = self._obs_heartbeat
+        t0 = time.monotonic() if obs is not None else 0.0
         now = self._clock()
         results: List[Dict[str, Any]] = []
         with self._lock:
@@ -357,6 +409,8 @@ class JobScheduler:
                                 "lease_id": job.lease.lease_id,
                                 "deadline_in": job.lease.ttl})
             self._journal_leases(renewed)
+        if obs is not None:
+            obs.observe(time.monotonic() - t0)
         return results
 
     # ----------------------------------------------------------- complete
@@ -380,8 +434,12 @@ class JobScheduler:
         in ONE lock acquisition.  Per-item results mirror ``complete``:
         ``{"job_id", "ok": True, "duplicate"}`` on success, ``{"job_id",
         "ok": False, "error"}`` for per-item conflicts."""
+        obs = self._obs_complete
+        t0 = time.monotonic() if obs is not None else 0.0
         now = self._clock()
         results: List[Dict[str, Any]] = []
+        completed: List[Tuple[str, Optional[str]]] = []
+        durations: List[float] = []  # flushed in one observe_many below
         with self._lock:
             self._expire_locked(now)
             self._touch_worker(worker_id)
@@ -402,6 +460,9 @@ class JobScheduler:
                 status = "failed" if error else "finished"
                 job.outcome = (status, result, error, job.attempt)
                 job.completed_by = worker_id
+                if (self._obs_job_dur is not None
+                        and job.lease.granted > 0.0):
+                    durations.append(now - job.lease.granted)
                 self._release_lease(job)  # drops the holder's lease count
                 job.state = _DONE
                 self._retire(job)
@@ -409,8 +470,18 @@ class JobScheduler:
                 w["jobs_failed" if error else "jobs_completed"] += 1
                 self._bump("jobs_failed_by_worker" if error
                            else "jobs_completed_by_worker")
+                completed.append((job_id, error))
                 results.append({"job_id": job_id, "ok": True,
                                 "duplicate": False})
+        if durations:
+            self._obs_job_dur.observe_many(durations)
+        if obs is not None:
+            obs.observe(time.monotonic() - t0)
+        if self._on_event is not None:
+            for job_id, error in completed:
+                self._on_event("job_completed", job_id,
+                               {"worker_id": worker_id,
+                                "failed": bool(error)})
         return results
 
     def _require_holder(self, job_id: str, worker_id: str,
@@ -655,7 +726,9 @@ class DistributedWFM(WFMExecutor):
         self._lock = threading.RLock()
 
     def attach(self, ctx) -> None:
-        self.scheduler.attach(ctx.store, on_stat=ctx.bump)
+        self.scheduler.attach(ctx.store, on_stat=ctx.bump,
+                              metrics=getattr(ctx, "metrics", None),
+                              on_event=getattr(ctx, "sched_event", None))
 
     def submit(self, proc: Processing) -> None:
         with self._lock:

@@ -25,6 +25,10 @@ import threading
 import time
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
+from .obs import SLOW_OP_THRESHOLD_S as _SLOW_FLUSH_S, get_logger
+
+_log = get_logger("store")
+
 
 class StoreError(Exception):
     """The backing file is unusable (corrupt, wrong format, locked away)."""
@@ -218,6 +222,25 @@ class Store:
     def load_health(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
 
+    # -- trace events (telemetry plane) ------------------------------------
+    # Request-lifecycle events journaled by repro.core.obs.Tracer: each
+    # row attributes one hop (submitted, workflow_started, job_leased,
+    # content_available, ...) to the head that performed it, with a
+    # wall-clock ``ts`` so peers' rows interleave correctly.  Safe to
+    # lose (diagnostics, not state), so BufferedStore coalesces them.
+
+    def save_trace_events(self, rows: List[Dict[str, Any]]) -> None:
+        """Append trace-event rows (idempotent per ``event_id``)."""
+        raise NotImplementedError
+
+    def load_trace_events(self, request_id: Optional[str] = None,
+                          collections: Optional[Iterable[str]] = None
+                          ) -> List[Dict[str, Any]]:
+        """Events for one request and/or a set of collections (the
+        trace endpoint joins a request to its works' collections);
+        both None returns everything.  Ordered by timestamp."""
+        raise NotImplementedError
+
     # -- store-backed message queue (StorePollingBus) ----------------------
     # A durable bus_messages journal lets a second head's daemons wake on
     # the first head's announcements.  Two delivery modes, chosen by the
@@ -295,6 +318,8 @@ class Store:
             self.save_works(payload[0], payload[1])
         elif kind == "command":
             self.save_command(payload)
+        elif kind == "trace_events":
+            self.save_trace_events(payload)
         else:
             raise ValueError(f"unknown store op kind {kind!r}")
 
@@ -303,6 +328,25 @@ class Store:
         the backend supports it.  The default applies them one by one."""
         for kind, payload in ops:
             self._apply_op(kind, payload)
+
+    # -- telemetry ----------------------------------------------------------
+    # Class-attribute defaults keep the unbound check a single attribute
+    # lookup on the save_many hot path (no __init__ changes needed in
+    # subclasses that never bind a registry).
+    _obs_write_hist = None
+    _obs_write_ops = None
+
+    def bind_metrics(self, registry: Any) -> None:
+        """Attach an ``obs.MetricsRegistry``: journal commits get a
+        per-backend latency histogram and an op counter."""
+        backend = type(self).__name__
+        self._obs_write_hist = registry.histogram(
+            "store_write_seconds",
+            "journal write (save_many commit) duration",
+            labels=("backend",)).labels(backend=backend)
+        self._obs_write_ops = registry.counter(
+            "store_write_ops_total", "journal ops written",
+            labels=("backend",)).labels(backend=backend)
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
@@ -331,6 +375,8 @@ class InMemoryStore(Store):
         self._subscriptions: Dict[str, Dict[str, Any]] = {}
         self._claims: Dict[Tuple[str, str], Dict[str, Any]] = {}
         self._health: Dict[str, Dict[str, Any]] = {}
+        self._trace_events: List[Dict[str, Any]] = []
+        self._trace_seen: set = set()
         self._bus_msgs: List[Dict[str, Any]] = []
         self._bus_next_id = 1
 
@@ -447,9 +493,13 @@ class InMemoryStore(Store):
                     self.save_contents(collection, files)
 
     def save_many(self, ops: List[Tuple[str, Any]]) -> None:
+        t0 = time.monotonic() if self._obs_write_hist is not None else 0.0
         with self._lock:  # RLock: nested save_* reacquisitions are free
             for kind, payload in ops:
                 self._apply_op(kind, payload)
+        if self._obs_write_hist is not None:
+            self._obs_write_hist.observe(time.monotonic() - t0)
+            self._obs_write_ops.inc(len(ops))
 
     def load_collections(self) -> List[Dict[str, Any]]:
         with self._lock:
@@ -521,6 +571,28 @@ class InMemoryStore(Store):
     def load_health(self) -> List[Dict[str, Any]]:
         with self._lock:
             return [dict(h) for h in self._health.values()]
+
+    def save_trace_events(self, rows: List[Dict[str, Any]]) -> None:
+        with self._lock:
+            for r in rows:
+                ev_id = r.get("event_id")
+                if ev_id in self._trace_seen:
+                    continue  # replayed batch (e.g. a re-flushed buffer)
+                self._trace_seen.add(ev_id)
+                self._trace_events.append(dict(r))
+
+    def load_trace_events(self, request_id: Optional[str] = None,
+                          collections: Optional[Iterable[str]] = None
+                          ) -> List[Dict[str, Any]]:
+        colls = set(collections) if collections else set()
+        with self._lock:
+            rows = [dict(r) for r in self._trace_events
+                    if (request_id is None and not colls)
+                    or (request_id is not None
+                        and r.get("request_id") == request_id)
+                    or r.get("collection") in colls]
+        rows.sort(key=lambda r: r.get("ts") or 0.0)
+        return rows
 
     # -- store-backed message queue -----------------------------------------
     # bodies are stored as JSON text for copy semantics (and parity with
@@ -697,6 +769,20 @@ CREATE TABLE IF NOT EXISTS bus_messages (
 );
 CREATE INDEX IF NOT EXISTS idx_bus_unconsumed
     ON bus_messages (topic) WHERE consumed_by IS NULL;
+CREATE TABLE IF NOT EXISTS trace_events (
+    event_id   TEXT PRIMARY KEY,
+    trace_id   TEXT,
+    request_id TEXT,
+    collection TEXT,
+    event      TEXT,
+    entity     TEXT,
+    head_id    TEXT,
+    ts         REAL,
+    data       TEXT
+);
+CREATE INDEX IF NOT EXISTS idx_trace_request ON trace_events (request_id);
+CREATE INDEX IF NOT EXISTS idx_trace_collection
+    ON trace_events (collection);
 """
 
 # columns added to `contents` after the table first shipped: pre-existing
@@ -1072,6 +1158,53 @@ class SqliteStore(Store):
             "SELECT data FROM health ORDER BY rowid").fetchall()
         return [json.loads(r[0]) for r in rows]
 
+    # -- trace events --------------------------------------------------------
+    # OR IGNORE: event_id is globally unique, so a re-flushed buffer
+    # batch replays as a no-op instead of an IntegrityError
+    _TRACE_INSERT = (
+        "INSERT OR IGNORE INTO trace_events (event_id, trace_id,"
+        " request_id, collection, event, entity, head_id, ts, data)"
+        " VALUES (?, ?, ?, ?, ?, ?, ?, ?, ?)")
+
+    @staticmethod
+    def _trace_row(r: Dict[str, Any]) -> Tuple[Any, ...]:
+        data = r.get("data")
+        return (r.get("event_id"), r.get("trace_id"), r.get("request_id"),
+                r.get("collection"), r.get("event"), r.get("entity"),
+                r.get("head_id"), r.get("ts"),
+                json.dumps(data) if data is not None else None)
+
+    def save_trace_events(self, rows: List[Dict[str, Any]]) -> None:
+        if rows:
+            self.save_many([("trace_events", rows)])
+
+    def load_trace_events(self, request_id: Optional[str] = None,
+                          collections: Optional[Iterable[str]] = None
+                          ) -> List[Dict[str, Any]]:
+        colls = list(collections) if collections else []
+        sql = ("SELECT event_id, trace_id, request_id, collection,"
+               " event, entity, head_id, ts, data FROM trace_events")
+        clauses, args = [], []  # type: List[str], List[Any]
+        if request_id is not None:
+            clauses.append("request_id = ?")
+            args.append(request_id)
+        if colls:
+            qs = ",".join("?" * len(colls))
+            clauses.append(f"collection IN ({qs})")
+            args.extend(colls)
+        if clauses:
+            sql += " WHERE " + " OR ".join(clauses)
+        sql += " ORDER BY ts, event_id"
+        out = []
+        for r in self._conn().execute(sql, args).fetchall():
+            row = {"event_id": r[0], "trace_id": r[1], "request_id": r[2],
+                   "collection": r[3], "event": r[4], "entity": r[5],
+                   "head_id": r[6], "ts": r[7]}
+            if r[8] is not None:
+                row["data"] = json.loads(r[8])
+            out.append(row)
+        return out
+
     # -- store-backed message queue -----------------------------------------
     def bus_publish(self, topic: str, body: Dict[str, Any],
                     now: Optional[float] = None,
@@ -1210,6 +1343,9 @@ class SqliteStore(Store):
                 (payload["command_id"], payload.get("request_id"),
                  payload.get("action"), payload.get("status"),
                  payload.get("created_at"), json.dumps(payload)))
+        elif kind == "trace_events":
+            conn.executemany(self._TRACE_INSERT,
+                             [self._trace_row(r) for r in payload])
         else:
             raise ValueError(f"unknown store op kind {kind!r}")
 
@@ -1219,6 +1355,7 @@ class SqliteStore(Store):
         comes from.  Atomic: a crash persists all ops or none."""
         if not ops:
             return
+        t0 = time.monotonic() if self._obs_write_hist is not None else 0.0
         conn = self._conn()
         conn.execute("BEGIN IMMEDIATE")
         try:
@@ -1228,6 +1365,9 @@ class SqliteStore(Store):
         except BaseException:
             conn.execute("ROLLBACK")
             raise
+        if self._obs_write_hist is not None:
+            self._obs_write_hist.observe(time.monotonic() - t0)
+            self._obs_write_ops.inc(len(ops))
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
@@ -1273,7 +1413,8 @@ class BufferedStore(Store):
     rather than drop them.  See docs/architecture.md.
     """
 
-    _BUFFERED_KINDS = frozenset({"contents", "lease", "delete_lease"})
+    _BUFFERED_KINDS = frozenset({"contents", "lease", "delete_lease",
+                                 "trace_events"})
 
     def __init__(self, inner: Store, *, flush_interval_ms: float = 25.0,
                  max_batch: int = 256):
@@ -1326,6 +1467,7 @@ class BufferedStore(Store):
                 ops, self._ops = self._ops, []
             if not ops:
                 return 0
+            t0 = time.monotonic()
             try:
                 self.inner.save_many(ops)
             except BaseException:
@@ -1334,7 +1476,40 @@ class BufferedStore(Store):
                 raise
             self.flushes += 1
             self.coalesced_ops += len(ops)
+            dt = time.monotonic() - t0
+            if self._obs_flush_hist is not None:
+                self._obs_flush_hist.observe(dt)
+                self._obs_flush_batch.observe(len(ops))
+            if dt > _SLOW_FLUSH_S:
+                _log.warning("slow store flush: %d ops in %.3fs",
+                             len(ops), dt)
             return len(ops)
+
+    # -- telemetry -----------------------------------------------------------
+    _obs_flush_hist = None
+    _obs_flush_batch = None
+
+    def bind_metrics(self, registry: Any) -> None:
+        """Instrument the inner backend's commits plus this buffer's
+        flush latency and batch-size distribution."""
+        self.inner.bind_metrics(registry)
+        self._obs_flush_hist = registry.histogram(
+            "store_flush_seconds",
+            "BufferedStore flush duration").labels()
+        self._obs_flush_batch = registry.histogram(
+            "store_flush_batch_ops",
+            "ops coalesced per BufferedStore flush").labels()
+
+    def save_trace_events(self, rows: List[Dict[str, Any]]) -> None:
+        if rows:  # safe-to-lose diagnostics: coalesced like contents
+            self._buffer("trace_events", [dict(r) for r in rows])
+
+    def load_trace_events(self, request_id: Optional[str] = None,
+                          collections: Optional[Iterable[str]] = None
+                          ) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_trace_events(request_id=request_id,
+                                            collections=collections)
 
     # ----------------------------------------------------- buffered writes
     def save_contents(self, collection: str,

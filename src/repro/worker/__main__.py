@@ -15,6 +15,7 @@ import importlib
 import signal
 import threading
 
+from repro.core.obs import setup_logging
 from repro.worker.agent import default_worker_id
 from repro.worker.pool import WorkerPool
 
@@ -48,6 +49,12 @@ def main(argv=None) -> int:
                          "(repeatable)")
     ap.add_argument("--verbose", action="store_true",
                     help="log each job")
+    ap.add_argument("--log-level", default="INFO",
+                    choices=("DEBUG", "INFO", "WARNING", "ERROR"),
+                    help="threshold for the structured core logs")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit core logs as one JSON object per line "
+                         "(for log shippers) instead of text")
     args = ap.parse_args(argv)
 
     for mod in args.payloads:
@@ -56,6 +63,7 @@ def main(argv=None) -> int:
     queues = ([q for q in args.queues.split(",") if q]
               if args.queues else None)
     base = args.worker_id or default_worker_id()
+    setup_logging(args.log_level, args.log_json, base)
     pool = WorkerPool(args.url, concurrency=args.concurrency,
                       worker_id=base, token=args.token, queues=queues,
                       batch=False if args.no_batch else None,

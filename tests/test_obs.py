@@ -1,0 +1,390 @@
+"""Telemetry plane: metrics registry semantics, Prometheus exposition,
+lifecycle tracing, cluster-wide aggregation, and the observability REST
+surface (/v1/metrics, /v1/requests/<id>/trace, cached healthz tallies).
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.client import IDDSClient
+from repro.core.idds import IDDS
+from repro.core.obs import (BUCKETS, MetricsRegistry, build_trace,
+                            parse_exposition, render_snapshots)
+from repro.core.rest import RestGateway
+from repro.core.scheduler import DistributedWFM
+from repro.core.spec import WorkflowSpec
+from repro.core.store import InMemoryStore
+from repro.core.workflow import Workflow, WorkTemplate
+
+
+def _noop_workflow(n=1):
+    spec = WorkflowSpec("obs-test")
+    for i in range(n):
+        spec.work(f"w{i}", payload="noop", start={})
+    return spec.build()
+
+
+# ------------------------------------------------------------ registry
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry(head_id="h")
+    c = reg.counter("ops_total", "ops", labels=("kind",))
+    c.labels(kind="a").inc()
+    c.labels(kind="a").inc(2)
+    c.labels(kind="b").inc()
+    g = reg.gauge("depth")
+    g.set(7)
+    g.dec(2)
+    h = reg.histogram("lat_seconds")
+    for v in (0.0002, 0.003, 0.003, 0.2):
+        h.observe(v)
+    series = parse_exposition(reg.render())
+    assert series["idds_ops_total"][(("head", "h"), ("kind", "a"))] == 3
+    assert series["idds_ops_total"][(("head", "h"), ("kind", "b"))] == 1
+    assert series["idds_depth"][(("head", "h"),)] == 5
+    assert series["idds_lat_seconds_count"][(("head", "h"),)] == 4
+    assert series["idds_lat_seconds_sum"][(("head", "h"),)] == \
+        pytest.approx(0.2062)
+
+
+def test_histogram_buckets_cumulative_and_percentiles():
+    reg = MetricsRegistry(head_id="h")
+    h = reg.histogram("lat").labels()
+    for _ in range(90):
+        h.observe(0.0009)   # <= 0.001 bucket
+    for _ in range(10):
+        h.observe(0.9)      # <= 1.0 bucket
+    series = parse_exposition(reg.render())
+    le = {dict(k)["le"]: v for k, v in series["idds_lat_bucket"].items()}
+    assert le["0.001"] == 90
+    assert le["1"] == 100          # cumulative
+    assert le["+Inf"] == 100
+    p = h.percentiles()
+    assert p["p50"] <= 0.001
+    assert 0.5 <= p["p99"] <= 1.0
+
+
+def test_observe_many_matches_loop_of_observes():
+    reg = MetricsRegistry(head_id="h")
+    a = reg.histogram("one").labels()
+    b = reg.histogram("bulk").labels()
+    vals = [0.0002, 0.004, 0.004, 0.3, 50.0, 1e6]  # last -> +Inf bucket
+    for v in vals:
+        a.observe(v)
+    b.observe_many(vals)
+    assert a.counts == b.counts
+    assert a.sum == pytest.approx(b.sum)
+    assert a.count == b.count == len(vals)
+
+
+def test_disabled_registry_is_noop_but_renders_empty_families():
+    reg = MetricsRegistry(head_id="h", enabled=False)
+    c = reg.counter("ops")
+    c.inc()
+    c.labels().inc(5)
+    h = reg.histogram("lat")
+    h.observe(1.0)
+    h.labels().observe_many([1.0, 2.0])
+    with h.labels().time():
+        pass
+    assert "idds_ops" not in parse_exposition(reg.render())
+
+
+def test_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError):
+        reg.histogram("x")
+
+
+def test_label_values_escaped_round_trip():
+    reg = MetricsRegistry(head_id="h")
+    reg.counter("ops", labels=("q",)).labels(q='a"b\\c').inc()
+    series = parse_exposition(reg.render())
+    keys = list(series["idds_ops"])
+    assert any(("q", 'a\\"b\\\\c') in k or ("q", 'a"b\\c') in k
+               for k in keys)
+
+
+def test_timer_context_observes_positive_duration():
+    reg = MetricsRegistry(head_id="h")
+    h = reg.histogram("dur").labels()
+    with h.time():
+        time.sleep(0.002)
+    assert h.count == 1
+    assert h.sum >= 0.002
+
+
+# ---------------------------------------------------- cluster aggregation
+
+def test_render_snapshots_merges_heads_without_collisions():
+    r1 = MetricsRegistry(head_id="head-1")
+    r2 = MetricsRegistry(head_id="head-2")
+    r1.counter("ops").inc(3)
+    r2.counter("ops").inc(4)
+    merged = parse_exposition(render_snapshots([r1.snapshot(),
+                                                r2.snapshot()]))
+    per_head = {dict(k)["head"]: v for k, v in merged["idds_ops"].items()}
+    assert per_head == {"head-1": 3, "head-2": 4}
+
+
+# ------------------------------------------------------------ build_trace
+
+def test_build_trace_pairs_spans_and_attributes_heads():
+    t0 = 1000.0
+    events = [
+        {"event": "submitted", "ts": t0, "head_id": "head-1",
+         "trace_id": "tr-x", "entity": None},
+        {"event": "workflow_started", "ts": t0 + 0.5,
+         "head_id": "head-2", "trace_id": "tr-x", "entity": None},
+        {"event": "job_leased", "ts": t0 + 1.0, "head_id": "head-2",
+         "entity": "j1"},
+        {"event": "job_completed", "ts": t0 + 3.0, "head_id": "head-2",
+         "entity": "j1"},
+        {"event": "job_leased", "ts": t0 + 1.5, "head_id": "head-2",
+         "entity": "j2"},  # unpaired: no completion
+    ]
+    out = build_trace(events)
+    assert out["trace_id"] == "tr-x"
+    assert out["heads"] == ["head-1", "head-2"]
+    spans = {s["span"]: s for s in out["spans"]}
+    assert spans["marshal"]["duration_s"] == pytest.approx(0.5)
+    assert spans["marshal"]["head_start"] == "head-1"
+    assert spans["marshal"]["head_end"] == "head-2"
+    assert spans["execute"]["entity"] == "j1"
+    assert spans["execute"]["duration_s"] == pytest.approx(2.0)
+    assert out["duration_s"] == pytest.approx(3.0)
+    assert [e["dt_s"] for e in out["events"]] == \
+        [0.0, 0.5, 1.0, 1.5, 3.0]
+
+
+def test_build_trace_empty_and_unpaired_only():
+    assert build_trace([]) == {"trace_id": None, "events": [],
+                               "spans": [], "heads": [],
+                               "duration_s": 0.0}
+    out = build_trace([{"event": "job_leased", "ts": 1.0,
+                        "head_id": "h", "entity": "j"}])
+    assert out["spans"] == []
+
+
+def test_store_write_series_ticks_on_bulk_journal_verb():
+    reg = MetricsRegistry(head_id="h")
+    store = InMemoryStore()
+    store.bind_metrics(reg)
+    store.save_many([("request", {"request_id": "r1",
+                                  "status": "new"})] * 3)
+    series = parse_exposition(reg.render())
+    key = (("head", "h"), ("backend", "InMemoryStore"))
+    assert series["idds_store_write_ops_total"][key] == 3
+    assert series["idds_store_write_seconds_count"][key] == 1
+
+
+# ------------------------------------------------------- service surface
+
+def test_inline_run_trace_has_positive_spans():
+    idds = IDDS(store=InMemoryStore())
+    rid = idds.submit_workflow(_noop_workflow(2))
+    idds.pump()
+    tr = idds.trace(rid)
+    assert tr["status"] == "finished"
+    assert tr["spans"], tr
+    assert all(s["duration_s"] >= 0.0 for s in tr["spans"])
+    names = {s["span"] for s in tr["spans"]}
+    assert "marshal" in names and "transform" in names
+    idds.close()
+
+
+def test_telemetry_off_no_trace_and_empty_metrics():
+    idds = IDDS(store=InMemoryStore(), telemetry=False)
+    rid = idds.submit_workflow(_noop_workflow())
+    idds.pump()
+    assert idds.trace(rid)["events"] == []
+    assert "idds_daemon_loop_seconds_count" not in \
+        parse_exposition(idds.metrics_text())
+    idds.close()
+
+
+def test_metrics_endpoint_over_wire_parses():
+    with RestGateway(IDDS()) as gw:
+        client = IDDSClient(gw.url)
+        client.submit_workflow(_noop_workflow())
+        gw.idds.pump()
+        text = client.metrics()
+        series = parse_exposition(text)
+        assert sum(series["idds_rest_requests_total"].values()) >= 1
+        assert sum(series["idds_daemon_loop_seconds_count"].values()) >= 1
+        # bound at boot; ticks only on the bulk journal verb, which the
+        # inline flow may never take — presence is the contract here
+        assert "idds_store_write_ops_total" in series
+        assert sum(series["idds_bus_lag_seconds_count"].values()) >= 1
+        # every sample carries this head's label
+        for key in series["idds_rest_requests_total"]:
+            assert dict(key)["head"] == gw.idds.ctx.head_id
+
+
+def test_scheduler_series_under_distributed_head():
+    """The execution plane's lease/complete/job-duration histograms —
+    only a --distributed head runs the JobScheduler (cluster_smoke's
+    inline heads never emit these, so they are pinned here)."""
+    with RestGateway(IDDS(executor=DistributedWFM(lease_ttl=5.0))) as gw:
+        client = IDDSClient(gw.url)
+        wf = Workflow(name="obs-dist")
+        wf.add_template(WorkTemplate(name="s", payload="sleep_ms",
+                                     defaults={"ms": 1}))
+        wf.add_initial("s", {})
+        rid = client.submit_workflow(wf)
+        deadline = time.time() + 10
+        job = None
+        while job is None and time.time() < deadline:
+            job = client.lease_job("obs-w1")
+            if job is None:
+                time.sleep(0.02)
+        assert job is not None
+        client.complete_job(job["job_id"], "obs-w1",
+                            result={"ok": True, "slept_ms": 1})
+        client.wait(rid, timeout=30)
+        series = parse_exposition(client.metrics())
+        ops = {dict(k)["op"]: v
+               for k, v in series["idds_scheduler_op_seconds_count"]
+               .items()}
+        assert ops.get("lease", 0) >= 1
+        assert ops.get("complete", 0) >= 1
+        assert sum(series["idds_scheduler_job_seconds_count"]
+                   .values()) >= 1
+
+
+def test_stats_and_healthz_tallies_under_concurrent_mutation():
+    """/v1/stats and the ~1s-cached healthz content/delivery tallies
+    must stay coherent while submissions mutate the catalog from
+    another thread (the cache refresh races the writers)."""
+    with RestGateway(IDDS()) as gw:
+        client = IDDSClient(gw.url)
+        stop = threading.Event()
+        errors = []
+
+        def writer():
+            w = IDDSClient(gw.url)
+            try:
+                while not stop.is_set():
+                    w.submit_workflow(_noop_workflow())
+                    gw.idds.pump()
+            except Exception as e:  # noqa: BLE001 — surfaced below
+                errors.append(e)
+
+        t = threading.Thread(target=writer)
+        t.start()
+        try:
+            last_requests = 0
+            for _ in range(30):
+                s = client.stats()
+                h = client.healthz()
+                assert h["status"] == "ok"
+                assert s.get("requests", 0) >= last_requests
+                last_requests = s.get("requests", 0)
+                assert isinstance(h["contents"], dict)
+        finally:
+            stop.set()
+            t.join(timeout=10)
+        assert not errors, errors
+        # cache expiry: a tally poll after the TTL sees the final state
+        time.sleep(1.1)
+        h = client.healthz()
+        total = sum(h["contents"].values())
+        assert total == sum(gw.idds.content_stats().values())
+
+
+def test_trace_unknown_request_404_over_wire():
+    with RestGateway(IDDS()) as gw:
+        client = IDDSClient(gw.url)
+        # the SDK maps the gateway's 404 NotFound envelope to KeyError
+        with pytest.raises(KeyError):
+            client.trace("req-nope")
+
+
+# ------------------------------------------------------------ logging
+
+def test_setup_logging_json_lines_and_head_tag(capsys):
+    import json as _json
+    import logging
+
+    from repro.core.obs import get_logger, setup_logging
+    root = setup_logging("DEBUG", json_mode=True, head_id="head-x")
+    try:
+        get_logger("unit").warning("something %s", "slow",
+                                   extra={"daemon": "clerk",
+                                          "duration_s": 1.5})
+        line = capsys.readouterr().err.strip().splitlines()[-1]
+        d = _json.loads(line)
+        assert d["level"] == "WARNING"
+        assert d["logger"] == "repro.unit"
+        assert d["msg"] == "something slow"
+        assert d["head"] == "head-x"
+        assert d["daemon"] == "clerk"
+        assert d["duration_s"] == 1.5
+        # text mode: same record, [head] prefix, idempotent reconfigure
+        setup_logging("INFO", json_mode=False, head_id="head-x")
+        assert len(root.handlers) == 1
+        get_logger("unit").info("plain")
+        assert capsys.readouterr().err.strip().startswith("[head-x] ")
+    finally:
+        for h in list(root.handlers):
+            root.removeHandler(h)
+        root.setLevel(logging.WARNING)
+
+
+def test_tracer_store_fault_logs_and_counts_instead_of_raising():
+    faults = []
+
+    class BrokenStore:
+        def save_trace_events(self, rows):
+            raise RuntimeError("disk on fire")
+
+    from repro.core.obs import Tracer
+    tr = Tracer(BrokenStore(), "head-x", on_fault=faults.append)
+    tr.emit("submitted", request_id="r1")  # must not raise
+    assert faults == ["submitted"]
+
+
+# ----------------------------------------------------- two-head scenarios
+
+def test_killed_head_adoption_trace_spans_both_heads():
+    """Head 1 submits and starts a workflow, then dies without
+    releasing its claims; head 2 adopts and finishes.  The journaled
+    trace must attribute the early hops to head-1 and the finishing
+    hops to head-2 — one timeline stitched across the failover."""
+    store = InMemoryStore()
+    ttl = 0.4
+    h1 = IDDS(store=store, bus="store", head_id="head-1", claim_ttl=ttl)
+    h2 = IDDS(store=store, bus="store", head_id="head-2", claim_ttl=ttl)
+    rid = h1.submit_workflow(_noop_workflow(2))
+    sum(d.process_once() for d in h1.daemons)  # head-1 claims + starts
+    time.sleep(ttl * 1.2)  # SIGKILL semantics: claims must EXPIRE
+    h2.pump_until(
+        lambda: h2.request_status(rid)["status"] == "finished",
+        timeout=30.0, interval=0.01)
+    tr = h2.trace(rid)
+    assert tr["spans"], tr
+    assert all(s["duration_s"] >= 0.0 for s in tr["spans"])
+    assert set(tr["heads"]) == {"head-1", "head-2"}
+    h2.close()
+
+
+def test_cluster_metrics_aggregates_live_peer_snapshots():
+    store = InMemoryStore()
+    h1 = IDDS(store=store, bus="store", head_id="head-1", claim_ttl=30.0)
+    h2 = IDDS(store=store, bus="store", head_id="head-2", claim_ttl=30.0)
+    h1.submit_workflow(_noop_workflow())
+    h2.submit_workflow(_noop_workflow())
+    h1.pump()
+    h2.pump()  # first watchdog cycle heartbeats a metrics snapshot
+    series = parse_exposition(h1.metrics_text(cluster=True))
+    heads = {dict(k)["head"]
+             for k in series["idds_bus_published_total"]}
+    assert heads == {"head-1", "head-2"}
+    # the local head's own series is served live, not from a snapshot
+    local = parse_exposition(h1.metrics_text())
+    assert {dict(k)["head"] for k in local["idds_bus_published_total"]} \
+        == {"head-1"}
+    h1.close()
+    h2.close()
