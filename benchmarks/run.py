@@ -15,6 +15,9 @@ Sections:
                        (the <=5% always-on gate)
   train      §3.1      carousel-fed training micro-run (loss goes down)
   rest       §2        REST gateway submission throughput + poll latency
+  outbox     §2        push-delivery plane: notify latency per channel
+                       (poll vs long-poll vs webhook) + batched vs
+                       per-request fan-out at N subscribers
   cluster    §2        multi-head horizontal scaling: aggregate
                        submissions/sec at 1 vs 2 heads on one catalog
   command    §2        steering plane: lifecycle-command round-trip
@@ -150,6 +153,13 @@ def main(argv=None) -> int:
         client_counts=(1, 4) if smoke else (1, 4, 8),
         per_client=5 if smoke else 10 if quick else 25)
     _print_rows(rest_bench.KEYS, results["rest"])
+
+    _section("outbox (push-delivery plane: notify latency + fan-out)")
+    from benchmarks import outbox_bench
+    results["outbox"] = outbox_bench.run(
+        events=3 if smoke else 5 if quick else 9,
+        subscribers=100 if smoke else 300 if quick else 1000)
+    _print_rows(outbox_bench.KEYS, results["outbox"])
 
     _section("cluster (multi-head: 1 vs 2 heads, one catalog)")
     from benchmarks import cluster_bench

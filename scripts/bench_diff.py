@@ -1,0 +1,185 @@
+"""Benchmark regression gate: diff two BENCH_*.json artifacts.
+
+Compares the gate metrics of a current benchmark results file (the
+``benchmarks.run --json-out`` shape) against a prior committed
+``BENCH_N.json`` and fails when any metric regresses by more than the
+threshold (default 20%).  Only metrics present in BOTH files are
+gated, so a new section never fails the first run that introduces it,
+and files from different modes (smoke vs quick vs full) are never
+compared — the sweep sizes differ, so the numbers are not
+commensurable.
+
+    PYTHONPATH=src python scripts/bench_diff.py BENCH_9.json
+    PYTHONPATH=src python scripts/bench_diff.py results.json \
+        --against BENCH_8.json --threshold 0.3
+
+With no ``--against``, the newest prior BENCH_*.json in the repo root
+with the same mode is picked automatically; if none matches, the gate
+passes with a notice (first artifact of its mode).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, Optional, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# metric -> direction: "higher" is better or "lower" is better
+HIGHER, LOWER = "higher", "lower"
+
+
+def _rows(sections: Dict, name: str):
+    rows = sections.get(name)
+    return rows if isinstance(rows, list) else []
+
+
+def gate_metrics(doc: Dict) -> Dict[str, Tuple[float, str]]:
+    """Extract the gated scalars from one results file.  Every
+    extractor is defensive: a missing section or row simply yields no
+    metric (and therefore no comparison)."""
+    s = doc.get("sections", {})
+    out: Dict[str, Tuple[float, str]] = {}
+
+    for r in _rows(s, "store"):
+        m = re.fullmatch(r"(memory|sqlite)-bulk", str(r.get("store")))
+        if m and r.get("rows_per_s"):
+            out[f"store.{m.group(1)}-bulk.rows_per_s"] = (
+                r["rows_per_s"], HIGHER)
+
+    rest = [r.get("sub_per_s") for r in _rows(s, "rest")
+            if r.get("sub_per_s")]
+    if rest:
+        out["rest.max_sub_per_s"] = (max(rest), HIGHER)
+
+    dag = [r for r in _rows(s, "dag") if r.get("jobs_per_s")]
+    if dag:
+        # the smallest sweep exists in every mode
+        smallest = min(dag, key=lambda r: r.get("jobs", 0))
+        out["dag.jobs_per_s"] = (smallest["jobs_per_s"], HIGHER)
+
+    worker = [r.get("jobs_per_s") for r in _rows(s, "worker")
+              if r.get("jobs_per_s")]
+    if worker:
+        out["worker.max_jobs_per_s"] = (max(worker), HIGHER)
+
+    for r in _rows(s, "delivery"):
+        if r.get("mode") == "journal-sqlite-bulk" \
+                and r.get("contents_per_s"):
+            out["delivery.sqlite-bulk.contents_per_s"] = (
+                r["contents_per_s"], HIGHER)
+
+    cluster = [r.get("agg_sub_per_s") for r in _rows(s, "cluster")
+               if r.get("agg_sub_per_s")]
+    if cluster:
+        out["cluster.max_agg_sub_per_s"] = (max(cluster), HIGHER)
+
+    command = [r.get("rt_p50_ms") for r in _rows(s, "command")
+               if r.get("rt_p50_ms")]
+    if command:
+        out["command.min_rt_p50_ms"] = (min(command), LOWER)
+
+    for r in _rows(s, "obs"):
+        if r.get("arm") == "e2e-metrics" and r.get("telemetry") == "on" \
+                and r.get("overhead_pct") is not None:
+            out["obs.e2e-metrics.overhead_pct"] = (
+                max(r["overhead_pct"], 0.1), LOWER)
+
+    for r in _rows(s, "outbox"):
+        if r.get("arm") == "long-poll" and r.get("p50_ms"):
+            out["outbox.long-poll.p50_ms"] = (r["p50_ms"], LOWER)
+        if r.get("arm") == "webhook" and r.get("p50_ms"):
+            out["outbox.webhook.p50_ms"] = (r["p50_ms"], LOWER)
+        if r.get("arm") == "fanout-batched" \
+                and r.get("deliveries_per_s"):
+            out["outbox.fanout-batched.deliveries_per_s"] = (
+                r["deliveries_per_s"], HIGHER)
+
+    return out
+
+
+def pick_baseline(current_path: str, mode: str) -> Optional[str]:
+    """The newest committed BENCH_N.json (by N) with the same mode,
+    excluding the file under test."""
+    best = None
+    for path in glob.glob(os.path.join(ROOT, "BENCH_*.json")):
+        if os.path.abspath(path) == os.path.abspath(current_path):
+            continue
+        m = re.search(r"BENCH_(\d+)\.json$", path)
+        if not m:
+            continue
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            continue
+        if doc.get("mode") != mode:
+            continue
+        n = int(m.group(1))
+        if best is None or n > best[0]:
+            best = (n, path)
+    return best[1] if best else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="results file under test")
+    ap.add_argument("--against", default=None,
+                    help="baseline BENCH_*.json (default: newest "
+                         "committed file with the same mode)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated fractional regression "
+                         "(default 0.20 = 20%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    baseline_path = args.against or pick_baseline(
+        args.current, current.get("mode"))
+    if baseline_path is None:
+        print(f"no prior BENCH_*.json with mode="
+              f"{current.get('mode')!r}; nothing to gate")
+        return 0
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    if baseline.get("mode") != current.get("mode"):
+        print(f"mode mismatch ({baseline.get('mode')} vs "
+              f"{current.get('mode')}): sweeps are not commensurable, "
+              f"nothing to gate")
+        return 0
+
+    cur, base = gate_metrics(current), gate_metrics(baseline)
+    shared = sorted(set(cur) & set(base))
+    print(f"gating {os.path.basename(args.current)} against "
+          f"{os.path.basename(baseline_path)} "
+          f"(mode={current.get('mode')}, threshold "
+          f"{args.threshold:.0%}, {len(shared)} shared metrics)")
+    failures = []
+    for name in shared:
+        (cv, direction), (bv, _) = cur[name], base[name]
+        if direction == HIGHER:
+            change = (cv - bv) / bv          # negative = regression
+        else:
+            change = (bv - cv) / bv          # slower/bigger = negative
+        flag = "REGRESSION" if change < -args.threshold else "ok"
+        print(f"  {name:45s} {bv:>12g} -> {cv:>12g}  "
+              f"({change:+.1%}, {direction} is better) {flag}")
+        if change < -args.threshold:
+            failures.append(name)
+    skipped = sorted((set(cur) | set(base)) - set(shared))
+    if skipped:
+        print(f"  not in both files (skipped): {', '.join(skipped)}")
+    if failures:
+        print(f"\nFAIL: {len(failures)} metric(s) regressed past "
+              f"{args.threshold:.0%}: {', '.join(failures)}")
+        return 1
+    print("\nbench diff: no gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

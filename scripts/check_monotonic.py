@@ -39,6 +39,8 @@ ALLOWLIST: Dict[Tuple[str, str], str] = {
     ("core/delivery.py", "Delivery.set_status"): "updated_at field",
     ("core/delivery.py", "Subscription.from_dict"):
         "created_at journal field",
+    ("core/delivery.py", "outbox_message"):
+        "created_at journal field",
     ("core/daemons.py", "Transformer._finalize"):
         "terminated_at journal field",
     ("core/daemons.py", "Commander.process_once"):
@@ -53,10 +55,14 @@ ALLOWLIST: Dict[Tuple[str, str], str] = {
     ("core/daemons.py", "Watchdog._heartbeat"):
         "health heartbeat vs peers",
     ("core/daemons.py", "Watchdog._sweep"): "claim expiry vs peers",
+    ("core/daemons.py", "Publisher.process_once"):
+        "not_before ripeness + journaled attempt timestamps vs peers",
     ("core/idds.py", "IDDS.cluster_info"): "heartbeat age vs peers",
     ("core/idds.py", "IDDS.metrics_text"): "heartbeat age vs peers",
     ("core/idds.py", "IDDS.ack_delivery"):
         "notify-to-ack latency across heads",
+    ("core/idds.py", "IDDS._on_notify"):
+        "publish timestamp for publish-to-ack latency",
     ("core/store.py", "InMemoryStore.try_claim"): "claim expiry",
     ("core/store.py", "InMemoryStore.renew_claims"): "claim expiry",
     ("core/store.py", "SqliteStore.try_claim"): "claim expiry",

@@ -1,0 +1,298 @@
+"""Push-delivery smoke: SSE + webhook consumers surviving a SIGKILL.
+
+Boots two ``python -m repro.core.rest`` processes on one SQLite
+catalog (store-polling bus), registers an SSE subscription and a
+webhook subscription, and starts a live SSE consumer against head 1
+plus an in-process webhook receiver.  Mid-stream — after the first
+notifications have flowed — head 1 is SIGKILLed with no cleanup, more
+work is submitted to head 2, and the smoke asserts the push plane's
+crash contract end to end:
+
+  * the SSE consumer reconnects to head 2 with ``Last-Event-ID`` and
+    the journaled event stream carries EVERY delivery exactly once
+    (seq cursor strictly increasing, no gaps against the catalog);
+  * head 2's Publisher adopts the outbox claim and keeps POSTing —
+    every webhook message lands despite head 1 dying (duplicates on
+    the wire allowed, loss not);
+  * the survivor's /v1/metrics exposition shows the outbox series.
+
+Run from CI (push-smoke job) or by hand:
+
+    PYTHONPATH=src python scripts/push_smoke.py
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.core.client import IDDSClient  # noqa: E402
+from repro.core.obs import parse_exposition  # noqa: E402
+from repro.core.spec import WorkflowSpec  # noqa: E402
+
+CLAIM_TTL = 1.0
+WAVES = (3, 3)  # deliveries before the kill, after the kill
+
+
+def boot_head(db: str, head_id: str) -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.core.rest", "--port", "0",
+         "--store", db, "--bus", "store", "--head-id", head_id,
+         "--claim-ttl", str(CLAIM_TTL), "--legacy-routes", "off"],
+        env=env, stdout=subprocess.PIPE, text=True)
+
+
+def serving_url(p: subprocess.Popen, deadline_s: float = 30.0) -> str:
+    t0 = time.time()
+    while time.time() - t0 < deadline_s:
+        line = p.stdout.readline()
+        if not line:
+            raise RuntimeError("head exited before serving")
+        print(f"  [head] {line.rstrip()}")
+        if "serving on " in line:
+            return line.split("serving on ", 1)[1].split()[0]
+    raise RuntimeError("head did not report its URL in time")
+
+
+def build_workflow(wave: str, n: int):
+    # one work per output collection: every job lands one distinct
+    # output file, so every matching subscription gets n deliveries
+    spec = WorkflowSpec(f"push-{wave}")
+    for i in range(n):
+        spec.work(f"crunch{i}", payload="sleep_ms",
+                  defaults={"ms": 40},
+                  output_collection=f"out.push.{wave}{i}", start=[{}])
+    return spec.build()
+
+
+class Receiver:
+    """Webhook endpoint: records every accepted msg_id."""
+
+    def __init__(self):
+        self.accepted = []
+        self.delivery_ids = set()
+        self.lock = threading.Lock()
+        recv = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, fmt, *args):  # noqa: A003
+                pass
+
+            def do_POST(self):  # noqa: N802
+                length = int(self.headers.get("Content-Length", 0) or 0)
+                body = json.loads(self.rfile.read(length))
+                with recv.lock:
+                    for d in body.get("deliveries", []):
+                        recv.accepted.append(d["msg_id"])
+                        recv.delivery_ids.add(d["delivery_id"])
+                self.send_response(200)
+                self.send_header("Content-Length", "2")
+                self.end_headers()
+                self.wfile.write(b"{}")
+
+        self.httpd = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+        threading.Thread(target=self.httpd.serve_forever,
+                         daemon=True).start()
+
+    @property
+    def url(self) -> str:
+        return f"http://127.0.0.1:{self.httpd.server_address[1]}/hook"
+
+    def close(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+
+
+class SSEConsumer:
+    """Follows a subscription's event stream, reconnecting with the
+    last seen seq as the resume cursor — first against head 1, then
+    (once it dies mid-stream) against whatever URL ``retarget`` set."""
+
+    def __init__(self, url: str, sub_id: str):
+        self.url = url
+        self.sub_id = sub_id
+        self.events = []
+        self.last_seq = None
+        self.reconnects = 0
+        self.lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def retarget(self, url: str) -> None:
+        self.url = url
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            client = IDDSClient(self.url, timeout=5.0)
+            try:
+                for ev in client.events(self.sub_id,
+                                        after_seq=self.last_seq,
+                                        wait_s=5.0):
+                    with self.lock:
+                        self.events.append(ev)
+                        self.last_seq = ev["seq"]
+            except Exception:  # noqa: BLE001 — severed stream: resume
+                pass
+            with self.lock:
+                self.reconnects += 1
+            self._stop.wait(0.1)
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=10)
+
+
+def _await(predicate, what: str, deadline_s: float = 60.0,
+           snapshot=None):
+    t0 = time.time()
+    while time.time() - t0 < deadline_s:
+        got = predicate()
+        if got:
+            return got
+        time.sleep(0.1)
+    detail = f" ({snapshot()})" if snapshot else ""
+    raise RuntimeError(f"timed out waiting for {what}{detail}")
+
+
+def _ack_all(client: IDDSClient, sub_id: str) -> set:
+    """Acknowledge every un-acked delivery (what a real consumer does
+    after processing — stops the Conductor's un-acked retry stream).
+    Returns the acked delivery_ids: acking prunes them from the
+    subscription's listing, so this is the caller's record."""
+    pending = [d["delivery_id"]
+               for d in client.list_deliveries(sub_id)["deliveries"]
+               if d["status"] != "acked"]
+    if pending:
+        client.ack(sub_id, pending)
+    return set(pending)
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="push-smoke-")
+    db = os.path.join(tmp, "push.db")
+    print(f"catalog: {db}")
+    recv = Receiver()
+    h1 = boot_head(db, "head-1")
+    url1 = serving_url(h1)
+    h2 = boot_head(db, "head-2")
+    url2 = serving_url(h2)
+    consumer = None
+    try:
+        c1, c2 = IDDSClient(url1), IDDSClient(url2)
+        sse_sub = c1.subscribe("sse-consumer", ["out.push.*"])
+        hook_sub = c1.subscribe("hooked", ["out.push.*"],
+                                push_url=recv.url)
+        print(f"subscribed: sse={sse_sub['sub_id']} "
+              f"webhook={hook_sub['sub_id']}")
+        consumer = SSEConsumer(url1, sse_sub["sub_id"])
+
+        # the Conductor re-notifies un-acked deliveries (new msg rows,
+        # same delivery_id), so progress is counted in distinct
+        # deliveries, not raw events
+        def sse_covered():
+            with consumer.lock:
+                return len({ev["delivery_id"]
+                            for ev in consumer.events})
+
+        # wave 1 through head 1: the stream must flow live
+        c1.submit_workflow(build_workflow("a", WAVES[0]),
+                           requester="push-smoke")
+        _await(lambda: sse_covered() >= WAVES[0],
+               "wave-1 SSE events",
+               snapshot=lambda: (
+                   f"events={consumer.events} reconnects="
+                   f"{consumer.reconnects} catalog="
+                   f"{c1.list_deliveries(sse_sub['sub_id'])}"))
+        _await(lambda: len(recv.delivery_ids) >= WAVES[0],
+               "wave-1 webhook deliveries")
+        sse_tracked = _ack_all(c1, sse_sub["sub_id"])
+        hook_tracked = _ack_all(c1, hook_sub["sub_id"])
+        print(f"wave 1 flowed: {len(consumer.events)} SSE events, "
+              f"{len(set(recv.accepted))} webhook msgs -> SIGKILL "
+              f"head 1 mid-stream")
+
+        # head 1 dies with the SSE socket open and the outbox claim
+        # held; no cleanup, no handoff
+        os.kill(h1.pid, signal.SIGKILL)
+        h1.wait(timeout=10)
+        consumer.retarget(url2)
+
+        # wave 2 through the survivor: adoption must keep both
+        # channels flowing — the SSE consumer resumes past its cursor,
+        # the Publisher claim moves to head 2
+        c2.submit_workflow(build_workflow("b", WAVES[1]),
+                           requester="push-smoke")
+        total = sum(WAVES)
+        _await(lambda: sse_covered() >= total,
+               "post-kill SSE resume", deadline_s=90)
+        _await(lambda: len(recv.delivery_ids) >= total,
+               "post-kill webhook adoption", deadline_s=90)
+        sse_tracked |= _ack_all(c2, sse_sub["sub_id"])
+        hook_tracked |= _ack_all(c2, hook_sub["sub_id"])
+        consumer.stop()
+
+        # exactly-once on the SSE journal: every journaled message
+        # streamed once, cursor strictly increasing across reconnects
+        seqs = [ev["seq"] for ev in consumer.events]
+        if sorted(set(seqs)) != sorted(seqs) or seqs != sorted(seqs):
+            raise RuntimeError(f"SSE stream replayed or reordered: {seqs}")
+        if len(sse_tracked) != total:
+            raise RuntimeError(
+                f"expected {total} tracked deliveries, got "
+                f"{len(sse_tracked)}: {sorted(sse_tracked)}")
+        seen = {ev["delivery_id"] for ev in consumer.events}
+        if seen != sse_tracked:
+            raise RuntimeError(
+                f"SSE stream lost deliveries: missing "
+                f"{sorted(sse_tracked - seen)}")
+        print(f"SSE: {len(consumer.events)} events (each journaled "
+              f"message exactly once) across {consumer.reconnects} "
+              f"reconnect(s), seq {seqs[0]}..{seqs[-1]}, covering all "
+              f"{total} deliveries")
+
+        # at-least-once on the webhook wire, zero loss
+        if len(hook_tracked) != total:
+            raise RuntimeError(
+                f"expected {total} webhook deliveries, got "
+                f"{len(hook_tracked)}")
+        print(f"webhook: {len(set(recv.accepted))} distinct msgs "
+              f"({len(recv.accepted)} posts) after adoption")
+
+        series = parse_exposition(c2.metrics())
+        delivered = sum(
+            (series.get("idds_outbox_deliveries_total") or {}).values())
+        if delivered <= 0:
+            raise RuntimeError(
+                "survivor exposition missing idds_outbox_deliveries_total")
+        print(f"  metrics: idds_outbox_deliveries_total = {delivered:g}")
+        print("PUSH SMOKE PASSED")
+        return 0
+    finally:
+        if consumer is not None:
+            consumer.stop()
+        recv.close()
+        for p in (h1, h2):
+            if p.poll() is None:
+                p.send_signal(signal.SIGTERM)
+        for p in (h1, h2):
+            try:
+                p.wait(timeout=15)
+            except subprocess.TimeoutExpired:
+                p.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,11 +32,18 @@ Verbs:
   collections                 collection catalog + content tallies
   contents NAME [--status S] [--limit N] [--offset N]
                               per-file content records of a collection
-  subscribe --consumer C [--collections A,B]
-                              register with the delivery plane
-  subscriptions               subscription registry
-  deliveries SUB_ID [--status S]
-                              a subscription's tracked deliveries
+  subscribe --consumer C [--collections A,B] [--push-url URL]
+                              register with the delivery plane;
+                              --push-url switches to webhook fan-out
+  subscriptions [--limit N] [--offset N]
+                              subscription registry
+  deliveries SUB_ID [--status S] [--limit N] [--offset N] [--wait S]
+                              a subscription's tracked deliveries;
+                              --wait long-polls until one lands
+  events SUB_ID [--after SEQ] [--wait S]
+                              stream the subscription's outbox events
+                              over SSE, one JSON object per line;
+                              --after resumes past a seq cursor
   ack SUB_ID DELIVERY_ID...   acknowledge deliveries
   metrics [--cluster]         GET /v1/metrics — Prometheus text
                               exposition (raw, not JSON); --cluster
@@ -99,7 +106,10 @@ def build_parser() -> argparse.ArgumentParser:
                             "instead of polling until it applied")
 
     sub.add_parser("collections")
-    sub.add_parser("subscriptions")
+
+    p = sub.add_parser("subscriptions")
+    p.add_argument("--limit", type=int, default=None)
+    p.add_argument("--offset", type=int, default=0)
 
     p = sub.add_parser("contents")
     p.add_argument("name")
@@ -112,10 +122,28 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--collections", default=None,
                    help="comma-separated collection names or fnmatch "
                         "patterns (omit = every collection)")
+    p.add_argument("--push-url", default=None,
+                   help="webhook mode: the head POSTs delivery batches "
+                        "to this http(s) URL instead of waiting for "
+                        "polls")
 
     p = sub.add_parser("deliveries")
     p.add_argument("sub_id")
     p.add_argument("--status", default=None)
+    p.add_argument("--limit", type=int, default=None)
+    p.add_argument("--offset", type=int, default=0)
+    p.add_argument("--wait", type=float, default=None, metavar="S",
+                   help="long-poll: park up to S seconds until a "
+                        "delivery lands instead of returning an empty "
+                        "listing")
+
+    p = sub.add_parser("events")
+    p.add_argument("sub_id")
+    p.add_argument("--after", type=int, default=None, metavar="SEQ",
+                   help="resume cursor: replay journaled events with "
+                        "seq greater than this")
+    p.add_argument("--wait", type=float, default=30.0, metavar="S",
+                   help="how long the SSE stream stays open server-side")
 
     p = sub.add_parser("ack")
     p.add_argument("sub_id")
@@ -181,12 +209,28 @@ def main(argv=None) -> int:
         elif args.verb == "subscribe":
             colls = ([c for c in args.collections.split(",") if c]
                      if args.collections else None)
-            _print(client.subscribe(args.consumer, colls))
+            _print(client.subscribe(args.consumer, colls,
+                                    push_url=args.push_url))
         elif args.verb == "subscriptions":
-            _print(client.list_subscriptions())
+            _print(client.list_subscriptions(limit=args.limit,
+                                             offset=args.offset))
         elif args.verb == "deliveries":
-            _print(client.list_deliveries(args.sub_id,
-                                          status=args.status))
+            if args.wait:
+                _print(client.wait_deliveries(args.sub_id,
+                                              status=args.status,
+                                              limit=args.limit,
+                                              offset=args.offset,
+                                              wait_s=args.wait))
+            else:
+                _print(client.list_deliveries(args.sub_id,
+                                              status=args.status,
+                                              limit=args.limit,
+                                              offset=args.offset))
+        elif args.verb == "events":
+            # one JSON object per line as they stream in (jq-friendly)
+            for ev in client.events(args.sub_id, after_seq=args.after,
+                                    wait_s=args.wait):
+                print(json.dumps(ev), flush=True)
         elif args.verb == "ack":
             _print(client.ack(args.sub_id, args.delivery_ids))
         elif args.verb == "metrics":

@@ -362,35 +362,143 @@ class IDDSClient:
     # --------------------------------------------- delivery plane (consumer)
     def subscribe(self, consumer: str,
                   collections: Optional[List[str]] = None, *,
-                  sub_id: Optional[str] = None) -> Dict[str, Any]:
+                  sub_id: Optional[str] = None,
+                  push_url: Optional[str] = None) -> Dict[str, Any]:
         """Register a consumer subscription with the Conductor (POST
-        /v1/subscriptions).  Retry-safe: a client-generated sub_id makes
-        a replayed POST return the existing registration."""
+        /v1/subscriptions).  ``push_url`` switches it to webhook mode:
+        the head's Publisher POSTs delivery batches there instead of
+        waiting for this client to poll.  Retry-safe: a client-generated
+        sub_id makes a replayed POST return the existing registration."""
         body: Dict[str, Any] = {
             "consumer": consumer,
             "sub_id": sub_id or f"sub-{uuid.uuid4().hex[:12]}",
         }
         if collections:
             body["collections"] = list(collections)
+        if push_url is not None:
+            body["push_url"] = push_url
         return self._post(f"{API_PREFIX}/subscriptions", body,
                           idempotent=True)
 
-    def list_subscriptions(self) -> Dict[str, Any]:
-        return self._get(f"{API_PREFIX}/subscriptions")
+    def list_subscriptions(self, *, limit: Optional[int] = None,
+                           offset: int = 0) -> Dict[str, Any]:
+        """Subscription registry (GET /v1/subscriptions) with
+        limit/offset pagination."""
+        params = {}
+        if limit is not None:
+            params["limit"] = str(limit)
+        if offset:
+            params["offset"] = str(offset)
+        qs = urllib.parse.urlencode(params)
+        return self._get(f"{API_PREFIX}/subscriptions"
+                         + (f"?{qs}" if qs else ""))
 
     def get_subscription(self, sub_id: str) -> Dict[str, Any]:
         return self._get(f"{API_PREFIX}/subscriptions/"
                          f"{urllib.parse.quote(sub_id)}")
 
+    def _deliveries_qs(self, status: Optional[str],
+                       limit: Optional[int], offset: int,
+                       wait_s: Optional[float] = None) -> str:
+        params = {}
+        if status is not None:
+            params["status"] = status
+        if limit is not None:
+            params["limit"] = str(limit)
+        if offset:
+            params["offset"] = str(offset)
+        if wait_s:
+            params["wait_s"] = str(wait_s)
+        qs = urllib.parse.urlencode(params)
+        return f"?{qs}" if qs else ""
+
     def list_deliveries(self, sub_id: str, *,
-                        status: Optional[str] = None) -> Dict[str, Any]:
+                        status: Optional[str] = None,
+                        limit: Optional[int] = None,
+                        offset: int = 0) -> Dict[str, Any]:
         """A subscription's tracked deliveries (GET
         /v1/subscriptions/<id>/deliveries), optionally filtered by
-        status (notified/acked/failed)."""
-        qs = (f"?status={urllib.parse.quote(status)}"
-              if status is not None else "")
+        status (notified/acked/failed) and paginated."""
+        qs = self._deliveries_qs(status, limit, offset)
         return self._get(f"{API_PREFIX}/subscriptions/"
                          f"{urllib.parse.quote(sub_id)}/deliveries{qs}")
+
+    def wait_deliveries(self, sub_id: str, *,
+                        status: Optional[str] = None,
+                        limit: Optional[int] = None,
+                        offset: int = 0,
+                        wait_s: float = 30.0) -> Dict[str, Any]:
+        """Long-poll deliveries (GET .../deliveries?wait_s=): the server
+        parks the request until a matching delivery lands or ``wait_s``
+        expires, so a consumer sees a notification within milliseconds
+        of fan-out without a tight poll loop.  The HTTP timeout is
+        stretched to cover the park."""
+        qs = self._deliveries_qs(status, limit, offset, wait_s)
+        path = (f"{API_PREFIX}/subscriptions/"
+                f"{urllib.parse.quote(sub_id)}/deliveries{qs}")
+        url = self.base_url + path
+        req = urllib.request.Request(url, method="GET")
+        if self.token:
+            req.add_header("Authorization", f"Bearer {self.token}")
+        try:
+            with urllib.request.urlopen(
+                    req, timeout=self.timeout + wait_s) as r:
+                return json.loads(r.read().decode("utf-8"))
+        except urllib.error.HTTPError as e:
+            self._raise_http(e)
+
+    def events(self, sub_id: str, *,
+               after_seq: Optional[int] = None,
+               wait_s: float = 30.0):
+        """Iterate one subscription's outbox events over SSE (GET
+        /v1/subscriptions/<id>/events).  Yields each journaled outbox
+        row as a dict; ``after_seq`` resumes past rows already seen
+        (the server replays journaled rows missed while disconnected).
+        The stream ends after ``wait_s`` server-side; re-call with the
+        last row's ``seq`` to resume.  Heartbeat comment frames are
+        filtered out."""
+        params = {"wait_s": str(wait_s)}
+        qs = urllib.parse.urlencode(params)
+        path = (f"{API_PREFIX}/subscriptions/"
+                f"{urllib.parse.quote(sub_id)}/events?{qs}")
+        req = urllib.request.Request(self.base_url + path, method="GET")
+        if self.token:
+            req.add_header("Authorization", f"Bearer {self.token}")
+        if after_seq is not None:
+            req.add_header("Last-Event-ID", str(after_seq))
+        try:
+            resp = urllib.request.urlopen(req,
+                                          timeout=self.timeout + wait_s)
+        except urllib.error.HTTPError as e:
+            self._raise_http(e)
+        with resp:
+            data_lines: List[str] = []
+            for raw in resp:
+                line = raw.decode("utf-8").rstrip("\n").rstrip("\r")
+                if line.startswith(":"):
+                    continue  # heartbeat comment
+                if line.startswith("data:"):
+                    data_lines.append(line[5:].lstrip())
+                    continue
+                if line == "" and data_lines:
+                    yield json.loads("\n".join(data_lines))
+                    data_lines = []
+
+    def _raise_http(self, e: urllib.error.HTTPError):
+        """Map an HTTPError to the SDK exception taxonomy (the
+        streaming paths bypass ``_request``)."""
+        try:
+            env = json.loads(e.read().decode("utf-8"))["error"]
+            etype, msg = env["type"], env["message"]
+        except Exception:  # noqa: BLE001 — non-envelope body
+            etype, msg = "HTTPError", str(e)
+        if e.code == 401:
+            raise AuthError(msg) from None
+        if e.code == 404:
+            raise KeyError(msg) from None
+        if e.code == 409:
+            raise ConflictError(msg) from None
+        raise IDDSClientError(e.code, etype, msg) from None
 
     def ack(self, sub_id: str, delivery_ids: List[str]) -> Dict[str, Any]:
         """Acknowledge deliveries (POST /v1/subscriptions/<id>/ack).

@@ -1,4 +1,4 @@
-"""The seven iDDS daemons (paper Fig. 1 + the steering plane) + the
+"""The eight iDDS daemons (paper Fig. 1 + the steering plane) + the
 WFM-system boundary.
 
   Clerk       requests -> Workflow objects
@@ -7,7 +7,11 @@ WFM-system boundary.
               live object graph (see commands.py)
   Transformer input/output association; Work -> Processing(s); DDM calls
   Carrier     Processing -> WFM submit / poll / retry (job attempts)
-  Conductor   output availability -> consumer notifications (messaging)
+  Conductor   output availability -> tracked consumer deliveries,
+              journaled as outbox messages (transactional outbox)
+  Publisher   outbox drain: fans journaled messages out to their push
+              channels (bus / webhook) in batches, store-claimed so any
+              head can own cluster fan-out
   Watchdog    cluster coordination: health heartbeats, claim renewal,
               and adoption of workflows whose head died (the paper's
               Health table + clean_locking)
@@ -26,8 +30,10 @@ claim against the local store, so single-head behavior is unchanged.
 """
 from __future__ import annotations
 
+import json
 import threading
 import time
+import urllib.request
 import uuid
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -38,7 +44,8 @@ from repro.core import payloads as reg
 from repro.core.commands import (CTRL_ABORTED, CTRL_SUSPENDED, Command,
                                  CommandConflict)
 from repro.core.ddm import DDM
-from repro.core.delivery import Subscription
+from repro.core.delivery import (UNDELIVERED_STATUSES, Subscription,
+                                 backoff_delay, outbox_message)
 from repro.core.obs import SLOW_OP_THRESHOLD_S, get_logger
 from repro.core.store import InMemoryStore, Store
 from repro.core.workflow import (Processing, ProcessingStatus, Work,
@@ -1053,21 +1060,28 @@ class Conductor(Daemon):
     tracked consumer deliveries.
 
     For every ``T_OUTPUT_AVAILABLE`` it (1) registers the output content
-    in the DDM and journals its row, (2) broadcasts the legacy
-    ``T_CONSUMER_NOTIFY`` for in-process listeners, and (3) matches the
-    content against the registered :class:`~repro.core.delivery.
-    Subscription` set, creating one :class:`~repro.core.delivery.
-    Delivery` per matching subscription and publishing an addressed
-    notification.  Deliveries left un-acked are re-notified every
-    ``retry_interval`` seconds up to ``max_notify_attempts`` total
-    publishes, then marked failed — every transition journaled through
-    the store, so a head crash loses no delivery state (a recovered
-    ``notified`` delivery is simply re-notified).
+    in the DDM, (2) broadcasts the legacy ``T_CONSUMER_NOTIFY`` for
+    in-process listeners, and (3) matches the content against the
+    registered :class:`~repro.core.delivery.Subscription` set, creating
+    one :class:`~repro.core.delivery.Delivery` per matching
+    subscription.  Each created delivery journals an outbox message row
+    IN THE SAME ``save_many`` batch as the content row and the
+    subscription snapshot (the transactional outbox): a crash can never
+    persist the delivery state without its notification or vice versa.
+    The Publisher daemon drains the outbox and performs the actual
+    channel fan-out.
+
+    Deliveries left un-acked are re-notified on a full-jitter
+    exponential backoff schedule (base ``retry_interval``) up to
+    ``max_notify_attempts`` total notifications, then marked failed —
+    every transition journaled through the store, so a head crash loses
+    no delivery state (a recovered ``notified`` delivery is simply
+    re-notified).
     """
     name = "conductor"
     topics = (M.T_OUTPUT_AVAILABLE,)
-    retry_interval = 2.0       # seconds between re-notifications
-    max_notify_attempts = 5    # total publishes before a delivery fails
+    retry_interval = 2.0       # re-notify backoff base (full jitter)
+    max_notify_attempts = 5    # total notifications before failure
 
     def __init__(self, ctx: Context):
         super().__init__(ctx)
@@ -1076,30 +1090,21 @@ class Conductor(Daemon):
         # died with the old head's bus, so it is due immediately.
         self._next_retry: Dict[str, float] = {}
 
-    def _journal_sub(self, sub: Subscription) -> None:
-        self.ctx.store.save_subscription(sub.to_dict())
-
-    def _register_output(self, collection: str, file_name: str) -> None:
-        f = self.ctx.ddm.ensure_content(collection, file_name)
-        self.ctx.store.save_contents(collection, [f.to_dict()])
-
     def _notify(self, sub: Subscription, d, result=None,
-                trace_id: Optional[str] = None) -> None:
-        self._next_retry[d.delivery_id] = (time.monotonic()
-                                           + self.retry_interval)
+                trace_id: Optional[str] = None) -> Dict[str, Any]:
+        """Account one notification of one delivery; returns the outbox
+        row the caller must journal (the caller owns the commit so the
+        row lands in the same batch as the state that caused it)."""
+        self._next_retry[d.delivery_id] = (
+            time.monotonic()
+            + backoff_delay(self.retry_interval, d.attempts - 1))
         self.ctx.bump("deliveries_notified")
         if d.attempts <= 1:  # first notification opens the span
             self.ctx.trace("delivery_notified", collection=d.collection,
                            trace_id=trace_id, entity=d.delivery_id,
                            data={"consumer": sub.consumer,
                                  "file": d.file})
-        body = {"sub_id": sub.sub_id, "consumer": sub.consumer,
-                "delivery_id": d.delivery_id, "collection": d.collection,
-                "file": d.file, "attempt": d.attempts}
-        if result is not None:
-            body["result"] = result
-        self.ctx.bus.publish(M.T_CONSUMER_NOTIFY, body,
-                             trace_id=trace_id)
+        return outbox_message(sub, d, result=result, trace_id=trace_id)
 
     def _handle_output(self, m: M.Message) -> None:
         self.ctx.bump("notifications")
@@ -1109,7 +1114,7 @@ class Conductor(Daemon):
         coll, fname = m.body.get("collection"), m.body.get("file")
         if not coll or not fname:
             return  # anonymous output: nothing to track per-file
-        self._register_output(coll, fname)
+        f = self.ctx.ddm.ensure_content(coll, fname)
         with self.ctx.lock:
             created = []
             for sub in self.ctx.subscriptions.values():
@@ -1118,10 +1123,20 @@ class Conductor(Daemon):
                 d = sub.ensure_delivery(coll, fname)
                 if d is not None:
                     created.append((sub, d))
+        if not created:
+            self.ctx.store.save_contents(coll, [f.to_dict()])
+            return
+        msgs = []
+        ops: List[Tuple[str, Any]] = [("contents", (coll, [f.to_dict()]))]
         for sub, d in created:
-            self._notify(sub, d, m.body.get("result"),
-                         trace_id=m.trace_id)
-            self._journal_sub(sub)
+            msgs.append(self._notify(sub, d, m.body.get("result"),
+                                     trace_id=m.trace_id))
+            ops.append(("subscription", sub.to_dict()))
+        ops.append(("messages", msgs))
+        # ONE commit for content row + delivery records + outbox rows
+        self.ctx.store.save_many(ops)
+        self.ctx.bus.publish(M.T_OUTBOX, {"count": len(msgs)},
+                             trace_id=m.trace_id)
 
     def _retry_pass(self) -> int:
         """Re-notify overdue un-acked deliveries; fail the exhausted
@@ -1142,13 +1157,24 @@ class Conductor(Daemon):
                     else:
                         d.attempts += 1
                         due.append((sub, d))
+        msgs = []
+        subs_to_journal: Dict[str, Subscription] = {}
         for sub, d in due:
             self.ctx.bump("delivery_retries")
-            self._notify(sub, d)
-            self._journal_sub(sub)
+            msgs.append(self._notify(sub, d))
+            subs_to_journal[sub.sub_id] = sub
         for sub in failed:
             self.ctx.bump("deliveries_failed")
-            self._journal_sub(sub)
+            subs_to_journal[sub.sub_id] = sub
+        if subs_to_journal:
+            ops: List[Tuple[str, Any]] = [
+                ("subscription", s.to_dict())
+                for s in subs_to_journal.values()]
+            if msgs:
+                ops.append(("messages", msgs))
+            self.ctx.store.save_many(ops)
+        if msgs:
+            self.ctx.bus.publish(M.T_OUTBOX, {"count": len(msgs)})
         return len(due) + len(failed)
 
     def process_once(self) -> int:
@@ -1163,6 +1189,186 @@ class Conductor(Daemon):
             n += 1
             self._handle_output(m)
         n += self._retry_pass()
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Publisher: outbox drain -> channel fan-out
+# ---------------------------------------------------------------------------
+
+
+class Publisher(Daemon):
+    """Drains the transactional outbox and fans messages out to their
+    push channels.
+
+    One store-claimed singleton per cluster (claim ``("outbox",
+    "fanout")``): exactly one head performs fan-out at a time, and when
+    it dies the claim expires and any peer's Publisher adopts the
+    backlog — journaled message status is the only state, so adoption
+    needs no handoff.
+
+    Per round it loads up to ``batch_size`` undelivered rows
+    (``new``/``queued`` with ``not_before`` ripe) and
+
+      * ``bus`` channel: publishes one addressed ``T_CONSUMER_NOTIFY``
+        per message (long-poll/SSE waiters and in-process consumers
+        wake on it), then journals ALL status flips in one batch —
+        O(batch) store writes however many subscribers matched;
+      * ``webhook`` channel: groups messages by ``push_url`` and POSTs
+        one JSON batch per endpoint.  A failed or timed-out POST
+        re-queues its messages with full-jitter exponential
+        ``not_before`` backoff, journaled per attempt; after
+        ``max_notify_attempts`` the message fails and the corresponding
+        delivery is circuit-broken to ``failed``.
+
+    Crash window: a head dying between channel I/O and the status
+    journal re-sends those messages after adoption (at-least-once on
+    the wire); consumers deduplicate on ``msg_id``/``delivery_id``, and
+    the journal itself never loses a row (exactly-once in the store).
+    """
+    name = "publisher"
+    topics = (M.T_OUTBOX,)
+    batch_size = 256           # rows drained per round
+    max_notify_attempts = 5    # webhook POSTs per message before failed
+    webhook_timeout = 2.0      # seconds per endpoint POST
+    backoff_base = 0.2         # webhook retry backoff base (full jitter)
+    backoff_cap = 30.0
+
+    def __init__(self, ctx: Context):
+        super().__init__(ctx)
+        self._gauge = None
+        self._delivered_c = None
+        self._failed_c = None
+        self._metrics_bound = False
+        self._depth_dirty = True
+
+    def _bind_metrics(self) -> None:
+        if self._metrics_bound or self.ctx.metrics is None:
+            return
+        m = self.ctx.metrics
+        self._gauge = m.gauge("outbox_depth",
+                              "undelivered outbox rows").labels()
+        self._delivered_c = m.counter(
+            "outbox_deliveries_total", "outbox messages delivered",
+            labels=("channel",))
+        self._failed_c = m.counter(
+            "outbox_failed_total",
+            "outbox messages circuit-broken to failed",
+            labels=("channel",))
+        self._metrics_bound = True
+
+    @staticmethod
+    def _notify_body(msg: Dict[str, Any]) -> Dict[str, Any]:
+        body = {"msg_id": msg["msg_id"], "sub_id": msg.get("sub_id"),
+                "consumer": msg.get("consumer"),
+                "delivery_id": msg.get("delivery_id"),
+                "collection": msg.get("collection"),
+                "file": msg.get("file"),
+                "attempt": msg.get("delivery_attempt", 1)}
+        if msg.get("seq") is not None:
+            body["seq"] = msg["seq"]
+        if msg.get("result") is not None:
+            body["result"] = msg["result"]
+        return body
+
+    def _post(self, url: str, items: List[Dict[str, Any]]) -> bool:
+        payload = {"deliveries": [self._notify_body(m) for m in items]}
+        req = urllib.request.Request(
+            url, data=json.dumps(payload).encode("utf-8"),
+            method="POST",
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(
+                    req, timeout=self.webhook_timeout) as r:
+                return 200 <= r.status < 300
+        except Exception:  # noqa: BLE001 — any transport failure retries
+            return False
+
+    def _circuit_break(self, msg: Dict[str, Any]) -> None:
+        """A webhook endpoint exhausted its attempt budget: fail the
+        tracked delivery too, so the Conductor stops re-notifying it."""
+        if self._failed_c is not None:
+            self._failed_c.labels(channel="webhook").inc()
+        snap = None
+        with self.ctx.lock:
+            sub = self.ctx.subscriptions.get(msg.get("sub_id"))
+            d = (sub.find_delivery(msg.get("delivery_id"))
+                 if sub is not None else None)
+            if d is not None and d.status == "notified":
+                d.set_status("failed")
+                self.ctx.bump("deliveries_failed")
+                snap = sub.to_dict()
+        if snap is not None:
+            self.ctx.store.save_subscription(snap)
+
+    def _fan_out(self, batch: List[Dict[str, Any]], now: float) -> int:
+        bus_msgs, hooks = [], {}  # type: List[Dict], Dict[str, List[Dict]]
+        for msg in batch:
+            if msg.get("channel") == "webhook" and msg.get("push_url"):
+                hooks.setdefault(msg["push_url"], []).append(msg)
+            else:
+                bus_msgs.append(msg)
+        done: List[Dict[str, Any]] = []
+        for msg in bus_msgs:
+            self.ctx.bus.publish(M.T_CONSUMER_NOTIFY,
+                                 self._notify_body(msg),
+                                 trace_id=msg.get("trace_id"))
+            msg["status"] = "delivered"
+            msg["attempts"] = msg.get("attempts", 0) + 1
+            msg["updated_at"] = now
+            done.append(msg)
+        if bus_msgs and self._delivered_c is not None:
+            self._delivered_c.labels(channel="bus").inc(len(bus_msgs))
+        for url, items in hooks.items():
+            ok = self._post(url, items)  # one POST per endpoint
+            for msg in items:
+                msg["attempts"] = msg.get("attempts", 0) + 1
+                msg["updated_at"] = now
+                if ok:
+                    msg["status"] = "delivered"
+                    msg["not_before"] = None
+                elif msg["attempts"] >= self.max_notify_attempts:
+                    msg["status"] = "failed"
+                    msg["not_before"] = None
+                    self._circuit_break(msg)
+                else:
+                    msg["status"] = "queued"
+                    msg["not_before"] = now + backoff_delay(
+                        self.backoff_base, msg["attempts"],
+                        cap=self.backoff_cap)
+                done.append(msg)
+            if ok and self._delivered_c is not None:
+                self._delivered_c.labels(channel="webhook").inc(
+                    len(items))
+        # per-attempt journaling, ONE commit for the whole batch
+        self.ctx.store.save_messages(done)
+        self.ctx.bump("outbox_published", len(done))
+        return len(done)
+
+    def process_once(self) -> int:
+        self._bind_metrics()
+        # the fan-out singleton: one head drains at a time; adoption is
+        # a peer's try_claim succeeding after this head's claim expires
+        if not self.ctx.store.try_claim("outbox", "fanout",
+                                        self.ctx.head_id,
+                                        self.ctx.claim_ttl):
+            return 0
+        n = 0
+        for _m in self.ctx.bus.poll(M.T_OUTBOX):
+            n += 1  # advisory wakes; the store query is authoritative
+        now = time.time()
+        batch = self.ctx.store.load_messages(
+            statuses=UNDELIVERED_STATUSES, due_before=now,
+            limit=self.batch_size)
+        if batch:
+            self._fan_out(batch, now)
+            n += len(batch)
+            self._depth_dirty = True
+        if self._gauge is not None and (batch or self._depth_dirty):
+            depth = self.ctx.store.count_messages(
+                statuses=UNDELIVERED_STATUSES)
+            self._gauge.set(depth)
+            self._depth_dirty = bool(depth)
         return n
 
 
@@ -1556,4 +1762,4 @@ class Watchdog(Daemon):
 
 
 ALL_DAEMONS = (Clerk, Marshaller, Commander, Transformer, Carrier,
-               Conductor, Watchdog)
+               Conductor, Publisher, Watchdog)

@@ -20,17 +20,74 @@ facade (idds.py) exposes subscribe/list/ack, and rest.py mounts them at
 from __future__ import annotations
 
 import fnmatch
+import random
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.workflow import _new_id
 
 DELIVERY_STATUSES = ("notified", "acked", "failed")
 
+# Outbox message statuses (store.py ``messages`` table): ``new`` rows
+# await their first publish, ``queued`` rows are parked between retry
+# attempts (``not_before`` backoff), ``delivered``/``failed`` are
+# terminal.  The Publisher daemon drains the non-terminal set.
+MESSAGE_STATUSES = ("new", "queued", "delivered", "failed")
+UNDELIVERED_STATUSES = ("new", "queued")
+
 
 def content_key(collection: str, file_name: str) -> str:
     return f"{collection}::{file_name}"
+
+
+def backoff_delay(base: float, attempt: int, *, cap: float = 30.0,
+                  rng: Optional[Callable[[], float]] = None) -> float:
+    """Full-jitter exponential backoff: 0.5x..1.5x of the capped
+    exponential step.  Shared by the Conductor's un-acked re-notify
+    pass and the Publisher's webhook retries so neither can form a
+    thundering re-notify herd at subscriber scale.  ``base`` 0 yields 0
+    (tests collapse the schedule to immediate)."""
+    step = min(cap, base * (2 ** max(attempt, 0)))
+    r = rng() if rng is not None else random.random()
+    return step * (0.5 + r)
+
+
+def outbox_message(sub: "Subscription", d: "Delivery", *,
+                   now: Optional[float] = None,
+                   result: Optional[Dict[str, Any]] = None,
+                   trace_id: Optional[str] = None) -> Dict[str, Any]:
+    """One outbox row for one (subscription, delivery) notification.
+
+    Journaled by the Conductor in the SAME store batch as the delivery
+    transition that caused it (the transactional-outbox invariant), then
+    published out-of-band by the Publisher daemon.  ``channel`` picks
+    the fan-out path: ``webhook`` when the subscription registered a
+    ``push_url``, ``bus`` otherwise (long-poll/SSE/legacy bus
+    consumers)."""
+    now = time.time() if now is None else now
+    msg: Dict[str, Any] = {
+        "msg_id": _new_id("msg"),
+        "sub_id": sub.sub_id,
+        "consumer": sub.consumer,
+        "delivery_id": d.delivery_id,
+        "collection": d.collection,
+        "file": d.file,
+        "delivery_attempt": d.attempts,
+        "channel": "webhook" if sub.push_url else "bus",
+        "status": "new",
+        "attempts": 0,
+        "not_before": None,
+        "created_at": now,
+        "updated_at": now,
+    }
+    if sub.push_url:  # freeze the endpoint at notify time
+        msg["push_url"] = sub.push_url
+    if result is not None:
+        msg["result"] = result
+    if trace_id is not None:
+        msg["trace_id"] = trace_id
+    return msg
 
 
 @dataclass
@@ -77,6 +134,9 @@ class Subscription:
     # keyed by content_key(collection, file): at most one delivery per
     # content per subscription, however often the output is re-announced
     deliveries: Dict[str, Delivery] = field(default_factory=dict)
+    # webhook mode: the Publisher POSTs delivery batches here instead of
+    # waiting for the consumer to poll/long-poll (None = pull channels)
+    push_url: Optional[str] = None
 
     def matches(self, collection: Optional[str]) -> bool:
         if not collection:
@@ -119,6 +179,7 @@ class Subscription:
         return {"sub_id": self.sub_id, "consumer": self.consumer,
                 "collections": list(self.collections),
                 "created_at": self.created_at,
+                "push_url": self.push_url,
                 "deliveries": {k: d.to_dict()
                                for k, d in self.deliveries.items()}}
 
@@ -128,6 +189,7 @@ class Subscription:
             sub_id=d["sub_id"], consumer=d.get("consumer", "anonymous"),
             collections=list(d.get("collections", [])),
             created_at=d.get("created_at", 0.0) or time.time(),
+            push_url=d.get("push_url"),
             deliveries={k: Delivery.from_dict(v)
                         for k, v in d.get("deliveries", {}).items()})
 
@@ -137,4 +199,5 @@ class Subscription:
         return {"sub_id": self.sub_id, "consumer": self.consumer,
                 "collections": list(self.collections),
                 "created_at": self.created_at,
+                "push_url": self.push_url,
                 "deliveries": self.counts()}

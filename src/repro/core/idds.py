@@ -27,7 +27,8 @@ from repro.core.commands import (CTRL_ABORTED, CTRL_SUSPENDED,
 from repro.core.daemons import (ALL_DAEMONS, Context, Transformer, Watchdog,
                                 WFMExecutor)
 from repro.core.ddm import DDM, InMemoryDDM
-from repro.core.delivery import DELIVERY_STATUSES, Subscription, content_key
+from repro.core.delivery import (DELIVERY_STATUSES, UNDELIVERED_STATUSES,
+                                 Subscription, content_key)
 from repro.core.obs import (MetricsRegistry, Tracer, build_trace,
                             new_trace_id, render_snapshots)
 from repro.core.requests import Request
@@ -94,6 +95,15 @@ class IDDS:
         self._ack_hist = self.metrics.histogram(
             "conductor_ack_seconds",
             "delivery notify-to-ack latency").labels()
+        self._pub_ack_hist = self.metrics.histogram(
+            "outbox_publish_ack_seconds",
+            "outbox publish-to-ack latency").labels()
+        # push-delivery wake plane: long-poll and SSE handlers park on
+        # this condition; the bus subscription wakes them on every
+        # addressed consumer notification the Publisher fans out
+        self._delivery_cv = threading.Condition()
+        self._publish_ts: Dict[str, float] = {}
+        bus.subscribe(M.T_CONSUMER_NOTIFY, self._on_notify)
         wfm.attach(self.ctx)
         # a bindable DDM (CarouselDDM) gets the head's bus + store, so
         # its per-file staging transitions are announced to the
@@ -556,24 +566,43 @@ class IDDS:
                 "skipped": len(results) - len(changed)}
 
     # ------------------------------------------------------ delivery plane
+    @staticmethod
+    def _check_page(limit: Optional[int], offset: int) -> None:
+        if limit is not None and (isinstance(limit, bool)
+                                  or not isinstance(limit, int)
+                                  or limit < 0):
+            raise ValueError("limit must be a non-negative integer")
+        if isinstance(offset, bool) or not isinstance(offset, int) \
+                or offset < 0:
+            raise ValueError("offset must be a non-negative integer")
+
     def subscribe(self, consumer: str,
                   collections: Optional[List[str]] = None, *,
-                  sub_id: Optional[str] = None) -> Dict[str, Any]:
+                  sub_id: Optional[str] = None,
+                  push_url: Optional[str] = None) -> Dict[str, Any]:
         """Register a consumer subscription: the Conductor will match
         every announced output content against it and track the
         resulting deliveries.  ``collections`` are exact names or
-        fnmatch patterns (omit for all).  Idempotent on a
-        client-supplied ``sub_id`` (a retried POST returns the existing
-        registration instead of subscribing twice)."""
+        fnmatch patterns (omit for all).  ``push_url`` switches the
+        subscription to webhook mode: the Publisher POSTs delivery
+        batches to it instead of waiting for the consumer to poll.
+        Idempotent on a client-supplied ``sub_id`` (a retried POST
+        returns the existing registration instead of subscribing
+        twice)."""
         if not consumer or not isinstance(consumer, str):
             raise ValueError("consumer (string) is required")
         colls = list(collections or [])
         if not all(isinstance(c, str) and c for c in colls):
             raise ValueError("collections must be non-empty strings")
+        if push_url is not None and (
+                not isinstance(push_url, str)
+                or not push_url.startswith(("http://", "https://"))):
+            raise ValueError("push_url must be an http(s) URL")
         with self.ctx.lock:
             if sub_id and sub_id in self.ctx.subscriptions:
                 return self.ctx.subscriptions[sub_id].summary()
             sub = Subscription(consumer=consumer, collections=colls,
+                               push_url=push_url,
                                **({"sub_id": sub_id} if sub_id else {}))
             self.ctx.subscriptions[sub.sub_id] = sub
             d = sub.to_dict()
@@ -582,10 +611,15 @@ class IDDS:
         self.ctx.bump("subscriptions")
         return summary
 
-    def list_subscriptions(self) -> Dict[str, Any]:
+    def list_subscriptions(self, *, limit: Optional[int] = None,
+                           offset: int = 0) -> Dict[str, Any]:
+        self._check_page(limit, offset)
         with self.ctx.lock:
             subs = [s.summary() for s in self.ctx.subscriptions.values()]
-        return {"subscriptions": subs, "total": len(subs)}
+        total = len(subs)
+        end = None if limit is None else offset + limit
+        return {"subscriptions": subs[offset:end], "total": total,
+                "limit": limit, "offset": offset}
 
     def get_subscription(self, sub_id: str) -> Dict[str, Any]:
         with self.ctx.lock:
@@ -595,13 +629,17 @@ class IDDS:
             return sub.summary()
 
     def list_deliveries(self, sub_id: str, *,
-                        status: Optional[str] = None) -> Dict[str, Any]:
+                        status: Optional[str] = None,
+                        limit: Optional[int] = None,
+                        offset: int = 0) -> Dict[str, Any]:
         """A subscription's tracked deliveries, optionally filtered by
-        status (notified/acked/failed)."""
+        status (notified/acked/failed) and paginated (``total`` counts
+        the filtered set, not the page)."""
         if status is not None and status not in DELIVERY_STATUSES:
             raise ValueError(
                 f"invalid status filter {status!r}; expected one of "
                 f"{', '.join(DELIVERY_STATUSES)}")
+        self._check_page(limit, offset)
         with self.ctx.lock:
             sub = self.ctx.subscriptions.get(sub_id)
             if sub is None:
@@ -609,7 +647,76 @@ class IDDS:
             rows = [d.to_dict() for d in sub.deliveries.values()
                     if status is None or d.status == status]
         rows.sort(key=lambda d: (d["created_at"], d["delivery_id"]))
-        return {"deliveries": rows, "total": len(rows)}
+        total = len(rows)
+        end = None if limit is None else offset + limit
+        return {"deliveries": rows[offset:end], "total": total,
+                "limit": limit, "offset": offset}
+
+    def _on_notify(self, m: M.Message) -> None:
+        """Bus subscriber on ``T_CONSUMER_NOTIFY``: wake parked
+        long-poll/SSE handlers and stamp the publish time the
+        publish-to-ack histogram measures from."""
+        did = m.body.get("delivery_id")
+        with self._delivery_cv:
+            if did:
+                # wall clock: the ack may land on another head
+                self._publish_ts.setdefault(did, time.time())
+            self._delivery_cv.notify_all()
+
+    def wait_delivery_event(self, timeout: float) -> bool:
+        """Park until the next consumer notification (or ``timeout``);
+        the long-poll/SSE wake primitive.  True if woken."""
+        with self._delivery_cv:
+            return self._delivery_cv.wait(timeout=timeout)
+
+    def wait_deliveries(self, sub_id: str, *,
+                        status: Optional[str] = None,
+                        limit: Optional[int] = None,
+                        offset: int = 0,
+                        wait_s: float = 0.0) -> Dict[str, Any]:
+        """Long-poll variant of :meth:`list_deliveries`: returns
+        immediately when the filtered listing is non-empty, otherwise
+        parks on the delivery condition until a notification arrives or
+        ``wait_s`` expires (then returns the — possibly empty — final
+        listing)."""
+        out = self.list_deliveries(sub_id, status=status, limit=limit,
+                                   offset=offset)
+        if out["deliveries"] or wait_s <= 0:
+            return out
+        deadline = time.monotonic() + wait_s
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return out
+            # capped tick: a cross-head notification may reach this
+            # head's bus between condition wakeups, so re-check even
+            # without a wake
+            self.wait_delivery_event(min(remaining, 0.25))
+            out = self.list_deliveries(sub_id, status=status,
+                                       limit=limit, offset=offset)
+            if out["deliveries"]:
+                return out
+
+    def list_events(self, sub_id: str, *,
+                    after_seq: Optional[int] = None,
+                    limit: Optional[int] = None) -> Dict[str, Any]:
+        """One subscription's journaled outbox rows ordered by the
+        store-assigned ``seq`` — the SSE event source.  ``after_seq``
+        is the resume cursor (``Last-Event-ID``): rows journaled while
+        a consumer was disconnected are replayed from the journal, so a
+        resumed stream misses nothing."""
+        if after_seq is not None and (isinstance(after_seq, bool)
+                                      or not isinstance(after_seq, int)
+                                      or after_seq < 0):
+            raise ValueError("after_seq must be a non-negative integer")
+        self._check_page(limit, 0)
+        with self.ctx.lock:
+            if sub_id not in self.ctx.subscriptions:
+                raise KeyError(f"unknown subscription {sub_id!r}")
+        rows = self.ctx.store.load_messages(sub_id=sub_id,
+                                            after_seq=after_seq,
+                                            limit=limit)
+        return {"events": rows, "total": len(rows)}
 
     def ack_delivery(self, sub_id: str,
                      delivery_ids: List[str]) -> Dict[str, Any]:
@@ -649,6 +756,11 @@ class IDDS:
             # wall-clock span: created_at was stamped by whichever head
             # first notified the consumer, possibly not this one
             self._ack_hist.observe(max(now - created_at, 0.0))
+            with self._delivery_cv:
+                pub_ts = self._publish_ts.pop(did, None)
+            if pub_ts is not None:
+                # Publisher fan-out -> consumer ack, as seen locally
+                self._pub_ack_hist.observe(max(now - pub_ts, 0.0))
             self.ctx.trace("delivery_acked", collection=coll,
                            entity=did, data={"file": fname})
             self._maybe_content_delivered(coll, fname)
@@ -712,7 +824,7 @@ class IDDS:
                   "processings": 0, "collections": 0, "commands": 0,
                   "subscriptions": 0, "requeued_processings": 0,
                   "replayed_events": 0, "replayed_commands": 0,
-                  "orphaned_leases": 0}
+                  "orphaned_leases": 0, "outbox_messages": 0}
         transformer = next(d for d in self.daemons
                            if isinstance(d, Transformer))
         new_wfs: List[Workflow] = []
@@ -868,6 +980,19 @@ class IDDS:
             for row in store.load_leases():
                 store.delete_lease(row["job_id"])
                 counts["orphaned_leases"] += 1
+        # outbox rows journaled but not yet delivered (or mid-retry)
+        # survive verbatim in the messages table — the Publisher drains
+        # them by store query, so recovery only needs to count them and
+        # nudge the wake topic (losing the nudge would merely cost one
+        # poll interval of latency).  This is the crash-loss class the
+        # transactional outbox closes: the notification either never
+        # committed (its delivery didn't either) or is still here.
+        if workflow_ids is None:
+            undelivered = store.count_messages(
+                statuses=UNDELIVERED_STATUSES)
+            if undelivered:
+                counts["outbox_messages"] = undelivered
+                self.ctx.bus.publish(M.T_OUTBOX, {"count": undelivered})
         # commands journaled pending but never applied (or applied but
         # not journaled done) died with the old Commander: replay them.
         # Applying is idempotent against already-reflected state, so the

@@ -398,6 +398,12 @@ T_PROCESSING_DONE = "idds.processings.done"  # Carrier -> Transf./Marshaller
 T_WORK_DONE = "idds.works.done"               # Transformer -> Marshaller
 T_OUTPUT_AVAILABLE = "idds.outputs.available"  # Transformer -> Conductor
 T_CONSUMER_NOTIFY = "idds.consumers.notify"   # Conductor -> data consumers
+# Advisory "outbox has rows" wake, Conductor -> Publisher.  Queue
+# semantics on purpose: exactly one head's Publisher needs to wake, and
+# losing the wake is harmless — the Publisher also drains by store
+# query, so the message is a latency optimization, not the delivery
+# mechanism.
+T_OUTBOX = "idds.outbox.new"
 T_COLLECTION_UPDATED = "ddm.collections.updated"  # DDM -> Transformer
 # steering plane (request lifecycle commands)
 T_NEW_COMMANDS = "idds.commands.new"              # client -> Commander

@@ -27,11 +27,20 @@ details + deprecation table in docs/rest_api.md):
   GET  /v1/collections/<name>/contents     per-file content records
                                            (status filter, limit/offset)
   POST /v1/subscriptions                   register a consumer with the
-                                           delivery plane (201)
+                                           delivery plane (201); a
+                                           push_url switches it to
+                                           webhook fan-out
   GET  /v1/subscriptions                   subscription registry
+                                           (limit/offset)
   GET  /v1/subscriptions/<id>              one subscription + tallies
   GET  /v1/subscriptions/<id>/deliveries   tracked deliveries (status
-                                           filter)
+                                           filter, limit/offset);
+                                           ?wait_s= long-polls until a
+                                           delivery lands
+  GET  /v1/subscriptions/<id>/events       Server-Sent Events stream of
+                                           journaled outbox rows;
+                                           Last-Event-ID (or ?after=)
+                                           resumes from the seq cursor
   POST /v1/subscriptions/<id>/ack          acknowledge deliveries
   POST /v1/collections/<name>/contents:transition
                                            bulk content state changes
@@ -106,6 +115,9 @@ MAX_BODY_BYTES = 16 * 1024 * 1024  # refuse absurd submissions
 MAX_LEASE_BATCH = 64     # ?n= upper bound on POST /jobs/lease
 MAX_BATCH_ITEMS = 256    # job_ids/items upper bound on batch verbs
 MAX_TRANSITION_ITEMS = 4096  # transitions upper bound (stager sweeps)
+MAX_WAIT_S = 60.0        # ?wait_s= long-poll park upper bound
+MAX_STREAM_S = 300.0     # SSE stream duration upper bound per request
+SSE_HEARTBEAT_S = 10.0   # idle SSE comment-frame cadence
 
 
 class RestGateway:
@@ -223,14 +235,9 @@ class RestGateway:
                     token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
         status = query.get("status", [None])[0]
-        try:
-            limit_s = query.get("limit", [None])[0]
-            offset_s = query.get("offset", ["0"])[0]
-            limit = None if limit_s is None else int(limit_s)
-            offset = int(offset_s)
-        except (TypeError, ValueError):
-            return 400, _err("BadRequest",
-                             "limit and offset must be integers")
+        limit, offset, err = _parse_page(query)
+        if err is not None:
+            return err
         try:
             return 200, self.idds.list_requests(status=status, limit=limit,
                                                 offset=offset)
@@ -324,13 +331,9 @@ class RestGateway:
                         token: str) -> Tuple[int, Any]:
         self.idds._auth(token)
         status = query.get("status", [None])[0]
-        try:
-            limit_s = query.get("limit", [None])[0]
-            limit = None if limit_s is None else int(limit_s)
-            offset = int(query.get("offset", ["0"])[0])
-        except (TypeError, ValueError):
-            return 400, _err("BadRequest",
-                             "limit and offset must be integers")
+        limit, offset, err = _parse_page(query)
+        if err is not None:
+            return err
         try:
             return 200, self.idds.list_contents(name, status=status,
                                                 limit=limit, offset=offset)
@@ -386,16 +389,27 @@ class RestGateway:
         sub_id = d.get("sub_id")
         if sub_id is not None and not isinstance(sub_id, str):
             return 400, _err("BadRequest", "sub_id must be a string")
+        push_url = d.get("push_url")
+        if push_url is not None and not isinstance(push_url, str):
+            return 400, _err("BadRequest", "push_url must be a string")
         try:
             sub = self.idds.subscribe(consumer, collections,
-                                      sub_id=sub_id)
+                                      sub_id=sub_id, push_url=push_url)
         except ValueError as e:
             return 400, _err("BadRequest", str(e))
         return 201, sub
 
-    def handle_subscriptions(self, token: str) -> Tuple[int, Dict]:
+    def handle_subscriptions(self, query: Dict[str, List[str]],
+                             token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
-        return 200, self.idds.list_subscriptions()
+        limit, offset, err = _parse_page(query)
+        if err is not None:
+            return err
+        try:
+            return 200, self.idds.list_subscriptions(limit=limit,
+                                                     offset=offset)
+        except ValueError as e:
+            return 400, _err("BadRequest", str(e))
 
     def handle_subscription(self, sub_id: str,
                             token: str) -> Tuple[int, Dict]:
@@ -410,13 +424,91 @@ class RestGateway:
                           token: str) -> Tuple[int, Dict]:
         self.idds._auth(token)
         status = query.get("status", [None])[0]
+        limit, offset, err = _parse_page(query)
+        if err is not None:
+            return err
+        wait_raw = query.get("wait_s", [None])[0]
+        wait_s = 0.0
+        if wait_raw is not None:
+            try:
+                wait_s = float(wait_raw)
+            except (TypeError, ValueError):
+                return 400, _err("BadRequest", "wait_s must be a number")
+            if wait_s < 0:
+                return 400, _err("BadRequest",
+                                 "wait_s must be non-negative")
+            # cap: a parked handler holds one server thread
+            wait_s = min(wait_s, MAX_WAIT_S)
         try:
-            return 200, self.idds.list_deliveries(sub_id, status=status)
+            return 200, self.idds.wait_deliveries(
+                sub_id, status=status, limit=limit, offset=offset,
+                wait_s=wait_s)
         except ValueError as e:
             return 400, _err("BadRequest", str(e))
         except KeyError:
             return 404, _err("NotFound",
                              f"unknown subscription {sub_id!r}")
+
+    def handle_events(self, sub_id: str, query: Dict[str, List[str]],
+                      token: str,
+                      last_event_id: Optional[str] = None
+                      ) -> Tuple[int, Any]:
+        """Server-Sent Events stream of one subscription's journaled
+        outbox rows.  Each frame is ``id: <seq>`` + ``event: delivery``
+        + the row as JSON ``data:``; the ``Last-Event-ID`` request
+        header (what EventSource sends on reconnect) or ``?after=``
+        resumes past rows already seen — journaled rows missed while
+        disconnected are replayed, so resume loses nothing.  The stream
+        closes itself after ``?wait_s=`` (capped) seconds; idle periods
+        carry comment heartbeats so proxies don't reap the socket."""
+        self.idds._auth(token)
+        after_raw = (last_event_id if last_event_id
+                     else query.get("after", [None])[0])
+        after = None
+        if after_raw is not None:
+            try:
+                after = int(after_raw)
+            except (TypeError, ValueError):
+                return 400, _err("BadRequest",
+                                 "after / Last-Event-ID must be an "
+                                 "integer seq cursor")
+            if after < 0:
+                return 400, _err("BadRequest",
+                                 "after must be non-negative")
+        wait_raw = query.get("wait_s", [None])[0]
+        wait_s = MAX_STREAM_S
+        if wait_raw is not None:
+            try:
+                wait_s = float(wait_raw)
+            except (TypeError, ValueError):
+                return 400, _err("BadRequest", "wait_s must be a number")
+            wait_s = min(max(wait_s, 0.0), MAX_STREAM_S)
+        try:
+            first = self.idds.list_events(sub_id, after_seq=after)
+        except KeyError:
+            return 404, _err("NotFound",
+                             f"unknown subscription {sub_id!r}")
+
+        def frames():
+            cursor = after
+            deadline = time.monotonic() + wait_s
+            batch = first["events"]
+            while True:
+                for ev in batch:
+                    cursor = ev["seq"]
+                    yield (f"id: {ev['seq']}\nevent: delivery\n"
+                           f"data: {json.dumps(ev)}\n\n")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return
+                woke = self.idds.wait_delivery_event(
+                    min(remaining, SSE_HEARTBEAT_S))
+                if not woke:
+                    yield ": keep-alive\n\n"
+                batch = self.idds.list_events(
+                    sub_id, after_seq=cursor)["events"]
+
+        return 200, SSEStream(frames())
 
     def handle_ack(self, sub_id: str, body: bytes,
                    token: str) -> Tuple[int, Dict]:
@@ -663,8 +755,34 @@ class PlainText:
         self.content_type = content_type
 
 
+class SSEStream:
+    """Marks a handler body as a Server-Sent Events stream: ``_reply``
+    sends no Content-Length, flushes each frame as the generator yields
+    it, and closes the connection when the generator ends (the handler
+    decides the stream's lifetime).  Frames are pre-formatted SSE text
+    (``id:``/``event:``/``data:`` lines, blank-line terminated)."""
+    __slots__ = ("frames",)
+
+    def __init__(self, frames):
+        self.frames = frames
+
+
 def _err(type_: str, message: str) -> Dict[str, Dict[str, str]]:
     return {"error": {"type": type_, "message": message}}
+
+
+def _parse_page(query: Dict[str, List[str]]):
+    """``?limit=&offset=`` -> (limit, offset, None) or
+    (None, None, (400, envelope)) — the one paginated-collection
+    parser, shared by every listing route."""
+    try:
+        limit_s = (query or {}).get("limit", [None])[0]
+        limit = None if limit_s is None else int(limit_s)
+        offset = int((query or {}).get("offset", ["0"])[0])
+    except (TypeError, ValueError):
+        return None, None, (400, _err("BadRequest",
+                                      "limit and offset must be integers"))
+    return limit, offset, None
 
 
 def batch_envelope(results: List[Dict[str, Any]], *,
@@ -766,6 +884,8 @@ _ROUTE_SPECS = [
      "handle_ack", False),
     ("GET", r"subscriptions/(?P<sub_id>[^/]+)/deliveries/?",
      "handle_deliveries", False),
+    ("GET", r"subscriptions/(?P<sub_id>[^/]+)/events/?",
+     "handle_events", False),
     ("GET", r"subscriptions/(?P<sub_id>[^/]+)/?",
      "handle_subscription", False),
     ("GET", r"subscriptions/?", "handle_subscriptions", False),
@@ -830,6 +950,24 @@ def _make_handler(gw: RestGateway):
         def _reply(self, status: int, body: Any,
                    headers: Optional[List[Tuple[str, str]]] = None) -> None:
             self._drain_body()
+            if isinstance(body, SSEStream):
+                # streaming: no Content-Length, so the connection must
+                # close when the generator ends (HTTP/1.1 framing)
+                self.close_connection = True
+                self.send_response(status)
+                self.send_header("Content-Type", "text/event-stream")
+                self.send_header("Cache-Control", "no-cache")
+                for k, v in headers or ():
+                    self.send_header(k, v)
+                self.send_header("Connection", "close")
+                self.end_headers()
+                try:
+                    for frame in body.frames:
+                        self.wfile.write(frame.encode("utf-8"))
+                        self.wfile.flush()
+                except (BrokenPipeError, ConnectionResetError, OSError):
+                    pass  # consumer hung up mid-stream; nothing to do
+                return
             if isinstance(body, PlainText):
                 payload = body.text.encode("utf-8")
                 content_type = body.content_type
@@ -925,7 +1063,8 @@ def _make_handler(gw: RestGateway):
         # the ?n= multi-lease switch); may overlap with _BODY_HANDLERS
         _QUERY_HANDLERS = frozenset({
             "handle_list", "handle_contents", "handle_deliveries",
-            "handle_lease", "handle_metrics"})
+            "handle_lease", "handle_metrics", "handle_subscriptions",
+            "handle_events"})
 
         def _invoke(self, fn_name: str, match) -> Tuple[int, Any]:
             token = self._token()
@@ -933,6 +1072,9 @@ def _make_handler(gw: RestGateway):
                 return gw.handle_healthz()
             kwargs = {k: urllib.parse.unquote(v)
                       for k, v in match.groupdict().items()}
+            if fn_name == "handle_events":
+                # the SSE resume cursor EventSource re-sends on reconnect
+                kwargs["last_event_id"] = self.headers.get("Last-Event-ID")
             if fn_name in self._QUERY_HANDLERS:
                 kwargs["query"] = urllib.parse.parse_qs(
                     urllib.parse.urlsplit(self.path).query)

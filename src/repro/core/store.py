@@ -179,6 +179,44 @@ class Store:
     def load_subscriptions(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
 
+    # -- outbox messages (push delivery plane) -----------------------------
+    # The transactional outbox: the Conductor journals one message row
+    # per delivery IN THE SAME save_many BATCH as the subscription /
+    # content transition that caused it, so a crash can never persist
+    # the state change without its notification (or vice versa).  The
+    # Publisher daemon later drains rows by status — new/queued rows are
+    # undelivered work it re-drives after a crash; ``not_before`` (WALL
+    # clock, cross-process like claims) parks a row between webhook
+    # retry attempts.  The store assigns each row a monotonically
+    # increasing ``seq`` on first insert (preserved on upsert): it is
+    # the global delivery-event cursor SSE resume rides on.
+
+    def save_message(self, msg: Dict[str, Any]) -> None:
+        """Upsert one outbox row keyed on ``msg_id``."""
+        self.save_messages([msg])
+
+    def save_messages(self, msgs: List[Dict[str, Any]]) -> None:
+        """Upsert a batch of outbox rows atomically (all or none)."""
+        raise NotImplementedError
+
+    def load_messages(self, *, sub_id: Optional[str] = None,
+                      statuses: Optional[Iterable[str]] = None,
+                      after_seq: Optional[int] = None,
+                      due_before: Optional[float] = None,
+                      limit: Optional[int] = None
+                      ) -> List[Dict[str, Any]]:
+        """Outbox rows ordered by ``seq``, with optional filters:
+        ``statuses`` (e.g. the Publisher's undelivered set), ``after_seq``
+        (an SSE resume cursor), ``due_before`` (skip rows whose
+        ``not_before`` has not ripened) and ``limit`` (drain batch
+        size)."""
+        raise NotImplementedError
+
+    def count_messages(self, *, statuses: Optional[Iterable[str]] = None
+                       ) -> int:
+        """Outbox row count (the telemetry depth gauge)."""
+        raise NotImplementedError
+
     # -- ownership claims (multi-head coordination) ------------------------
     # Claims are how N head processes share one catalog without stepping
     # on each other (the paper's row-level locking: TransformLocking /
@@ -297,6 +335,7 @@ class Store:
     #   ("lease", lease)             ("delete_lease", job_id)
     #   ("command", cmd)             ("collection", coll)
     #   ("contents", (collection, files)) ("subscription", sub)
+    #   ("messages", [msg, ...])
     def _apply_op(self, kind: str, payload: Any) -> None:
         if kind == "contents":
             self.save_contents(payload[0], payload[1])
@@ -310,6 +349,8 @@ class Store:
             self.save_collection(payload)
         elif kind == "subscription":
             self.save_subscription(payload)
+        elif kind == "messages":
+            self.save_messages(payload)
         elif kind == "request":
             self.save_request(payload)
         elif kind == "workflow":
@@ -373,6 +414,8 @@ class InMemoryStore(Store):
         self._leases: Dict[str, Dict[str, Any]] = {}
         self._commands: Dict[str, Dict[str, Any]] = {}
         self._subscriptions: Dict[str, Dict[str, Any]] = {}
+        self._messages: Dict[str, Dict[str, Any]] = {}
+        self._msg_next_seq = 1
         self._claims: Dict[Tuple[str, str], Dict[str, Any]] = {}
         self._health: Dict[str, Dict[str, Any]] = {}
         self._trace_events: List[Dict[str, Any]] = []
@@ -514,6 +557,44 @@ class InMemoryStore(Store):
         with self._lock:
             return [json.loads(json.dumps(s))
                     for s in self._subscriptions.values()]
+
+    # -- outbox messages ----------------------------------------------------
+    def save_messages(self, msgs: List[Dict[str, Any]]) -> None:
+        with self._lock:
+            for m in msgs:
+                m = json.loads(json.dumps(m))
+                prev = self._messages.get(m["msg_id"])
+                if prev is not None:  # seq is assigned once, on insert
+                    m["seq"] = prev["seq"]
+                else:
+                    m["seq"] = self._msg_next_seq
+                    self._msg_next_seq += 1
+                self._messages[m["msg_id"]] = m
+
+    def load_messages(self, *, sub_id: Optional[str] = None,
+                      statuses: Optional[Iterable[str]] = None,
+                      after_seq: Optional[int] = None,
+                      due_before: Optional[float] = None,
+                      limit: Optional[int] = None
+                      ) -> List[Dict[str, Any]]:
+        sset = None if statuses is None else set(statuses)
+        with self._lock:
+            rows = [json.loads(json.dumps(m))
+                    for m in self._messages.values()
+                    if (sub_id is None or m.get("sub_id") == sub_id)
+                    and (sset is None or m.get("status") in sset)
+                    and (after_seq is None or m["seq"] > after_seq)
+                    and (due_before is None
+                         or (m.get("not_before") or 0.0) <= due_before)]
+        rows.sort(key=lambda m: m["seq"])
+        return rows if limit is None else rows[:limit]
+
+    def count_messages(self, *, statuses: Optional[Iterable[str]] = None
+                       ) -> int:
+        sset = None if statuses is None else set(statuses)
+        with self._lock:
+            return sum(1 for m in self._messages.values()
+                       if sset is None or m.get("status") in sset)
 
     # -- ownership claims ---------------------------------------------------
     def try_claim(self, kind: str, entity_id: str, owner_id: str,
@@ -743,6 +824,18 @@ CREATE TABLE IF NOT EXISTS subscriptions (
     consumer TEXT,
     data     TEXT NOT NULL
 );
+CREATE TABLE IF NOT EXISTS messages (
+    seq        INTEGER PRIMARY KEY AUTOINCREMENT,
+    msg_id     TEXT UNIQUE,
+    sub_id     TEXT,
+    status     TEXT,
+    not_before REAL,
+    created_at REAL,
+    data       TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_messages_status
+    ON messages (status, not_before);
+CREATE INDEX IF NOT EXISTS idx_messages_sub ON messages (sub_id, seq);
 CREATE TABLE IF NOT EXISTS claims (
     kind          TEXT,
     entity_id     TEXT,
@@ -1072,6 +1165,75 @@ class SqliteStore(Store):
             "SELECT data FROM subscriptions ORDER BY rowid").fetchall()
         return [json.loads(r[0]) for r in rows]
 
+    # -- outbox messages ----------------------------------------------------
+    # ON CONFLICT leaves ``seq`` alone: the AUTOINCREMENT value assigned
+    # on first insert is the SSE resume cursor and must never move.
+    _MESSAGE_UPSERT = (
+        "INSERT INTO messages (msg_id, sub_id, status, not_before,"
+        " created_at, data) VALUES (?, ?, ?, ?, ?, ?)"
+        " ON CONFLICT(msg_id) DO UPDATE SET"
+        " status=excluded.status, not_before=excluded.not_before,"
+        " data=excluded.data")
+
+    @staticmethod
+    def _message_row(m: Dict[str, Any]) -> Tuple:
+        return (m["msg_id"], m.get("sub_id"), m.get("status"),
+                m.get("not_before"), m.get("created_at"), json.dumps(m))
+
+    def save_messages(self, msgs: List[Dict[str, Any]]) -> None:
+        if msgs:
+            self.save_many([("messages", msgs)])
+
+    def load_messages(self, *, sub_id: Optional[str] = None,
+                      statuses: Optional[Iterable[str]] = None,
+                      after_seq: Optional[int] = None,
+                      due_before: Optional[float] = None,
+                      limit: Optional[int] = None
+                      ) -> List[Dict[str, Any]]:
+        sql = "SELECT seq, data FROM messages"
+        clauses, args = [], []  # type: List[str], List[Any]
+        if sub_id is not None:
+            clauses.append("sub_id = ?")
+            args.append(sub_id)
+        if statuses is not None:
+            sts = list(statuses)
+            if not sts:
+                return []
+            qs = ",".join("?" * len(sts))
+            clauses.append(f"status IN ({qs})")
+            args.extend(sts)
+        if after_seq is not None:
+            clauses.append("seq > ?")
+            args.append(after_seq)
+        if due_before is not None:
+            clauses.append("(not_before IS NULL OR not_before <= ?)")
+            args.append(due_before)
+        if clauses:
+            sql += " WHERE " + " AND ".join(clauses)
+        sql += " ORDER BY seq LIMIT ?"
+        args.append(-1 if limit is None else limit)
+        out = []
+        for seq, data in self._conn().execute(sql, args).fetchall():
+            m = json.loads(data)
+            m["seq"] = int(seq)  # authoritative: data may predate insert
+            out.append(m)
+        return out
+
+    def count_messages(self, *, statuses: Optional[Iterable[str]] = None
+                       ) -> int:
+        if statuses is None:
+            row = self._conn().execute(
+                "SELECT count(*) FROM messages").fetchone()
+        else:
+            sts = list(statuses)
+            if not sts:
+                return 0
+            qs = ",".join("?" * len(sts))
+            row = self._conn().execute(
+                f"SELECT count(*) FROM messages WHERE status IN ({qs})",
+                sts).fetchone()
+        return int(row[0])
+
     # -- ownership claims ---------------------------------------------------
     # The WHERE clause makes the upsert a compare-and-claim: the UPDATE
     # half applies only when the caller already owns the row (renewal)
@@ -1324,6 +1486,9 @@ class SqliteStore(Store):
                 self._SUB_UPSERT,
                 (payload["sub_id"], payload.get("consumer"),
                  json.dumps(payload)))
+        elif kind == "messages":
+            conn.executemany(self._MESSAGE_UPSERT,
+                             [self._message_row(m) for m in payload])
         elif kind == "request":
             conn.execute(self._REQUEST_UPSERT, self._request_row(payload))
         elif kind == "workflow":
@@ -1557,6 +1722,11 @@ class BufferedStore(Store):
     def save_subscription(self, sub: Dict[str, Any]) -> None:
         self.inner.save_subscription(sub)
 
+    def save_messages(self, msgs: List[Dict[str, Any]]) -> None:
+        # the outbox IS the crash-safety mechanism for notifications;
+        # buffering it would reopen the loss window it exists to close
+        self.inner.save_messages(msgs)
+
     # ----------------------- multi-head plane (never buffered)
     # Claims, health heartbeats and bus messages exist to coordinate
     # OTHER processes; holding them in a local buffer would make another
@@ -1667,6 +1837,22 @@ class BufferedStore(Store):
     def load_subscriptions(self) -> List[Dict[str, Any]]:
         self.flush()
         return self.inner.load_subscriptions()
+
+    def load_messages(self, *, sub_id: Optional[str] = None,
+                      statuses: Optional[Iterable[str]] = None,
+                      after_seq: Optional[int] = None,
+                      due_before: Optional[float] = None,
+                      limit: Optional[int] = None
+                      ) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_messages(
+            sub_id=sub_id, statuses=statuses, after_seq=after_seq,
+            due_before=due_before, limit=limit)
+
+    def count_messages(self, *, statuses: Optional[Iterable[str]] = None
+                       ) -> int:
+        self.flush()
+        return self.inner.count_messages(statuses=statuses)
 
     # ----------------------------------------------------------- lifecycle
     def close(self) -> None:

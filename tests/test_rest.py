@@ -52,7 +52,7 @@ def test_healthz_no_auth(auth_gateway):
     assert h["status"] == "ok"
     assert set(h["daemons"]) == {"clerk", "marshaller", "commander",
                                  "transformer", "carrier", "conductor",
-                                 "watchdog"}
+                                 "publisher", "watchdog"}
     # head identity + bus backend: which cluster member answered
     assert h["head_id"] == auth_gateway.idds.ctx.head_id
     assert h["bus"] == "local"

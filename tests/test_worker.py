@@ -177,7 +177,7 @@ def test_healthz_reports_execution_plane(dist_gateway):
     assert h["daemons"] == {"clerk": True, "marshaller": True,
                             "commander": True, "transformer": True,
                             "carrier": True, "conductor": True,
-                            "watchdog": True}
+                            "publisher": True, "watchdog": True}
     client.lease_job("probe")  # empty lease still registers the worker
     assert client.healthz()["workers_connected"] == 1
 
