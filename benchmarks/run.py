@@ -24,6 +24,9 @@ Sections:
                        latency (suspend/resume over the wire)
   worker     §2        distributed execution plane: jobs/sec vs worker
                        count + lease-renewal overhead
+  intel      §3        intelligence plane: locality-aware dispatch vs
+                       legacy FIFO on a skewed tape workload (makespan,
+                       p99 time-to-delivered, affinity hit-rate)
   roofline   —         per-cell roofline terms from the dry-run sweep
 
 Modes: full (default) the paper-scale sweeps; ``--quick`` smaller
@@ -185,6 +188,13 @@ def main(argv=None) -> int:
         sleep_ms=20.0 if quick else 25.0,
         renewals=40 if quick else 100)
     _print_rows(worker_bench.KEYS, results["worker"])
+
+    _section("intel (intelligence plane: affinity dispatch vs FIFO)")
+    from benchmarks import intel_bench
+    results["intel"] = intel_bench.run(
+        jobs=240 if smoke else 600 if quick else 1200,
+        workers=4 if smoke else 8)
+    _print_rows(intel_bench.KEYS, results["intel"])
 
     if smoke:
         _section("roofline (skipped in --smoke: needs a dry-run sweep)")

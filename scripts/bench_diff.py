@@ -89,6 +89,12 @@ def gate_metrics(doc: Dict) -> Dict[str, Tuple[float, str]]:
             out["obs.e2e-metrics.overhead_pct"] = (
                 max(r["overhead_pct"], 0.1), LOWER)
 
+    for r in _rows(s, "intel"):
+        if r.get("arm") == "on" and r.get("p99_ttd_s"):
+            out["intel.on.p99_ttd_s"] = (r["p99_ttd_s"], LOWER)
+        if r.get("arm") == "on" and r.get("makespan_s"):
+            out["intel.on.makespan_s"] = (r["makespan_s"], LOWER)
+
     for r in _rows(s, "outbox"):
         if r.get("arm") == "long-poll" and r.get("p50_ms"):
             out["outbox.long-poll.p50_ms"] = (r["p50_ms"], LOWER)
@@ -100,6 +106,27 @@ def gate_metrics(doc: Dict) -> Dict[str, Tuple[float, str]]:
                 r["deliveries_per_s"], HIGHER)
 
     return out
+
+
+def check_intel_invariants(doc: Dict):
+    """Intra-file acceptance checks on the intel section (no baseline
+    needed): with the intelligence plane on, p99 time-to-delivered must
+    strictly beat the FIFO arm of the same run, and the affinity
+    hit-rate must be positive (the routing actually fired).  Returns a
+    list of violation strings; empty when the section is absent."""
+    arms = {r.get("arm"): r for r in _rows(doc.get("sections", {}), "intel")}
+    on, off = arms.get("on"), arms.get("off")
+    if not on or not off:
+        return []
+    bad = []
+    if not on.get("p99_ttd_s") or not off.get("p99_ttd_s") \
+            or on["p99_ttd_s"] >= off["p99_ttd_s"]:
+        bad.append(f"intel-on p99_ttd_s ({on.get('p99_ttd_s')}) must be "
+                   f"strictly below intel-off ({off.get('p99_ttd_s')})")
+    hit = on.get("affinity_hit_rate")
+    if not isinstance(hit, (int, float)) or hit <= 0:
+        bad.append(f"intel-on affinity_hit_rate ({hit!r}) must be > 0")
+    return bad
 
 
 def pick_baseline(current_path: str, mode: str) -> Optional[str]:
@@ -138,6 +165,17 @@ def main(argv=None) -> int:
 
     with open(args.current) as f:
         current = json.load(f)
+
+    # intra-file gate first: the intel arm must pay for itself within
+    # this very run, baseline or not
+    intel_bad = check_intel_invariants(current)
+    for msg in intel_bad:
+        print(f"  INTEL GATE: {msg}")
+    if intel_bad:
+        print(f"\nFAIL: intel section violates "
+              f"{len(intel_bad)} invariant(s)")
+        return 1
+
     baseline_path = args.against or pick_baseline(
         args.current, current.get("mode"))
     if baseline_path is None:

@@ -86,6 +86,12 @@ class CarouselDDM:
                                                               name)
         stager.on_failed = lambda name: self.set_failed(collection, name)
 
+    def stagers(self) -> List[Stager]:
+        """Live stager snapshot — the Conductor's hedge pass walks
+        these to drain landed latencies and issue learned-p95 hedges."""
+        with self._lock:
+            return list(self._stagers.values())
+
     def stage_collection(self, name: str, *,
                          stager: Optional[Stager] = None,
                          **stager_kwargs) -> Stager:

@@ -22,16 +22,15 @@ and journal the per-file content state machine.
 """
 from __future__ import annotations
 
-import collections
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.carousel.storage import ColdStore, DiskCache
 from repro.core import messaging as M
-from repro.core.obs import get_logger
+from repro.core.obs import RollingPercentile, get_logger
 
 _log = get_logger("stager")
 
@@ -81,11 +80,20 @@ class Stager:
         self.records: Dict[str, StageRecord] = {}
         self._landed: Dict[str, bool] = {}
         # rolling window: long-running stagers see millions of files,
-        # and the median only needs the recent latency regime anyway
-        self._latencies: Deque[float] = collections.deque(
-            maxlen=latency_window)
+        # and the median only needs the recent latency regime anyway.
+        # RollingPercentile keeps a bisect-maintained sorted snapshot,
+        # so the hedge tick reads the median in O(1) instead of
+        # re-sorting the whole window every call.
+        self._lat_window = RollingPercentile(window=latency_window)
+        # landed (name, seconds) pairs awaiting drain_latencies()
+        self._recent_latencies: List[Tuple[str, float]] = []
         self._futures: List[Future] = []
         self.hedges_issued = 0
+
+    @property
+    def _latencies(self) -> List[float]:
+        """Arrival-ordered latency window (kept for introspection)."""
+        return self._lat_window.values()
 
     # ------------------------------------------------------------------
     def bind_telemetry(self, registry, tracer=None) -> None:
@@ -99,11 +107,9 @@ class Stager:
         self.tracer = tracer
 
     def _median_latency(self) -> Optional[float]:
-        with self._lock:
-            if len(self._latencies) < self.hedge_min_samples:
-                return None
-            s = sorted(self._latencies)
-            return s[len(s) // 2]
+        if len(self._lat_window) < self.hedge_min_samples:
+            return None
+        return self._lat_window.median()
 
     def _land(self, name: str, data: Any, size: int) -> bool:
         """First landing wins (hedges make this racy by design)."""
@@ -116,7 +122,8 @@ class Stager:
             rec.ok = True
             dt = rec.finished - rec.submitted
             attempts, hedged = rec.attempts, rec.hedged
-            self._latencies.append(dt)
+            self._lat_window.observe(dt)
+            self._recent_latencies.append((name, dt))
         if self._obs_stage_hist is not None:
             self._obs_stage_hist.observe(dt)
         self.cache.put(name, data, size, pin=False)
@@ -193,12 +200,21 @@ class Stager:
         med = self._median_latency()
         if med is None:
             return 0
+        return self.hedge_overdue(self.hedge_factor * med)
+
+    def hedge_overdue(self, threshold_s: float) -> int:
+        """Re-submit every un-hedged in-flight file older than
+        ``threshold_s``; first landing wins.  ``hedge_check`` derives
+        the threshold from this stager's local median × hedge_factor;
+        the Conductor calls this directly with the intelligence plane's
+        learned staging p95 instead.  Either way a record hedges at
+        most once, so repeated calls converge."""
         issued = 0
         now = time.monotonic()
         with self._lock:
             cands = [r for r in self.records.values()
                      if not r.finished and not r.hedged
-                     and now - r.submitted > self.hedge_factor * med]
+                     and now - r.submitted > threshold_s]
             for r in cands:
                 r.hedged = True
         for r in cands:
@@ -206,6 +222,14 @@ class Stager:
             issued += 1
             self._futures.append(self._pool.submit(self._stage_once, r.name))
         return issued
+
+    def drain_latencies(self) -> List[Tuple[str, float]]:
+        """Landed ``(name, seconds)`` pairs since the last drain — the
+        Conductor feeds these into the HistoryBook that learns the
+        staging p95 it hedges against."""
+        with self._lock:
+            out, self._recent_latencies = self._recent_latencies, []
+        return out
 
     def wait(self, timeout: float = 60.0,
              hedge_interval: float = 0.05) -> bool:

@@ -29,6 +29,12 @@ Verbs:
   resume REQUEST_ID           /  immediately instead of polling until
   retry REQUEST_ID           /   the Commander applied the command
   workers                     execution-plane worker registry
+  queues                      per-queue scheduler state (depth,
+                              suspended count, base + effective
+                              priority, learned completion rate)
+  intel                       intelligence-plane snapshot (affinity
+                              hit-rate, learned per-queue history,
+                              hedge/rescore counters)
   collections                 collection catalog + content tallies
   contents NAME [--status S] [--limit N] [--offset N]
                               per-file content records of a collection
@@ -81,6 +87,8 @@ def build_parser() -> argparse.ArgumentParser:
     sub.add_parser("cluster")
     sub.add_parser("stats")
     sub.add_parser("workers")
+    sub.add_parser("queues")
+    sub.add_parser("intel")
 
     p = sub.add_parser("list")
     p.add_argument("--status", default=None)
@@ -172,6 +180,10 @@ def main(argv=None) -> int:
             _print(client.stats())
         elif args.verb == "workers":
             _print(client.list_workers())
+        elif args.verb == "queues":
+            _print(client.queues())
+        elif args.verb == "intel":
+            _print(client.intel())
         elif args.verb == "list":
             _print(client.list_requests(status=args.status,
                                         limit=args.limit,

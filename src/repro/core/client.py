@@ -537,11 +537,15 @@ class IDDSClient:
     # ----------------------------------------------- execution plane (jobs)
     def lease_job(self, worker_id: str, *,
                   queues: Optional[List[str]] = None,
-                  ttl: Optional[float] = None) -> Optional[Dict[str, Any]]:
+                  ttl: Optional[float] = None,
+                  manifest: Optional[List[str]] = None
+                  ) -> Optional[Dict[str, Any]]:
         """Lease the next dispatchable job (POST /jobs/lease); None when
         nothing is pending.  Retry-safe: a fresh idempotency key per
         logical call means a retried request returns the same job rather
-        than leasing a second one."""
+        than leasing a second one.  ``manifest`` reports the contents
+        this worker already holds locally — an intel-enabled head routes
+        jobs whose inputs match (cache-affinity scheduling)."""
         body: Dict[str, Any] = {
             "worker_id": worker_id,
             "idempotency_key": uuid.uuid4().hex,
@@ -550,12 +554,16 @@ class IDDSClient:
             body["queues"] = list(queues)
         if ttl is not None:
             body["lease_ttl"] = ttl
+        if manifest is not None:
+            body["manifest"] = list(manifest)
         return self._post(f"{API_PREFIX}/jobs/lease", body,
                           idempotent=True)["job"]
 
     def lease_jobs(self, worker_id: str, n: int, *,
                    queues: Optional[List[str]] = None,
-                   ttl: Optional[float] = None) -> List[Dict[str, Any]]:
+                   ttl: Optional[float] = None,
+                   manifest: Optional[List[str]] = None
+                   ) -> List[Dict[str, Any]]:
         """Lease up to ``n`` jobs in one round trip and one scheduler
         lock grab (POST /jobs/lease?n=); returns a possibly-empty list.
         Retry-safe: the idempotency key replays the original grant."""
@@ -567,19 +575,25 @@ class IDDSClient:
             body["queues"] = list(queues)
         if ttl is not None:
             body["lease_ttl"] = ttl
+        if manifest is not None:
+            body["manifest"] = list(manifest)
         return self._post(f"{API_PREFIX}/jobs/lease?n={int(n)}", body,
                           idempotent=True)["jobs"]
 
-    def heartbeat_jobs(self, job_ids: List[str],
-                       worker_id: str) -> "BatchResult":
+    def heartbeat_jobs(self, job_ids: List[str], worker_id: str, *,
+                       manifest: Optional[List[str]] = None
+                       ) -> "BatchResult":
         """Renew many held leases in one round trip (POST
         /jobs/heartbeat).  Always 200; per-item envelopes in
         ``results`` carry status 200 or 409 — a stale lease shows up as
-        its item's 409, never as an exception."""
+        its item's 409, never as an exception.  ``manifest`` refreshes
+        the worker's cache-content report for affinity routing."""
+        body: Dict[str, Any] = {"worker_id": worker_id,
+                                "job_ids": list(job_ids)}
+        if manifest is not None:
+            body["manifest"] = list(manifest)
         return BatchResult(self._post(
-            f"{API_PREFIX}/jobs/heartbeat",
-            {"worker_id": worker_id, "job_ids": list(job_ids)},
-            idempotent=True))
+            f"{API_PREFIX}/jobs/heartbeat", body, idempotent=True))
 
     def complete_jobs(self, items: List[Dict[str, Any]],
                       worker_id: str) -> "BatchResult":
@@ -605,11 +619,16 @@ class IDDSClient:
             f"{urllib.parse.quote(name, safe='')}/contents:transition",
             {"transitions": list(transitions)}, idempotent=True))
 
-    def heartbeat_job(self, job_id: str, worker_id: str) -> Dict[str, Any]:
+    def heartbeat_job(self, job_id: str, worker_id: str, *,
+                      manifest: Optional[List[str]] = None
+                      ) -> Dict[str, Any]:
         """Renew a held lease; raises ConflictError once it is lost."""
+        body: Dict[str, Any] = {"worker_id": worker_id}
+        if manifest is not None:
+            body["manifest"] = list(manifest)
         return self._post(
             f"{API_PREFIX}/jobs/{urllib.parse.quote(job_id)}/heartbeat",
-            {"worker_id": worker_id}, idempotent=True)
+            body, idempotent=True)
 
     def complete_job(self, job_id: str, worker_id: str, *,
                      result: Optional[Dict[str, Any]] = None,
@@ -625,3 +644,14 @@ class IDDSClient:
     def list_workers(self) -> Dict[str, Any]:
         """Execution-plane worker registry (GET /workers)."""
         return self._get(f"{API_PREFIX}/workers")
+
+    def queues(self) -> Dict[str, Any]:
+        """Per-queue scheduler state (GET /v1/queues): depth, suspended
+        count, base and effective priority, learned completion rate."""
+        return self._get(f"{API_PREFIX}/queues")
+
+    def intel(self) -> Dict[str, Any]:
+        """Intelligence-plane snapshot (GET /v1/intel): affinity
+        hit-rate, per-queue history, hedge/rescore counters — or
+        ``{"enabled": false}`` when the head runs with --intel off."""
+        return self._get(f"{API_PREFIX}/intel")

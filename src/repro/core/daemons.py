@@ -1077,6 +1077,12 @@ class Conductor(Daemon):
     every transition journaled through the store, so a head crash loses
     no delivery state (a recovered ``notified`` delivery is simply
     re-notified).
+
+    With the intelligence plane attached the Conductor also runs the
+    service-level hedging pass: it drains each stager's landed staging
+    latencies into the HistoryBook and re-submits in-flight files older
+    than ``hedge_headroom`` × the learned p95 — the service's history
+    replacing the stager-local ``hedge_factor`` guess.
     """
     name = "conductor"
     topics = (M.T_OUTPUT_AVAILABLE,)
@@ -1089,6 +1095,7 @@ class Conductor(Daemon):
         # delivery recovered from the store: its original notification
         # died with the old head's bus, so it is due immediately.
         self._next_retry: Dict[str, float] = {}
+        self._obs_hedges = None  # bound lazily on first hedge
 
     def _notify(self, sub: Subscription, d, result=None,
                 trace_id: Optional[str] = None) -> Dict[str, Any]:
@@ -1177,6 +1184,42 @@ class Conductor(Daemon):
             self.ctx.bus.publish(M.T_OUTBOX, {"count": len(msgs)})
         return len(due) + len(failed)
 
+    def _hedge_pass(self) -> int:
+        """Service-level hedged re-staging: feed landed staging
+        latencies to the intelligence plane's HistoryBook, then ask
+        each stager to re-submit in-flight files older than
+        ``hedge_headroom`` × the learned p95.  A no-op with intel off
+        or before ``min_staging_samples`` — the stager's own
+        median-based ``hedge_check`` still covers that cold window.
+        Each record hedges at most once, so repeated passes converge
+        (and a pump can quiesce)."""
+        sched = getattr(self.ctx.wfm, "scheduler", None)
+        intel = getattr(sched, "intel", None)
+        stagers = getattr(self.ctx.ddm, "stagers", None)
+        if intel is None or not callable(stagers):
+            return 0
+        issued = 0
+        for st in stagers():
+            for _name, dt in st.drain_latencies():
+                intel.history.record_staging(st.collection, dt)
+            p95 = intel.history.staging_p95(st.collection)
+            if p95 is None:
+                continue
+            n = st.hedge_overdue(intel.hedge_headroom * p95)
+            if n:
+                intel.hedges_issued += n
+                self.ctx.bump("intel_hedges", n)
+                if self._obs_hedges is None and self.ctx.metrics is not None:
+                    self._obs_hedges = self.ctx.metrics.counter(
+                        "intel_hedges_total",
+                        "learned-p95 staging hedges issued",
+                        labels=("collection",))
+                if self._obs_hedges is not None:
+                    self._obs_hedges.labels(
+                        collection=st.collection).inc(n)
+                issued += n
+        return issued
+
     def process_once(self) -> int:
         n = 0
         for m in self.ctx.bus.poll(M.T_OUTPUT_AVAILABLE):
@@ -1189,6 +1232,7 @@ class Conductor(Daemon):
             n += 1
             self._handle_output(m)
         n += self._retry_pass()
+        n += self._hedge_pass()
         return n
 
 
@@ -1612,7 +1656,11 @@ class Watchdog(Daemon):
       * hydrates consumer subscriptions registered through other heads
         (and absorbs their journaled acks), so this head's Conductor
         can match outputs against them;
-      * prunes bus messages past the retention window (store bus only).
+      * prunes bus messages past the retention window (store bus only);
+      * with the intelligence plane attached: rescores queue priorities
+        from observed completion rates, journals the HistoryBook's
+        dirty rows into the stats table, and expires stale worker
+        manifests (adaptive reprioritization, on the heartbeat cadence).
 
     Heartbeats, renewals, and pruning return 0 from ``process_once`` so
     a pump can quiesce; only adoptions and hydrations count as
@@ -1703,6 +1751,31 @@ class Watchdog(Daemon):
             "last_heartbeat": time.time(),
             "data": data,
         })
+        self._intel_housekeeping()
+
+    def _intel_housekeeping(self) -> None:
+        """Adaptive reprioritization: refresh queue-priority boosts
+        from observed completion rates, persist the HistoryBook's
+        dirty rows, and drop expired worker manifests.  Housekeeping —
+        contributes nothing to ``process_once``'s moved count, so a
+        pump still quiesces."""
+        ctx = self.ctx
+        sched = getattr(ctx.wfm, "scheduler", None)
+        intel = getattr(sched, "intel", None)
+        if intel is None:
+            return
+        sched.rescore_queue_priorities()
+        sched.prune_affinity()
+        rows = intel.history.flush_dirty()
+        if rows:
+            ctx.store.save_stats(rows)
+        if ctx.metrics is not None:
+            rate = intel.affinity_hit_rate()
+            if rate is not None:
+                ctx.metrics.gauge(
+                    "intel_affinity_hit_rate",
+                    "fraction of input-bearing leases routed to a "
+                    "manifest holder").labels().set(rate)
 
     def _sweep(self) -> int:
         ctx = self.ctx

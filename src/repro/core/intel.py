@@ -1,0 +1,302 @@
+"""Intelligence plane: the history + locality brain of the dispatch path.
+
+The paper's fourth iDDS function is the "intelligent" part — applying
+data-locality and delivery-history knowledge to orchestrate delivery
+rather than dispatching blindly.  This module is that brain, packaged
+as a pluggable :class:`IntelPlane` the mechanical planes consult:
+
+* :class:`HistoryBook` — per-queue EWMA job latency and completion /
+  failure tallies plus a sliding window of per-file staging latencies
+  (the learned p95 the Conductor hedges against).  Dirty rows are
+  journaled through the store's ``stats`` table so a restarted head
+  starts warm instead of re-learning from scratch.
+* :class:`AffinityIndex` — worker_id → held-content map built from the
+  cache manifests workers volunteer on heartbeat, scored at lease time
+  so jobs land where their inputs already live.
+* :class:`IntelPlane` — the bundle the scheduler, Conductor and
+  Watchdog share, plus plain counters (affinity hits/misses, aging
+  promotions, hedges, rescores) surfaced via ``GET /v1/intel``.
+
+Everything here is advisory: with the plane unplugged (``--intel off``,
+the default) the scheduler's legacy FIFO-within-priority path runs
+bit-exact and nothing below is imported on the hot path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.core.obs import RollingPercentile
+
+__all__ = ["HistoryBook", "AffinityIndex", "IntelPlane"]
+
+
+class HistoryBook:
+    """EWMA latency + completion-rate history, journaled as stats rows.
+
+    One record per queue: exponentially weighted mean job duration and
+    monotone completed/failed tallies.  The completion rate is Laplace
+    smoothed — ``(ok + 1) / (ok + failed + 2)`` — so a queue with no
+    history scores a neutral 0.5 instead of dividing by zero, and one
+    early failure does not condemn the queue forever.
+
+    Staging latencies feed a :class:`RollingPercentile` window per
+    collection; :meth:`staging_p95` is the learned hedge threshold that
+    replaces the stager-local ``hedge_factor`` guess once enough
+    samples have landed.
+    """
+
+    def __init__(self, *, alpha: float = 0.25, staging_window: int = 512,
+                 min_staging_samples: int = 8):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = float(alpha)
+        self.min_staging_samples = int(min_staging_samples)
+        self._staging_window = int(staging_window)
+        self._lock = threading.Lock()
+        # queue -> {"ewma_s", "completed", "failed"}
+        self._queues: Dict[str, Dict[str, float]] = {}
+        # collection -> exact sliding window of observed staging times
+        self._staging: Dict[str, RollingPercentile] = {}
+        # collection -> monotone count of samples ever observed
+        self._staged: Dict[str, int] = {}
+        self._dirty: Set[str] = set()
+
+    # -- recording ----------------------------------------------------
+
+    def record_job(self, queue: str, duration_s: Optional[float],
+                   ok: bool = True) -> None:
+        with self._lock:
+            rec = self._queues.setdefault(
+                queue, {"ewma_s": 0.0, "completed": 0, "failed": 0})
+            if ok:
+                rec["completed"] += 1
+            else:
+                rec["failed"] += 1
+            if duration_s is not None and duration_s >= 0.0:
+                prev = rec["ewma_s"]
+                rec["ewma_s"] = (duration_s if prev == 0.0 else
+                                 prev + self.alpha * (duration_s - prev))
+            self._dirty.add(queue)
+
+    def record_staging(self, collection: str, duration_s: float) -> None:
+        with self._lock:
+            win = self._staging.get(collection)
+            if win is None:
+                win = self._staging[collection] = RollingPercentile(
+                    window=self._staging_window)
+            win.observe(duration_s)
+            self._staged[collection] = self._staged.get(collection, 0) + 1
+
+    # -- queries ------------------------------------------------------
+
+    def completion_rate(self, queue: str) -> float:
+        with self._lock:
+            rec = self._queues.get(queue)
+            if rec is None:
+                return 0.5
+            ok, bad = rec["completed"], rec["failed"]
+        return (ok + 1.0) / (ok + bad + 2.0)
+
+    def samples(self, queue: str) -> int:
+        with self._lock:
+            rec = self._queues.get(queue)
+            return int(rec["completed"] + rec["failed"]) if rec else 0
+
+    def ewma_latency(self, queue: str) -> Optional[float]:
+        with self._lock:
+            rec = self._queues.get(queue)
+            return rec["ewma_s"] if rec and rec["ewma_s"] > 0.0 else None
+
+    def staging_p95(self, collection: str) -> Optional[float]:
+        """The learned hedge threshold, or None until the window holds
+        at least ``min_staging_samples`` observations."""
+        with self._lock:
+            win = self._staging.get(collection)
+        if win is None or len(win) < self.min_staging_samples:
+            return None
+        return win.percentile(95)
+
+    # -- persistence --------------------------------------------------
+
+    def flush_dirty(self) -> List[Dict[str, Any]]:
+        """Stats rows for queues touched since the last flush, in the
+        store's ``save_stats`` shape.  Staging windows are deliberately
+        not journaled: they are transfer-rate observations of the
+        currently mounted media, stale the moment the head restarts."""
+        now = time.time()
+        with self._lock:
+            rows = [{"scope": "queue", "key": q,
+                     "data": dict(self._queues[q]), "updated_at": now}
+                    for q in sorted(self._dirty) if q in self._queues]
+            self._dirty.clear()
+        return rows
+
+    def load(self, rows: Iterable[Dict[str, Any]]) -> int:
+        """Warm-start from journaled stats rows (inverse of
+        :meth:`flush_dirty`); unknown scopes are ignored."""
+        n = 0
+        with self._lock:
+            for row in rows or ():
+                if row.get("scope") != "queue":
+                    continue
+                data = row.get("data") or {}
+                self._queues[str(row.get("key"))] = {
+                    "ewma_s": float(data.get("ewma_s", 0.0)),
+                    "completed": int(data.get("completed", 0)),
+                    "failed": int(data.get("failed", 0))}
+                n += 1
+        return n
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            queues = {q: dict(rec) for q, rec in self._queues.items()}
+            staging = {c: {"samples": self._staged.get(c, 0),
+                           "window": len(win),
+                           "p95_s": (win.percentile(95)
+                                     if len(win) >= self.min_staging_samples
+                                     else None)}
+                       for c, win in self._staging.items()}
+        for q, rec in queues.items():
+            ok, bad = rec["completed"], rec["failed"]
+            rec["completion_rate"] = round(
+                (ok + 1.0) / (ok + bad + 2.0), 4)
+        return {"queues": queues, "staging": staging}
+
+
+class AffinityIndex:
+    """worker_id → held-content names, built from heartbeat manifests.
+
+    Entries expire ``ttl`` seconds after the worker's last manifest so
+    a dead worker's cache stops attracting jobs.  All timestamps are
+    caller-supplied (the scheduler passes its own injectable clock), so
+    the index itself is clock-free and trivially testable.
+    """
+
+    def __init__(self, *, ttl: float = 300.0):
+        self.ttl = float(ttl)
+        self._lock = threading.Lock()
+        self._held: Dict[str, Set[str]] = {}
+        self._seen: Dict[str, float] = {}
+
+    def update(self, worker_id: str, names: Iterable[str],
+               now: float) -> None:
+        """Replace the worker's manifest (workers report their whole
+        cache each heartbeat, so this is idempotent, not additive)."""
+        manifest = {str(n) for n in names}
+        with self._lock:
+            self._held[worker_id] = manifest
+            self._seen[worker_id] = now
+
+    def score(self, worker_id: str, names: Iterable[str],
+              now: float) -> int:
+        """How many of ``names`` the worker already holds (0 if the
+        manifest expired)."""
+        with self._lock:
+            seen = self._seen.get(worker_id)
+            if seen is None or now - seen > self.ttl:
+                return 0
+            held = self._held.get(worker_id)
+            if not held:
+                return 0
+            return sum(1 for n in names if n in held)
+
+    def forget(self, worker_id: str) -> None:
+        with self._lock:
+            self._held.pop(worker_id, None)
+            self._seen.pop(worker_id, None)
+
+    def prune(self, now: float) -> int:
+        with self._lock:
+            stale = [w for w, t in self._seen.items()
+                     if now - t > self.ttl]
+            for w in stale:
+                self._held.pop(w, None)
+                self._seen.pop(w, None)
+        return len(stale)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {w: len(names) for w, names in self._held.items()}
+
+
+class IntelPlane:
+    """The pluggable bundle consumed across the dispatch path.
+
+    * the scheduler scores lease candidates with :attr:`affinity` and
+      :attr:`history` and ages waiting jobs every
+      :attr:`aging_interval` seconds of wait (+1 effective priority —
+      the starvation-proof term: any affinity or completion-rate edge
+      is a tie-break *within* an effective-priority level, so a waiting
+      job eventually outranks a perpetually-refilled favored queue);
+    * the Conductor hedges staging that exceeds ``hedge_headroom`` ×
+      the learned p95;
+    * the Watchdog rescores queue priorities from completion rates
+      once ``min_rescore_samples`` outcomes have been observed.
+
+    Counters are plain ints guarded by the owner's locks (exposed via
+    ``/v1/intel`` and mirrored into the metrics registry by whichever
+    plane increments them).
+    """
+
+    def __init__(self, *, aging_interval: float = 30.0,
+                 scan_width: int = 8, affinity_ttl: float = 300.0,
+                 hedge_headroom: float = 1.5,
+                 min_rescore_samples: int = 20,
+                 history: Optional[HistoryBook] = None):
+        if aging_interval <= 0.0:
+            raise ValueError("aging_interval must be positive")
+        if scan_width < 1:
+            raise ValueError("scan_width must be >= 1")
+        self.aging_interval = float(aging_interval)
+        self.scan_width = int(scan_width)
+        self.hedge_headroom = float(hedge_headroom)
+        self.min_rescore_samples = int(min_rescore_samples)
+        self.history = history if history is not None else HistoryBook()
+        self.affinity = AffinityIndex(ttl=affinity_ttl)
+        # plain tallies; incremented under the consuming plane's lock
+        self.affinity_hits = 0
+        self.affinity_misses = 0
+        self.aging_promotions = 0
+        self.hedges_issued = 0
+        self.rescores = 0
+
+    def affinity_hit_rate(self) -> Optional[float]:
+        total = self.affinity_hits + self.affinity_misses
+        return (self.affinity_hits / total) if total else None
+
+    def rescore_boost(self, queue: str) -> int:
+        """Priority adjustment from observed completion rate: queues
+        that mostly fail are deprioritized one level so healthy queues
+        drain first; near-perfect queues get one level of boost.  The
+        magnitude is deliberately ±1 — aging adds a level every
+        ``aging_interval`` seconds, so a rescore can never starve."""
+        if self.history.samples(queue) < self.min_rescore_samples:
+            return 0
+        rate = self.history.completion_rate(queue)
+        if rate < 0.5:
+            return -1
+        if rate >= 0.95:
+            return 1
+        return 0
+
+    def snapshot(self) -> Dict[str, Any]:
+        hit_rate = self.affinity_hit_rate()
+        return {
+            "enabled": True,
+            "aging_interval_s": self.aging_interval,
+            "scan_width": self.scan_width,
+            "hedge_headroom": self.hedge_headroom,
+            "affinity": {
+                "workers": self.affinity.snapshot(),
+                "hits": self.affinity_hits,
+                "misses": self.affinity_misses,
+                "hit_rate": (round(hit_rate, 4)
+                             if hit_rate is not None else None),
+            },
+            "aging_promotions": self.aging_promotions,
+            "hedges_issued": self.hedges_issued,
+            "rescores": self.rescores,
+            "history": self.history.snapshot(),
+        }

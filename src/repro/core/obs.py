@@ -40,13 +40,14 @@ cross-process (see scripts/check_monotonic.py for the enforced split).
 """
 from __future__ import annotations
 
+import collections
 import json
 import logging
 import sys
 import threading
 import time
 import uuid
-from bisect import bisect_left
+from bisect import bisect_left, insort
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 # daemon rounds or store flushes slower than this log a warning
@@ -159,6 +160,63 @@ class _HistogramChild:
     def percentiles(self, qs: Iterable[float] = (50, 95, 99)
                     ) -> Dict[str, float]:
         return {f"p{int(q)}": self.percentile(q) for q in qs}
+
+
+class RollingPercentile:
+    """Exact percentile over a bounded sliding window.
+
+    The bucketed histogram above trades accuracy for cluster-wide
+    mergeability; this is its exact, non-mergeable sibling for
+    in-process decisions (the stager's hedge median, the intelligence
+    plane's learned staging p95).  A deque keeps arrival order while a
+    parallel sorted list is maintained incrementally with bisect, so an
+    observation is O(log n) search + memmove on a small window and a
+    percentile read is O(1) — never a full re-sort per read.
+    """
+
+    __slots__ = ("_lock", "_window", "_sorted")
+
+    def __init__(self, window: int = 512):
+        if window <= 0:
+            raise ValueError("window must be positive")
+        self._lock = threading.Lock()
+        self._window: collections.deque = collections.deque(maxlen=window)
+        self._sorted: List[float] = []
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            if len(self._window) == self._window.maxlen:
+                # capture the value about to fall off the window and
+                # remove exactly one copy of it from the sorted view
+                evicted = self._window[0]
+                del self._sorted[bisect_left(self._sorted, evicted)]
+            self._window.append(v)
+            insort(self._sorted, v)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._sorted)
+
+    def percentile(self, q: float) -> Optional[float]:
+        """The q-th percentile (0..100) by nearest rank, or None while
+        the window is empty."""
+        with self._lock:
+            n = len(self._sorted)
+            if n == 0:
+                return None
+            return self._sorted[min(n - 1, int(q / 100.0 * n))]
+
+    def median(self) -> Optional[float]:
+        """Upper median (matches ``sorted(w)[len(w) // 2]``)."""
+        with self._lock:
+            n = len(self._sorted)
+            return self._sorted[n // 2] if n else None
+
+    def values(self) -> List[float]:
+        """Arrival-ordered snapshot of the current window."""
+        with self._lock:
+            return list(self._window)
 
 
 class _Timer:

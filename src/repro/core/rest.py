@@ -55,6 +55,14 @@ details + deprecation table in docs/rest_api.md):
   POST /v1/jobs/<id>/heartbeat             worker: renew a held lease
   POST /v1/jobs/<id>/complete              worker: report result/error
   GET  /v1/workers                         worker registry
+  GET  /v1/queues                          per-queue scheduler state
+                                           (depth, suspended, priority,
+                                           completion rate)
+  GET  /v1/intel                           intelligence-plane snapshot
+                                           (affinity hit-rate, learned
+                                           history, hedge counters);
+                                           {"enabled": false} on
+                                           --intel off heads
   GET  /v1/stats                           daemon counters
   GET  /v1/cluster                         head registry: heartbeat
                                            ages, live-claim counts
@@ -114,6 +122,7 @@ from repro.core.store import BufferedStore, SqliteStore
 MAX_BODY_BYTES = 16 * 1024 * 1024  # refuse absurd submissions
 MAX_LEASE_BATCH = 64     # ?n= upper bound on POST /jobs/lease
 MAX_BATCH_ITEMS = 256    # job_ids/items upper bound on batch verbs
+MAX_MANIFEST_ITEMS = 1024  # worker cache-manifest entries kept per report
 MAX_TRANSITION_ITEMS = 4096  # transitions upper bound (stager sweeps)
 MAX_WAIT_S = 60.0        # ?wait_s= long-poll park upper bound
 MAX_STREAM_S = 300.0     # SSE stream duration upper bound per request
@@ -583,6 +592,9 @@ class RestGateway:
                 not isinstance(queues, list)
                 or not all(isinstance(q, str) for q in queues)):
             return 400, _err("BadRequest", "queues must be a string list")
+        manifest, m_err = _parse_manifest(d)
+        if m_err is not None:
+            return m_err
         # ?n= (or body "n") switches to the multi-lease form: up to n
         # jobs in one scheduler lock grab, {"jobs": [...], "count": k}
         n_raw = (query or {}).get("n", [d.get("n")])[0]
@@ -603,11 +615,13 @@ class RestGateway:
             if n is None:
                 job = sched.lease(
                     worker_id, queues=queues, ttl=ttl,
-                    idempotency_key=d.get("idempotency_key"))
+                    idempotency_key=d.get("idempotency_key"),
+                    manifest=manifest)
                 return 200, {"job": job}
             jobs = sched.lease_many(
                 worker_id, n=n, queues=queues, ttl=ttl,
-                idempotency_key=d.get("idempotency_key"))
+                idempotency_key=d.get("idempotency_key"),
+                manifest=manifest)
         except (TypeError, ValueError) as e:
             return 400, _err("BadRequest", f"malformed lease request: {e}")
         return 200, {"jobs": jobs, "count": len(jobs)}
@@ -631,7 +645,11 @@ class RestGateway:
         if len(job_ids) > MAX_BATCH_ITEMS:
             return 400, _err("BadRequest",
                              f"at most {MAX_BATCH_ITEMS} job_ids per batch")
-        results = self._scheduler().heartbeat_many(worker_id, job_ids)
+        manifest, m_err = _parse_manifest(d)
+        if m_err is not None:
+            return m_err
+        results = self._scheduler().heartbeat_many(worker_id, job_ids,
+                                                   manifest=manifest)
         return 200, batch_envelope(_job_batch_items(results))
 
     def handle_jobs_complete(self, body: bytes,
@@ -676,7 +694,11 @@ class RestGateway:
         worker_id = d.get("worker_id")
         if not worker_id or not isinstance(worker_id, str):
             return 400, _err("BadRequest", "worker_id (string) is required")
-        return 200, self._scheduler().heartbeat(job_id, worker_id)
+        manifest, m_err = _parse_manifest(d)
+        if m_err is not None:
+            return m_err
+        return 200, self._scheduler().heartbeat(job_id, worker_id,
+                                                manifest=manifest)
 
     def handle_job_complete(self, job_id: str, body: bytes,
                             token: str) -> Tuple[int, Dict]:
@@ -706,6 +728,32 @@ class RestGateway:
                      "connected": sched.worker_count(),
                      "distributed": True,
                      "queues": sched.queue_depths()}
+
+    def handle_queues(self, token: str) -> Tuple[int, Dict]:
+        """Per-queue scheduler state: depth, suspended count, base and
+        effective priority (aging + adaptive boost when intel is on),
+        learned completion rate."""
+        self.idds._auth(token)
+        sched = self.idds.scheduler
+        if sched is None:
+            return 200, {"queues": {}, "distributed": False}
+        return 200, {"queues": sched.queue_stats(), "distributed": True,
+                     "intel": sched.intel is not None}
+
+    def handle_intel(self, token: str) -> Tuple[int, Dict]:
+        """Intelligence-plane introspection: affinity hit-rate, learned
+        per-queue history, hedge/rescore counters.  Answers with
+        ``enabled: false`` (not an error) on inline or --intel off
+        heads so dashboards can poll unconditionally."""
+        self.idds._auth(token)
+        sched = self.idds.scheduler
+        intel = None if sched is None else sched.intel
+        if intel is None:
+            return 200, {"enabled": False,
+                         "distributed": sched is not None}
+        out = intel.snapshot()
+        out.update({"enabled": True, "distributed": True})
+        return 200, out
 
     def _delivery_tallies(self) -> Tuple[Dict, Dict]:
         ts, contents, deliveries = self._tally_cache
@@ -841,6 +889,22 @@ def _parse_json_object(body: bytes):
     return d, None
 
 
+def _parse_manifest(d: Dict):
+    """Optional worker cache manifest on lease/heartbeat bodies.
+    Returns ``(names_or_None, None)`` or ``(None, (status, envelope))``."""
+    manifest = d.get("manifest")
+    if manifest is None:
+        return None, None
+    if (not isinstance(manifest, list)
+            or not all(isinstance(n, str) for n in manifest)):
+        return None, (400, _err("BadRequest",
+                                "manifest must be a string list"))
+    if len(manifest) > MAX_MANIFEST_ITEMS:
+        # keep the freshest (a worker LRU reports oldest-first)
+        manifest = manifest[-MAX_MANIFEST_ITEMS:]
+    return manifest, None
+
+
 # ---------------------------------------------------------------------------
 # Routing
 # ---------------------------------------------------------------------------
@@ -864,6 +928,8 @@ _ROUTE_SPECS = [
     ("POST", r"jobs/(?P<job_id>[^/]+)/complete/?",
      "handle_job_complete", True),
     ("GET", r"workers/?", "handle_workers", True),
+    ("GET", r"queues/?", "handle_queues", False),
+    ("GET", r"intel/?", "handle_intel", False),
     ("POST", r"requests/(?P<request_id>[^/]+)/commands/?",
      "handle_command_submit", False),
     ("GET", r"requests/(?P<request_id>[^/]+)/commands/"
@@ -1136,6 +1202,13 @@ def main(argv=None) -> int:
     ap.add_argument("--lease-ttl", type=float, default=30.0,
                     help="seconds a worker lease lives between "
                          "heartbeats (--distributed)")
+    ap.add_argument("--intel", choices=("on", "off"), default="off",
+                    help="intelligence plane (--distributed): score "
+                         "lease candidates by worker cache affinity and "
+                         "learned per-queue completion rates, hedge "
+                         "stragglers against the learned staging p95, "
+                         "and adapt queue priorities; 'off' keeps the "
+                         "legacy FIFO-within-priority dispatch")
     ap.add_argument("--max-workers", type=int, default=8)
     ap.add_argument("--payloads", action="append", default=[],
                     help="importable module that registers payloads "
@@ -1209,7 +1282,8 @@ def main(argv=None) -> int:
     if store is not None and args.store_flush_ms is not None:
         store = BufferedStore(store, flush_interval_ms=args.store_flush_ms,
                               max_batch=args.store_max_batch)
-    executor = (DistributedWFM(lease_ttl=args.lease_ttl)
+    executor = (DistributedWFM(lease_ttl=args.lease_ttl,
+                               intel=args.intel == "on")
                 if args.distributed else None)
     ddm = None
     if args.carousel:
@@ -1268,6 +1342,8 @@ def main(argv=None) -> int:
     gw.start()
     wfm_mode = ("distributed" if args.distributed else
                 "async" if args.async_wfm else "sync")
+    if args.distributed and args.intel == "on":
+        wfm_mode += "+intel"
     print(f"idds-rest serving on {gw.url} "
           f"(auth={'on' if tokens else 'off'}, "
           f"wfm={wfm_mode}, "

@@ -23,6 +23,18 @@ Priority and routing ride on the Processing's params: ``priority``
 (higher leases first, default 0) and ``queue`` (default ``"default"``).
 Per-queue throttling caps bound how many leases a queue may have
 outstanding at once.
+
+With an intelligence plane plugged in (``enable_intel``, see
+``repro.core.intel``), dispatch is scored instead of FIFO: candidates
+compete on (effective priority, input-affinity hits against the
+worker's reported cache manifest, queue completion rate, FIFO order),
+where effective priority = base + Watchdog rescore boost + one level
+per ``aging_interval`` seconds waited.  The aging term is the
+starvation proof: affinity and completion rate only reorder *within*
+an effective-priority level, and every waiting job climbs one level
+per interval, so it eventually outranks any perpetually-refilled
+favored queue.  With no plane attached (the default) the legacy path
+runs unchanged.
 """
 from __future__ import annotations
 
@@ -62,7 +74,7 @@ class _Lease:
 
 class _Job:
     __slots__ = ("proc", "queue", "priority", "attempt", "state", "lease",
-                 "seq", "outcome", "completed_by", "lease_key")
+                 "seq", "outcome", "completed_by", "lease_key", "enqueued")
 
     def __init__(self, proc: Processing, queue: str, priority: int,
                  seq: int):
@@ -74,6 +86,7 @@ class _Job:
         self.lease: Optional[_Lease] = None
         self.lease_key: Optional[str] = None  # idempotency key, if any
         self.seq = seq
+        self.enqueued = 0.0  # scheduler clock at last _push (aging term)
         # (status, result, error, attempt) once terminal from the
         # scheduler's point of view; consumed by DistributedWFM.poll
         self.outcome: Optional[Tuple[str, Any, Optional[str], int]] = None
@@ -113,6 +126,9 @@ class JobScheduler:
         self._draining = False
         self._store: Optional[Store] = None
         self._on_stat: Optional[Callable[[str, int], None]] = None
+        # intelligence plane (None = legacy FIFO dispatch, bit-exact)
+        self._intel: Any = None
+        self._queue_boost: Dict[str, int] = {}  # Watchdog rescore output
 
     # -- telemetry (class attrs: unbound costs one attribute lookup;
     # per-verb children cached at attach so the hot verbs skip the
@@ -122,7 +138,9 @@ class JobScheduler:
     _obs_heartbeat = None
     _obs_complete = None
     _obs_job_dur = None
+    _obs_intel = None
     _on_event = None
+    _metrics = None
 
     # ------------------------------------------------------------- wiring
     def attach(self, store: Store,
@@ -148,6 +166,39 @@ class JobScheduler:
                 "scheduler_job_seconds",
                 "job duration, lease grant to completion "
                 "report").labels()
+            self._metrics = metrics
+            if self._intel is not None:
+                self._bind_intel_metrics(metrics)
+
+    def enable_intel(self, intel: Any = None) -> Any:
+        """Plug in the intelligence plane (an
+        ``repro.core.intel.IntelPlane``; a default one is built when
+        None).  With no plane attached — the default — every dispatch
+        path is the legacy FIFO-within-priority behavior, bit for bit."""
+        if intel is None:
+            from repro.core.intel import IntelPlane
+            intel = IntelPlane()
+        with self._lock:
+            self._intel = intel
+        if self._metrics is not None:
+            self._bind_intel_metrics(self._metrics)
+        return intel
+
+    @property
+    def intel(self) -> Any:
+        return self._intel
+
+    def _bind_intel_metrics(self, metrics: Any) -> None:
+        fam = metrics.counter(
+            "scheduler_intel_events_total",
+            "intelligence-plane scheduling events",
+            labels=("kind",))
+        self._obs_intel = {
+            "affinity_hit": fam.labels(kind="affinity_hit"),
+            "affinity_miss": fam.labels(kind="affinity_miss"),
+            "aging_promotion": fam.labels(kind="aging_promotion"),
+            "queue_rescore": fam.labels(kind="queue_rescore"),
+        }
 
     def _bump(self, key: str, n: int = 1) -> None:
         if self._on_stat is not None:
@@ -218,37 +269,45 @@ class JobScheduler:
     def _push(self, job: _Job) -> None:
         job.state = _PENDING
         job.lease = None
+        job.enqueued = self._clock()
         heapq.heappush(self._heaps.setdefault(job.queue, []),
                        (-job.priority, job.seq, job.proc.proc_id))
 
     # -------------------------------------------------------------- lease
     def lease(self, worker_id: str, *, queues: Optional[List[str]] = None,
               ttl: Optional[float] = None,
-              idempotency_key: Optional[str] = None) -> Optional[Dict]:
+              idempotency_key: Optional[str] = None,
+              manifest: Optional[List[str]] = None) -> Optional[Dict]:
         """Hand the highest-priority pending job to ``worker_id`` under a
         new lease, or return None if nothing is dispatchable (empty
         queues, throttling caps, draining).  ``idempotency_key`` makes a
         client retry safe: a repeated key while the resulting lease is
         still held returns the same job instead of leasing a second
-        one."""
+        one.  ``manifest`` (the worker's held-content names) refreshes
+        the affinity index before scoring when intel is on."""
         jobs = self.lease_many(worker_id, n=1, queues=queues, ttl=ttl,
-                               idempotency_key=idempotency_key)
+                               idempotency_key=idempotency_key,
+                               manifest=manifest)
         return jobs[0] if jobs else None
 
     def lease_many(self, worker_id: str, *, n: int = 1,
                    queues: Optional[List[str]] = None,
                    ttl: Optional[float] = None,
-                   idempotency_key: Optional[str] = None) -> List[Dict]:
+                   idempotency_key: Optional[str] = None,
+                   manifest: Optional[List[str]] = None) -> List[Dict]:
         """Lease up to ``n`` jobs in ONE lock acquisition and ONE journal
         commit (`POST /jobs/lease?n=`).  Returns [] when nothing is
         dispatchable; fewer than ``n`` when the queues run dry.  A
         repeated ``idempotency_key`` replays the payloads of the jobs
-        from the original grant that this worker still holds."""
+        from the original grant that this worker still holds —
+        regardless of any ``manifest``/affinity change between the
+        retries (the replay is keyed on the grant, not re-scored)."""
         obs = self._obs_lease
         t0 = time.monotonic() if obs is not None else 0.0
         out = self._lease_many_impl(worker_id, n=n, queues=queues,
                                     ttl=ttl,
-                                    idempotency_key=idempotency_key)
+                                    idempotency_key=idempotency_key,
+                                    manifest=manifest)
         if obs is not None:
             obs.observe(time.monotonic() - t0)
         if self._on_event is not None:
@@ -262,7 +321,8 @@ class JobScheduler:
     def _lease_many_impl(self, worker_id: str, *, n: int = 1,
                          queues: Optional[List[str]] = None,
                          ttl: Optional[float] = None,
-                         idempotency_key: Optional[str] = None
+                         idempotency_key: Optional[str] = None,
+                         manifest: Optional[List[str]] = None
                          ) -> List[Dict]:
         if not worker_id:
             raise ValueError("worker_id is required")
@@ -277,6 +337,8 @@ class JobScheduler:
         with self._lock:
             self._expire_locked(now)
             self._touch_worker(worker_id)
+            if manifest is not None and self._intel is not None:
+                self._intel.affinity.update(worker_id, manifest, now)
             if self._draining:
                 return []
             if idempotency_key:
@@ -292,7 +354,8 @@ class JobScheduler:
                         return replay  # replayed (possibly partial) grant
             leased: List[_Job] = []
             while len(leased) < n:
-                job = self._pop_best(queues)
+                job = (self._pop_best(queues) if self._intel is None
+                       else self._pop_best_intel(queues, worker_id, now))
                 if job is None:
                     break
                 job.state = _LEASED
@@ -350,6 +413,80 @@ class JobScheduler:
         heapq.heappop(self._heaps[best_q])
         return best
 
+    def _pop_best_intel(self, queues: Optional[List[str]],
+                        worker_id: str, now: float) -> Optional[_Job]:
+        """Scored dispatch (intelligence plane attached).  Examines up
+        to ``scan_width`` live head candidates per eligible queue —
+        heaps only order their head, so deeper inspection means popping
+        — and picks the maximum of::
+
+            (base priority + rescore boost + wait // aging_interval,
+             affinity hits on the worker's manifest,
+             queue completion rate,
+             -seq)                                # FIFO tie-break
+
+        Losing candidates are pushed straight back (their heap entries
+        are still valid).  The unbounded aging term makes this
+        starvation-proof: affinity and completion rate only reorder
+        within one effective-priority level."""
+        intel = self._intel
+        allowed = list(queues) if queues else list(self._heaps)
+        popped: List[Tuple[str, Tuple[int, int, str], _Job]] = []
+        for q in allowed:
+            heap = self._heaps.get(q)
+            if not heap:
+                continue
+            cap = self.queue_caps.get(q)
+            if cap is not None and self._queue_active.get(q, 0) >= cap:
+                continue  # throttled: queue at its outstanding-lease cap
+            taken = 0
+            while heap and taken < intel.scan_width:
+                entry = heapq.heappop(heap)
+                neg_pr, seq, jid = entry
+                job = self._jobs.get(jid)
+                if (job is None or job.state != _PENDING
+                        or job.seq != seq or job.queue != q):
+                    continue  # lazy deletion, exactly as _pop_best
+                popped.append((q, entry, job))
+                taken += 1
+        if not popped:
+            return None
+        best_i = 0
+        best_score: Optional[Tuple[float, int, float, int]] = None
+        best_hits = best_boost = 0
+        for i, (q, _entry, job) in enumerate(popped):
+            boost = int(max(0.0, now - job.enqueued)
+                        // intel.aging_interval)
+            eff_pr = (job.priority + boost
+                      + self._queue_boost.get(q, 0))
+            hits = (intel.affinity.score(worker_id,
+                                         job.proc.input_files, now)
+                    if job.proc.input_files else 0)
+            score = (eff_pr, hits, intel.history.completion_rate(q),
+                     -job.seq)
+            if best_score is None or score > best_score:
+                best_i, best_score = i, score
+                best_hits, best_boost = hits, boost
+        winner_q, _entry, winner = popped.pop(best_i)
+        for q, entry, _job in popped:
+            heapq.heappush(self._heaps[q], entry)
+        obs = self._obs_intel
+        if winner.proc.input_files:
+            # hit-rate denominator: only jobs that HAVE inputs to hit
+            if best_hits > 0:
+                intel.affinity_hits += 1
+                if obs is not None:
+                    obs["affinity_hit"].inc()
+            else:
+                intel.affinity_misses += 1
+                if obs is not None:
+                    obs["affinity_miss"].inc()
+        if best_boost > 0:
+            intel.aging_promotions += 1
+            if obs is not None:
+                obs["aging_promotion"].inc()
+        return winner
+
     def _job_payload(self, job: _Job) -> Dict[str, Any]:
         p = job.proc
         return {
@@ -369,21 +506,27 @@ class JobScheduler:
         }
 
     # ---------------------------------------------------------- heartbeat
-    def heartbeat(self, job_id: str, worker_id: str) -> Dict[str, Any]:
+    def heartbeat(self, job_id: str, worker_id: str,
+                  manifest: Optional[List[str]] = None) -> Dict[str, Any]:
         """Renew the lease on ``job_id``; raises SchedulerConflict if the
         worker no longer holds it (expired → requeued, or reassigned)."""
-        out = self.heartbeat_many(worker_id, [job_id])[0]
+        out = self.heartbeat_many(worker_id, [job_id],
+                                  manifest=manifest)[0]
         if not out["ok"]:
             raise SchedulerConflict(out["error"])
         return {"ok": True, "lease_id": out["lease_id"],
                 "deadline_in": out["deadline_in"]}
 
-    def heartbeat_many(self, worker_id: str,
-                       job_ids: List[str]) -> List[Dict[str, Any]]:
+    def heartbeat_many(self, worker_id: str, job_ids: List[str],
+                       manifest: Optional[List[str]] = None
+                       ) -> List[Dict[str, Any]]:
         """Renew many leases in ONE lock acquisition and ONE journal
         commit.  Per-item results — ``{"job_id", "ok": True, "lease_id",
         "deadline_in"}`` or ``{"job_id", "ok": False, "error"}`` — so one
-        stale lease cannot poison the rest of the batch."""
+        stale lease cannot poison the rest of the batch.  ``manifest``
+        is the worker's volunteered held-content report; it feeds the
+        affinity index when the intelligence plane is attached and is
+        ignored (accepted, unused) otherwise."""
         obs = self._obs_heartbeat
         t0 = time.monotonic() if obs is not None else 0.0
         now = self._clock()
@@ -391,6 +534,8 @@ class JobScheduler:
         with self._lock:
             self._expire_locked(now)
             self._touch_worker(worker_id)
+            if manifest is not None and self._intel is not None:
+                self._intel.affinity.update(worker_id, manifest, now)
             renewed: List[_Job] = []
             for job_id in job_ids:
                 try:
@@ -463,6 +608,12 @@ class JobScheduler:
                 if (self._obs_job_dur is not None
                         and job.lease.granted > 0.0):
                     durations.append(now - job.lease.granted)
+                if self._intel is not None:
+                    self._intel.history.record_job(
+                        job.queue,
+                        (now - job.lease.granted
+                         if job.lease.granted > 0.0 else None),
+                        ok=not error)
                 self._release_lease(job)  # drops the holder's lease count
                 job.state = _DONE
                 self._retire(job)
@@ -635,6 +786,9 @@ class JobScheduler:
                     f"{job.attempt} attempts exhausted", job.attempt)
                 job.state = _DONE
                 self._retire(job)
+                if self._intel is not None:
+                    self._intel.history.record_job(job.queue, None,
+                                                   ok=False)
         return n
 
     # ------------------------------------------------------------- outcome
@@ -692,6 +846,73 @@ class JobScheduler:
                     q[job.state] += 1
             return out
 
+    def queue_stats(self) -> Dict[str, Dict[str, Any]]:
+        """Operator surface for ``GET /v1/queues``: depths plus the
+        intelligence plane's view of each queue — rescore boost,
+        effective priority (the best pending job's aged score) and
+        learned completion rate.  With intel off the depths are the
+        same and the learned fields stay at their neutral defaults."""
+        now = self._clock()
+        intel = self._intel
+        with self._lock:
+            out: Dict[str, Dict[str, Any]] = {}
+            for job in self._jobs.values():
+                if job.state not in (_PENDING, _LEASED, _SUSPENDED):
+                    continue
+                q = out.setdefault(job.queue, {
+                    "pending": 0, "leased": 0, "suspended": 0,
+                    "base_priority": job.priority,
+                    "effective_priority": job.priority})
+                q[job.state] += 1
+                q["base_priority"] = max(q["base_priority"], job.priority)
+                eff = job.priority
+                if intel is not None and job.state == _PENDING:
+                    eff += (int(max(0.0, now - job.enqueued)
+                                // intel.aging_interval)
+                            + self._queue_boost.get(job.queue, 0))
+                q["effective_priority"] = max(q["effective_priority"],
+                                              eff)
+            for name, q in out.items():
+                q["cap"] = self.queue_caps.get(name)
+                q["boost"] = self._queue_boost.get(name, 0)
+                q["completion_rate"] = (
+                    round(intel.history.completion_rate(name), 4)
+                    if intel is not None else None)
+            return out
+
+    def prune_affinity(self) -> int:
+        """Expire worker manifests not refreshed within the affinity
+        TTL (Watchdog housekeeping); returns how many were dropped."""
+        if self._intel is None:
+            return 0
+        return self._intel.affinity.prune(self._clock())
+
+    def rescore_queue_priorities(self) -> Dict[str, int]:
+        """Watchdog hook (adaptive reprioritization): refresh per-queue
+        priority boosts from the HistoryBook's observed completion
+        rates — ±1 level, see ``IntelPlane.rescore_boost``.  Returns
+        the boosts that changed; a no-op with intel off."""
+        intel = self._intel
+        if intel is None:
+            return {}
+        changed: Dict[str, int] = {}
+        with self._lock:
+            for q in set(self._heaps) | set(self._queue_boost):
+                boost = intel.rescore_boost(q)
+                if self._queue_boost.get(q, 0) != boost:
+                    if boost:
+                        self._queue_boost[q] = boost
+                    else:
+                        self._queue_boost.pop(q, None)
+                    changed[q] = boost
+        if changed:
+            intel.rescores += len(changed)
+            obs = self._obs_intel
+            if obs is not None:
+                obs["queue_rescore"].inc(len(changed))
+            self._bump("intel_queue_rescores", len(changed))
+        return changed
+
     def shutdown(self) -> None:
         """Stop handing out new leases (in-flight ones may still report)."""
         with self._lock:
@@ -716,12 +937,15 @@ class DistributedWFM(WFMExecutor):
 
     def __init__(self, *, scheduler: Optional[JobScheduler] = None,
                  lease_ttl: float = 30.0,
-                 queue_caps: Optional[Dict[str, int]] = None):
+                 queue_caps: Optional[Dict[str, int]] = None,
+                 intel: bool = False):
         # no super().__init__: there is no in-process thread pool
         self.sync = False
         self.fault_hook = None
         self.scheduler = scheduler if scheduler is not None else \
             JobScheduler(default_ttl=lease_ttl, queue_caps=queue_caps)
+        if intel and self.scheduler.intel is None:
+            self.scheduler.enable_intel()
         self.submitted = 0
         self._lock = threading.RLock()
 
@@ -729,6 +953,14 @@ class DistributedWFM(WFMExecutor):
         self.scheduler.attach(ctx.store, on_stat=ctx.bump,
                               metrics=getattr(ctx, "metrics", None),
                               on_event=getattr(ctx, "sched_event", None))
+        intel = self.scheduler.intel
+        if intel is not None:
+            # warm start: replay the journaled per-queue history so a
+            # restarted head dispatches on learned rates immediately
+            try:
+                intel.history.load(ctx.store.load_stats(scope="queue"))
+            except NotImplementedError:  # a stats-less custom store
+                pass
 
     def submit(self, proc: Processing) -> None:
         with self._lock:

